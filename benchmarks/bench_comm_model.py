@@ -1,0 +1,60 @@
+"""Paper Tables 1, 7, 11, 17 / App. H — communication-time model + measured
+structural proxy.
+
+(a) α-β model of per-iteration communication for ResNet-50 (25.5M params) and
+    BERT-Large (330M params): gossip vs All-Reduce vs PGA-amortized — the
+    ratios behind the paper's 1.3–1.9× wall-clock speedups.
+(b) Measured CPU proxy: wall time of one roll-mixing step vs one global
+    average on a stacked parameter pytree (structure, not absolute speed).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core import mixing
+
+ALPHA = 50e-6
+MODELS = {"resnet50": 25.5e6, "bert_large": 330e6}
+BANDWIDTH = 3.125e9          # 25 Gbps TCP (paper's cluster), bytes/s
+
+
+def alpha_beta_times(d_params: float, n: int = 32, H: int = 6):
+    theta_d = d_params * 4 / BANDWIDTH
+    allreduce = 2 * theta_d + n * ALPHA
+    gossip = 3 * theta_d + ALPHA          # ring |N_i| = 3
+    one_peer = 1 * theta_d + ALPHA        # one-peer exp: single neighbor
+    pga = one_peer + allreduce / H
+    return {"allreduce": allreduce, "gossip_ring": gossip,
+            "gossip_one_peer": one_peer, "gossip_pga_H6": pga}
+
+
+def main() -> None:
+    # --- (a) analytic, reproducing App. H / Table 17 structure -------------
+    for name, d in MODELS.items():
+        t = alpha_beta_times(d)
+        for k, v in t.items():
+            emit(f"table17_{name}_{k}_ms", v * 1e3)
+        emit(f"table17_{name}_pga_vs_allreduce_speedup",
+             t["allreduce"] / t["gossip_pga_H6"],
+             "paper measures 1.3-1.9x end-to-end")
+        # paper App H measured (one-peer exp graph): ResNet-50 gossip 150ms
+        # vs AllReduce 278ms (~1.85x); BERT 566ms vs 1469ms (~2.6x)
+        emit(f"table17_{name}_gossip_vs_allreduce_ratio",
+             t["allreduce"] / t["gossip_one_peer"],
+             "paper measured ~1.85x (ResNet50), ~2.6x (BERT)")
+
+    # --- (b) measured structural proxy on CPU ------------------------------
+    n, dim = 8, 1_000_000
+    params = {"w": jax.random.normal(jax.random.PRNGKey(0), (n, dim))}
+    mix = jax.jit(lambda p: mixing.mix_pytree(p, "ring", n))
+    avg = jax.jit(mixing.global_average_pytree)
+    t_mix = time_fn(mix, params, iters=10)
+    t_avg = time_fn(avg, params, iters=10)
+    emit("proxy_cpu_ring_mix_us", t_mix, f"n={n} d={dim}")
+    emit("proxy_cpu_global_avg_us", t_avg, f"n={n} d={dim}")
+
+
+if __name__ == "__main__":
+    main()

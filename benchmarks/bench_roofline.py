@@ -1,0 +1,64 @@
+"""Roofline table (deliverable g) — reads the dry-run JSONL dumps and prints
+the three-term roofline per (arch × shape × mesh): seconds per term, dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPs ratio."""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Any, Dict, List
+
+from benchmarks.common import emit
+
+DEFAULT_FILES = ["results_dryrun_single.jsonl", "results_dryrun_multi.jsonl"]
+
+
+def load(files: List[str]) -> List[Dict[str, Any]]:
+    rows = []
+    for f in files:
+        if os.path.exists(f):
+            with open(f) as fh:
+                rows += [json.loads(l) for l in fh if l.strip()]
+    return rows
+
+
+def fmt_row(r: Dict[str, Any]) -> None:
+    name = f'{r["arch"]}|{r["shape"]}|{r["mesh"]}'
+    if r.get("skipped"):
+        emit(f"roofline_{name}", -1.0, f"SKIP:{r['skipped'][:60]}")
+        return
+    if not r.get("ok"):
+        emit(f"roofline_{name}", -1.0, f"FAIL:{r.get('error', '')[:60]}")
+        return
+    entries = []
+    if "phases" in r:   # train: gossip + global phases
+        for ph, p in r["phases"].items():
+            entries.append((f"{name}|{ph}", p["roofline"]))
+    else:
+        entries.append((name, r["roofline"]))
+    for label, rl in entries:
+        bound = max(rl["compute_s"], rl["memory_s"], rl["collective_s"])
+        ratio = rl.get("useful_flops_ratio")
+        emit(f"roofline_{label}", bound * 1e6,
+             f'dom={rl["dominant"]} comp={rl["compute_s"]:.2e}s '
+             f'mem={rl["memory_s"]:.2e}s coll={rl["collective_s"]:.2e}s '
+             f'useful={ratio:.3f}' if ratio is not None else
+             f'dom={rl["dominant"]}')
+
+
+def main(files=None) -> None:
+    rows = load(files or DEFAULT_FILES)
+    if not rows:
+        emit("roofline_no_dryrun_results", 0.0,
+             "run: python -m repro.launch.dryrun --all --out "
+             "results_dryrun_single.jsonl")
+        return
+    for r in rows:
+        fmt_row(r)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("files", nargs="*", default=None)
+    a = ap.parse_args()
+    main(a.files or None)

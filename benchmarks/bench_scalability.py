@@ -1,0 +1,47 @@
+"""Paper Table 10 — scaling nodes at fixed global batch.
+
+Iteration-quality part measured (final loss vs n at fixed global batch and
+steps); wall-clock part derived from the α-β communication model (CPU
+container can't measure real network time).  Gossip-PGA should track parallel
+SGD's loss at every n while paying ~allreduce/H communication.
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import emit
+from benchmarks.bench_comm_model import alpha_beta_times
+from repro.configs import (DataConfig, DistConfig, OptimizerConfig,
+                           TrainConfig, get_model_config)
+from repro.train import Trainer
+
+
+def run(algorithm: str, n_nodes: int, steps: int = 40) -> float:
+    cfg = get_model_config("pga-lm-100m", reduced=True)
+    tcfg = TrainConfig(
+        model=cfg,
+        dist=DistConfig(algorithm=algorithm, topology="ring", H=6),
+        optimizer=OptimizerConfig(name="adamw", lr=3e-3, schedule="constant",
+                                  warmup_steps=5),
+        data=DataConfig(non_iid=True), global_batch=16, seq_len=64,
+        log_every=0)
+    tr = Trainer(tcfg, n_nodes=n_nodes)
+    state = tr.init_state(jax.random.PRNGKey(0))
+    tr.run(state, steps=steps, log_every=steps - 1)
+    return tr.history[-1]["loss"]
+
+
+def main(steps: int = 40) -> None:
+    for n in (2, 4, 8):
+        par = run("parallel", n, steps)
+        pga = run("gossip_pga", n, steps)
+        emit(f"table10_n{n}_parallel_loss", par)
+        emit(f"table10_n{n}_pga_loss", pga,
+             f"gap={(pga - par):+.4f}")
+        t = alpha_beta_times(25.5e6, n=n, H=6)
+        emit(f"table10_n{n}_derived_comm_speedup",
+             t["allreduce"] / t["gossip_pga_H6"])
+
+
+if __name__ == "__main__":
+    main()

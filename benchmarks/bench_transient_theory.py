@@ -1,0 +1,70 @@
+"""Paper Tables 2, 3, 5, 12–14 — transient-stage theory.
+
+Evaluates the closed-form transient iterations/time for Gossip SGD, Local SGD
+and Gossip-PGA over measured β values of concrete topologies, and checks every
+ordering claim in the tables.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.core import topology as topo
+
+# α-β model (paper §3.4): time to send x∈R^d between two nodes = θd; latency α
+THETA_D_RESNET = 25.5e6 * 4 / 3.125e9   # 25 Gbps => ~3.125 GB/s, fp32 params
+ALPHA = 50e-6                            # 50 µs point-to-point latency
+
+
+def comm_time_per_iter(alg: str, n: int, H: int, neighborhood: int,
+                       theta_d: float = THETA_D_RESNET) -> float:
+    allreduce = 2 * theta_d + n * ALPHA
+    gossip = neighborhood * theta_d + ALPHA
+    if alg == "parallel":
+        return allreduce
+    if alg == "gossip":
+        return gossip
+    if alg == "local":
+        return allreduce / H
+    if alg in ("gossip_pga", "gossip_aga"):
+        return gossip + allreduce / H
+    raise ValueError(alg)
+
+
+def main() -> None:
+    # --- Tables 2 & 3: transient iterations at measured betas --------------
+    for n in (16, 64):
+        for t, hood in (("ring", 3), ("grid", 5)):
+            b = topo.beta(topo.mixing_matrix(t, n))
+            for iid in (True, False):
+                H = int(max(2, round(n ** 0.5)))
+                tg = topo.transient_stage("gossip", n, b, H, iid=iid)
+                tl = topo.transient_stage("local", n, b, H, iid=iid)
+                tp = topo.transient_stage("gossip_pga", n, b, H, iid=iid)
+                tag = "iid" if iid else "noniid"
+                emit(f"table23_{t}_n{n}_{tag}_transient_gossip", tg,
+                     f"beta={b:.4f}")
+                emit(f"table23_{t}_n{n}_{tag}_transient_local", tl, f"H={H}")
+                emit(f"table23_{t}_n{n}_{tag}_transient_pga", tp,
+                     f"C_beta={topo.c_beta(b, H):.2f}")
+                emit(f"table23_{t}_n{n}_{tag}_pga_shortest",
+                     float(tp <= tg and tp <= tl),
+                     f"pga={tp:.3g} gossip={tg:.3g} local={tl:.3g}")
+
+    # --- Table 5 / 12-14: transient *time* = transient iters × comm/iter ---
+    for n in (16, 64):
+        H = int(max(2, round(n ** 0.5)))
+        for t, hood in (("ring", 3), ("grid", 5)):
+            b = topo.beta(topo.mixing_matrix(t, n))
+            for iid in (True, False):
+                tag = "iid" if iid else "noniid"
+                tt_g = (topo.transient_stage("gossip", n, b, H, iid=iid)
+                        * comm_time_per_iter("gossip", n, H, hood))
+                tt_p = (topo.transient_stage("gossip_pga", n, b, H, iid=iid)
+                        * comm_time_per_iter("gossip_pga", n, H, hood))
+                emit(f"table5_{t}_n{n}_{tag}_transient_time_gossip_s", tt_g)
+                emit(f"table5_{t}_n{n}_{tag}_transient_time_pga_s", tt_p)
+                emit(f"table5_{t}_n{n}_{tag}_pga_time_shorter",
+                     float(tt_p <= tt_g), f"ratio={tt_g / max(tt_p, 1e-12):.3g}")
+
+
+if __name__ == "__main__":
+    main()

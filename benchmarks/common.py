@@ -1,0 +1,26 @@
+"""Shared benchmark helpers: CSV emission + wall-clock timing."""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Iterable
+
+import jax
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> str:
+    line = f"{name},{us_per_call:.3f},{derived}"
+    print(line, flush=True)
+    return line
+
+
+def time_fn(fn: Callable, *args, iters: int = 10, warmup: int = 2) -> float:
+    """Median wall-clock microseconds per call (blocks on jax results)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6

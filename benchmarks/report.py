@@ -1,0 +1,172 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline / §Perf tables from the
+dry-run + hillclimb JSONL dumps.
+
+    PYTHONPATH=src python -m benchmarks.report > /tmp/report.md
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+from typing import Any, Dict, List
+
+FILES = {
+    "single": "results_dryrun_single.jsonl",
+    "multi": "results_dryrun_multi.jsonl",
+    "hillclimb": "results_hillclimb.jsonl",
+}
+
+
+def _load(path: str) -> List[Dict[str, Any]]:
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        return [json.loads(l) for l in f if l.strip()]
+
+
+def _fmt_s(x: float) -> str:
+    return f"{x:.2e}"
+
+
+def _gb(x) -> str:
+    return f"{(x or 0) / 1e9:.1f}"
+
+
+def dryrun_table(rows: List[Dict[str, Any]], mesh: str) -> None:
+    print(f"\n### Dry-run — {mesh} mesh "
+          f"({'512 chips (2,16,16)' if mesh == 'multi' else '256 chips (16,16)'})\n")
+    print("| arch | shape | status | mode | temp GB/dev | args GB/dev | "
+          "compile s |")
+    print("|---|---|---|---|---|---|---|")
+    for r in rows:
+        if r.get("skipped"):
+            print(f'| {r["arch"]} | {r["shape"]} | SKIP: {r["skipped"][:58]} '
+                  f'| | | | |')
+            continue
+        if not r.get("ok"):
+            print(f'| {r["arch"]} | {r["shape"]} | **FAIL** '
+                  f'{r.get("error", "")[:50]} | | | | |')
+            continue
+        if "phases" in r:
+            p = r["phases"]["gossip"]
+            mode = f'{r.get("mode")} (n={r.get("n_nodes")})'
+        else:
+            p = r
+            mode = r.get("mode", "")
+        m = p["memory"]
+        print(f'| {r["arch"]} | {r["shape"]} | ok | {mode} '
+              f'| {_gb(m["temp_size_in_bytes"])} '
+              f'| {_gb(m["argument_size_in_bytes"])} '
+              f'| {p["compile_s"]:.0f} |')
+
+
+def roofline_table(rows: List[Dict[str, Any]]) -> None:
+    print("\n### Roofline — single-pod (256 chips), per chip, per step\n")
+    print("| arch | shape | phase | compute s | memory s | collective s | "
+          "dominant | MODEL/HLO flops | bottleneck note |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        if not r.get("ok"):
+            continue
+        entries = []
+        if "phases" in r:
+            for ph, p in r["phases"].items():
+                entries.append((ph, p["roofline"]))
+        else:
+            entries.append((r["shape"].split("_")[0], r["roofline"]))
+        for ph, rl in entries:
+            ratio = rl.get("useful_flops_ratio")
+            ratio_s = f"{ratio:.2f}" if ratio is not None else "-"
+            note = _note(rl)
+            print(f'| {r["arch"]} | {r["shape"]} | {ph} '
+                  f'| {_fmt_s(rl["compute_s"])} | {_fmt_s(rl["memory_s"])} '
+                  f'| {_fmt_s(rl["collective_s"])} | {rl["dominant"]} '
+                  f'| {ratio_s} | {note} |')
+
+
+def _note(rl: Dict[str, Any]) -> str:
+    dom = rl["dominant"]
+    if dom == "collective":
+        per = rl.get("coll_per_type") or {}
+        top = max(per, key=per.get) if per else "?"
+        return f"top collective: {top}"
+    if dom == "memory":
+        ai = rl["flops"] / max(rl["hlo_bytes"], 1)
+        return f"arith intensity {ai:.1f} flop/B"
+    return "compute-bound (good)"
+
+
+def hillclimb_table(rows: List[Dict[str, Any]]) -> None:
+    print("\n### Perf hillclimbs\n")
+    by_exp: Dict[str, List[Dict[str, Any]]] = {}
+    for r in rows:
+        by_exp.setdefault(r["experiment"], []).append(r)
+    for exp, recs in by_exp.items():
+        print(f"\n#### {exp}\n")
+        print("| variant | compute s | memory s | collective s | dominant | "
+              "temp GB | hypothesis |")
+        print("|---|---|---|---|---|---|---|")
+        for r in recs:
+            if "phases" in r:
+                rl = r["phases"]["gossip"]["roofline"]
+                mem = r["phases"]["gossip"]["memory"]
+            else:
+                rl = r["roofline"]
+                mem = r["memory"]
+            print(f'| {r["variant"]} | {_fmt_s(rl["compute_s"])} '
+                  f'| {_fmt_s(rl["memory_s"])} | {_fmt_s(rl["collective_s"])} '
+                  f'| {rl["dominant"]} | {_gb(mem["temp_size_in_bytes"])} '
+                  f'| {r["hypothesis"][:90]} |')
+
+
+def main() -> None:
+    single = _load(FILES["single"])
+    multi = _load(FILES["multi"])
+    hc = _load(FILES["hillclimb"])
+    if single:
+        dryrun_table(single, "single")
+        roofline_table(single)
+    if multi:
+        dryrun_table(multi, "multi")
+    if hc:
+        hillclimb_table(hc)
+
+
+def _capture(fn, *a) -> str:
+    import contextlib
+    import io
+    buf = io.StringIO()
+    with contextlib.redirect_stdout(buf):
+        fn(*a)
+    return buf.getvalue()
+
+
+def inject_into_experiments(path: str = "EXPERIMENTS.md") -> None:
+    """Replace the <!-- REPORT:X --> markers with generated tables.
+    Corrected-roofline rows come from the train_4k corrected sweep when
+    present (results_dryrun_train4k.jsonl) with fast-sweep rows for the rest."""
+    single = _load(FILES["single"])
+    train4k = _load("results_dryrun_train4k.jsonl")
+    multi = _load(FILES["multi"])
+    hc = _load(FILES["hillclimb"])
+    # prefer corrected train_4k records over fast ones
+    corrected = {(r["arch"], r["shape"]): r for r in train4k}
+    merged = [corrected.get((r["arch"], r["shape"]), r) for r in single]
+    text = open(path).read()
+    text = text.replace(
+        "<!-- REPORT:DRYRUN -->",
+        _capture(dryrun_table, single, "single")
+        + _capture(dryrun_table, multi, "multi"))
+    text = text.replace("<!-- REPORT:ROOFLINE -->",
+                        _capture(roofline_table, merged))
+    text = text.replace("<!-- REPORT:PERF -->", _capture(hillclimb_table, hc))
+    open(path, "w").write(text)
+    print(f"injected report tables into {path}")
+
+
+if __name__ == "__main__":
+    import sys as _sys
+    if "--inject" in _sys.argv:
+        inject_into_experiments()
+    else:
+        main()

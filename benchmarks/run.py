@@ -1,0 +1,46 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark aggregator — one module per paper table/figure:
+
+  bench_logistic_transient — Fig. 1 (§5.1 logistic regression, ring, non-iid)
+  bench_transient_theory   — Tables 2, 3, 5, 12–14 (transient stage/time)
+  bench_comm_model         — Tables 1, 7, 11, 17 / App. H (α-β comm model)
+  bench_period_sweep       — Tables 8, 15 (H sweep + SlowMo), real LM training
+  bench_scalability        — Table 10 (node scaling)
+  bench_roofline           — deliverable (g): roofline from the dry-run dumps
+"""
+from __future__ import annotations
+
+import time
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_comm_model, bench_hier,
+                            bench_logistic_transient, bench_period_sweep,
+                            bench_roofline, bench_scalability,
+                            bench_transient_theory)
+    suites = [
+        ("transient_theory", bench_transient_theory.main),
+        ("comm_model", bench_comm_model.main),
+        ("logistic_transient", bench_logistic_transient.main),
+        ("period_sweep", bench_period_sweep.main),
+        ("scalability", bench_scalability.main),
+        ("hier_pga", bench_hier.main),
+        ("roofline", bench_roofline.main),
+    ]
+    failures = []
+    for name, fn in suites:
+        print(f"# === {name} ===", flush=True)
+        t0 = time.time()
+        try:
+            fn()
+        except Exception:  # noqa: BLE001
+            failures.append(name)
+            traceback.print_exc()
+        print(f"# --- {name} done in {time.time() - t0:.1f}s", flush=True)
+    if failures:
+        raise SystemExit(f"benchmark suites failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.checkpoint.ckpt import (latest_step, restore_checkpoint,  # noqa: F401
+                                   save_checkpoint)

@@ -1,0 +1,64 @@
+"""Sharding-aware checkpointing: pytree -> npz + structure manifest.
+
+Arrays are gathered to host (``np.asarray`` addresses every shard), keyed by
+their tree path; restore rebuilds into the template's structure and re-applies
+the template's sharding via device_put.  msgpack-free, dependency-free.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+PyTree = Any
+_MANIFEST = "manifest.json"
+
+
+def _flatten(tree: PyTree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = leaf
+    return out, treedef
+
+
+def save_checkpoint(ckpt_dir: str, state: PyTree, step: int) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    flat, _ = _flatten(state)
+    arrays = {k: np.asarray(v) for k, v in flat.items()}
+    path = os.path.join(ckpt_dir, f"ckpt_{step:08d}.npz")
+    np.savez(path, **arrays)
+    with open(os.path.join(ckpt_dir, _MANIFEST), "w") as f:
+        json.dump({"latest_step": step, "keys": sorted(arrays)}, f, indent=1)
+    return path
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(ckpt_dir)
+             if (m := re.match(r"ckpt_(\d+)\.npz$", f))]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, template: PyTree,
+                       step: Optional[int] = None) -> PyTree:
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    data = np.load(os.path.join(ckpt_dir, f"ckpt_{step:08d}.npz"))
+    flat, treedef = _flatten(template)
+    leaves = []
+    for key, tmpl in flat.items():
+        arr = data[key]
+        if hasattr(tmpl, "sharding") and hasattr(tmpl.sharding, "mesh"):
+            leaves.append(jax.device_put(arr, tmpl.sharding))
+        else:
+            leaves.append(jax.numpy.asarray(arr, dtype=tmpl.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)

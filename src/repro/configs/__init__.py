@@ -1,0 +1,60 @@
+"""Config registry: ``--arch <id>`` resolution for launchers, tests, benches."""
+from __future__ import annotations
+
+import importlib
+from typing import Callable, Dict
+
+from repro.configs.base import (  # noqa: F401 (public re-exports)
+    ALGORITHMS,
+    AudioStubConfig,
+    DataConfig,
+    DistConfig,
+    INPUT_SHAPES,
+    InputShape,
+    MLAConfig,
+    MoEConfig,
+    ModelConfig,
+    OptimizerConfig,
+    SSMConfig,
+    TOPOLOGIES,
+    TrainConfig,
+    VisionStubConfig,
+)
+
+# arch id -> module name. The 10 assigned architectures + paper workloads.
+_ARCH_MODULES: Dict[str, str] = {
+    "gemma2-9b": "gemma2_9b",
+    "qwen3-0.6b": "qwen3_0_6b",
+    "qwen2-0.5b": "qwen2_0_5b",
+    "hubert-xlarge": "hubert_xlarge",
+    "deepseek-v2-lite-16b": "deepseek_v2_lite",
+    "llava-next-mistral-7b": "llava_next_mistral_7b",
+    "qwen3-moe-30b-a3b": "qwen3_moe_30b_a3b",
+    "xlstm-125m": "xlstm_125m",
+    "jamba-1.5-large-398b": "jamba_1_5_large",
+    "qwen1.5-32b": "qwen1_5_32b",
+    # paper's own workloads / driver
+    "bert-large": "bert_large",
+    "pga-lm-100m": "pga_lm_100m",
+}
+
+ASSIGNED_ARCHS = tuple(list(_ARCH_MODULES)[:10])
+
+
+def _module(arch: str):
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_ARCH_MODULES)}")
+    return importlib.import_module(f"repro.configs.{_ARCH_MODULES[arch]}")
+
+
+def get_model_config(arch: str, *, reduced: bool = False,
+                     long_context: bool = False) -> ModelConfig:
+    mod = _module(arch)
+    if long_context and hasattr(mod, "long_context_config"):
+        return mod.long_context_config()
+    fn: Callable[[], ModelConfig] = mod.reduced_config if reduced else mod.full_config
+    return fn()
+
+
+def list_archs() -> tuple:
+    return tuple(_ARCH_MODULES)

@@ -1,0 +1,280 @@
+"""Typed configuration tree for the repro framework.
+
+Everything in the system — model architecture, decentralized-training algorithm
+(the paper's contribution), distribution/mesh layout, optimizer and data — is
+driven from the dataclasses in this file.  One module per assigned architecture
+lives next to this file; each exposes ``full_config()`` (the exact
+published numbers, cited) and ``reduced_config()`` (a <=2-layer, d_model<=512,
+<=4-expert variant of the same family for CPU smoke tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Block-pattern vocabulary
+# ---------------------------------------------------------------------------
+# A model is a (possibly empty) unscanned ``prefix_pattern`` followed by
+# ``pattern`` repeated until ``n_layers`` is reached.  Each entry is
+# (mixer, ffn):
+#   mixer: "attn" | "attn_sw" (sliding window) | "mamba" | "mlstm" | "slstm"
+#   ffn:   "dense" | "moe" | "none"
+MIXERS = ("attn", "attn_sw", "mamba", "mlstm", "slstm")
+FFNS = ("dense", "moe", "none")
+BlockSpec = Tuple[str, str]
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_routed: int                    # routed experts
+    top_k: int
+    d_ff_expert: int
+    n_shared: int = 0                # always-on shared experts (DeepSeek-V2)
+    capacity_factor: float = 1.25    # dispatch capacity slack (drops beyond)
+    aux_coef: float = 0.01           # load-balance auxiliary loss coefficient
+    router_dtype: str = "float32"
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    """Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434)."""
+    kv_lora_rank: int                # compressed KV latent dim (c_KV)
+    q_lora_rank: Optional[int] = None  # None => full-rank Q projection
+    rope_head_dim: int = 64          # decoupled RoPE key dim (d_h^R)
+    nope_head_dim: int = 128         # non-RoPE per-head dim (d_h)
+    v_head_dim: int = 128
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """State-space / recurrent mixer parameters (Mamba + xLSTM)."""
+    d_state: int = 16                # Mamba N (per-channel state)
+    d_conv: int = 4                  # Mamba local conv width
+    expand: int = 2                  # Mamba inner expansion d_inner = expand*d
+    dt_rank: Optional[int] = None    # None => ceil(d_model/16)
+    # xLSTM
+    mlstm_head_dim: int = 128        # mLSTM matrix-memory head dim (qk dim)
+    mlstm_expand: int = 2            # mLSTM up-projection factor
+    slstm_heads: int = 4
+    mlstm_chunk: int = 64            # chunkwise-parallel chunk length (TPU tiling)
+    scan_dtype: str = "float32"      # recurrence accumulation dtype
+                                     # ("bfloat16" halves scan-state traffic)
+    use_pallas_mlstm: bool = False   # TPU: repro.kernels.mlstm_chunk kernel
+
+
+@dataclass(frozen=True)
+class VisionStubConfig:
+    """VLM frontend stub (anyres tiling).  The ViT itself is out of scope per
+    the brief — ``input_specs`` supplies pre-computed patch embeddings."""
+    n_tiles: int = 5                 # anyres: base image + 4 tiles (llava-1.6)
+    patches_per_tile: int = 576      # 24x24 for CLIP-ViT-L/14 @336px
+    embed_dim: int = 4096            # after the (stubbed) mm projector
+
+
+@dataclass(frozen=True)
+class AudioStubConfig:
+    """Audio frontend stub (conv feature extractor).  ``input_specs`` supplies
+    20ms-frame embeddings directly."""
+    frame_dim: int = 1280
+    mask_prob: float = 0.08          # HuBERT masked-prediction span starts
+    mask_span: int = 10
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense|encoder|moe|vlm|ssm|hybrid
+    citation: str                    # source paper / model card
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None   # None => d_model // n_heads
+    pattern: Tuple[BlockSpec, ...] = (("attn", "dense"),)
+    prefix_pattern: Tuple[BlockSpec, ...] = ()
+    causal: bool = True
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-6
+    rope_theta: float = 10000.0
+    qk_norm: bool = False            # Qwen3: RMSNorm on per-head q,k
+    qkv_bias: bool = False           # Qwen1.5/Qwen2
+    attn_logit_softcap: Optional[float] = None   # Gemma2: 50.0
+    final_logit_softcap: Optional[float] = None  # Gemma2: 30.0
+    sliding_window: Optional[int] = None         # for "attn_sw" layers
+    post_block_norm: bool = False    # Gemma2 post-norms
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    vision: Optional[VisionStubConfig] = None
+    audio: Optional[AudioStubConfig] = None
+    dtype: str = "bfloat16"          # activation/compute dtype
+    param_dtype: str = "float32"
+
+    # ---- derived -----------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim if self.head_dim is not None else self.d_model // self.n_heads
+
+    @property
+    def layers(self) -> Tuple[BlockSpec, ...]:
+        """Fully unrolled per-layer (mixer, ffn) list."""
+        body = self.n_layers - len(self.prefix_pattern)
+        if body < 0 or (len(self.pattern) and body % len(self.pattern) != 0):
+            raise ValueError(
+                f"{self.name}: n_layers={self.n_layers} incompatible with "
+                f"prefix={len(self.prefix_pattern)} pattern={len(self.pattern)}")
+        reps = body // len(self.pattern)
+        return self.prefix_pattern + self.pattern * reps
+
+    @property
+    def n_scan_blocks(self) -> int:
+        return (self.n_layers - len(self.prefix_pattern)) // len(self.pattern)
+
+    def validate(self) -> "ModelConfig":
+        for mixer, ffn in self.layers:
+            if mixer not in MIXERS:
+                raise ValueError(f"unknown mixer {mixer!r}")
+            if ffn not in FFNS:
+                raise ValueError(f"unknown ffn {ffn!r}")
+            if ffn == "moe" and self.moe is None:
+                raise ValueError("moe block requires MoEConfig")
+            if mixer in ("mamba", "mlstm", "slstm") and self.ssm is None:
+                raise ValueError(f"{mixer} block requires SSMConfig")
+        if self.n_heads % self.n_kv_heads != 0:
+            raise ValueError("n_heads must be divisible by n_kv_heads")
+        return self
+
+    def has_mixer(self, *kinds: str) -> bool:
+        return any(m in kinds for m, _ in self.layers)
+
+    @property
+    def supports_long_context(self) -> bool:
+        """True if decode with a 500k context is sub-quadratic / bounded-state
+        for every layer (SSM/hybrid) or all attention is sliding-window."""
+        for mixer, _ in self.layers:
+            if mixer == "attn":
+                return False
+        return True
+
+    @property
+    def is_encoder(self) -> bool:
+        return not self.causal
+
+
+# ---------------------------------------------------------------------------
+# Distribution / decentralized-training config (the paper's knobs)
+# ---------------------------------------------------------------------------
+ALGORITHMS = ("parallel", "gossip", "local", "gossip_pga", "gossip_aga",
+              "slowmo", "hier_pga")
+TOPOLOGIES = ("ring", "grid", "exp", "one_peer_exp", "full", "disconnected")
+
+
+@dataclass(frozen=True)
+class DistConfig:
+    algorithm: str = "gossip_pga"
+    topology: str = "one_peer_exp"   # paper's deep-learning default (Assran et al.)
+    H: int = 6                       # global averaging period (paper's ImageNet/BERT value)
+    node_axis: str = "data"          # "data": nodes along data axis (paper-faithful)
+                                     # "pod":  hierarchical — nodes are pods, FSDP within
+    # SlowMo (Wang et al. 2019) — Gossip-PGA == SlowMo(beta=0, alpha=1)
+    slowmo_beta: float = 0.0
+    slowmo_lr: float = 1.0
+    # Hier-PGA (beyond-paper): intra-pod averaging period (global = H)
+    hier_h_pod: int = 3
+    n_pods: int = 2
+    # Gossip-AGA (paper Alg. 2)
+    aga_h_init: int = 4
+    aga_warmup: int = 64             # K_w warmup iterations for F_init running avg
+    aga_h_max: int = 64              # Corollary 1 requires bounded H
+    # Mesh / sharding
+    data_axis: str = "data"
+    model_axis: str = "model"
+    pod_axis: str = "pod"
+    comm_dtype: str = "float32"      # gossip/all-reduce wire dtype
+                                     # ("bfloat16" halves collective bytes —
+                                     # the paper's "orthogonal quantization")
+    remat: str = "block"             # "none" | "block": jax.checkpoint each scanned block
+    remat_policy: str = "nothing"    # "nothing" | "dots" (checkpoint_dots) — perf knob
+    serve_param_sharding: str = "tp" # "tp" (model axis) | "2d" (data+model, big archs)
+    fsdp: bool = False               # shard params over data axis too (node_axis="pod")
+
+    def validate(self) -> "DistConfig":
+        if self.algorithm not in ALGORITHMS:
+            raise ValueError(f"unknown algorithm {self.algorithm!r}")
+        if self.topology not in TOPOLOGIES:
+            raise ValueError(f"unknown topology {self.topology!r}")
+        if self.H < 1:
+            raise ValueError("H must be >= 1")
+        if self.node_axis not in ("data", "pod"):
+            raise ValueError("node_axis must be 'data' or 'pod'")
+        return self
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "sgd"                # sgd | adamw | lamb
+    lr: float = 0.1
+    momentum: float = 0.9
+    nesterov: bool = True            # paper's ImageNet recipe
+    weight_decay: float = 1e-4
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    grad_clip: Optional[float] = 1.0
+    schedule: str = "warmup_cosine"  # constant | warmup_cosine | warmup_poly | step
+    warmup_steps: int = 100
+    decay_steps: Tuple[int, ...] = ()   # for "step" schedule (paper: 30/60/90 epochs)
+    decay_factor: float = 0.1
+    total_steps: int = 1000
+    min_lr_ratio: float = 0.0
+
+
+@dataclass(frozen=True)
+class DataConfig:
+    kind: str = "synthetic_lm"       # synthetic_lm | logistic
+    non_iid: bool = True             # per-node distribution shift (paper §5.1)
+    non_iid_alpha: float = 0.5       # strength of per-node shift
+    seed: int = 0
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    model: ModelConfig
+    dist: DistConfig = field(default_factory=DistConfig)
+    optimizer: OptimizerConfig = field(default_factory=OptimizerConfig)
+    data: DataConfig = field(default_factory=DataConfig)
+    global_batch: int = 256
+    seq_len: int = 4096
+    microbatches: int = 1            # grad-accumulation splits per node-batch
+    steps: int = 200
+    log_every: int = 10
+    ckpt_every: int = 0              # 0 = disabled
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    seed: int = 0
+    z_loss: float = 0.0
+
+    def replace(self, **kw) -> "TrainConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Assigned input shapes (public pool)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                        # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES = {
+    "train_4k":    InputShape("train_4k",    4_096,   256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768,   32, "prefill"),
+    "decode_32k":  InputShape("decode_32k",  32_768,  128, "decode"),
+    "long_500k":   InputShape("long_500k",  524_288,    1, "decode"),
+}

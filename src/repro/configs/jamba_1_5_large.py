@@ -1,0 +1,65 @@
+"""jamba-1.5-large-398b [hybrid] — Mamba + attention 1:7 interleave, MoE 16e top-2.
+
+Source: Jamba [arXiv:2403.19887] / Jamba-1.5 [arXiv:2408.12570].
+72L d_model=8192 64H (GQA kv=8) d_ff=24576 vocab=65536, head_dim=128.
+Jamba block = 8 layers: attention at index 4, Mamba elsewhere; MoE replaces the
+MLP on every other layer (odd indices), 16 experts top-2.
+
+At 398B parameters this arch trains in hierarchical mode (dist.node_axis="pod"):
+per-node parameter replicas at 16-way TP do not fit HBM; gossip runs across
+pods over DCI while parameters are FSDP+TP sharded within the pod — exactly the
+sparse-expensive-link regime the paper's PGA targets (DESIGN.md §4).
+"""
+from repro.configs.base import MoEConfig, ModelConfig, SSMConfig
+
+CITATION = "arXiv:2403.19887 (Jamba), arXiv:2408.12570 (Jamba-1.5)"
+
+_JAMBA_BLOCK = (
+    ("mamba", "dense"), ("mamba", "moe"),
+    ("mamba", "dense"), ("mamba", "moe"),
+    ("attn",  "dense"), ("mamba", "moe"),
+    ("mamba", "dense"), ("mamba", "moe"),
+)
+
+
+def full_config() -> ModelConfig:
+    return ModelConfig(
+        name="jamba-1.5-large-398b",
+        family="hybrid",
+        citation=CITATION,
+        n_layers=72,                       # 9 Jamba blocks of 8
+        d_model=8192,
+        n_heads=64,
+        n_kv_heads=8,
+        head_dim=128,
+        d_ff=24576,
+        vocab_size=65_536,
+        pattern=_JAMBA_BLOCK,
+        moe=MoEConfig(n_routed=16, top_k=2, d_ff_expert=24576, n_shared=0),
+        ssm=SSMConfig(d_state=16, d_conv=4, expand=2),
+        param_dtype="bfloat16",            # 398B: fp32 replicas are pointless at this scale
+    ).validate()
+
+
+def long_context_config() -> ModelConfig:
+    """jamba's attention layers are 1/8 of the stack; for long_500k decode the
+    attention KV is the only S-proportional state. Runs as-is."""
+    return full_config()
+
+
+def reduced_config() -> ModelConfig:
+    return ModelConfig(
+        name="jamba-reduced",
+        family="hybrid",
+        citation=CITATION,
+        n_layers=8,                        # one Jamba block, reduced widths
+        d_model=256,
+        n_heads=4,
+        n_kv_heads=2,
+        head_dim=64,
+        d_ff=512,
+        vocab_size=512,
+        pattern=_JAMBA_BLOCK,
+        moe=MoEConfig(n_routed=4, top_k=2, d_ff_expert=512, n_shared=0),
+        ssm=SSMConfig(d_state=8, d_conv=4, expand=2),
+    ).validate()

@@ -1,0 +1,50 @@
+"""xlstm-125m [ssm] — sLSTM + mLSTM blocks.
+
+Source: xLSTM [arXiv:2405.04517].
+12L d_model=768 4H (slstm heads) d_ff=0 (projections live inside the blocks)
+vocab=50304.  Block ratio mLSTM:sLSTM = 5:1 (xLSTM[7:1]-style sparse sLSTM
+placement adapted to 12 layers; sLSTM at layers 5 and 11 — recorded choice).
+mLSTM is implemented chunkwise-parallel (TPU/MXU-native); sLSTM is a scalar
+recurrence via lax.scan (inherently sequential — see DESIGN.md hardware notes).
+"""
+from repro.configs.base import ModelConfig, SSMConfig
+
+CITATION = "arXiv:2405.04517 (xLSTM)"
+
+
+def full_config() -> ModelConfig:
+    return ModelConfig(
+        name="xlstm-125m",
+        family="ssm",
+        citation=CITATION,
+        n_layers=12,
+        d_model=768,
+        n_heads=4,
+        n_kv_heads=4,
+        head_dim=192,
+        d_ff=0,
+        vocab_size=50_304,
+        pattern=(("mlstm", "none"),) * 5 + (("slstm", "none"),),
+        ssm=SSMConfig(mlstm_head_dim=96, mlstm_expand=2, slstm_heads=4,
+                      mlstm_chunk=64),
+        tie_embeddings=True,
+    ).validate()
+
+
+def reduced_config() -> ModelConfig:
+    return ModelConfig(
+        name="xlstm-125m-reduced",
+        family="ssm",
+        citation=CITATION,
+        n_layers=2,
+        d_model=128,
+        n_heads=4,
+        n_kv_heads=4,
+        head_dim=32,
+        d_ff=0,
+        vocab_size=512,
+        pattern=(("mlstm", "none"), ("slstm", "none")),
+        ssm=SSMConfig(mlstm_head_dim=32, mlstm_expand=2, slstm_heads=4,
+                      mlstm_chunk=16),
+        tie_embeddings=True,
+    ).validate()

@@ -1,0 +1,10 @@
+"""Core: the paper's contribution — Gossip SGD with Periodic Global Averaging.
+
+topology.py   — mixing matrices W, β, circulant shift decompositions
+mixing.py     — roll-based (pjit) + shard_map/ppermute gossip, global averaging
+schedule.py   — PGA fixed period, AGA adaptive period (paper Alg. 2), baselines
+algorithms.py — Decentralized wiring + the exact-math reference simulator
+"""
+from repro.core import algorithms, mixing, schedule, topology  # noqa: F401
+from repro.core.algorithms import Decentralized, simulate  # noqa: F401
+from repro.core.schedule import make_schedule  # noqa: F401

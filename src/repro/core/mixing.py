@@ -1,0 +1,189 @@
+"""Mixing primitives: gossip communication and global averaging.
+
+Two interchangeable implementations, proven equivalent by tests:
+
+* **roll-based (pjit / GSPMD)** — ``W·x = Σ_s w_s · roll(x, s, node_axis)``.
+  Used inside jitted train steps where parameters carry a leading node axis
+  sharded over the mesh ``data`` (or flattened ``(pod, data)``) axis.  Each
+  roll along the sharded axis lowers to one ICI ``collective-permute``; the
+  global average lowers to an ``all-reduce``.  This is the production path.
+
+* **shard_map + ppermute** — the explicit decentralized runtime: each mesh
+  slot *is* a node and exchanges its block with neighbors via
+  ``jax.lax.ppermute`` / ``psum``.  Semantically identical; exposed for users
+  who keep per-node state unstacked.
+
+Both views never materialize W (DESIGN.md §2.1).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import topology as topo
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Roll-based mixing (pjit path)
+# ---------------------------------------------------------------------------
+def mix_array(x: jax.Array, weights: Dict[int, float], axis: int = 0,
+              comm_dtype=None) -> jax.Array:
+    """(W·x) along ``axis`` for circulant W given its shift decomposition.
+
+    ``roll(x, -s)`` moves node (i+s)'s row into slot i, matching
+    ``W[i, i+s] = w_s``; under GSPMD each term is one collective-permute.
+
+    ``comm_dtype`` (e.g. bf16): neighbor terms are cast to the wire dtype
+    before the roll — the collective-permute moves half the bytes; the self
+    term and the weighted sum stay in the storage dtype (the paper's
+    "orthogonal quantization" hook, §2 Related Work).
+    """
+    acc = None
+    for s, w in weights.items():
+        if s == 0:
+            term = x
+        else:
+            src = x.astype(comm_dtype) if comm_dtype is not None else x
+            term = jnp.roll(src, -s, axis=axis).astype(x.dtype)
+        term = term * jnp.asarray(w, dtype=x.dtype)
+        acc = term if acc is None else acc + term
+    return acc
+
+
+def mix_array_grid(x: jax.Array, n: int, axis: int = 0) -> jax.Array:
+    """Torus-grid mixing: factor the node axis into (r, c) and roll each dim."""
+    r, c = topo.grid_shape(n)
+    shape = x.shape
+    xg = x.reshape(shape[:axis] + (r, c) + shape[axis + 1:])
+    acc = None
+    for (dr, dc), w in topo.grid_shift_weights(n).items():
+        term = xg
+        if dr:
+            term = jnp.roll(term, -dr, axis=axis)
+        if dc:
+            term = jnp.roll(term, -dc, axis=axis + 1)
+        term = term * jnp.asarray(w, dtype=x.dtype)
+        acc = term if acc is None else acc + term
+    return acc.reshape(shape)
+
+
+def mix_pytree(params: PyTree, topology: str, n: int, step: int = 0,
+               axis: int = 0, comm_dtype=None) -> PyTree:
+    """Gossip step ``x ← W x`` applied leaf-wise over a pytree whose leaves
+    carry the node axis at ``axis``."""
+    if n == 1 or topology == "disconnected":
+        return params
+    if topology == "grid":
+        return jax.tree.map(lambda p: mix_array_grid(p, n, axis), params)
+    weights = topo.shift_weights(topology, n, step)
+    return jax.tree.map(lambda p: mix_array(p, weights, axis, comm_dtype),
+                        params)
+
+
+def global_average_pytree(params: PyTree, axis: int = 0,
+                          comm_dtype=None) -> PyTree:
+    """Periodic global averaging ``x ← (1/n)𝟙𝟙ᵀ x`` (All-Reduce step).
+    With ``comm_dtype`` the reduction runs on wire-dtype operands — the
+    all-reduce moves half the bytes (node counts are small, so bf16
+    accumulation over n ≤ 32 replicas is benign)."""
+    def avg(p):
+        src = p.astype(comm_dtype) if comm_dtype is not None else p
+        m = jnp.mean(src, axis=axis, keepdims=True)
+        return jnp.broadcast_to(m, p.shape).astype(p.dtype)
+    return jax.tree.map(avg, params)
+
+
+def pod_average_pytree(params: PyTree, n_pods: int, axis: int = 0,
+                       comm_dtype=None) -> PyTree:
+    """Hierarchical averaging (beyond-paper Hier-PGA, DESIGN.md §4): exact
+    average *within* each pod's block of nodes — an all-reduce over the
+    cheap intra-pod ICI, leaving cross-pod DCI traffic to the (rarer)
+    global step."""
+    def avg(p):
+        n = p.shape[axis]
+        per = n // n_pods
+        shp = p.shape[:axis] + (n_pods, per) + p.shape[axis + 1:]
+        src = p.astype(comm_dtype) if comm_dtype is not None else p
+        g = src.reshape(shp)
+        m = jnp.mean(g, axis=axis + 1, keepdims=True)
+        return jnp.broadcast_to(m, g.shape).reshape(p.shape).astype(p.dtype)
+    return jax.tree.map(avg, params)
+
+
+# ---------------------------------------------------------------------------
+# shard_map + ppermute (explicit decentralized runtime)
+# ---------------------------------------------------------------------------
+def _perm_for_shift(n: int, s: int) -> Tuple[Tuple[int, int], ...]:
+    # node i receives from node (i + s) mod n  => edge (src=(i+s), dst=i)
+    return tuple(((i + s) % n, i) for i in range(n))
+
+
+def gossip_ppermute(x: jax.Array, axis_name: str, n: int,
+                    weights: Dict[int, float]) -> jax.Array:
+    """W·x where each mesh slot along ``axis_name`` holds one node's block.
+    Must be called inside shard_map."""
+    acc = None
+    for s, w in weights.items():
+        if s == 0:
+            term = x
+        else:
+            term = jax.lax.ppermute(x, axis_name, _perm_for_shift(n, s))
+        term = term * jnp.asarray(w, dtype=x.dtype)
+        acc = term if acc is None else acc + term
+    return acc
+
+
+def global_average_ppermute(x: jax.Array, axis_name) -> jax.Array:
+    """All-Reduce mean over the node axis (inside shard_map)."""
+    return jax.lax.pmean(x, axis_name)
+
+
+def make_shard_map_mixer(mesh: jax.sharding.Mesh, axis_name: str,
+                         topology: str, step: int = 0) -> Callable:
+    """Build ``f(x_stacked) -> W @ x_stacked`` running as shard_map over
+    ``axis_name`` — the explicit runtime equivalent of :func:`mix_pytree`."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    n = mesh.shape[axis_name]
+    weights = topo.shift_weights(topology, n, step)
+
+    def node_fn(x):
+        return gossip_ppermute(x, axis_name, n, weights)
+
+    spec = P(axis_name)
+    return shard_map(node_fn, mesh=mesh, in_specs=(spec,), out_specs=spec)
+
+
+# ---------------------------------------------------------------------------
+# Communication-op selector used by the training step
+# ---------------------------------------------------------------------------
+def communicate(params: PyTree, *, phase: str, topology: str, n_nodes: int,
+                step: int = 0, axis: int = 0, comm_dtype=None,
+                n_pods: int = 1) -> PyTree:
+    """Apply one communication round to decentralized parameters.
+
+    phase:
+      "none"    — no communication (Local SGD between syncs; Parallel SGD's
+                  gradient all-reduce happens in the grad path instead)
+      "gossip"  — x ← W x
+      "global"  — x ← x̄ (periodic All-Reduce global averaging)
+      "pod_avg" — exact average within each pod block (Hier-PGA)
+    """
+    if phase == "none" or n_nodes == 1:
+        return params
+    if phase == "gossip":
+        return mix_pytree(params, topology, n_nodes, step=step, axis=axis,
+                          comm_dtype=comm_dtype)
+    if phase == "global":
+        return global_average_pytree(params, axis=axis,
+                                     comm_dtype=comm_dtype)
+    if phase == "pod_avg":
+        return pod_average_pytree(params, n_pods, axis=axis,
+                                  comm_dtype=comm_dtype)
+    raise ValueError(f"unknown communication phase {phase!r}")

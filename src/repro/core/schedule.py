@@ -1,0 +1,160 @@
+"""Communication schedules: fixed-period PGA and adaptive AGA (paper Alg. 2).
+
+Host-side logic — the trainer asks the schedule *which compiled step variant*
+("gossip" vs "global") to dispatch at iteration k.  Keeping the branch on the
+host (instead of a ``lax.cond``) keeps each compiled HLO's collective profile
+pure, which the roofline analysis depends on, and lets AGA change H without
+recompilation (DESIGN.md §2.2).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+from repro.configs.base import DistConfig
+
+
+class CommSchedule:
+    """Base: decides the communication phase of step k (0-based).  Phase of
+    step k applies *after* the local SGD update of step k, matching paper
+    Alg. 1 where mod(k+1, H) == 0 triggers global averaging."""
+
+    def phase(self, step: int) -> str:
+        raise NotImplementedError
+
+    def gossip_shift_step(self, step: int, period: int = 1) -> int:
+        """Index fed to the time-varying one-peer-exp graph, reduced modulo
+        the topology's schedule period (bounds compiled variants)."""
+        return step % max(period, 1)
+
+    def observe_loss(self, step: int, loss: float) -> None:  # AGA hook
+        pass
+
+
+@dataclass
+class ParallelSchedule(CommSchedule):
+    """Parallel SGD: exact global average every step (W = J)."""
+    def phase(self, step: int) -> str:
+        return "global"
+
+
+@dataclass
+class GossipSchedule(CommSchedule):
+    """Gossip SGD: H → ∞ (paper Remark 4)."""
+    def phase(self, step: int) -> str:
+        return "gossip"
+
+
+@dataclass
+class LocalSchedule(CommSchedule):
+    """Local SGD: W = I between periodic All-Reduce syncs."""
+    H: int = 6
+
+    def phase(self, step: int) -> str:
+        return "global" if (step + 1) % self.H == 0 else "none"
+
+
+@dataclass
+class PGASchedule(CommSchedule):
+    """Gossip-PGA (paper Alg. 1): gossip every step, All-Reduce every H."""
+    H: int = 6
+
+    def phase(self, step: int) -> str:
+        return "global" if (step + 1) % self.H == 0 else "gossip"
+
+
+@dataclass
+class AGASchedule(CommSchedule):
+    """Gossip-AGA (paper Alg. 2): H^(ℓ) = ceil(F_init / F(x_k) · H_init),
+    clipped to H_max (Corollary 1 requires bounded periods).
+
+    The paper removes the ^(1/4) exponent "for flexible period adjustment"
+    (App. G) — we follow App. G exactly.
+    """
+    H_init: int = 4
+    warmup: int = 64
+    H_max: int = 64
+    _C: int = field(default=0, init=False)
+    _H: int = field(default=0, init=False)
+    _F_init: Optional[float] = field(default=None, init=False)
+    _F_last: Optional[float] = field(default=None, init=False)
+    history: List[int] = field(default_factory=list, init=False)
+
+    def __post_init__(self):
+        self._H = self.H_init
+
+    @property
+    def current_H(self) -> int:
+        return self._H
+
+    def observe_loss(self, step: int, loss: float) -> None:
+        self._F_last = float(loss)
+
+    def phase(self, step: int) -> str:
+        self._C += 1
+        if self._C >= self._H:
+            self._C = 0
+            self._update_period(step)
+            return "global"
+        return "gossip"
+
+    def _update_period(self, step: int) -> None:
+        if self._F_last is None:
+            return
+        if step < self.warmup or self._F_init is None:
+            # running average F_init <- (F_init + F)/2 (paper Alg. 2 warmup)
+            self._F_init = (self._F_last if self._F_init is None
+                            else 0.5 * (self._F_init + self._F_last))
+        else:
+            import math
+            h = math.ceil(self._F_init / max(self._F_last, 1e-12) * self.H_init)
+            self._H = int(min(max(h, 1), self.H_max))
+        self.history.append(self._H)
+
+
+@dataclass
+class HierPGASchedule(CommSchedule):
+    """Hierarchical PGA (beyond-paper, DESIGN.md §4): gossip every step,
+    intra-pod exact averaging every H_pod steps, global All-Reduce every
+    H_global steps.  Matches the two-tier ICI/DCI cost structure of multi-pod
+    TPU deployments: the cheap sync runs often, the expensive one rarely."""
+    H_pod: int = 3
+    H_global: int = 12
+
+    def phase(self, step: int) -> str:
+        if (step + 1) % self.H_global == 0:
+            return "global"
+        if (step + 1) % self.H_pod == 0:
+            return "pod_avg"
+        return "gossip"
+
+
+@dataclass
+class SlowMoSchedule(CommSchedule):
+    """SlowMo (Wang et al. 2019) outer loop: gossip base optimizer + slow
+    momentum update at each exact-average boundary.  phase 'slowmo' tells the
+    trainer to dispatch the slow-momentum step variant."""
+    H: int = 6
+
+    def phase(self, step: int) -> str:
+        return "slowmo" if (step + 1) % self.H == 0 else "gossip"
+
+
+def make_schedule(dist: DistConfig) -> CommSchedule:
+    a = dist.algorithm
+    if a == "parallel":
+        return ParallelSchedule()
+    if a == "gossip":
+        return GossipSchedule()
+    if a == "local":
+        return LocalSchedule(H=dist.H)
+    if a == "gossip_pga":
+        return PGASchedule(H=dist.H)
+    if a == "gossip_aga":
+        return AGASchedule(H_init=dist.aga_h_init, warmup=dist.aga_warmup,
+                           H_max=dist.aga_h_max)
+    if a == "slowmo":
+        return SlowMoSchedule(H=dist.H)
+    if a == "hier_pga":
+        return HierPGASchedule(H_pod=dist.hier_h_pod, H_global=dist.H)
+    raise ValueError(f"unknown algorithm {a!r}")

@@ -1,0 +1,183 @@
+"""Gossip topologies: mixing matrices W, connectivity β, and circulant shift
+decompositions.
+
+The paper (Assumption 3) requires a doubly-stochastic W with
+``null(I-W) = span(1)`` and ``β = ‖W − (1/n)𝟙𝟙ᵀ‖₂ < 1``.  All topologies here
+are circulant (ring / static exponential / one-peer exponential / full) or
+2D-circulant (grid on a torus), which means ``W·x`` decomposes into a weighted
+sum of cyclic shifts along the node axis:
+
+    W·x = Σ_s  w_s · roll(x, s, node_axis)
+
+That decomposition is the TPU-native form: each roll along a sharded mesh axis
+lowers to a single ``collective-permute`` over ICI (DESIGN.md §2.1), so the
+sparse W is never materialized in the hot path.  The dense matrices built here
+are used by tests (roll-mixing ≡ dense-W mixing), the logistic-regression
+simulator, and β computation for the roofline/transient-stage analytics.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import numpy as np
+
+ShiftWeights = Dict[int, float]          # shift (along flattened node axis) -> weight
+GridShiftWeights = Dict[Tuple[int, int], float]
+
+
+def _require_power_of_two(n: int, what: str) -> int:
+    p = int(round(math.log2(n)))
+    if 2 ** p != n:
+        raise ValueError(f"{what} requires power-of-two node count, got {n}")
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Shift decompositions
+# ---------------------------------------------------------------------------
+def shift_weights(topology: str, n: int, step: int = 0) -> ShiftWeights:
+    """Circulant decomposition of W for 1D topologies.
+
+    ``step`` matters only for the time-varying one-peer exponential graph
+    (Assran et al. 2019): at step k each node averages with the single peer
+    2^(k mod log2 n) hops away.
+    """
+    if n == 1:
+        return {0: 1.0}
+    if topology == "ring":
+        # Each node averages with its two ring neighbors: w = 1/3 (|N_i|=3,
+        # paper §3.4).  For n == 2 the two shifts coincide.
+        if n == 2:
+            return {0: 1.0 / 3.0, 1: 2.0 / 3.0}
+        return {0: 1.0 / 3.0, 1: 1.0 / 3.0, n - 1: 1.0 / 3.0}
+    if topology == "exp":
+        # Static exponential graph: neighbors at 1, 2, 4, ... hops.
+        p = _require_power_of_two(n, "exp topology")
+        shifts = [0] + [2 ** j for j in range(p)]
+        w = 1.0 / len(shifts)
+        return {s: w for s in shifts}
+    if topology == "one_peer_exp":
+        p = _require_power_of_two(n, "one-peer exp topology")
+        hop = 2 ** (step % p)
+        return {0: 0.5, hop: 0.5}
+    if topology == "full":
+        return {s: 1.0 / n for s in range(n)}
+    if topology == "disconnected":   # W = I  => Local SGD
+        return {0: 1.0}
+    raise ValueError(f"no 1D shift decomposition for topology {topology!r}")
+
+
+def grid_shape(n: int) -> Tuple[int, int]:
+    """Near-square factorization for the torus grid."""
+    r = int(math.sqrt(n))
+    while n % r != 0:
+        r -= 1
+    return r, n // r
+
+
+def grid_shift_weights(n: int) -> GridShiftWeights:
+    """Torus grid: each node averages with 4 neighbors (|N_i|=5, paper §3.4)."""
+    r, c = grid_shape(n)
+    w = 1.0 / 5.0
+    out: GridShiftWeights = {(0, 0): w}
+    for dr, dc in ((1, 0), (r - 1, 0), (0, 1), (0, c - 1)):
+        out[(dr, dc)] = out.get((dr, dc), 0.0) + w
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Dense matrices (tests / simulator / β)
+# ---------------------------------------------------------------------------
+def mixing_matrix(topology: str, n: int, step: int = 0) -> np.ndarray:
+    """Dense doubly-stochastic W ∈ R^{n×n} for ``topology``."""
+    if topology == "grid":
+        r, c = grid_shape(n)
+        W = np.zeros((n, n))
+        for (dr, dc), w in grid_shift_weights(n).items():
+            P = np.zeros((n, n))
+            for i in range(n):
+                ir, ic = divmod(i, c)
+                j = ((ir + dr) % r) * c + (ic + dc) % c
+                P[i, j] = 1.0
+            W += w * P
+        return W
+    W = np.zeros((n, n))
+    for s, w in shift_weights(topology, n, step).items():
+        W += w * np.roll(np.eye(n), s, axis=1)    # W[i, (i+s)%n] = w_s
+    return W
+
+
+def beta(W: np.ndarray) -> float:
+    """β = ‖W − (1/n)𝟙𝟙ᵀ‖₂ (paper Assumption 3 / Remark 1)."""
+    n = W.shape[0]
+    J = np.ones((n, n)) / n
+    return float(np.linalg.svd(W - J, compute_uv=False)[0])
+
+
+def effective_beta(topology: str, n: int) -> float:
+    """β for static topologies; for the time-varying one-peer exponential
+    graph, the per-period contraction ‖Π_k (W_k − J)‖ (0 for power-of-2 n —
+    exact averaging after log2 n steps, paper §3)."""
+    if n == 1:
+        return 0.0
+    if topology == "one_peer_exp":
+        p = _require_power_of_two(n, "one-peer exp topology")
+        P = np.eye(n)
+        for k in range(p):
+            P = mixing_matrix(topology, n, step=k) @ P
+        return beta(P) ** (1.0 / p) if beta(P) > 0 else 0.0
+    return beta(mixing_matrix(topology, n))
+
+
+def schedule_period(topology: str, n: int) -> int:
+    """Number of distinct mixing matrices over time: 1 for static topologies,
+    log2(n) for the time-varying one-peer exponential graph.  Callers reduce
+    the step index modulo this before using it as a *static* jit argument —
+    bounding the number of compiled gossip-step variants."""
+    if topology == "one_peer_exp" and n > 1:
+        return _require_power_of_two(n, "one-peer exp topology")
+    return 1
+
+
+def is_doubly_stochastic(W: np.ndarray, tol: float = 1e-9) -> bool:
+    n = W.shape[0]
+    ones = np.ones(n)
+    return (
+        bool(np.all(W >= -tol))
+        and np.allclose(W @ ones, ones, atol=tol)
+        and np.allclose(ones @ W, ones, atol=tol)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Paper quantities: C_β, D_β, transient stages (Tables 2, 3)
+# ---------------------------------------------------------------------------
+def c_beta(b: float, H: int) -> float:
+    """C_β = Σ_{k=0}^{H-1} β^k = (1-β^H)/(1-β)."""
+    if b >= 1.0:
+        return float(H)
+    return (1.0 - b ** H) / (1.0 - b)
+
+
+def d_beta(b: float, H: int) -> float:
+    """D_β = min{H, 1/(1-β)}."""
+    if b >= 1.0:
+        return float(H)
+    return min(float(H), 1.0 / (1.0 - b))
+
+
+def transient_stage(algorithm: str, n: int, b: float, H: int,
+                    iid: bool = False) -> float:
+    """Transient-stage length (iterations) per paper Tables 2 & 3 / App. D."""
+    if algorithm == "parallel":
+        return 0.0
+    if algorithm == "gossip":
+        g = 1.0 - b
+        return n ** 3 * b ** 4 / (g ** 2 if iid else g ** 4)
+    if algorithm == "local":
+        return n ** 3 * (H ** 2 if iid else H ** 4)
+    if algorithm in ("gossip_pga", "gossip_aga"):
+        cb, db = c_beta(b, H), d_beta(b, H)
+        return n ** 3 * b ** 4 * cb ** 2 * (1.0 if iid else db ** 2)
+    raise ValueError(f"no transient model for {algorithm!r}")

@@ -1,0 +1,2 @@
+from repro.data.logistic import LogisticProblem, make_logistic_problem  # noqa: F401
+from repro.data.synthetic import SyntheticStream, make_stream  # noqa: F401

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the substrate's compute hot spots.
+
+The paper's contribution is a communication schedule (no kernel-level
+contribution), so kernels/ holds the attention + norm hot spots of the model
+substrate (DESIGN.md §6): flash_attention.py, rmsnorm.py, with ops.py jit
+wrappers and ref.py pure-jnp oracles.
+"""
+from repro.kernels.ops import (flash_attention_op, mlstm_chunk_op,  # noqa: F401
+                               rmsnorm_op)
+from repro.kernels.ref import (flash_attention_ref, mlstm_chunk_ref,  # noqa: F401
+                               rmsnorm_ref)

@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for every Pallas kernel (the contract tests sweep against)."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: Optional[int] = None,
+                        softcap: Optional[float] = None,
+                        scale: Optional[float] = None) -> jax.Array:
+    """q: (B,Sq,H,D); k,v: (B,Sk,KH,D) -> (B,Sq,H,D).  Dense softmax in fp32."""
+    B, Sq, H, D = q.shape
+    _, Sk, KH, _ = k.shape
+    group = H // KH
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    qg = q.reshape(B, Sq, KH, group, D)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    q_pos = jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    # fully-masked rows: softmax yields uniform; zero them to match the kernel
+    any_valid = jnp.any(mask, axis=-1)                   # (Sq,)
+    p = p * any_valid[None, None, None, :, None]
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def rmsnorm_ref(x: jax.Array, w: jax.Array, *, eps: float = 1e-6,
+                offset: float = 0.0) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (offset + w.astype(jnp.float32))).astype(x.dtype)
+
+
+def mlstm_chunk_ref(q, k, v, log_i, log_f):
+    """Oracle for the chunkwise-mLSTM kernel: the step-by-step stabilized
+    recurrence from repro.models.ssm."""
+    from repro.models.ssm import mlstm_recurrent_reference
+    h, _ = mlstm_recurrent_reference(q, k, v, log_i, log_f)
+    return h

@@ -1,0 +1,56 @@
+"""Fused RMSNorm — Pallas TPU kernel.
+
+Row-blocked: grid (N/block_rows,), each step normalizes a (block_rows, D) tile
+in VMEM with fp32 accumulation and applies the (broadcast) weight tile.  Fuses
+the two reduction+scale passes XLA would otherwise emit through HBM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float, offset: float,
+                    n_rows: int, block_rows: int):
+    i = pl.program_id(0)
+    x = x_ref[...].astype(jnp.float32)                    # (bm, D)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    w = w_ref[...].astype(jnp.float32)                    # (D,)
+    y = y * (offset + w)[None, :]
+    # mask pad rows (harmless garbage otherwise, but keep determinism)
+    row = i * block_rows + jax.lax.broadcasted_iota(
+        jnp.int32, (block_rows, 1), 0)
+    y = jnp.where(row < n_rows, y, 0.0)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+def rmsnorm(x: jax.Array, w: jax.Array, *, eps: float = 1e-6,
+            offset: float = 0.0, block_rows: int = 256,
+            interpret: bool = False) -> jax.Array:
+    """x: (..., D); w: (D,).  Matches repro.models.layers.rms_norm."""
+    orig_shape = x.shape
+    D = x.shape[-1]
+    xf = x.reshape(-1, D)
+    N = xf.shape[0]
+    bm = max(min(block_rows, N), 1)
+    pad = (-N) % bm
+    if pad:
+        xf = jnp.pad(xf, ((0, pad), (0, 0)))
+    kernel = functools.partial(_rmsnorm_kernel, eps=eps, offset=offset,
+                               n_rows=N, block_rows=bm)
+    out = pl.pallas_call(
+        kernel,
+        grid=((N + pad) // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, D), lambda i: (i, 0)),
+            pl.BlockSpec((D,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, D), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((N + pad, D), x.dtype),
+        interpret=interpret,
+    )(xf, w)
+    return out[:N].reshape(orig_shape)

@@ -1,0 +1,304 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+# ^ MUST precede any jax import: jax locks device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape ×
+mesh) combination against the production mesh and record memory analysis,
+cost analysis, and the collective schedule for the roofline report.
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh single --out results.json
+
+Train shapes lower BOTH communication phases ("gossip" = Gossip-SGD step with
+collective-permute mixing; "global" = the periodic All-Reduce averaging step);
+the H-amortized combination is what Gossip-PGA executes (DESIGN.md §2.2).
+Decode shapes lower ``serve_step`` — one new token against a seq_len cache.
+"""
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import (ASSIGNED_ARCHS, DistConfig, INPUT_SHAPES,
+                           OptimizerConfig, TrainConfig, DataConfig,
+                           get_model_config)
+from repro.launch.mesh import make_production_mesh, n_gossip_nodes
+from repro.launch.specs import serve_specs, train_specs
+from repro.models.model import make_model
+from repro.roofline import model_flops_for
+from repro.roofline.analysis import (from_costs, raw_costs,
+                                     scan_corrected_costs)
+from repro.train.step import build_train_step
+
+
+def _shallow_variants(cfg):
+    """(1-rep, 2-rep, n_reps) depth variants for scan-cost correction."""
+    p = len(cfg.prefix_pattern)
+    L = len(cfg.pattern)
+    reps = cfg.n_scan_blocks
+    c1 = dataclasses.replace(cfg, n_layers=p + L)
+    c2 = dataclasses.replace(cfg, n_layers=p + 2 * L)
+    return c1, c2, reps
+
+# long-context eligibility (DESIGN.md §Arch-applicability): SSM/hybrid run as
+# is; gemma2 runs its sliding-window variant; other dense/moe/vlm archs and
+# the encoder skip.
+LONG_OK_FAMILIES = ("ssm", "hybrid")
+DECODE_SKIP_FAMILIES = ("encoder",)
+
+# archs whose per-node replicas don't fit 16-way TP: hierarchical mode
+# (gossip across pods, FSDP+TP within) + 2D weight sharding when serving.
+HIERARCHICAL_ARCHS = ("jamba-1.5-large-398b", "qwen1.5-32b")
+SERVE_2D_ARCHS = ("jamba-1.5-large-398b", "qwen1.5-32b",
+                  "qwen3-moe-30b-a3b", "llava-next-mistral-7b", "gemma2-9b")
+
+
+def plan_for(arch: str, shape_name: str) -> Optional[Dict[str, Any]]:
+    """What to lower for this (arch, shape) — or None if skipped (+reason)."""
+    cfg = get_model_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    if shape.kind == "decode" and cfg.family in DECODE_SKIP_FAMILIES:
+        return {"skip": f"{arch} is encoder-only: no decode step"}
+    if shape_name == "long_500k":
+        if cfg.family in LONG_OK_FAMILIES:
+            pass
+        elif arch == "gemma2-9b":
+            cfg = get_model_config(arch, long_context=True)
+        else:
+            return {"skip": f"{arch} is pure full-attention: long_500k "
+                            "requires sub-quadratic attention"}
+    return {"cfg": cfg, "shape": shape}
+
+
+def _compile_train(cfg, shape, mesh, *, dist: DistConfig, phase: str,
+                   unroll: bool = False, microbatches: int = 1):
+    model = make_model(cfg)
+    specs = train_specs(cfg, mesh, shape, dist=dist)
+    tcfg = TrainConfig(model=cfg, dist=dist, optimizer=OptimizerConfig(),
+                       data=DataConfig(), global_batch=shape.global_batch,
+                       seq_len=shape.seq_len, microbatches=microbatches)
+    step = build_train_step(model, tcfg, specs.n_nodes, phase=phase,
+                            unroll=unroll)
+    with mesh:
+        lowered = jax.jit(
+            step,
+            in_shardings=(specs.state_shardings, specs.batch_shardings,
+                          specs.lr_sharding),
+            out_shardings=(specs.state_shardings, None),
+        ).lower(specs.state_sds, specs.batch_sds, specs.lr_sds)
+        compiled = lowered.compile()
+    return compiled, specs
+
+
+def dryrun_train(cfg, shape, mesh, *, dist: DistConfig, phases=("gossip",
+                                                                "global"),
+                 microbatches: int = 1, fast: bool = False):
+    n_chips = mesh.devices.size
+    c1_cfg, c2_cfg, reps = _shallow_variants(cfg)
+    out: Dict[str, Any] = {"phases": {}}
+    for phase in phases:
+        t0 = time.time()
+        compiled, specs = _compile_train(cfg, shape, mesh, dist=dist,
+                                         phase=phase,
+                                         microbatches=microbatches)
+        compile_s = time.time() - t0
+        out["n_nodes"] = specs.n_nodes
+        out["mode"] = specs.mode
+        # scan-corrected costs from UNROLLED shallow depth variants (a scan
+        # body is cost-counted once regardless of trip count)
+        costs_full = raw_costs(compiled)
+        if fast:
+            costs = costs_full   # compile-proof only; costs under-counted
+        else:
+            comp1, _ = _compile_train(c1_cfg, shape, mesh, dist=dist,
+                                      phase=phase, unroll=True,
+                                      microbatches=microbatches)
+            comp2, _ = _compile_train(c2_cfg, shape, mesh, dist=dist,
+                                      phase=phase, unroll=True,
+                                      microbatches=microbatches)
+            costs = scan_corrected_costs(raw_costs(comp1), raw_costs(comp2),
+                                         reps)
+        mf = model_flops_for(cfg, shape, n_chips)
+        rl = from_costs(costs, model_flops=mf)
+        rl_raw = from_costs(costs_full, model_flops=mf)
+        mem = compiled.memory_analysis()
+        out["phases"][phase] = {
+            "compile_s": compile_s,
+            "memory": _mem_dict(mem),
+            "roofline": rl.to_dict(),
+            "roofline_raw_scan": rl_raw.to_dict(),
+        }
+        print(f"    [{phase:6s}] compile {compile_s:6.1f}s  "
+              f"flops/chip {rl.flops:.3e}  bytes {rl.hlo_bytes:.3e}  "
+              f"coll {rl.coll_bytes:.3e}  dominant={rl.dominant}  "
+              f"useful={rl.useful_flops_ratio:.3f}", flush=True)
+        print(f"    memory_analysis: {mem}", flush=True)
+        print(f"    cost_analysis(scan-corrected): flops={rl.flops:.4e} "
+              f"bytes={rl.hlo_bytes:.4e}", flush=True)
+    return out
+
+
+def _compile_serve(cfg, shape, mesh, *, param_sharding: str,
+                   context_parallel: Optional[bool] = None,
+                   donate_cache: bool = False, unroll: bool = False):
+    model = make_model(cfg)
+    specs = serve_specs(cfg, mesh, shape, param_sharding=param_sharding,
+                        context_parallel=context_parallel)
+    if shape.kind == "prefill":
+        def prefill_step(params, batch):
+            logits, caches, _ = model.forward(params, batch, mode="prefill",
+                                              want_cache=True, unroll=unroll)
+            return logits, caches
+
+        with mesh:
+            lowered = jax.jit(
+                prefill_step,
+                in_shardings=(specs.params_shardings, specs.batch_shardings),
+            ).lower(specs.params_sds, specs.batch_sds)
+            compiled = lowered.compile()
+    else:
+        def serve_step(params, caches, tokens, pos):
+            return model.decode_step(params, caches, tokens, pos,
+                                     unroll=unroll)
+
+        with mesh:
+            lowered = jax.jit(
+                serve_step,
+                in_shardings=(specs.params_shardings, specs.cache_shardings,
+                              specs.tokens_sharding, specs.pos_sharding),
+                out_shardings=(None, specs.cache_shardings),
+                donate_argnums=(1,) if donate_cache else (),
+            ).lower(specs.params_sds, specs.cache_sds, specs.tokens_sds,
+                    specs.pos_sds)
+            compiled = lowered.compile()
+    return compiled, specs
+
+
+def dryrun_serve(cfg, shape, mesh, *, param_sharding: str,
+                 context_parallel: Optional[bool] = None,
+                 donate_cache: bool = False, fast: bool = False):
+    n_chips = mesh.devices.size
+    c1_cfg, c2_cfg, reps = _shallow_variants(cfg)
+    kw = dict(param_sharding=param_sharding,
+              context_parallel=context_parallel, donate_cache=donate_cache)
+    t0 = time.time()
+    compiled, specs = _compile_serve(cfg, shape, mesh, **kw)
+    compile_s = time.time() - t0
+    costs_full = raw_costs(compiled)
+    if fast:
+        costs = costs_full   # compile-proof only; costs under-counted
+    else:
+        comp1, _ = _compile_serve(c1_cfg, shape, mesh, unroll=True, **kw)
+        comp2, _ = _compile_serve(c2_cfg, shape, mesh, unroll=True, **kw)
+        costs = scan_corrected_costs(raw_costs(comp1), raw_costs(comp2), reps)
+    mf = model_flops_for(cfg, shape, n_chips)
+    rl = from_costs(costs, model_flops=mf)
+    rl_raw = from_costs(costs_full, model_flops=mf)
+    mem = compiled.memory_analysis()
+    print(f"    [{shape.kind:6s}] compile {compile_s:6.1f}s  "
+          f"flops/chip {rl.flops:.3e}  bytes {rl.hlo_bytes:.3e}  "
+          f"coll {rl.coll_bytes:.3e}  dominant={rl.dominant}", flush=True)
+    print(f"    memory_analysis: {mem}", flush=True)
+    print(f"    cost_analysis(scan-corrected): flops={rl.flops:.4e} "
+          f"bytes={rl.hlo_bytes:.4e}", flush=True)
+    return {"mode": specs.mode, "compile_s": compile_s,
+            "memory": _mem_dict(mem), "roofline": rl.to_dict(),
+            "roofline_raw_scan": rl_raw.to_dict()}
+
+
+def _mem_dict(mem) -> Dict[str, Any]:
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes")
+    out = {}
+    for k in keys:
+        out[k] = getattr(mem, k, None)
+    return out
+
+
+def run_one(arch: str, shape_name: str, mesh_kind: str, *,
+            algorithm: str = "gossip_pga", topology: str = "ring",
+            H: int = 6, fast: bool = False) -> Dict[str, Any]:
+    plan = plan_for(arch, shape_name)
+    rec: Dict[str, Any] = {"arch": arch, "shape": shape_name,
+                           "mesh": mesh_kind}
+    if plan is None or "skip" in plan:
+        rec["skipped"] = plan["skip"]
+        print(f"  SKIP: {plan['skip']}", flush=True)
+        return rec
+    cfg, shape = plan["cfg"], plan["shape"]
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    try:
+        if shape.kind == "train":
+            node_axis = ("pod" if arch in HIERARCHICAL_ARCHS
+                         and mesh_kind == "multi" else "data")
+            dist = DistConfig(algorithm=algorithm, topology=topology, H=H,
+                              node_axis=node_axis,
+                              fsdp=arch in HIERARCHICAL_ARCHS)
+            rec.update(dryrun_train(cfg, shape, mesh, dist=dist, fast=fast))
+        else:
+            ps = "2d" if arch in SERVE_2D_ARCHS else "tp"
+            rec.update(dryrun_serve(cfg, shape, mesh, param_sharding=ps,
+                                    fast=fast))
+        rec["ok"] = True
+    except Exception as e:  # noqa: BLE001 — recorded, not hidden
+        rec["ok"] = False
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+        print(f"  FAIL: {rec['error']}", flush=True)
+    return rec
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(INPUT_SHAPES))
+    ap.add_argument("--mesh", default="single", choices=["single", "multi",
+                                                         "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--algorithm", default="gossip_pga")
+    ap.add_argument("--topology", default="ring")
+    ap.add_argument("--H", type=int, default=6)
+    ap.add_argument("--out", default=None, help="append-mode JSONL output")
+    ap.add_argument("--fast", action="store_true",
+                    help="skip scan-cost correction compiles (compile-proof "
+                         "only; roofline costs under-counted for scans)")
+    args = ap.parse_args()
+
+    archs = list(ASSIGNED_ARCHS) if (args.all or not args.arch) \
+        else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or not args.shape) \
+        else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    results = []
+    for mesh_kind in meshes:
+        for arch in archs:
+            for shape_name in shapes:
+                print(f"== {arch} × {shape_name} × {mesh_kind} ==", flush=True)
+                rec = run_one(arch, shape_name, mesh_kind,
+                              algorithm=args.algorithm,
+                              topology=args.topology, H=args.H,
+                              fast=args.fast)
+                results.append(rec)
+                if args.out:
+                    with open(args.out, "a") as f:
+                        f.write(json.dumps(rec) + "\n")
+    n_fail = sum(1 for r in results if r.get("ok") is False)
+    n_ok = sum(1 for r in results if r.get("ok"))
+    n_skip = sum(1 for r in results if "skipped" in r)
+    print(f"\ndry-run summary: {n_ok} ok, {n_skip} skipped (documented), "
+          f"{n_fail} FAILED")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,37 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+"""exp3 (qwen3-moe gossip communication) — gossip phase only: the global
+phase is identical across variants except for the mixing op, so lowering the
+gossip step per variant isolates exactly the quantity under test."""
+from repro.configs import DistConfig, INPUT_SHAPES, get_model_config
+from repro.launch.dryrun import dryrun_train
+from repro.launch.hillclimb import OUT, record
+from repro.launch.mesh import make_production_mesh
+
+
+def main() -> None:
+    mesh = make_production_mesh(multi_pod=False)
+    cfg = get_model_config("qwen3-moe-30b-a3b")
+    shape = INPUT_SHAPES["train_4k"]
+    print("== exp3: qwen3-moe-30b-a3b train_4k (gossip phase) ==", flush=True)
+    for variant, dist, hyp in [
+        ("baseline_ring_f32",
+         DistConfig(algorithm="gossip_pga", topology="ring", H=6),
+         "baseline: ring gossip = 2 collective-permutes of the full fp32 "
+         "param set per step"),
+        ("one_peer_exp_f32",
+         DistConfig(algorithm="gossip_pga", topology="one_peer_exp", H=6),
+         "paper-faithful fix (one-peer exponential graph, Assran et al.): "
+         "ONE permute per step — predict mixing bytes ~2x down"),
+        ("one_peer_exp_bf16",
+         DistConfig(algorithm="gossip_pga", topology="one_peer_exp", H=6,
+                    comm_dtype="bfloat16"),
+         "beyond-paper: bf16 wire on the permute — predict another ~2x"),
+    ]:
+        rec = dryrun_train(cfg, shape, mesh, dist=dist, phases=("gossip",))
+        record("qwen3moe_comm", variant, hyp, rec, OUT)
+
+
+if __name__ == "__main__":
+    main()

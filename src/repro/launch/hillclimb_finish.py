@@ -1,0 +1,34 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+"""Resume helper: the last exp2 variant + exp3 + exp4 (the earlier chain was
+interrupted after exp2/scan_bf16+remat_dots)."""
+import dataclasses
+
+from repro.configs import DistConfig, INPUT_SHAPES, get_model_config
+from repro.launch.dryrun import dryrun_train
+from repro.launch.hillclimb import (OUT, exp3_qwen3moe_comm,
+                                    exp4_jamba_microbatch, record)
+from repro.launch.mesh import make_production_mesh
+
+
+def main() -> None:
+    mesh = make_production_mesh(multi_pod=False)
+    cfg = get_model_config("jamba-1.5-large-398b")
+    cfg_bf16 = dataclasses.replace(
+        cfg, ssm=dataclasses.replace(cfg.ssm, scan_dtype="bfloat16"))
+    shape = INPUT_SHAPES["train_4k"]
+    dist_comm = DistConfig(algorithm="gossip_pga", topology="one_peer_exp",
+                           H=6, comm_dtype="bfloat16")
+    print("== exp2 (resume): jamba scan_bf16+one_peer_bf16_comm ==",
+          flush=True)
+    rec = dryrun_train(cfg_bf16, shape, mesh, dist=dist_comm)
+    record("jamba_train", "scan_bf16+one_peer_bf16_comm",
+           "gossip wire: ring(2 permutes, fp32) -> one-peer-exp(1 permute, "
+           "bf16) — predict gossip-phase collective bytes ~4x down", rec, OUT)
+    exp3_qwen3moe_comm(mesh, OUT)
+    exp4_jamba_microbatch(mesh, OUT)
+
+
+if __name__ == "__main__":
+    main()

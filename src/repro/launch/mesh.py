@@ -1,0 +1,27 @@
+"""Production mesh builders.
+
+A FUNCTION, not a module-level constant — importing this module never touches
+jax device state.  Callers (dryrun.py) set
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import; smoke tests and benchmarks see the real single CPU device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def n_gossip_nodes(mesh: jax.sharding.Mesh, node_axis: str) -> int:
+    """Gossip node count for a mesh under DistConfig.node_axis semantics."""
+    axes = dict(mesh.shape)
+    if node_axis == "data":
+        # paper-faithful: nodes along data axis, flattened with pod if present
+        return axes.get("data", 1) * axes.get("pod", 1)
+    if node_axis == "pod":
+        return axes.get("pod", 1)
+    raise ValueError(node_axis)

@@ -1,0 +1,40 @@
+"""Serving launcher: ``python -m repro.launch.serve --arch <id>`` — batched
+greedy decoding against the reduced config (CPU) or full config (TPU)."""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import get_model_config, list_archs
+from repro.models import make_model
+from repro.serve import BatchedServer, Engine, Request
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list(list_archs()))
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--slots", type=int, default=2)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--s-max", type=int, default=64)
+    ap.add_argument("--full-config", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_model_config(args.arch, reduced=not args.full_config)
+    if not cfg.causal:
+        raise SystemExit(f"{args.arch} is encoder-only: no decode serving")
+    model = make_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    server = BatchedServer(Engine(model, s_max=args.s_max), params,
+                           n_slots=args.slots)
+    rng = np.random.default_rng(0)
+    reqs = [Request(uid=i, prompt=rng.integers(0, cfg.vocab_size, size=6),
+                    max_new=args.max_new) for i in range(args.requests)]
+    for r in sorted(server.run(reqs), key=lambda r: r.uid):
+        print(f"req {r.uid}: {list(r.prompt)} -> {r.generated}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Production training launcher: ``python -m repro.launch.train --arch <id>``.
+
+On this CPU container it runs the reduced config on simulated nodes; on a real
+TPU slice the same entry point builds the production mesh and shards the
+decentralized state per DESIGN.md §4.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import (DataConfig, DistConfig, OptimizerConfig,
+                           TrainConfig, get_model_config, list_archs)
+from repro.train import Trainer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list(list_archs()))
+    ap.add_argument("--algorithm", default="gossip_pga")
+    ap.add_argument("--topology", default="one_peer_exp")
+    ap.add_argument("--H", type=int, default=6)
+    ap.add_argument("--nodes", type=int, default=8)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--global-batch", type=int, default=16)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--optimizer", default="adamw")
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--full-config", action="store_true",
+                    help="full published dims (TPU-scale; default reduced)")
+    ap.add_argument("--iid", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_model_config(args.arch, reduced=not args.full_config)
+    tcfg = TrainConfig(
+        model=cfg,
+        dist=DistConfig(algorithm=args.algorithm, topology=args.topology,
+                        H=args.H),
+        optimizer=OptimizerConfig(name=args.optimizer, lr=args.lr,
+                                  schedule="warmup_cosine", warmup_steps=10,
+                                  total_steps=args.steps),
+        data=DataConfig(non_iid=not args.iid),
+        global_batch=args.global_batch, seq_len=args.seq_len,
+        steps=args.steps, log_every=max(args.steps // 10, 1))
+    tr = Trainer(tcfg, n_nodes=args.nodes, with_consensus=True)
+    state = tr.init_state(jax.random.PRNGKey(0))
+    tr.run(state, steps=args.steps)
+
+
+if __name__ == "__main__":
+    main()

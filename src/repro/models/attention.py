@@ -1,0 +1,314 @@
+"""Attention mixers: GQA/MHA (RoPE, sliding window, softcap, qk-norm, biases)
+and Multi-head Latent Attention (DeepSeek-V2).
+
+Three entry modes share one weight set:
+  * full-sequence (train / prefill): returns output (+ freshly built cache)
+  * decode: one query position against a pre-filled cache
+
+The reference math here is plain einsum + fp32 softmax; the Pallas flash
+kernel in ``repro.kernels`` implements the same contract for the TPU target
+and is validated against :mod:`repro.kernels.ref`.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import ParamBuilder, apply_rope, make_rope, rms_norm, softcap
+
+PyTree = Any
+NEG_INF = -2.3819763e38  # matches XLA's mask value
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+def init_attention(key: jax.Array, cfg: ModelConfig, param_dtype) -> Tuple[PyTree, PyTree]:
+    b = ParamBuilder(key, param_dtype)
+    d, nh, nkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    if cfg.mla is not None:
+        m = cfg.mla
+        qd = m.nope_head_dim + m.rope_head_dim
+        b.add("w_q", (d, nh, qd), ("embed", "heads", None))
+        b.add("w_dkv", (d, m.kv_lora_rank), ("embed", None))
+        b.add("w_kr", (d, m.rope_head_dim), ("embed", None))
+        b.add("kv_norm", (m.kv_lora_rank,), (None,), init="ones")
+        b.add("w_uk", (m.kv_lora_rank, nh, m.nope_head_dim), (None, "heads", None))
+        b.add("w_uv", (m.kv_lora_rank, nh, m.v_head_dim), (None, "heads", None))
+        b.add("w_o", (nh, m.v_head_dim, d), ("heads", None, "embed"))
+        return b.params, b.axes
+    b.add("w_q", (d, nh, hd), ("embed", "heads", None))
+    b.add("w_k", (d, nkv, hd), ("embed", "kv_heads", None))
+    b.add("w_v", (d, nkv, hd), ("embed", "kv_heads", None))
+    b.add("w_o", (nh, hd, d), ("heads", None, "embed"))
+    if cfg.qkv_bias:
+        b.add("b_q", (nh, hd), ("heads", None), init="zeros")
+        b.add("b_k", (nkv, hd), ("kv_heads", None), init="zeros")
+        b.add("b_v", (nkv, hd), ("kv_heads", None), init="zeros")
+    if cfg.qk_norm:
+        b.add("q_norm", (hd,), (None,), init="ones")
+        b.add("k_norm", (hd,), (None,), init="ones")
+    return b.params, b.axes
+
+
+# ---------------------------------------------------------------------------
+# Masking
+# ---------------------------------------------------------------------------
+def attention_mask(q_pos: jax.Array, k_pos: jax.Array, *, causal: bool,
+                   window: Optional[int], k_valid: Optional[jax.Array] = None
+                   ) -> jax.Array:
+    """Boolean (…, Sq, Sk) mask. ``window`` = sliding-window width."""
+    q = q_pos[..., :, None]
+    k = k_pos[..., None, :]
+    mask = jnp.ones(jnp.broadcast_shapes(q.shape, k.shape), bool)
+    if causal:
+        mask &= k <= q
+    if window is not None:
+        mask &= k > q - window
+    if k_valid is not None:
+        mask &= k_valid[..., None, :]
+    return mask
+
+
+def _sdpa(q, k, v, mask, *, scale, cap, group: int):
+    """q: (B,Sq,nkv,g,hd); k,v: (B,Sk,nkv,hd); mask (B|1,Sq,Sk)."""
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", q, k).astype(jnp.float32) * scale
+    logits = softcap(logits, cap)
+    logits = jnp.where(mask[:, None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+
+
+# Query-chunk size for the memory-bounded path; S >= this switches to the
+# blocked implementation (never materializes an S×S score matrix).
+BLOCKED_THRESHOLD = 8192
+_Q_CHUNK = 512
+
+
+def _sdpa_blocked(q, k, v, q_pos, k_pos, *, causal, window, scale, cap,
+                  group: int, chunk: int = _Q_CHUNK):
+    """Same contract as :func:`_sdpa` but scans over query chunks so the live
+    score tensor is (B, nkv, g, chunk, Sk).  FLOPs identical; memory linear
+    in S.  (The TPU-target flash kernel in repro.kernels additionally blocks
+    the KV dim with online softmax; this host path only needs bounded memory
+    for lowering and CPU validation.)"""
+    B, Sq, nkv, g, hd = q.shape
+    chunk = min(chunk, Sq)
+    pad = (-Sq) % chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pad)), constant_values=-1)
+    n_chunks = q.shape[1] // chunk
+    qc = q.reshape(B, n_chunks, chunk, nkv, g, hd).swapaxes(0, 1)
+    pc = q_pos.reshape(B, n_chunks, chunk).swapaxes(0, 1)
+
+    def one_chunk(_, qp):
+        qi, pi = qp
+        mask = attention_mask(pi, k_pos, causal=causal, window=window)
+        mask &= pi[..., :, None] >= 0
+        return None, _sdpa(qi, k, v, mask, scale=scale, cap=cap, group=group)
+
+    _, out = jax.lax.scan(one_chunk, None, (qc, pc))
+    out = out.swapaxes(0, 1).reshape(B, n_chunks * chunk, nkv, g, hd)
+    return out[:, :Sq]
+
+
+# ---------------------------------------------------------------------------
+# GQA forward
+# ---------------------------------------------------------------------------
+def _project_qkv(params, cfg: ModelConfig, x, positions):
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, params["w_q"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["w_k"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["w_v"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + params["b_q"].astype(x.dtype)
+        k = k + params["b_k"].astype(x.dtype)
+        v = v + params["b_v"].astype(x.dtype)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+    cos, sin = make_rope(positions, hd, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def attn_forward(params: PyTree, cfg: ModelConfig, x: jax.Array, *,
+                 layer_kind: str, positions: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Full-sequence attention (train / prefill).  Returns (out, cache)."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    if cfg.mla is not None:
+        return _mla_forward(params, cfg, x, positions=positions,
+                            layer_kind=layer_kind)
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q, k, v = _project_qkv(params, cfg, x, positions)
+    g = nh // nkv
+    qg = q.reshape(B, S, nkv, g, hd)
+    window = cfg.sliding_window if layer_kind == "attn_sw" else None
+    scale = 1.0 / math.sqrt(hd)
+    if S >= BLOCKED_THRESHOLD:
+        out = _sdpa_blocked(qg, k, v, positions, positions, causal=cfg.causal,
+                            window=window, scale=scale,
+                            cap=cfg.attn_logit_softcap, group=g)
+    else:
+        mask = attention_mask(positions, positions, causal=cfg.causal,
+                              window=window)
+        out = _sdpa(qg, k, v, mask, scale=scale,
+                    cap=cfg.attn_logit_softcap, group=g)
+    out = out.reshape(B, S, nh, hd)
+    out = jnp.einsum("bshk,hkd->bsd", out, params["w_o"].astype(x.dtype))
+    return out, {"k": k, "v": v}
+
+
+def attn_decode(params: PyTree, cfg: ModelConfig, x: jax.Array,
+                cache: Dict[str, jax.Array], pos: jax.Array, *,
+                layer_kind: str) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token decode. x: (B,1,d); cache k/v: (B,S_max,nkv,hd); pos: (B,)."""
+    if cfg.mla is not None:
+        return _mla_decode(params, cfg, x, cache, pos, layer_kind=layer_kind)
+    B = x.shape[0]
+    nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q, k_new, v_new = _project_qkv(params, cfg, x, pos[:, None])
+    k = jax.vmap(lambda c, u, p: jax.lax.dynamic_update_slice(c, u, (p, 0, 0)))(
+        cache["k"], k_new, pos)
+    v = jax.vmap(lambda c, u, p: jax.lax.dynamic_update_slice(c, u, (p, 0, 0)))(
+        cache["v"], v_new, pos)
+    S_max = k.shape[1]
+    g = nh // nkv
+    qg = q.reshape(B, 1, nkv, g, hd)
+    k_pos = jnp.broadcast_to(jnp.arange(S_max)[None], (B, S_max))
+    window = cfg.sliding_window if layer_kind == "attn_sw" else None
+    mask = attention_mask(pos[:, None], k_pos, causal=True, window=window)
+    out = _sdpa(qg, k, v, mask, scale=1.0 / math.sqrt(hd),
+                cap=cfg.attn_logit_softcap, group=g)
+    out = out.reshape(B, 1, nh, hd)
+    out = jnp.einsum("bshk,hkd->bsd", out, params["w_o"].astype(x.dtype))
+    return out, {"k": k, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2) — cache holds the compressed latent + shared RoPE key
+# ---------------------------------------------------------------------------
+def _mla_qkv(params, cfg: ModelConfig, x, positions):
+    m = cfg.mla
+    q = jnp.einsum("bsd,dhk->bshk", x, params["w_q"].astype(x.dtype))
+    q_nope, q_rope = q[..., :m.nope_head_dim], q[..., m.nope_head_dim:]
+    cos, sin = make_rope(positions, m.rope_head_dim, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    c_kv = x @ params["w_dkv"].astype(x.dtype)                     # (B,S,r)
+    c_kv = rms_norm(c_kv, params["kv_norm"], cfg.norm_eps)
+    k_rope = (x @ params["w_kr"].astype(x.dtype))[:, :, None, :]   # (B,S,1,rd)
+    k_rope = apply_rope(k_rope, cos, sin)[:, :, 0]                 # shared head
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def _mla_expand_kv(params, c_kv):
+    """Up-project the compressed latent into per-head keys/values."""
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, params["w_uk"].astype(c_kv.dtype))
+    v = jnp.einsum("bsr,rhk->bshk", c_kv, params["w_uv"].astype(c_kv.dtype))
+    return k_nope, v
+
+
+def _mla_scores(params, cfg: ModelConfig, q_nope, q_rope, k_nope, k_rope, v,
+                mask):
+    m = cfg.mla
+    scale = 1.0 / math.sqrt(m.nope_head_dim + m.rope_head_dim)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q_nope, k_nope)
+    logits = logits + jnp.einsum("bqhd,bkd->bhqk", q_rope, k_rope)
+    logits = logits.astype(jnp.float32) * scale
+    logits = jnp.where(mask[:, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q_nope.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+    return jnp.einsum("bqhd,hdo->bqo", out, params["w_o"].astype(q_nope.dtype))
+
+
+def _mla_attend(params, cfg: ModelConfig, q_nope, q_rope, c_kv, k_rope, mask):
+    k_nope, v = _mla_expand_kv(params, c_kv)
+    return _mla_scores(params, cfg, q_nope, q_rope, k_nope, k_rope, v, mask)
+
+
+def _mla_attend_blocked(params, cfg: ModelConfig, q_nope, q_rope, c_kv,
+                        k_rope, q_pos, k_pos, *, causal,
+                        chunk: int = _Q_CHUNK):
+    B, Sq = q_nope.shape[:2]
+    chunk = min(chunk, Sq)
+    pad = (-Sq) % chunk
+    if pad:
+        padq = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q_nope = jnp.pad(q_nope, padq)
+        q_rope = jnp.pad(q_rope, padq)
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pad)), constant_values=-1)
+    n_chunks = q_nope.shape[1] // chunk
+
+    def reshape_chunks(t):
+        return t.reshape((B, n_chunks, chunk) + t.shape[2:]).swapaxes(0, 1)
+
+    qn, qr, pc = map(reshape_chunks, (q_nope, q_rope, q_pos))
+    k_nope, v = _mla_expand_kv(params, c_kv)   # hoisted: expand latent once
+
+    def one_chunk(_, qs):
+        qni, qri, pi = qs
+        mask = attention_mask(pi, k_pos, causal=causal, window=None)
+        mask &= pi[..., :, None] >= 0
+        return None, _mla_scores(params, cfg, qni, qri, k_nope, k_rope, v, mask)
+
+    _, out = jax.lax.scan(one_chunk, None, (qn, qr, pc))
+    out = out.swapaxes(0, 1).reshape(B, n_chunks * chunk, -1)
+    return out[:, :Sq]
+
+
+def _mla_forward(params, cfg: ModelConfig, x, *, positions, layer_kind):
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(params, cfg, x, positions)
+    S = x.shape[1]
+    if S >= BLOCKED_THRESHOLD:
+        out = _mla_attend_blocked(params, cfg, q_nope, q_rope, c_kv, k_rope,
+                                  positions, positions, causal=cfg.causal)
+    else:
+        mask = attention_mask(positions, positions, causal=cfg.causal,
+                              window=None)
+        out = _mla_attend(params, cfg, q_nope, q_rope, c_kv, k_rope, mask)
+    return out, {"c_kv": c_kv, "k_rope": k_rope}
+
+
+def _mla_decode(params, cfg: ModelConfig, x, cache, pos, *, layer_kind):
+    B = x.shape[0]
+    q_nope, q_rope, c_new, kr_new = _mla_qkv(params, cfg, x, pos[:, None])
+    c_kv = jax.vmap(lambda c, u, p: jax.lax.dynamic_update_slice(c, u, (p, 0)))(
+        cache["c_kv"], c_new, pos)
+    k_rope = jax.vmap(lambda c, u, p: jax.lax.dynamic_update_slice(c, u, (p, 0)))(
+        cache["k_rope"], kr_new, pos)
+    S_max = c_kv.shape[1]
+    k_pos = jnp.broadcast_to(jnp.arange(S_max)[None], (B, S_max))
+    mask = attention_mask(pos[:, None], k_pos, causal=True, window=None)
+    out = _mla_attend(params, cfg, q_nope, q_rope, c_kv, k_rope, mask)
+    return out, {"c_kv": c_kv, "k_rope": k_rope}
+
+
+# ---------------------------------------------------------------------------
+# Cache allocation
+# ---------------------------------------------------------------------------
+def init_attn_cache(cfg: ModelConfig, batch: int, s_max: int, dtype,
+                    layer_kind: str = "attn") -> Dict[str, jax.Array]:
+    if cfg.mla is not None:
+        m = cfg.mla
+        return {"c_kv": jnp.zeros((batch, s_max, m.kv_lora_rank), dtype),
+                "k_rope": jnp.zeros((batch, s_max, m.rope_head_dim), dtype)}
+    nkv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    return {"k": jnp.zeros((batch, s_max, nkv, hd), dtype),
+            "v": jnp.zeros((batch, s_max, nkv, hd), dtype)}
+
+
+def attn_cache_axes(cfg: ModelConfig) -> Dict[str, tuple]:
+    if cfg.mla is not None:
+        return {"c_kv": ("batch", "kv_seq", None),
+                "k_rope": ("batch", "kv_seq", None)}
+    return {"k": ("batch", "kv_seq", "kv_heads", None),
+            "v": ("batch", "kv_seq", "kv_heads", None)}

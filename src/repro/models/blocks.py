@@ -1,0 +1,277 @@
+"""Transformer/SSM block assembly and scan-over-layers stacking.
+
+A block = pre-norm mixer + residual, then pre-norm FFN (dense MLP / MoE /
+none) + residual; Gemma-2 style post-norms optional.  Blocks with identical
+(mixer, ffn) structure repeat as a ``lax.scan`` over stacked parameters —
+compile time stays flat in depth (MaxText-style).  Heterogeneous patterns
+(gemma alternating, jamba 1:7+MoE) scan over the *pattern period*: one scan
+step applies every entry of the pattern once.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import BlockSpec, ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.layers import (ParamBuilder, apply_mlp, init_mlp,
+                                 init_rms_norm, rms_norm)
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Single block
+# ---------------------------------------------------------------------------
+def init_block(key: jax.Array, cfg: ModelConfig, kind: BlockSpec,
+               param_dtype) -> Tuple[PyTree, PyTree]:
+    mixer, ffn = kind
+    b = ParamBuilder(key, param_dtype)
+    init_rms_norm(b, "ln1", cfg.d_model)
+    if mixer in ("attn", "attn_sw"):
+        p, a = attn.init_attention(b._next_key(), cfg, param_dtype)
+    elif mixer == "mamba":
+        p, a = ssm_lib.init_mamba(b._next_key(), cfg, param_dtype)
+    elif mixer == "mlstm":
+        p, a = ssm_lib.init_mlstm(b._next_key(), cfg, param_dtype)
+    elif mixer == "slstm":
+        p, a = ssm_lib.init_slstm(b._next_key(), cfg, param_dtype)
+    else:
+        raise ValueError(mixer)
+    b.attach("mixer", p, a)
+    if cfg.post_block_norm:
+        init_rms_norm(b, "post_ln1", cfg.d_model)
+    if ffn != "none":
+        init_rms_norm(b, "ln2", cfg.d_model)
+        if ffn == "dense":
+            p, a = init_mlp(b._next_key(), cfg.d_model, cfg.d_ff, param_dtype)
+        else:
+            p, a = moe_lib.init_moe(b._next_key(), cfg, param_dtype)
+        b.attach("ffn", p, a)
+        if cfg.post_block_norm:
+            init_rms_norm(b, "post_ln2", cfg.d_model)
+    return b.params, b.axes
+
+
+def apply_block(params: PyTree, cfg: ModelConfig, kind: BlockSpec,
+                x: jax.Array, *, mode: str,
+                positions: Optional[jax.Array] = None,
+                cache: Optional[PyTree] = None,
+                pos: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, Optional[PyTree], jax.Array]:
+    """Returns (x, new_cache, moe_lb_loss).  mode: train|prefill|decode."""
+    mixer, ffn = kind
+    h = rms_norm(x, params["ln1"], cfg.norm_eps)
+    new_cache = None
+    if mixer in ("attn", "attn_sw"):
+        if mode == "decode":
+            out, new_cache = attn.attn_decode(params["mixer"], cfg, h, cache,
+                                              pos, layer_kind=mixer)
+        else:
+            out, new_cache = attn.attn_forward(params["mixer"], cfg, h,
+                                               layer_kind=mixer,
+                                               positions=positions)
+    elif mixer == "mamba":
+        if mode == "decode":
+            out, new_cache = ssm_lib.mamba_decode(params["mixer"], cfg, h, cache)
+        else:
+            out, new_cache = ssm_lib.mamba_forward(params["mixer"], cfg, h)
+    elif mixer == "mlstm":
+        if mode == "decode":
+            out, new_cache = ssm_lib.mlstm_decode(params["mixer"], cfg, h, cache)
+        else:
+            out, new_cache = ssm_lib.mlstm_forward(params["mixer"], cfg, h)
+    elif mixer == "slstm":
+        if mode == "decode":
+            out, new_cache = ssm_lib.slstm_decode(params["mixer"], cfg, h, cache)
+        else:
+            out, new_cache = ssm_lib.slstm_forward(params["mixer"], cfg, h)
+    else:
+        raise ValueError(mixer)
+    if cfg.post_block_norm:
+        out = rms_norm(out, params["post_ln1"], cfg.norm_eps)
+    x = x + out
+    lb_loss = jnp.zeros((), jnp.float32)
+    if ffn != "none":
+        h = rms_norm(x, params["ln2"], cfg.norm_eps)
+        if ffn == "dense":
+            out = apply_mlp(params["ffn"], h, act=(
+                jax.nn.gelu if cfg.family == "encoder" else jax.nn.silu))
+        else:
+            out, moe_metrics = moe_lib.apply_moe(params["ffn"], cfg, h)
+            lb_loss = moe_metrics["lb_loss"]
+        if cfg.post_block_norm:
+            out = rms_norm(out, params["post_ln2"], cfg.norm_eps)
+        x = x + out
+    return x, new_cache, lb_loss
+
+
+# ---------------------------------------------------------------------------
+# Cache allocation per block kind
+# ---------------------------------------------------------------------------
+def init_block_cache(cfg: ModelConfig, kind: BlockSpec, batch: int,
+                     s_max: int, dtype) -> PyTree:
+    mixer, _ = kind
+    if mixer in ("attn", "attn_sw"):
+        return attn.init_attn_cache(cfg, batch, s_max, dtype, mixer)
+    if mixer == "mamba":
+        return ssm_lib.init_mamba_state(cfg, batch, dtype)
+    if mixer == "mlstm":
+        return ssm_lib.init_mlstm_state(cfg, batch, dtype)
+    if mixer == "slstm":
+        return ssm_lib.init_slstm_state(cfg, batch, dtype)
+    raise ValueError(mixer)
+
+
+def block_cache_axes(cfg: ModelConfig, kind: BlockSpec) -> PyTree:
+    mixer, _ = kind
+    if mixer in ("attn", "attn_sw"):
+        return attn.attn_cache_axes(cfg)
+    if mixer == "mamba":
+        return ssm_lib.mamba_state_axes(cfg)
+    if mixer == "mlstm":
+        return ssm_lib.mlstm_state_axes(cfg)
+    if mixer == "slstm":
+        return ssm_lib.slstm_state_axes(cfg)
+    raise ValueError(mixer)
+
+
+# ---------------------------------------------------------------------------
+# Stacked (scanned) layers
+# ---------------------------------------------------------------------------
+def make_remat(fn, policy: str):
+    if policy == "none":
+        return fn
+    jpolicy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+               if policy == "dots" else None)
+    return jax.checkpoint(fn, policy=jpolicy)
+
+
+def apply_stack(params: PyTree, cfg: ModelConfig, x: jax.Array, *,
+                mode: str, positions: Optional[jax.Array] = None,
+                caches: Optional[PyTree] = None,
+                pos: Optional[jax.Array] = None,
+                remat: str = "none",
+                want_cache: bool = False,
+                unroll: bool = False
+                ) -> Tuple[jax.Array, Optional[PyTree], jax.Array]:
+    """Apply prefix blocks then the scanned pattern repeats.
+
+    params: {"prefix_<i>": block_params, "scan": {"entry_<j>": stacked}}
+    caches (decode): same structure with per-layer (stacked) caches.
+    Returns (x, caches_out, total_lb_loss).
+    """
+    total_lb = jnp.zeros((), jnp.float32)
+    caches_out: Dict[str, Any] = {}
+
+    for i, kind in enumerate(cfg.prefix_pattern):
+        c_in = caches.get(f"prefix_{i}") if caches else None
+        x, c_out, lb = apply_block(params[f"prefix_{i}"], cfg, kind, x,
+                                   mode=mode, positions=positions,
+                                   cache=c_in, pos=pos)
+        total_lb = total_lb + lb
+        if want_cache or mode == "decode":
+            caches_out[f"prefix_{i}"] = c_out
+
+    n_reps = cfg.n_scan_blocks
+    if n_reps == 0:
+        return x, (caches_out or None), total_lb
+
+    pattern = cfg.pattern
+    need_cache = want_cache or mode == "decode"
+
+    def body(carry, xs):
+        h, lb_acc = carry
+        block_params, block_caches = xs
+        new_caches = []
+        for j, kind in enumerate(pattern):
+            c_in = block_caches[j] if block_caches is not None else None
+            h, c_out, lb = apply_block(block_params[j], cfg, kind, h,
+                                       mode=mode, positions=positions,
+                                       cache=c_in, pos=pos)
+            lb_acc = lb_acc + lb
+            new_caches.append(c_out if need_cache else None)
+        ys = tuple(new_caches) if need_cache else None
+        return (h, lb_acc), ys
+
+    body = make_remat(body, remat)
+    scan_params = tuple(params["scan"][f"entry_{j}"]
+                        for j in range(len(pattern)))
+    scan_caches = (tuple(caches["scan"][f"entry_{j}"]
+                         for j in range(len(pattern)))
+                   if caches is not None else None)
+    if unroll:
+        # Python-loop unroll: identical math, every rep materialized in the
+        # HLO.  Used by the dry-run cost correction — XLA's cost_analysis
+        # counts a lax.scan body once regardless of trip count, so scanned
+        # programs under-report flops/bytes/collectives by ~n_reps.
+        ys_list = []
+        carry = (x, total_lb)
+        for i in range(n_reps):
+            xs_i = (
+                tuple(jax.tree.map(lambda t: t[i], p) for p in scan_params),
+                (tuple(jax.tree.map(lambda t: t[i], c) for c in scan_caches)
+                 if scan_caches is not None else None),
+            )
+            carry, y = body(carry, xs_i)
+            ys_list.append(y)
+        x, total_lb = carry
+        ys = (jax.tree.map(lambda *a: jnp.stack(a, 0), *ys_list)
+              if need_cache else None)
+    else:
+        (x, total_lb), ys = jax.lax.scan(
+            body, (x, total_lb), (scan_params, scan_caches))
+    if need_cache and ys is not None:
+        caches_out["scan"] = {f"entry_{j}": ys[j] for j in range(len(pattern))}
+    return x, (caches_out or None), total_lb
+
+
+def init_stack(key: jax.Array, cfg: ModelConfig, param_dtype
+               ) -> Tuple[PyTree, PyTree]:
+    from repro.models.layers import stack_inits
+    b = ParamBuilder(key, param_dtype)
+    for i, kind in enumerate(cfg.prefix_pattern):
+        p, a = init_block(b._next_key(), cfg, kind, param_dtype)
+        b.attach(f"prefix_{i}", p, a)
+    scan_p, scan_a = {}, {}
+    for j, kind in enumerate(cfg.pattern):
+        p, a = stack_inits(
+            lambda k, kind=kind: init_block(k, cfg, kind, param_dtype),
+            b._next_key(), cfg.n_scan_blocks)
+        scan_p[f"entry_{j}"] = p
+        scan_a[f"entry_{j}"] = a
+    b.attach("scan", scan_p, scan_a)
+    return b.params, b.axes
+
+
+def init_stack_cache(cfg: ModelConfig, batch: int, s_max: int, dtype) -> PyTree:
+    caches: Dict[str, Any] = {}
+    for i, kind in enumerate(cfg.prefix_pattern):
+        caches[f"prefix_{i}"] = init_block_cache(cfg, kind, batch, s_max, dtype)
+    scan_c = {}
+    for j, kind in enumerate(cfg.pattern):
+        one = init_block_cache(cfg, kind, batch, s_max, dtype)
+        scan_c[f"entry_{j}"] = jax.tree.map(
+            lambda t: jnp.broadcast_to(t[None], (cfg.n_scan_blocks,) + t.shape),
+            one)
+    caches["scan"] = scan_c
+    return caches
+
+
+def stack_cache_axes(cfg: ModelConfig) -> PyTree:
+    axes: Dict[str, Any] = {}
+    for i, kind in enumerate(cfg.prefix_pattern):
+        axes[f"prefix_{i}"] = block_cache_axes(cfg, kind)
+    scan_a = {}
+    is_axes = lambda t: isinstance(t, tuple)
+    for j, kind in enumerate(cfg.pattern):
+        one = block_cache_axes(cfg, kind)
+        scan_a[f"entry_{j}"] = jax.tree.map(
+            lambda a: ("layers",) + tuple(a), one, is_leaf=is_axes)
+    axes["scan"] = scan_a
+    return axes

@@ -1,0 +1,179 @@
+"""Shared building blocks: parameter builder with logical sharding axes,
+norms, embeddings, rotary, MLPs.
+
+Parameters are plain pytrees (nested dicts of jnp arrays).  Every parameter is
+created through :class:`ParamBuilder`, which records a parallel tree of
+*logical axis names* — resolved to mesh ``PartitionSpec``s by sharding rules
+(``repro.models.sharding``).  This keeps the value tree and the spec tree
+structurally identical by construction.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+Axes = Tuple[Optional[str], ...]
+
+# Logical axis vocabulary (resolved by sharding rules):
+#   "node"   — decentralized replica axis (the paper's n nodes)
+#   "vocab"  — vocabulary dim
+#   "embed"  — model dim (FSDP shard target in hierarchical mode)
+#   "heads" / "kv_heads" — attention heads
+#   "ffn"    — feed-forward hidden
+#   "expert" — MoE expert dim
+#   "layers" — scanned-layer stacking dim (never sharded)
+#   None     — replicated
+
+
+class ParamBuilder:
+    """Creates parameters and their logical-axes tree in lockstep."""
+
+    def __init__(self, key: jax.Array, param_dtype: jnp.dtype):
+        self._key = key
+        self.param_dtype = param_dtype
+        self.params: Dict[str, Any] = {}
+        self.axes: Dict[str, Any] = {}
+
+    def _next_key(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def add(self, name: str, shape: Sequence[int], axes: Axes,
+            init: str = "fan_in", scale: Optional[float] = None) -> jax.Array:
+        assert len(axes) == len(shape), (name, shape, axes)
+        shape = tuple(int(s) for s in shape)
+        if init == "zeros":
+            val = jnp.zeros(shape, self.param_dtype)
+        elif init == "ones":
+            val = jnp.ones(shape, self.param_dtype)
+        elif init == "normal":
+            std = scale if scale is not None else 0.02
+            val = std * jax.random.normal(self._next_key(), shape, self.param_dtype)
+        elif init == "fan_in":
+            fan_in = shape[0] if len(shape) == 1 else math.prod(shape[:-1])
+            std = (scale if scale is not None else 1.0) / math.sqrt(max(fan_in, 1))
+            val = std * jax.random.normal(self._next_key(), shape, self.param_dtype)
+        elif init == "constant":
+            val = jnp.full(shape, scale, self.param_dtype)
+        else:
+            raise ValueError(f"unknown init {init!r}")
+        self.params[name] = val
+        self.axes[name] = axes
+        return val
+
+    def sub(self, name: str) -> "ParamBuilder":
+        child = ParamBuilder(self._next_key(), self.param_dtype)
+        self.params[name] = child.params
+        self.axes[name] = child.axes
+        return child
+
+    def attach(self, name: str, params: PyTree, axes: PyTree) -> None:
+        self.params[name] = params
+        self.axes[name] = axes
+
+
+def stack_inits(init_fn: Callable[[jax.Array], Tuple[PyTree, PyTree]],
+                key: jax.Array, n: int) -> Tuple[PyTree, PyTree]:
+    """Initialize ``n`` structurally-identical blocks and stack leaf-wise on a
+    new leading "layers" axis (scan-over-layers layout)."""
+    keys = jax.random.split(key, n)
+    params0, axes0 = init_fn(keys[0])
+    rest = [init_fn(keys[i])[0] for i in range(1, n)]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), params0, *rest)
+    axes = jax.tree.map(lambda a: ("layers",) + tuple(a),
+                        axes0, is_leaf=lambda x: isinstance(x, tuple))
+    return stacked, axes
+
+
+# ---------------------------------------------------------------------------
+# Functional layers
+# ---------------------------------------------------------------------------
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float,
+             offset: float = 0.0) -> jax.Array:
+    """RMSNorm in fp32 accumulation; ``offset=1`` gives Gemma-style (1+w)."""
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (offset + weight.astype(jnp.float32))).astype(dtype)
+
+
+def init_rms_norm(b: ParamBuilder, name: str, dim: int,
+                  zeros: bool = False) -> None:
+    b.add(name, (dim,), (None,), init="zeros" if zeros else "ones")
+
+
+def make_rope(positions: jax.Array, head_dim: int, theta: float,
+              dtype=jnp.float32) -> Tuple[jax.Array, jax.Array]:
+    """cos/sin tables for rotary embedding; positions (...,S)."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # (...,S,half)
+    return jnp.cos(angles).astype(dtype), jnp.sin(angles).astype(dtype)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (..., S, n_heads, head_dim); cos/sin: (..., S, head_dim//2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :].astype(x.dtype)  # broadcast over heads
+    s = sin[..., None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+def softcap(logits: jax.Array, cap: Optional[float]) -> jax.Array:
+    """Gemma-2 logit soft-capping: cap * tanh(logits / cap)."""
+    if cap is None:
+        return logits
+    return cap * jnp.tanh(logits / cap)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+def init_mlp(key: jax.Array, d_model: int, d_ff: int,
+             param_dtype) -> Tuple[PyTree, PyTree]:
+    b = ParamBuilder(key, param_dtype)
+    b.add("w_gate", (d_model, d_ff), ("embed", "ffn"))
+    b.add("w_up", (d_model, d_ff), ("embed", "ffn"))
+    b.add("w_down", (d_ff, d_model), ("ffn", "embed"))
+    return b.params, b.axes
+
+
+def apply_mlp(params: PyTree, x: jax.Array, *, act=jax.nn.silu) -> jax.Array:
+    h = act(x @ params["w_gate"].astype(x.dtype)) * (x @ params["w_up"].astype(x.dtype))
+    return h @ params["w_down"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+def init_embedding(key: jax.Array, vocab: int, d_model: int, param_dtype,
+                   tie: bool) -> Tuple[PyTree, PyTree]:
+    b = ParamBuilder(key, param_dtype)
+    b.add("embedding", (vocab, d_model), ("vocab", "embed"), init="normal",
+          scale=0.02)
+    if not tie:
+        b.add("unembed", (d_model, vocab), ("embed", "vocab"))
+    return b.params, b.axes
+
+
+def embed_tokens(params: PyTree, tokens: jax.Array, dtype,
+                 scale_by_dim: bool = False) -> jax.Array:
+    emb = params["embedding"].astype(dtype)[tokens]
+    if scale_by_dim:  # Gemma convention
+        emb = emb * jnp.asarray(math.sqrt(params["embedding"].shape[-1]), dtype)
+    return emb
+
+
+def unembed(params: PyTree, h: jax.Array, tie: bool,
+            final_softcap: Optional[float] = None) -> jax.Array:
+    if tie:
+        logits = h @ params["embedding"].astype(h.dtype).T
+    else:
+        logits = h @ params["unembed"].astype(h.dtype)
+    return softcap(logits.astype(jnp.float32), final_softcap)

@@ -1,0 +1,161 @@
+"""Top-level Model: init / forward / decode / loss for every assigned family.
+
+Batch formats (all synthetic-data-pipeline compatible):
+  decoder LM (dense/moe/ssm/hybrid):
+      {"inputs": (B,S) i32, "targets": (B,S) i32}
+  vlm:  + {"patches": (B, n_img, d_model)}  — stubbed frontend embeddings;
+      image positions occupy the sequence prefix, loss masked there.
+  encoder (hubert audio / bert):
+      audio: {"frames": (B,S,d_model) f, "mask": (B,S) bool, "targets": (B,S)}
+      text:  {"inputs": (B,S) i32, "mask": (B,S) bool, "targets": (B,S)}
+  decode (serving): tokens (B,1) i32 + per-layer cache + pos (B,) i32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import blocks
+from repro.models.layers import (ParamBuilder, embed_tokens, init_embedding,
+                                 init_rms_norm, rms_norm, unembed)
+
+PyTree = Any
+
+
+def _dtype(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # ------------------------------------------------------------------
+    # Init
+    # ------------------------------------------------------------------
+    def init(self, key: jax.Array) -> Tuple[PyTree, PyTree]:
+        cfg = self.cfg
+        pdt = _dtype(cfg.param_dtype)
+        b = ParamBuilder(key, pdt)
+        p, a = init_embedding(b._next_key(), cfg.vocab_size, cfg.d_model, pdt,
+                              cfg.tie_embeddings)
+        b.attach("embed", p, a)
+        if cfg.family == "encoder":
+            b.add("mask_emb", (cfg.d_model,), (None,), init="normal")
+        p, a = blocks.init_stack(b._next_key(), cfg, pdt)
+        b.attach("stack", p, a)
+        init_rms_norm(b, "final_norm", cfg.d_model)
+        return b.params, b.axes
+
+    # ------------------------------------------------------------------
+    # Embedding per family
+    # ------------------------------------------------------------------
+    def _embed(self, params: PyTree, batch: Dict[str, jax.Array],
+               dtype) -> jax.Array:
+        cfg = self.cfg
+        if cfg.family == "encoder" and cfg.audio is not None:
+            h = batch["frames"].astype(dtype)
+            mask = batch["mask"]
+            h = jnp.where(mask[..., None], params["mask_emb"].astype(dtype), h)
+            return h
+        h = embed_tokens(params["embed"], batch["inputs"], dtype,
+                         scale_by_dim=cfg.final_logit_softcap is not None)
+        if cfg.family == "encoder":
+            h = jnp.where(batch["mask"][..., None],
+                          params["mask_emb"].astype(dtype), h)
+        if cfg.family == "vlm" and "patches" in batch:
+            n_img = batch["patches"].shape[1]
+            h = jnp.concatenate(
+                [batch["patches"].astype(dtype), h[:, n_img:]], axis=1)
+        return h
+
+    # ------------------------------------------------------------------
+    # Full-sequence forward (train / prefill)
+    # ------------------------------------------------------------------
+    def forward(self, params: PyTree, batch: Dict[str, jax.Array], *,
+                mode: str = "train", remat: str = "none",
+                want_cache: bool = False, unroll: bool = False
+                ) -> Tuple[jax.Array, Optional[PyTree], jax.Array]:
+        cfg = self.cfg
+        dtype = _dtype(cfg.dtype)
+        h = self._embed(params, batch, dtype)
+        B, S = h.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        h, caches, lb_loss = blocks.apply_stack(
+            params["stack"], cfg, h, mode=mode, positions=positions,
+            remat=remat, want_cache=want_cache, unroll=unroll)
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        logits = unembed(params["embed"], h, cfg.tie_embeddings,
+                         cfg.final_logit_softcap)
+        return logits, caches, lb_loss
+
+    # ------------------------------------------------------------------
+    # One-token decode
+    # ------------------------------------------------------------------
+    def decode_step(self, params: PyTree, caches: PyTree, tokens: jax.Array,
+                    pos: jax.Array, *, unroll: bool = False
+                    ) -> Tuple[jax.Array, PyTree]:
+        """tokens: (B,1) i32; pos: (B,) i32 — position being written."""
+        cfg = self.cfg
+        dtype = _dtype(cfg.dtype)
+        h = embed_tokens(params["embed"], tokens, dtype,
+                         scale_by_dim=cfg.final_logit_softcap is not None)
+        h, caches_out, _ = blocks.apply_stack(
+            params["stack"], cfg, h, mode="decode", caches=caches, pos=pos,
+            unroll=unroll)
+        h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+        logits = unembed(params["embed"], h, cfg.tie_embeddings,
+                         cfg.final_logit_softcap)
+        return logits, caches_out
+
+    def init_cache(self, batch: int, s_max: int, dtype_name: str = None
+                   ) -> PyTree:
+        dtype = _dtype(dtype_name or self.cfg.dtype)
+        return blocks.init_stack_cache(self.cfg, batch, s_max, dtype)
+
+    def cache_axes(self) -> PyTree:
+        return blocks.stack_cache_axes(self.cfg)
+
+    # ------------------------------------------------------------------
+    # Loss
+    # ------------------------------------------------------------------
+    def loss(self, params: PyTree, batch: Dict[str, jax.Array], *,
+             remat: str = "none", z_loss: float = 0.0, unroll: bool = False
+             ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        cfg = self.cfg
+        logits, _, lb_loss = self.forward(params, batch, mode="train",
+                                          remat=remat, unroll=unroll)
+        targets = batch["targets"]
+        if cfg.family == "encoder":
+            weights = batch["mask"].astype(jnp.float32)      # masked positions
+        elif cfg.family == "vlm" and "patches" in batch:
+            n_img = batch["patches"].shape[1]
+            w = jnp.ones(targets.shape, jnp.float32)
+            weights = w.at[:, :n_img].set(0.0)
+        else:
+            weights = jnp.ones(targets.shape, jnp.float32)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+        denom = jnp.maximum(jnp.sum(weights), 1.0)
+        ce = jnp.sum(nll * weights) / denom
+        total = ce
+        metrics = {"ce": ce, "lb_loss": lb_loss}
+        if cfg.moe is not None:
+            total = total + cfg.moe.aux_coef * lb_loss
+        if z_loss:
+            zl = jnp.sum(
+                jax.scipy.special.logsumexp(
+                    logits.astype(jnp.float32), axis=-1) ** 2 * weights) / denom
+            total = total + z_loss * zl
+            metrics["z_loss"] = zl
+        metrics["loss"] = total
+        return total, metrics
+
+
+def make_model(cfg: ModelConfig) -> Model:
+    return Model(cfg.validate())

@@ -1,0 +1,491 @@
+"""Recurrent mixers: Mamba (S6), mLSTM and sLSTM (xLSTM).
+
+TPU adaptation (DESIGN.md §2): the CUDA selective-scan / fused-recurrence
+kernels these papers ship have no TPU analogue, so each mixer is re-expressed
+in an XLA/TPU-native parallel form:
+
+* Mamba   — first-order linear recurrence via ``jax.lax.associative_scan``
+            (parallel prefix, O(S log S) work, MXU-free elementwise).
+* mLSTM   — *chunkwise-parallel*: intra-chunk attention-style matmuls (MXU)
+            + an inter-chunk scan over the (d_k × d_v) matrix memory with
+            log-space gate stabilization.  ``mlstm_recurrent_reference`` is
+            the step-by-step oracle used by tests.
+* sLSTM   — inherently sequential scalar recurrence (recurrent weights R
+            depend on h_{t-1}); kept as ``lax.scan`` — documented as the one
+            TPU-hostile layer; configs place it sparsely (xlstm-125m: 2/12).
+
+Decode steps are exact single-token recurrences against a constant-size state
+— this is what makes the SSM/hybrid archs eligible for ``long_500k``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import ParamBuilder, rms_norm
+
+PyTree = Any
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x: (B,S,D); w: (W,D); b: (D,)."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp.astype(jnp.float32), w.astype(jnp.float32)[:, None, :],
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=x.shape[-1])
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def _conv_step(x_t: jax.Array, conv_state: jax.Array, w: jax.Array,
+               b: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Single-token causal conv against a (B, W-1, D) state."""
+    window = jnp.concatenate([conv_state, x_t[:, None]], axis=1)  # (B,W,D)
+    out = jnp.einsum("bwd,wd->bd", window.astype(jnp.float32),
+                     w.astype(jnp.float32)) + b.astype(jnp.float32)
+    return out.astype(x_t.dtype), window[:, 1:]
+
+
+# ===========================================================================
+# Mamba (S6)
+# ===========================================================================
+def _mamba_dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    dt_rank = s.dt_rank or max(cfg.d_model // 16, 1)
+    return d_inner, s.d_state, dt_rank
+
+
+def init_mamba(key: jax.Array, cfg: ModelConfig, param_dtype) -> Tuple[PyTree, PyTree]:
+    d = cfg.d_model
+    di, N, R = _mamba_dims(cfg)
+    s = cfg.ssm
+    b = ParamBuilder(key, param_dtype)
+    b.add("in_proj", (d, 2 * di), ("embed", "ffn"))
+    b.add("conv_w", (s.d_conv, di), (None, "ffn"))
+    b.add("conv_b", (di,), ("ffn",), init="zeros")
+    b.add("x_proj", (di, R + 2 * N), ("ffn", None))
+    b.add("dt_proj", (R, di), (None, "ffn"))
+    b.add("dt_bias", (di,), ("ffn",), init="constant",
+          scale=math.log(math.expm1(0.01)))  # softplus^-1(0.01)
+    # A_log init: log(1..N) per channel (S4D-real)
+    b.params["A_log"] = jnp.broadcast_to(
+        jnp.log(jnp.arange(1, N + 1, dtype=jnp.float32)), (di, N)
+    ).astype(param_dtype)
+    b.axes["A_log"] = ("ffn", None)
+    b.add("D", (di,), ("ffn",), init="ones")
+    b.add("out_proj", (di, d), ("ffn", "embed"))
+    return b.params, b.axes
+
+
+def _mamba_ssm_inputs(params, cfg: ModelConfig, x_conv, dt_rank, N):
+    dbc = x_conv @ params["x_proj"].astype(x_conv.dtype)
+    dt, Bc, Cc = jnp.split(dbc, [dt_rank, dt_rank + N], axis=-1)
+    dt = jax.nn.softplus(
+        dt @ params["dt_proj"].astype(x_conv.dtype)
+        + params["dt_bias"].astype(x_conv.dtype))                # (…,di)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))            # (di,N)
+    return dt, Bc, Cc, A
+
+
+def mamba_forward(params: PyTree, cfg: ModelConfig, x: jax.Array
+                  ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: (B,S,d) -> (out, state) — parallel scan over the full sequence.
+
+    The scan state dtype follows ``cfg.ssm.scan_dtype`` — bf16 halves the
+    (B,S,d_inner,N) scan-state traffic, the dominant memory term of the
+    hybrid archs (§Perf hillclimb 2); gate/decay math stays fp32.
+    """
+    Bsz, S, d = x.shape
+    di, N, R = _mamba_dims(cfg)
+    sdt = jnp.bfloat16 if cfg.ssm.scan_dtype == "bfloat16" else jnp.float32
+    xz = x @ params["in_proj"].astype(x.dtype)
+    xc, z = jnp.split(xz, 2, axis=-1)
+    x_conv = jax.nn.silu(_causal_conv(xc, params["conv_w"], params["conv_b"]))
+    dt, Bc, Cc, A = _mamba_ssm_inputs(params, cfg, x_conv, R, N)
+
+    dtA = dt.astype(jnp.float32)[..., None] * A                  # (B,S,di,N)
+    a = jnp.exp(dtA).astype(sdt)
+    bu = ((dt.astype(jnp.float32) * x_conv.astype(jnp.float32))[..., None]
+          * Bc.astype(jnp.float32)[..., None, :]).astype(sdt)    # (B,S,di,N)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    _, h = jax.lax.associative_scan(combine, (a, bu), axis=1)
+    y = jnp.einsum("bsdn,bsn->bsd", h.astype(sdt), Cc.astype(sdt))
+    y = y.astype(jnp.float32) \
+        + params["D"].astype(jnp.float32) * x_conv.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = y @ params["out_proj"].astype(x.dtype)
+    state = {"conv": _final_conv_state(xc, cfg.ssm.d_conv),
+             "h": h[:, -1].astype(x.dtype)}
+    return out, state
+
+
+def _final_conv_state(xc: jax.Array, width: int) -> jax.Array:
+    pad = jnp.zeros((xc.shape[0], width - 1, xc.shape[-1]), xc.dtype)
+    return jnp.concatenate([pad, xc], axis=1)[:, -(width - 1):]
+
+
+def mamba_decode(params: PyTree, cfg: ModelConfig, x: jax.Array,
+                 state: Dict[str, jax.Array]
+                 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: (B,1,d); state {conv (B,W-1,di), h (B,di,N)}."""
+    di, N, R = _mamba_dims(cfg)
+    xz = x[:, 0] @ params["in_proj"].astype(x.dtype)
+    xc, z = jnp.split(xz, 2, axis=-1)
+    x_conv, new_conv = _conv_step(xc, state["conv"], params["conv_w"],
+                                  params["conv_b"])
+    x_conv = jax.nn.silu(x_conv)
+    dt, Bc, Cc, A = _mamba_ssm_inputs(params, cfg, x_conv, R, N)
+    a = jnp.exp(dt.astype(jnp.float32)[..., None] * A)           # (B,di,N)
+    bu = (dt.astype(jnp.float32) * x_conv.astype(jnp.float32))[..., None] \
+        * Bc.astype(jnp.float32)[..., None, :]
+    h = a * state["h"].astype(jnp.float32) + bu
+    y = jnp.einsum("bdn,bn->bd", h, Cc.astype(jnp.float32))
+    y = y + params["D"].astype(jnp.float32) * x_conv.astype(jnp.float32)
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    out = (y @ params["out_proj"].astype(x.dtype))[:, None]
+    return out, {"conv": new_conv, "h": h.astype(x.dtype)}
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype) -> Dict[str, jax.Array]:
+    di, N, _ = _mamba_dims(cfg)
+    return {"conv": jnp.zeros((batch, cfg.ssm.d_conv - 1, di), dtype),
+            "h": jnp.zeros((batch, di, N), dtype)}
+
+
+def mamba_state_axes(cfg: ModelConfig) -> Dict[str, tuple]:
+    return {"conv": ("batch", None, "ffn"), "h": ("batch", "ffn", None)}
+
+
+# ===========================================================================
+# mLSTM (xLSTM) — chunkwise-parallel with log-space gate stabilization
+# ===========================================================================
+def _mlstm_dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    s = cfg.ssm
+    di = s.mlstm_expand * cfg.d_model
+    nh = di // (2 * s.mlstm_head_dim)   # qk head dim = di/(2nh), v dim = di/nh
+    nh = max(nh, 1)
+    return di, nh, s.mlstm_head_dim
+
+
+def init_mlstm(key: jax.Array, cfg: ModelConfig, param_dtype) -> Tuple[PyTree, PyTree]:
+    d = cfg.d_model
+    di, nh, dk = _mlstm_dims(cfg)
+    b = ParamBuilder(key, param_dtype)
+    b.add("up_proj", (d, 2 * di), ("embed", "ffn"))
+    b.add("conv_w", (4, di), (None, "ffn"))
+    b.add("conv_b", (di,), ("ffn",), init="zeros")
+    b.add("w_q", (di, nh, dk), ("ffn", "heads", None))
+    b.add("w_k", (di, nh, dk), ("ffn", "heads", None))
+    b.add("w_v", (di, nh, di // nh), ("ffn", "heads", None))
+    b.add("w_i", (di, nh), ("ffn", "heads"), init="fan_in")
+    b.add("b_i", (nh,), ("heads",), init="zeros")
+    b.add("w_f", (di, nh), ("ffn", "heads"), init="fan_in")
+    b.add("b_f", (nh,), ("heads",), init="constant", scale=3.0)  # open forget
+    b.add("gn", (di,), ("ffn",), init="ones")                     # group norm
+    b.add("down_proj", (di, d), ("ffn", "embed"))
+    return b.params, b.axes
+
+
+def _mlstm_qkvif(params, cfg, x_in):
+    """x_in: (B,S,di) up-projected mixer branch."""
+    x_conv = jax.nn.silu(_causal_conv(x_in, params["conv_w"], params["conv_b"]))
+    q = jnp.einsum("bsd,dhk->bshk", x_conv, params["w_q"].astype(x_in.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x_conv, params["w_k"].astype(x_in.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x_in, params["w_v"].astype(x_in.dtype))
+    i_raw = (x_in @ params["w_i"].astype(x_in.dtype)
+             + params["b_i"].astype(x_in.dtype)).astype(jnp.float32)
+    f_raw = (x_in @ params["w_f"].astype(x_in.dtype)
+             + params["b_f"].astype(x_in.dtype)).astype(jnp.float32)
+    dk = q.shape[-1]
+    q = q / math.sqrt(dk)
+    return q, k, v, i_raw, jax.nn.log_sigmoid(f_raw)
+
+
+def _mlstm_chunk_scan(q, k, v, log_i, log_f, chunk: int):
+    """Chunkwise mLSTM.  q,k: (B,S,nh,dk); v: (B,S,nh,dv);
+    log_i/log_f: (B,S,nh).  Returns h: (B,S,nh,dv) and final (C,n,m)."""
+    B, S, nh, dk = q.shape
+    dv = v.shape[-1]
+    L = min(chunk, S)
+    pad = (-S) % L
+    if pad:
+        padt = ((0, 0), (0, pad), (0, 0), (0, 0))
+        q, k, v = (jnp.pad(t, padt) for t in (q, k, v))
+        log_i = jnp.pad(log_i, ((0, 0), (0, pad), (0, 0)))
+        # padded steps must not pollute the state: f=1 (log 0), i=-inf
+        log_f = jnp.pad(log_f, ((0, 0), (0, pad), (0, 0)))
+        log_i = log_i.at[:, S:].set(-1e9)
+    nc = q.shape[1] // L
+
+    def to_chunks(t):
+        return t.reshape((B, nc, L) + t.shape[2:]).swapaxes(0, 1)
+
+    qc, kc, vc, lic, lfc = map(to_chunks, (q, k, v, log_i, log_f))
+    # cumulative log-forget within chunk, inclusive: bchl
+    F = jnp.cumsum(lfc, axis=2)                                   # (nc,B,L,nh)
+    F_total = F[:, :, -1]                                         # (nc,B,nh)
+
+    # intra-chunk pair weights: w[t,τ] = F_t − F_τ + li_τ  (τ ≤ t)
+    tril = jnp.tril(jnp.ones((L, L), bool))
+
+    def chunk_step(carry, xs):
+        C, n, m = carry             # C: (B,nh,dk,dv), n: (B,nh,dk), m: (B,nh)
+        qi, ki, vi, li, Fi, Ft = xs  # (B,L,nh,*) …, Fi: (B,L,nh), Ft: (B,nh)
+        w = (Fi[:, :, None] - Fi[:, None, :] + li[:, None, :])    # (B,t,τ,nh)
+        w = jnp.where(tril[None, :, :, None], w, -jnp.inf)
+        w_max = jnp.max(w, axis=2)                                # (B,L,nh)
+        m_in = m[:, None] + Fi                                    # state path
+        m_t = jnp.maximum(w_max, m_in)                            # (B,L,nh)
+        # intra-chunk attention
+        scores = jnp.einsum("blhk,bthk->blth", qi, ki).astype(jnp.float32)
+        gates = jnp.exp(w - m_t[:, :, None])                      # (B,t,τ,nh)
+        probs = scores * gates
+        h_intra = jnp.einsum("blth,bthv->blhv", probs.astype(qi.dtype), vi)
+        den_intra = jnp.sum(probs, axis=2)  # Σ_τ gate_{tτ} (q_t·k_τ)  (B,L,nh)
+        # inter-chunk (initial state) contribution
+        sgate = jnp.exp(m_in - m_t)                               # (B,L,nh)
+        h_state = jnp.einsum("blhk,bhkv->blhv", qi.astype(jnp.float32), C)
+        h_state = h_state * sgate[..., None]
+        den_state = jnp.einsum("blhk,bhk->blh", qi.astype(jnp.float32), n)
+        den_state = den_state * sgate
+        den = jnp.maximum(jnp.abs(den_intra + den_state),
+                          jnp.exp(-m_t))                          # (B,L,nh)
+        h = (h_intra.astype(jnp.float32) + h_state) / den[..., None]
+        # ---- state update to end of chunk ----
+        w_end = Ft[:, None] - Fi + li                             # (B,L,nh)
+        m_end = jnp.maximum(jnp.max(w_end, axis=1), m + Ft)       # (B,nh)
+        kg = jnp.exp(w_end - m_end[:, None])                      # (B,L,nh)
+        C_new = jnp.einsum("blhk,blhv->bhkv",
+                           (ki.astype(jnp.float32) * kg[..., None]),
+                           vi.astype(jnp.float32))
+        n_new = jnp.einsum("blhk,blh->bhk", ki.astype(jnp.float32), kg)
+        decay = jnp.exp(m + Ft - m_end)                           # (B,nh)
+        C = C * decay[..., None, None] + C_new
+        n = n * decay[..., None] + n_new
+        return (C, n, m_end), h
+
+    C0 = jnp.zeros((B, nh, dk, dv), jnp.float32)
+    n0 = jnp.zeros((B, nh, dk), jnp.float32)
+    m0 = jnp.full((B, nh), -1e9, jnp.float32)
+    (C, n, m), h = jax.lax.scan(chunk_step, (C0, n0, m0),
+                                (qc, kc, vc, lic, F, F_total))
+    h = h.swapaxes(0, 1).reshape(B, nc * L, nh, dv)[:, :S]
+    return h.astype(q.dtype), (C, n, m)
+
+
+def mlstm_forward(params: PyTree, cfg: ModelConfig, x: jax.Array
+                  ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    B, S, d = x.shape
+    di, nh, dk = _mlstm_dims(cfg)
+    up = x @ params["up_proj"].astype(x.dtype)
+    x_in, z = jnp.split(up, 2, axis=-1)
+    q, k, v, log_i, log_f = _mlstm_qkvif(params, cfg, x_in)
+    if cfg.ssm.use_pallas_mlstm:
+        # TPU hot path: Pallas chunkwise kernel (validated vs the oracle in
+        # tests/test_kernels.py); decode still needs the final state, so the
+        # state is recovered with a lightweight scan over chunk boundaries.
+        from repro.kernels.ops import mlstm_chunk_op
+        h = mlstm_chunk_op(q, k, v, log_i, log_f, chunk=cfg.ssm.mlstm_chunk)
+        # exact final state for decode handoff via the host-scan (the kernel
+        # keeps its state in VMEM scratch; XLA DCEs the duplicate h outputs)
+        _, (C, n, m) = _mlstm_chunk_scan(q, k, v, log_i, log_f,
+                                         cfg.ssm.mlstm_chunk)
+    else:
+        h, (C, n, m) = _mlstm_chunk_scan(q, k, v, log_i, log_f,
+                                         cfg.ssm.mlstm_chunk)
+    h = h.reshape(B, S, di)
+    h = rms_norm(h, params["gn"], cfg.norm_eps)                   # group norm
+    out = (h * jax.nn.silu(z)) @ params["down_proj"].astype(x.dtype)
+    # conv state for decode
+    conv_state = _final_conv_state(x_in, 4)
+    state = {"C": C.astype(x.dtype), "n": n.astype(x.dtype), "m": m,
+             "conv": conv_state}
+    return out, state
+
+
+def mlstm_recurrent_reference(q, k, v, log_i, log_f):
+    """Step-by-step stabilized mLSTM recurrence — oracle for tests."""
+    B, S, nh, dk = q.shape
+    dv = v.shape[-1]
+
+    def step(carry, xs):
+        C, n, m = carry
+        qt, kt, vt, li, lf = xs
+        m_new = jnp.maximum(lf + m, li)
+        fg = jnp.exp(lf + m - m_new)
+        ig = jnp.exp(li - m_new)
+        C = C * fg[..., None, None] + ig[..., None, None] * (
+            kt[..., :, None].astype(jnp.float32)
+            * vt[..., None, :].astype(jnp.float32))
+        n = n * fg[..., None] + ig[..., None] * kt.astype(jnp.float32)
+        num = jnp.einsum("bhkv,bhk->bhv", C, qt.astype(jnp.float32))
+        den = jnp.maximum(
+            jnp.abs(jnp.einsum("bhk,bhk->bh", n, qt.astype(jnp.float32))),
+            jnp.exp(-m_new))
+        h = num / den[..., None]
+        return (C, n, m_new), h
+
+    C0 = jnp.zeros((B, nh, dk, dv), jnp.float32)
+    n0 = jnp.zeros((B, nh, dk), jnp.float32)
+    m0 = jnp.full((B, nh), -1e9, jnp.float32)
+    xs = tuple(t.swapaxes(0, 1) for t in (q, k, v, log_i, log_f))
+    (C, n, m), h = jax.lax.scan(step, (C0, n0, m0), xs)
+    return h.swapaxes(0, 1).astype(q.dtype), (C, n, m)
+
+
+def mlstm_decode(params: PyTree, cfg: ModelConfig, x: jax.Array,
+                 state: Dict[str, jax.Array]
+                 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    B = x.shape[0]
+    di, nh, dk = _mlstm_dims(cfg)
+    up = x[:, 0] @ params["up_proj"].astype(x.dtype)
+    x_in, z = jnp.split(up, 2, axis=-1)
+    x_conv, new_conv = _conv_step(x_in, state["conv"], params["conv_w"],
+                                  params["conv_b"])
+    x_conv = jax.nn.silu(x_conv)
+    q = jnp.einsum("bd,dhk->bhk", x_conv, params["w_q"].astype(x.dtype))
+    k = jnp.einsum("bd,dhk->bhk", x_conv, params["w_k"].astype(x.dtype))
+    v = jnp.einsum("bd,dhk->bhk", x_in, params["w_v"].astype(x.dtype))
+    q = q / math.sqrt(dk)
+    i_raw = (x_in @ params["w_i"].astype(x.dtype)
+             + params["b_i"].astype(x.dtype)).astype(jnp.float32)
+    lf = jax.nn.log_sigmoid(
+        (x_in @ params["w_f"].astype(x.dtype)
+         + params["b_f"].astype(x.dtype)).astype(jnp.float32))
+    C, n, m = (state["C"].astype(jnp.float32),
+               state["n"].astype(jnp.float32), state["m"])
+    m_new = jnp.maximum(lf + m, i_raw)
+    fg = jnp.exp(lf + m - m_new)
+    ig = jnp.exp(i_raw - m_new)
+    C = C * fg[..., None, None] + ig[..., None, None] * (
+        k[..., :, None].astype(jnp.float32) * v[..., None, :].astype(jnp.float32))
+    n = n * fg[..., None] + ig[..., None] * k.astype(jnp.float32)
+    num = jnp.einsum("bhkv,bhk->bhv", C, q.astype(jnp.float32))
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n,
+                                         q.astype(jnp.float32))),
+                      jnp.exp(-m_new))
+    h = (num / den[..., None]).reshape(B, di).astype(x.dtype)
+    h = rms_norm(h, params["gn"], cfg.norm_eps)
+    out = ((h * jax.nn.silu(z)) @ params["down_proj"].astype(x.dtype))[:, None]
+    return out, {"C": C.astype(x.dtype), "n": n.astype(x.dtype), "m": m_new,
+                 "conv": new_conv}
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int, dtype) -> Dict[str, jax.Array]:
+    di, nh, dk = _mlstm_dims(cfg)
+    dv = di // nh
+    return {"C": jnp.zeros((batch, nh, dk, dv), dtype),
+            "n": jnp.zeros((batch, nh, dk), dtype),
+            "m": jnp.full((batch, nh), -1e9, jnp.float32),
+            "conv": jnp.zeros((batch, 3, di), dtype)}
+
+
+def mlstm_state_axes(cfg: ModelConfig) -> Dict[str, tuple]:
+    return {"C": ("batch", "heads", None, None),
+            "n": ("batch", "heads", None),
+            "m": ("batch", "heads"),
+            "conv": ("batch", None, "ffn")}
+
+
+# ===========================================================================
+# sLSTM — sequential scalar recurrence (TPU-hostile; placed sparsely)
+# ===========================================================================
+def _slstm_dims(cfg: ModelConfig) -> Tuple[int, int]:
+    nh = cfg.ssm.slstm_heads
+    return nh, cfg.d_model // nh
+
+
+def init_slstm(key: jax.Array, cfg: ModelConfig, param_dtype) -> Tuple[PyTree, PyTree]:
+    d = cfg.d_model
+    nh, dh = _slstm_dims(cfg)
+    b = ParamBuilder(key, param_dtype)
+    # input projections for gates i,f,z,o
+    b.add("w_x", (d, 4, nh, dh), ("embed", None, "heads", None))
+    # block-diagonal recurrent weights per head, per gate
+    b.add("r_h", (4, nh, dh, dh), (None, "heads", None, None), init="fan_in")
+    b.add("bias", (4, nh, dh), (None, "heads", None), init="zeros")
+    b.add("gn", (d,), (None,), init="ones")
+    b.add("out_proj", (d, d), ("embed", "embed"))
+    return b.params, b.axes
+
+
+def _slstm_step(params_f32, carry, x_t):
+    """x_t: (B,4,nh,dh) pre-projected gate inputs."""
+    r_h, bias = params_f32
+    c, n, h, m = carry
+    gates = x_t + jnp.einsum("ghij,bhj->bghi", r_h, h) + bias     # (B,4,nh,dh)
+    i_raw, f_raw, z_raw, o_raw = (gates[:, 0], gates[:, 1],
+                                  gates[:, 2], gates[:, 3])
+    lf = jax.nn.log_sigmoid(f_raw)
+    m_new = jnp.maximum(lf + m, i_raw)
+    ig = jnp.exp(i_raw - m_new)
+    fg = jnp.exp(lf + m - m_new)
+    c = fg * c + ig * jnp.tanh(z_raw)
+    n = fg * n + ig
+    h_new = jax.nn.sigmoid(o_raw) * c / jnp.maximum(n, 1e-6)
+    return (c, n, h_new, m_new), h_new
+
+
+def slstm_forward(params: PyTree, cfg: ModelConfig, x: jax.Array
+                  ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    B, S, d = x.shape
+    nh, dh = _slstm_dims(cfg)
+    xg = jnp.einsum("bsd,dghj->bsghj", x.astype(jnp.float32),
+                    params["w_x"].astype(jnp.float32))            # (B,S,4,nh,dh)
+    r_h = params["r_h"].astype(jnp.float32)
+    bias = params["bias"].astype(jnp.float32)
+    zeros = jnp.zeros((B, nh, dh), jnp.float32)
+    carry0 = (zeros, zeros, zeros, jnp.full((B, nh, dh), -1e9, jnp.float32))
+    (c, n, h, m), hs = jax.lax.scan(
+        lambda carry, xt: _slstm_step((r_h, bias), carry, xt),
+        carry0, xg.swapaxes(0, 1))
+    hs = hs.swapaxes(0, 1).reshape(B, S, d).astype(x.dtype)
+    hs = rms_norm(hs, params["gn"], cfg.norm_eps)
+    out = hs @ params["out_proj"].astype(x.dtype)
+    state = {"c": c.astype(x.dtype), "n": n.astype(x.dtype),
+             "h": h.astype(x.dtype), "m": m}
+    return out, state
+
+
+def slstm_decode(params: PyTree, cfg: ModelConfig, x: jax.Array,
+                 state: Dict[str, jax.Array]
+                 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    B = x.shape[0]
+    nh, dh = _slstm_dims(cfg)
+    xg = jnp.einsum("bd,dghj->bghj", x[:, 0].astype(jnp.float32),
+                    params["w_x"].astype(jnp.float32))
+    carry = (state["c"].astype(jnp.float32), state["n"].astype(jnp.float32),
+             state["h"].astype(jnp.float32), state["m"])
+    (c, n, h, m), h_new = _slstm_step(
+        (params["r_h"].astype(jnp.float32), params["bias"].astype(jnp.float32)),
+        carry, xg)
+    hs = h_new.reshape(B, x.shape[-1]).astype(x.dtype)
+    hs = rms_norm(hs, params["gn"], cfg.norm_eps)
+    out = (hs @ params["out_proj"].astype(x.dtype))[:, None]
+    return out, {"c": c.astype(x.dtype), "n": n.astype(x.dtype),
+                 "h": h.astype(x.dtype), "m": m}
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int, dtype) -> Dict[str, jax.Array]:
+    nh, dh = _slstm_dims(cfg)
+    return {"c": jnp.zeros((batch, nh, dh), dtype),
+            "n": jnp.zeros((batch, nh, dh), dtype),
+            "h": jnp.zeros((batch, nh, dh), dtype),
+            "m": jnp.full((batch, nh, dh), -1e9, jnp.float32)}
+
+
+def slstm_state_axes(cfg: ModelConfig) -> Dict[str, tuple]:
+    return {"c": ("batch", "heads", None), "n": ("batch", "heads", None),
+            "h": ("batch", "heads", None), "m": ("batch", "heads", None)}

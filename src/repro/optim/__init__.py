@@ -1,0 +1,3 @@
+from repro.optim.optimizers import (Optimizer, adamw, clip_by_global_norm,  # noqa: F401
+                                    lamb, make_optimizer, sgd)
+from repro.optim.schedules import make_schedule  # noqa: F401

@@ -1,0 +1,129 @@
+"""Optimizers: SGD(+Nesterov momentum), AdamW, LAMB — functional (init, update)
+pairs over pytrees.
+
+Decentralized layout: with per-node parameter replicas stacked on a leading
+node axis, elementwise optimizers vectorize transparently.  LAMB's layerwise
+trust ratio must be *per node* — pass ``per_node=True`` so tensor norms reduce
+over all-but-the-first axis (paper trains BERT with LAMB, §5.3/App. F).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import OptimizerConfig
+
+PyTree = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree, jax.Array], Tuple[PyTree, PyTree]]
+    # update(grads, opt_state, params, lr) -> (new_params, new_opt_state)
+
+
+def _tensor_norm(x: jax.Array, per_node: bool) -> jax.Array:
+    axes = tuple(range(1, x.ndim)) if per_node and x.ndim > 1 else None
+    n = jnp.sqrt(jnp.sum(jnp.square(x.astype(jnp.float32)), axis=axes))
+    if per_node and x.ndim > 1:
+        n = n.reshape((x.shape[0],) + (1,) * (x.ndim - 1))
+    return n
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> PyTree:
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads)
+
+
+def sgd(cfg: OptimizerConfig) -> Optimizer:
+    def init(params):
+        return {"momentum": jax.tree.map(jnp.zeros_like, params)}
+
+    def update(grads, state, params, lr):
+        def upd(g, m, p):
+            g32 = g.astype(jnp.float32)
+            if cfg.weight_decay:
+                g32 = g32 + cfg.weight_decay * p.astype(jnp.float32)
+            m_new = cfg.momentum * m.astype(jnp.float32) + g32
+            step = (g32 + cfg.momentum * m_new) if cfg.nesterov else m_new
+            return (p.astype(jnp.float32) - lr * step).astype(p.dtype), \
+                m_new.astype(m.dtype)
+        flat = jax.tree.map(upd, grads, state["momentum"], params)
+        new_params = jax.tree.map(lambda t: t[0], flat,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda t: t[1], flat,
+                             is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"momentum": new_m}
+
+    return Optimizer(init, update)
+
+
+def _adam_moments(cfg, grads, state):
+    count = state["count"] + 1
+    def mom(g, m, v):
+        g32 = g.astype(jnp.float32)
+        m_new = cfg.b1 * m + (1 - cfg.b1) * g32
+        v_new = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g32)
+        return m_new, v_new
+    pairs = jax.tree.map(mom, grads, state["m"], state["v"])
+    m = jax.tree.map(lambda t: t[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    v = jax.tree.map(lambda t: t[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    bc1 = 1 - cfg.b1 ** count
+    bc2 = 1 - cfg.b2 ** count
+    return m, v, count, bc1, bc2
+
+
+def adamw(cfg: OptimizerConfig) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        m, v, count, bc1, bc2 = _adam_moments(cfg, grads, state)
+        def upd(p, mi, vi):
+            u = (mi / bc1) / (jnp.sqrt(vi / bc2) + cfg.eps)
+            u = u + cfg.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+        new_params = jax.tree.map(upd, params, m, v)
+        return new_params, {"m": m, "v": v, "count": count}
+
+    return Optimizer(init, update)
+
+
+def lamb(cfg: OptimizerConfig, per_node: bool = False) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        m, v, count, bc1, bc2 = _adam_moments(cfg, grads, state)
+        def upd(p, mi, vi):
+            u = (mi / bc1) / (jnp.sqrt(vi / bc2) + cfg.eps)
+            u = u + cfg.weight_decay * p.astype(jnp.float32)
+            wn = _tensor_norm(p, per_node)
+            un = _tensor_norm(u, per_node)
+            trust = jnp.where((wn > 0) & (un > 0), wn / jnp.maximum(un, 1e-12),
+                              jnp.ones_like(wn))
+            return (p.astype(jnp.float32) - lr * trust * u).astype(p.dtype)
+        new_params = jax.tree.map(upd, params, m, v)
+        return new_params, {"m": m, "v": v, "count": count}
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(cfg: OptimizerConfig, per_node: bool = False) -> Optimizer:
+    if cfg.name == "sgd":
+        return sgd(cfg)
+    if cfg.name == "adamw":
+        return adamw(cfg)
+    if cfg.name == "lamb":
+        return lamb(cfg, per_node=per_node)
+    raise ValueError(f"unknown optimizer {cfg.name!r}")

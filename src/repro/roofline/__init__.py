@@ -1,0 +1,4 @@
+from repro.roofline.analysis import (HBM_BW, ICI_BW, PEAK_FLOPS,  # noqa: F401
+                                     Roofline, collective_bytes,
+                                     count_params, from_compiled,
+                                     model_flops_for)

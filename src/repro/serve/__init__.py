@@ -1,0 +1,1 @@
+from repro.serve.engine import BatchedServer, Engine, Request, pad_cache_to  # noqa: F401

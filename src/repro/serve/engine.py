@@ -1,0 +1,173 @@
+"""Serving engine: prefill + decode with KV / recurrent-state caches, greedy
+or temperature sampling, and a slot-based continuous-batching loop.
+
+``serve_step`` (one new token against a full-length cache) is the function the
+decode-shape dry-runs lower.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.model import Model
+
+PyTree = Any
+
+# cache leaf names whose (second-to-batch) axis is the sequence axis, with the
+# axis position counted from the END (robust to a leading stacked-layer dim)
+_SEQ_AXIS_FROM_END = {"k": 3, "v": 3, "c_kv": 2, "k_rope": 2}
+
+
+def pad_cache_to(caches: PyTree, s_max: int) -> PyTree:
+    """Pad prefill-built attention caches out to the serving window."""
+    def pad(path, leaf):
+        name = str(getattr(path[-1], "key", ""))
+        ax = _SEQ_AXIS_FROM_END.get(name)
+        if ax is None or leaf.ndim < ax:
+            return leaf
+        axis = leaf.ndim - ax
+        cur = leaf.shape[axis]
+        if cur >= s_max:
+            return leaf
+        widths = [(0, 0)] * leaf.ndim
+        widths[axis] = (0, s_max - cur)
+        return jnp.pad(leaf, widths)
+    return jax.tree_util.tree_map_with_path(pad, caches)
+
+
+@dataclasses.dataclass
+class Engine:
+    model: Model
+    s_max: int
+
+    @property
+    def cfg(self) -> ModelConfig:
+        return self.model.cfg
+
+    # ------------------------------------------------------------------
+    def prefill(self, params: PyTree, tokens: jax.Array
+                ) -> Tuple[jax.Array, PyTree]:
+        """tokens (B, S_prompt) -> (last-position logits, padded cache)."""
+        logits, caches, _ = self.model.forward(
+            params, {"inputs": tokens}, mode="prefill", want_cache=True)
+        caches = pad_cache_to(caches, self.s_max)
+        return logits[:, -1], caches
+
+    def decode_step(self, params: PyTree, caches: PyTree, tokens: jax.Array,
+                    pos: jax.Array) -> Tuple[jax.Array, PyTree]:
+        logits, caches = self.model.decode_step(params, caches, tokens, pos)
+        return logits[:, 0], caches
+
+    # ------------------------------------------------------------------
+    def generate(self, params: PyTree, prompts: jax.Array, n_new: int, *,
+                 temperature: float = 0.0, key: Optional[jax.Array] = None
+                 ) -> np.ndarray:
+        """Greedy/temperature generation for a fixed batch of equal-length
+        prompts.  Returns (B, n_new) generated ids."""
+        B, S0 = prompts.shape
+        logits, caches = jax.jit(self.prefill)(params, prompts)
+        step = jax.jit(self.decode_step)
+        out = []
+        tok = self._sample(logits, temperature, key)
+        pos = jnp.full((B,), S0, jnp.int32)
+        for i in range(n_new):
+            out.append(np.asarray(tok))
+            logits, caches = step(params, caches, tok[:, None], pos)
+            if key is not None:
+                key, sub = jax.random.split(key)
+            else:
+                sub = None
+            tok = self._sample(logits, temperature, sub)
+            pos = pos + 1
+        return np.stack(out, axis=1)
+
+    @staticmethod
+    def _sample(logits: jax.Array, temperature: float,
+                key: Optional[jax.Array]) -> jax.Array:
+        if temperature <= 0.0 or key is None:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(key, logits / temperature).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray
+    max_new: int
+    generated: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class BatchedServer:
+    """Slot-based continuous batching: fixed B decode slots; finished
+    requests retire and free their slot for the next queued request.
+    Per-slot prefill (B=1) keeps admission simple and bounded."""
+
+    def __init__(self, engine: Engine, params: PyTree, n_slots: int):
+        self.engine = engine
+        self.params = params
+        self.n_slots = n_slots
+        cfg = engine.cfg
+        self.caches = engine.model.init_cache(n_slots, engine.s_max)
+        self.tok = jnp.zeros((n_slots, 1), jnp.int32)
+        self.pos = jnp.zeros((n_slots,), jnp.int32)
+        self.slots: List[Optional[Request]] = [None] * n_slots
+        self._decode = jax.jit(engine.model.decode_step)
+        self._prefill1 = jax.jit(
+            lambda p, t: engine.model.forward(p, {"inputs": t},
+                                              mode="prefill", want_cache=True))
+
+    def _admit(self, req: Request, slot: int) -> None:
+        prompt = jnp.asarray(req.prompt[None, :], jnp.int32)
+        logits, cache, _ = self._prefill1(self.params, prompt)
+        cache = pad_cache_to(cache, self.engine.s_max)
+        # write the slot: every cache leaf's batch axis is right after any
+        # stacked-layer dims; use tree surgery via dynamic_update_slice
+        def _batch_axis(c_all, c_new):
+            for ax in range(c_all.ndim):
+                if c_all.shape[ax] == self.n_slots and c_new.shape[ax] == 1:
+                    return ax
+            raise ValueError((c_all.shape, c_new.shape))
+
+        def write(c_all, c_new):
+            idx = [0] * c_all.ndim
+            idx[_batch_axis(c_all, c_new)] = slot
+            return jax.lax.dynamic_update_slice(
+                c_all, c_new.astype(c_all.dtype), tuple(idx))
+
+        self.caches = jax.tree.map(write, self.caches, cache)
+        first = int(jnp.argmax(logits[0, -1]))
+        req.generated.append(first)
+        self.slots[slot] = req
+        self.tok = self.tok.at[slot, 0].set(first)
+        self.pos = self.pos.at[slot].set(len(req.prompt))
+
+    def run(self, requests: List[Request]) -> List[Request]:
+        queue = list(requests)
+        finished: List[Request] = []
+        while queue or any(s is not None for s in self.slots):
+            for i in range(self.n_slots):
+                if self.slots[i] is None and queue:
+                    self._admit(queue.pop(0), i)
+            logits, self.caches = self._decode(self.params, self.caches,
+                                               self.tok, self.pos)
+            nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+            self.pos = self.pos + 1
+            for i, req in enumerate(self.slots):
+                if req is None:
+                    continue
+                req.generated.append(int(nxt[i]))
+                self.tok = self.tok.at[i, 0].set(int(nxt[i]))
+                if len(req.generated) >= req.max_new:
+                    req.done = True
+                    finished.append(req)
+                    self.slots[i] = None
+        return finished

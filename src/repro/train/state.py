@@ -1,0 +1,61 @@
+"""TrainState pytree + logical-axes helpers for the decentralized layout."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+_IS_AXES = lambda x: isinstance(x, tuple)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: PyTree               # stacked: leading node axis
+    opt_state: PyTree
+    step: jax.Array
+    slow_params: Optional[PyTree] = None   # SlowMo outer iterate (unstacked)
+    slow_u: Optional[PyTree] = None        # SlowMo slow momentum
+
+
+def stack_for_nodes(tree: PyTree, n_nodes: int) -> PyTree:
+    """x_i^(0) identical across nodes (paper Alg. 1 requirement)."""
+    return jax.tree.map(
+        lambda p: jnp.broadcast_to(p[None], (n_nodes,) + p.shape), tree)
+
+
+def stacked_axes(axes_tree: PyTree) -> PyTree:
+    return jax.tree.map(lambda a: ("node",) + tuple(a), axes_tree,
+                        is_leaf=_IS_AXES)
+
+
+def opt_state_axes(opt_name: str, params_axes: PyTree) -> PyTree:
+    if opt_name == "sgd":
+        return {"momentum": params_axes}
+    if opt_name in ("adamw", "lamb"):
+        return {"m": params_axes, "v": params_axes, "count": ()}
+    raise ValueError(opt_name)
+
+
+def state_axes(params_axes_stacked: PyTree, opt_name: str,
+               slowmo: bool, params_axes_unstacked: PyTree) -> TrainState:
+    return TrainState(
+        params=params_axes_stacked,
+        opt_state=opt_state_axes(opt_name, params_axes_stacked),
+        step=(),
+        slow_params=params_axes_unstacked if slowmo else None,
+        slow_u=params_axes_unstacked if slowmo else None,
+    )
+
+
+def consensus_distance(params_stacked: PyTree) -> jax.Array:
+    """(1/n) Σ_i ‖x_i − x̄‖² summed over all parameters — the paper's
+    consensus quantity (§4 Intuition)."""
+    def one(p):
+        p32 = p.astype(jnp.float32)
+        xbar = jnp.mean(p32, axis=0, keepdims=True)
+        return jnp.sum(jnp.square(p32 - xbar)) / p.shape[0]
+    return sum(one(p) for p in jax.tree.leaves(params_stacked))

@@ -1,0 +1,134 @@
+"""Training-step builder: per-node forward/backward (vmapped over the node
+axis) → per-node optimizer update → communication round (the paper's Alg. 1).
+
+One compiled variant per communication phase — "gossip(shift)", "global",
+"none", "slowmo" — dispatched host-side by the schedule (DESIGN.md §2.2), so
+each HLO carries exactly the collectives of its phase and cost/collective
+analysis per phase is exact.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+from repro.core import mixing
+from repro.core import topology as topo
+from repro.models.model import Model
+from repro.optim import clip_by_global_norm, make_optimizer
+from repro.train.state import TrainState, consensus_distance
+
+PyTree = Any
+
+
+def build_train_step(model: Model, tcfg: TrainConfig, n_nodes: int, *,
+                     phase: str, shift_step: int = 0,
+                     with_consensus: bool = False,
+                     unroll: bool = False) -> Callable:
+    """Returns step(state, batch, lr) -> (state, metrics).
+
+    ``phase``: "gossip" | "global" | "none" | "slowmo".
+    batch leaves carry leading (n_nodes, per_node_batch, …).
+    """
+    dist = tcfg.dist
+    opt = make_optimizer(tcfg.optimizer, per_node=True)
+    # DistConfig.remat/remat_policy -> blocks.make_remat policy string
+    if dist.remat == "none":
+        remat_policy = "none"
+    elif dist.remat_policy == "dots":
+        remat_policy = "dots"
+    else:
+        remat_policy = "default"
+
+    def node_loss(params, batch):
+        return model.loss(params, batch, remat=remat_policy,
+                          z_loss=tcfg.z_loss, unroll=unroll)
+
+    def total_loss(params, batch):
+        losses, metrics = jax.vmap(node_loss)(params, batch)
+        # sum over nodes => grads land per-node, unscaled (paper Alg. 1)
+        return jnp.sum(losses), jax.tree.map(jnp.mean, metrics)
+
+    grad_fn = jax.grad(total_loss, has_aux=True)
+
+    def accum_grad_fn(params, batch):
+        """Gradient accumulation: split the per-node batch into
+        ``tcfg.microbatches`` slices and scan — activation memory drops ~m×
+        at unchanged math (equal-size microbatch mean == full-batch mean)."""
+        m = tcfg.microbatches
+
+        def to_mb(t):
+            n, b = t.shape[:2]
+            return t.reshape((n, m, b // m) + t.shape[2:]).swapaxes(0, 1)
+
+        mbs = jax.tree.map(to_mb, batch)
+
+        def body(acc, mb):
+            g, met = grad_fn(params, mb)
+            acc = jax.tree.map(jnp.add, acc, g)
+            return acc, met
+
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        grads, mets = jax.lax.scan(body, zeros, mbs)
+        grads = jax.tree.map(lambda g: g / m, grads)
+        return grads, jax.tree.map(jnp.mean, mets)
+
+    def step(state: TrainState, batch: PyTree, lr: jax.Array
+             ) -> Tuple[TrainState, Dict[str, jax.Array]]:
+        if tcfg.microbatches > 1:
+            grads, metrics = accum_grad_fn(state.params, batch)
+        else:
+            grads, metrics = grad_fn(state.params, batch)
+        if tcfg.optimizer.grad_clip:
+            grads = clip_by_global_norm(grads, tcfg.optimizer.grad_clip)
+        params_half, opt_state = opt.update(grads, state.opt_state,
+                                            state.params, lr)
+        slow_params, slow_u = state.slow_params, state.slow_u
+        if phase == "slowmo":
+            xbar = jax.tree.map(lambda p: jnp.mean(p.astype(jnp.float32), 0),
+                                params_half)
+            beta, alpha = dist.slowmo_beta, dist.slowmo_lr
+            slow_u = jax.tree.map(
+                lambda u, s, xb: beta * u.astype(jnp.float32)
+                + (s.astype(jnp.float32) - xb) / lr,
+                state.slow_u, state.slow_params, xbar)
+            slow_params = jax.tree.map(
+                lambda s, u: (s.astype(jnp.float32) - alpha * lr * u
+                              ).astype(s.dtype),
+                state.slow_params, slow_u)
+            new_params = jax.tree.map(
+                lambda s, p: jnp.broadcast_to(s[None], p.shape).astype(p.dtype),
+                slow_params, params_half)
+        else:
+            comm_dtype = (jnp.bfloat16 if dist.comm_dtype == "bfloat16"
+                          else None)
+            new_params = mixing.communicate(
+                params_half, phase=phase, topology=dist.topology,
+                n_nodes=n_nodes, step=shift_step, axis=0,
+                comm_dtype=comm_dtype, n_pods=dist.n_pods)
+        if with_consensus:
+            metrics = dict(metrics)
+            metrics["consensus"] = consensus_distance(new_params)
+        new_state = TrainState(params=new_params, opt_state=opt_state,
+                               step=state.step + 1, slow_params=slow_params,
+                               slow_u=slow_u)
+        return new_state, metrics
+
+    return step
+
+
+def phases_for_algorithm(algorithm: str) -> Tuple[str, ...]:
+    """Which step variants an algorithm needs compiled."""
+    return {
+        "parallel": ("global",),
+        "gossip": ("gossip",),
+        "local": ("none", "global"),
+        "gossip_pga": ("gossip", "global"),
+        "gossip_aga": ("gossip", "global"),
+        "slowmo": ("gossip", "slowmo"),
+        "hier_pga": ("gossip", "pod_avg", "global"),
+    }[algorithm]

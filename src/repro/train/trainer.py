@@ -1,0 +1,116 @@
+"""Host training loop: schedule-driven phase dispatch, AGA feedback,
+checkpoint hooks, metrics.
+
+Works in two regimes:
+  * CPU simulation (tests/examples): no mesh, n simulated nodes as a stacked
+    leading axis on one device.
+  * Mesh execution (launch/train.py, dry-run): state/batch sharded by the
+    logical-axis rules; same code path, jit called with shardings.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import TrainConfig
+from repro.core import topology as topo
+from repro.core.schedule import make_schedule
+from repro.data import make_stream
+from repro.models.model import Model, make_model
+from repro.optim import make_optimizer, make_schedule as make_lr
+from repro.train.state import TrainState, stack_for_nodes
+from repro.train.step import build_train_step
+
+PyTree = Any
+
+
+class Trainer:
+    def __init__(self, tcfg: TrainConfig, n_nodes: int, *,
+                 mesh: Optional[jax.sharding.Mesh] = None,
+                 with_consensus: bool = False):
+        tcfg.dist.validate()
+        self.tcfg = tcfg
+        self.n_nodes = n_nodes
+        self.mesh = mesh
+        self.model = make_model(tcfg.model)
+        self.lr_fn = make_lr(tcfg.optimizer)
+        self.schedule = make_schedule(tcfg.dist)
+        self.period = topo.schedule_period(tcfg.dist.topology, n_nodes)
+        self.with_consensus = with_consensus
+        self.stream = make_stream(tcfg.model, tcfg.data, n_nodes=n_nodes,
+                                  global_batch=tcfg.global_batch,
+                                  seq_len=tcfg.seq_len)
+        self._compiled: Dict[Any, Any] = {}
+        self.history: List[Dict[str, float]] = []
+
+    # ------------------------------------------------------------------
+    def init_state(self, key: jax.Array) -> TrainState:
+        params, _axes = self.model.init(key)
+        params = stack_for_nodes(params, self.n_nodes)
+        opt = make_optimizer(self.tcfg.optimizer, per_node=True)
+        opt_state = opt.init(params)
+        slowmo = self.tcfg.dist.algorithm == "slowmo"
+        slow_params = (jax.tree.map(lambda p: p[0], params)
+                       if slowmo else None)
+        slow_u = (jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), slow_params)
+            if slowmo else None)
+        return TrainState(params=params, opt_state=opt_state,
+                          step=jnp.zeros((), jnp.int32),
+                          slow_params=slow_params, slow_u=slow_u)
+
+    # ------------------------------------------------------------------
+    def _get_step_fn(self, phase: str, shift: int):
+        key = (phase, shift)
+        if key not in self._compiled:
+            fn = build_train_step(self.model, self.tcfg, self.n_nodes,
+                                  phase=phase, shift_step=shift,
+                                  with_consensus=self.with_consensus)
+            self._compiled[key] = jax.jit(fn, donate_argnums=(0,))
+        return self._compiled[key]
+
+    # ------------------------------------------------------------------
+    def run(self, state: TrainState, steps: Optional[int] = None,
+            log_every: Optional[int] = None) -> TrainState:
+        tcfg = self.tcfg
+        steps = steps if steps is not None else tcfg.steps
+        log_every = log_every if log_every is not None else tcfg.log_every
+        t0 = time.time()
+        start = int(state.step)  # resume-aware: schedule/lr/data keyed on the
+        for k in range(start, start + steps):  # absolute step counter
+            batch = jax.tree.map(jnp.asarray, self.stream.get_batch(k))
+            phase = (self.schedule.phase(k) if self.n_nodes > 1 else "none")
+            shift = self.schedule.gossip_shift_step(k, self.period)
+            lr = jnp.asarray(self.lr_fn(k), jnp.float32)
+            step_fn = self._get_step_fn(phase, shift)
+            state, metrics = step_fn(state, batch, lr)
+            loss = float(metrics["loss"])
+            self.schedule.observe_loss(k, loss)
+            if log_every and (k % log_every == 0 or k == steps - 1):
+                rec = {"step": k, "phase": phase, "lr": float(lr),
+                       "time": time.time() - t0}
+                rec.update({m: float(v) for m, v in metrics.items()})
+                self.history.append(rec)
+                extra = ""
+                if "consensus" in rec:
+                    extra = f" consensus={rec['consensus']:.3e}"
+                print(f"[{tcfg.dist.algorithm:10s}] step {k:5d} "
+                      f"loss={rec['loss']:.4f} phase={phase}{extra}",
+                      flush=True)
+            if tcfg.ckpt_every and (k + 1) % tcfg.ckpt_every == 0:
+                from repro.checkpoint import save_checkpoint
+                save_checkpoint(tcfg.ckpt_dir, state, k + 1)
+        return state
+
+
+def quick_train(tcfg: TrainConfig, n_nodes: int, steps: int, *,
+                seed: int = 0, with_consensus: bool = False) -> Trainer:
+    """Convenience: build, init, run — returns the Trainer (with .history)."""
+    tr = Trainer(tcfg, n_nodes, with_consensus=with_consensus)
+    state = tr.init_state(jax.random.PRNGKey(seed))
+    tr.run(state, steps)
+    return tr

@@ -1,0 +1,104 @@
+"""Pallas kernel contract tests: shape/dtype sweeps vs the pure-jnp oracles
+(interpret=True executes the kernel body on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import (flash_attention_op, flash_attention_ref,
+                           rmsnorm_op, rmsnorm_ref)
+
+FLASH_SWEEP = [
+    # B, Sq, Sk, H, KH, D, causal, window, softcap, bq, bk
+    (1, 64, 64, 4, 2, 32, True, None, None, 32, 32),
+    (2, 100, 100, 4, 4, 16, True, 32, None, 32, 32),
+    (1, 48, 48, 2, 1, 64, True, None, 50.0, 16, 16),
+    (2, 32, 32, 8, 8, 8, False, None, None, 32, 32),
+    (1, 128, 128, 2, 2, 128, True, None, None, 128, 128),
+    (1, 17, 33, 3, 1, 24, False, None, None, 8, 16),   # ragged + cross-len
+    (1, 256, 256, 1, 1, 64, True, 64, 30.0, 64, 64),   # window + softcap
+]
+
+
+@pytest.mark.parametrize("case", FLASH_SWEEP)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_vs_ref(case, dtype):
+    B, Sq, Sk, H, KH, D, causal, window, softcap, bq, bk = case
+    ks = jax.random.split(jax.random.PRNGKey(hash(case) % 2**31), 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, D), dtype)
+    k = jax.random.normal(ks[1], (B, Sk, KH, D), dtype)
+    v = jax.random.normal(ks[2], (B, Sk, KH, D), dtype)
+    got = flash_attention_op(q, k, v, causal=causal, window=window,
+                             softcap=softcap, block_q=bq, block_k=bk,
+                             interpret=True)
+    want = flash_attention_ref(q, k, v, causal=causal, window=window,
+                               softcap=softcap)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+    assert got.dtype == dtype
+
+
+@pytest.mark.parametrize("shape", [(8, 64), (3, 7, 96), (1, 128), (5, 256)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("offset", [0.0, 1.0])
+def test_rmsnorm_vs_ref(shape, dtype, offset):
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, shape, dtype)
+    w = jax.random.normal(jax.random.PRNGKey(1), (shape[-1],), jnp.float32)
+    got = rmsnorm_op(x, w, offset=offset, block_rows=4, interpret=True)
+    want = rmsnorm_ref(x, w, offset=offset)
+    tol = 1e-5 if dtype == jnp.float32 else 1e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+    assert got.dtype == dtype
+
+
+MLSTM_SWEEP = [
+    # B, S, nh, dk, dv, chunk
+    (1, 37, 2, 8, 16, 8),
+    (2, 64, 2, 16, 16, 16),
+    (1, 100, 3, 8, 8, 32),
+    (2, 16, 1, 4, 4, 16),
+]
+
+
+@pytest.mark.parametrize("case", MLSTM_SWEEP)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_mlstm_chunk_kernel_vs_recurrent_oracle(case, dtype):
+    from repro.kernels import mlstm_chunk_op, mlstm_chunk_ref
+    B, S, nh, dk, dv, chunk = case
+    ks = jax.random.split(jax.random.PRNGKey(hash(case) % 2**31), 5)
+    q = (jax.random.normal(ks[0], (B, S, nh, dk)) / np.sqrt(dk)).astype(dtype)
+    k = jax.random.normal(ks[1], (B, S, nh, dk), dtype)
+    v = jax.random.normal(ks[2], (B, S, nh, dv), dtype)
+    li = 2.0 * jax.random.normal(ks[3], (B, S, nh), jnp.float32)
+    lf = jax.nn.log_sigmoid(2.0 * jax.random.normal(ks[4], (B, S, nh)))
+    got = mlstm_chunk_op(q, k, v, li, lf, chunk=chunk, interpret=True)
+    want = mlstm_chunk_ref(q, k, v, li, lf)
+    tol = 5e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=10 * tol)
+    assert got.dtype == dtype
+
+
+def test_flash_matches_model_attention_layer():
+    """The kernel implements the model's GQA contract (same mask semantics)."""
+    from repro.models.attention import _sdpa, attention_mask
+    B, S, KH, g, D = 1, 64, 2, 2, 32
+    H = KH * g
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, KH, D))
+    v = jax.random.normal(ks[2], (B, S, KH, D))
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    mask = attention_mask(pos, pos, causal=True, window=16)
+    want = _sdpa(q.reshape(B, S, KH, g, D), k, v, mask,
+                 scale=D ** -0.5, cap=None, group=g).reshape(B, S, H, D)
+    got = flash_attention_op(q, k, v, causal=True, window=16,
+                             block_q=16, block_k=16, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=1e-4)

@@ -1,0 +1,109 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import mixing, topology as topo
+from repro.core.schedule import AGASchedule, PGASchedule
+
+_SIZES = st.sampled_from([2, 4, 8, 16, 32])
+_TOPOS = st.sampled_from(["ring", "exp", "full", "grid", "one_peer_exp"])
+_SETTINGS = dict(max_examples=25, deadline=None)
+
+
+@given(n=_SIZES, t=_TOPOS, step=st.integers(0, 7))
+@settings(**_SETTINGS)
+def test_mixing_matrix_is_doubly_stochastic(n, t, step):
+    W = topo.mixing_matrix(t, n, step=step)
+    assert topo.is_doubly_stochastic(W)
+
+
+@given(n=_SIZES, t=_TOPOS, step=st.integers(0, 7),
+       seed=st.integers(0, 1000))
+@settings(**_SETTINGS)
+def test_gossip_preserves_global_average(n, t, step, seed):
+    """𝟙ᵀW = 𝟙ᵀ  ⇒  mixing never moves the node average (the quantity the
+    descent lemma tracks)."""
+    x = jnp.asarray(np.random.default_rng(seed).normal(size=(n, 3)),
+                    jnp.float32)
+    mixed = mixing.mix_pytree(x, t, n, step=step)
+    np.testing.assert_allclose(np.asarray(mixed.mean(0)),
+                               np.asarray(x.mean(0)), atol=1e-5)
+
+
+@given(n=_SIZES, t=st.sampled_from(["ring", "exp", "full", "grid"]),
+       seed=st.integers(0, 1000))
+@settings(**_SETTINGS)
+def test_gossip_contracts_consensus_by_beta(n, t, seed):
+    """‖Wx − x̄‖_F ≤ β‖x − x̄‖_F (the consensus-lemma contraction)."""
+    x = jnp.asarray(np.random.default_rng(seed).normal(size=(n, 4)),
+                    jnp.float32)
+    xbar = x.mean(0, keepdims=True)
+    mixed = mixing.mix_pytree(x, t, n)
+    before = float(jnp.linalg.norm(x - xbar))
+    after = float(jnp.linalg.norm(mixed - xbar))
+    b = topo.beta(topo.mixing_matrix(t, n))
+    assert after <= b * before + 1e-4
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(**_SETTINGS)
+def test_global_average_is_idempotent(seed):
+    x = jnp.asarray(np.random.default_rng(seed).normal(size=(8, 5)),
+                    jnp.float32)
+    once = mixing.global_average_pytree(x)
+    twice = mixing.global_average_pytree(once)
+    np.testing.assert_allclose(np.asarray(once), np.asarray(twice),
+                               atol=1e-6)
+
+
+@given(H=st.integers(1, 64), steps=st.integers(1, 300))
+@settings(**_SETTINGS)
+def test_pga_schedule_global_every_h(H, steps):
+    s = PGASchedule(H=H)
+    phases = [s.phase(k) for k in range(steps)]
+    for k, p in enumerate(phases):
+        assert p == ("global" if (k + 1) % H == 0 else "gossip")
+
+
+@given(h_init=st.integers(1, 8), h_max=st.integers(8, 64),
+       losses=st.lists(st.floats(1e-6, 1e6, allow_nan=False), min_size=10,
+                       max_size=200))
+@settings(**_SETTINGS)
+def test_aga_h_always_bounded(h_init, h_max, losses):
+    s = AGASchedule(H_init=h_init, warmup=5, H_max=h_max)
+    for k, loss in enumerate(losses):
+        s.observe_loss(k, loss)
+        s.phase(k)
+        assert 1 <= s.current_H <= h_max
+
+
+@given(beta=st.floats(0.0, 0.999), H=st.integers(1, 128))
+@settings(**_SETTINGS)
+def test_paper_quantity_bounds(beta, H):
+    cb = topo.c_beta(beta, H)
+    db = topo.d_beta(beta, H)
+    assert cb <= min(H, 1.0 / (1.0 - beta)) + 1e-9
+    assert db == min(float(H), 1.0 / (1.0 - beta))
+
+
+@given(n=st.sampled_from([4, 8, 16]), seed=st.integers(0, 100),
+       k=st.integers(2, 6))
+@settings(**_SETTINGS)
+def test_moe_dispatch_weights_sum_preserved(n, seed, k):
+    """Dispatched combine weights sum to 1 per token when nothing drops."""
+    from repro.models.moe import _build_dispatch
+    rng = np.random.default_rng(seed)
+    T, E = 32, n
+    k = min(k, E)
+    top_idx = jnp.asarray(rng.integers(0, E, size=(T, k)))
+    w = rng.random((T, k)).astype(np.float32)
+    w /= w.sum(-1, keepdims=True)
+    tok, wt, drop = _build_dispatch(jnp.asarray(top_idx), jnp.asarray(w),
+                                    E, capacity=T * k, n_tokens=T)
+    assert float(drop) == 0.0
+    # scatter weights back per token and compare
+    sums = np.zeros(T + 1)
+    np.add.at(sums, np.asarray(tok).reshape(-1), np.asarray(wt).reshape(-1))
+    np.testing.assert_allclose(sums[:T], np.ones(T), atol=1e-5)

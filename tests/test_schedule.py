@@ -1,0 +1,104 @@
+"""Communication schedules + the paper's algebraic reductions (Remarks 2-4)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import DistConfig
+from repro.core import simulate
+from repro.core.schedule import (AGASchedule, LocalSchedule, PGASchedule,
+                                 make_schedule)
+
+
+def test_pga_phase_pattern():
+    s = PGASchedule(H=4)
+    phases = [s.phase(k) for k in range(12)]
+    assert phases == ["gossip", "gossip", "gossip", "global"] * 3
+
+
+def test_local_phase_pattern():
+    s = LocalSchedule(H=3)
+    assert [s.phase(k) for k in range(6)] == \
+        ["none", "none", "global"] * 2
+
+
+def test_aga_period_increases_as_loss_drops():
+    s = AGASchedule(H_init=4, warmup=8, H_max=64)
+    # during warmup: collect F_init
+    for k in range(16):
+        s.observe_loss(k, 10.0)
+        s.phase(k)
+    # loss drops 4x -> H should grow toward 16
+    for k in range(16, 64):
+        s.observe_loss(k, 2.5)
+        s.phase(k)
+    assert s.current_H > 4
+    assert s.current_H <= 64
+
+
+def test_aga_h_bounded():
+    s = AGASchedule(H_init=4, warmup=4, H_max=8)
+    for k in range(64):
+        s.observe_loss(k, 1e-9)   # catastrophic ratio
+        s.phase(k)
+    assert 1 <= s.current_H <= 8
+
+
+def test_make_schedule_dispatch():
+    for alg in ["parallel", "gossip", "local", "gossip_pga", "gossip_aga",
+                "slowmo"]:
+        s = make_schedule(DistConfig(algorithm=alg))
+        assert s.phase(0) in ("gossip", "global", "none", "slowmo")
+
+
+# ---------------------------------------------------------------------------
+# Algebraic reductions on the simulator (paper Remarks 2-4)
+# ---------------------------------------------------------------------------
+def _quad_problem(n=8, d=4, seed=0):
+    c = jnp.asarray(np.random.default_rng(seed).normal(size=(n, d)),
+                    jnp.float32)
+
+    def grad_fn(x, key, k):   # deterministic grads -> exact comparisons
+        return x - c
+
+    def loss_fn(xbar):
+        return 0.5 * jnp.mean(jnp.sum((xbar - c) ** 2, -1))
+
+    return grad_fn, loss_fn, c
+
+
+def test_pga_with_full_topology_equals_parallel():
+    grad_fn, loss_fn, c = _quad_problem()
+    kw = dict(grad_fn=grad_fn, loss_fn=loss_fn, x0=jnp.zeros(4), n=8,
+              steps=40, lr=0.1, H=4, eval_every=5)
+    a = simulate(algorithm="gossip_pga", topology="full", **kw)
+    b = simulate(algorithm="parallel", topology="full", **kw)
+    np.testing.assert_allclose(a["loss"], b["loss"], rtol=1e-6)
+
+
+def test_pga_with_huge_h_equals_gossip():
+    grad_fn, loss_fn, c = _quad_problem()
+    kw = dict(grad_fn=grad_fn, loss_fn=loss_fn, x0=jnp.zeros(4), n=8,
+              steps=40, lr=0.1, topology="ring", eval_every=5)
+    a = simulate(algorithm="gossip_pga", H=10_000, **kw)
+    b = simulate(algorithm="gossip", H=10_000, **kw)
+    np.testing.assert_allclose(a["loss"], b["loss"], rtol=1e-6)
+
+
+def test_pga_with_identity_topology_equals_local():
+    grad_fn, loss_fn, c = _quad_problem()
+    kw = dict(grad_fn=grad_fn, loss_fn=loss_fn, x0=jnp.zeros(4), n=8,
+              steps=40, lr=0.1, H=4, eval_every=5)
+    a = simulate(algorithm="gossip_pga", topology="disconnected", **kw)
+    b = simulate(algorithm="local", topology="disconnected", **kw)
+    np.testing.assert_allclose(a["loss"], b["loss"], rtol=1e-6)
+
+
+def test_slowmo_beta0_alpha1_equals_pga():
+    """Paper §5.2: Gossip-PGA is SlowMo with slow momentum 0, slow lr 1."""
+    grad_fn, loss_fn, c = _quad_problem()
+    kw = dict(grad_fn=grad_fn, loss_fn=loss_fn, x0=jnp.zeros(4), n=8,
+              steps=24, lr=0.1, H=4, topology="ring", eval_every=4)
+    a = simulate(algorithm="slowmo", slowmo_beta=0.0, slowmo_lr=1.0, **kw)
+    b = simulate(algorithm="gossip_pga", **kw)
+    np.testing.assert_allclose(a["loss"], b["loss"], rtol=1e-5)

@@ -1,0 +1,99 @@
+"""Topology invariants: Assumption 3 of the paper + transient-stage theory."""
+import numpy as np
+import pytest
+
+from repro.core import topology as topo
+
+SIZES = [2, 4, 8, 16, 32, 64]
+STATIC = ["ring", "grid", "exp", "full"]
+
+
+@pytest.mark.parametrize("n", SIZES)
+@pytest.mark.parametrize("t", STATIC)
+def test_doubly_stochastic(t, n):
+    W = topo.mixing_matrix(t, n)
+    assert topo.is_doubly_stochastic(W), (t, n)
+
+
+@pytest.mark.parametrize("n", [4, 8, 16])
+def test_one_peer_exp_doubly_stochastic_every_step(n):
+    for k in range(int(np.log2(n)) * 2):
+        W = topo.mixing_matrix("one_peer_exp", n, step=k)
+        assert topo.is_doubly_stochastic(W)
+
+
+@pytest.mark.parametrize("t", STATIC)
+@pytest.mark.parametrize("n", [4, 16, 64])
+def test_beta_in_range(t, n):
+    b = topo.beta(topo.mixing_matrix(t, n))
+    assert 0.0 <= b < 1.0 + 1e-9, (t, n, b)
+    if t == "full":
+        assert b < 1e-9
+
+
+def test_beta_ordering_sparser_is_larger():
+    # paper Remark 1: sparser topology => larger beta
+    n = 64
+    b_ring = topo.beta(topo.mixing_matrix("ring", n))
+    b_grid = topo.beta(topo.mixing_matrix("grid", n))
+    b_exp = topo.beta(topo.mixing_matrix("exp", n))
+    assert b_ring > b_grid > b_exp
+
+
+def test_ring_beta_grows_with_n():
+    betas = [topo.beta(topo.mixing_matrix("ring", n)) for n in [8, 16, 32, 64]]
+    assert all(b2 > b1 for b1, b2 in zip(betas, betas[1:]))
+    # 1 - beta = O(1/n^2) for the ring (paper Table 13)
+    assert 1 - betas[-1] < 0.01
+
+
+def test_one_peer_exp_exact_average_after_log_n():
+    # product of one period of one-peer-exp matrices == J (paper §3)
+    n = 16
+    P = np.eye(n)
+    for k in range(4):
+        P = topo.mixing_matrix("one_peer_exp", n, step=k) @ P
+    np.testing.assert_allclose(P, np.ones((n, n)) / n, atol=1e-12)
+    assert topo.effective_beta("one_peer_exp", n) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Paper quantities
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("beta", [0.1, 0.5, 0.9, 0.99])
+@pytest.mark.parametrize("H", [2, 6, 16, 64])
+def test_c_beta_bound(beta, H):
+    # C_beta = (1-beta^H)/(1-beta) < min{H, 1/(1-beta)}  (paper Table 2)
+    cb = topo.c_beta(beta, H)
+    assert cb < min(H, 1.0 / (1.0 - beta)) + 1e-12
+    np.testing.assert_allclose(cb, sum(beta ** k for k in range(H)))
+
+
+@pytest.mark.parametrize("iid", [True, False])
+@pytest.mark.parametrize("H", [4, 16, 64])
+@pytest.mark.parametrize("beta", [0.3, 0.9, 0.999])
+def test_transient_stage_orderings(iid, H, beta):
+    """Tables 2 & 3: Gossip-PGA always has the shortest transient stage."""
+    n = 64
+    t_pga = topo.transient_stage("gossip_pga", n, beta, H, iid=iid)
+    t_gossip = topo.transient_stage("gossip", n, beta, H, iid=iid)
+    t_local = topo.transient_stage("local", n, beta, H, iid=iid)
+    assert t_pga <= t_gossip + 1e-9
+    assert t_pga <= t_local + 1e-9
+
+
+def test_transient_gossip_blows_up_as_beta_to_1():
+    n = 64
+    t_9 = topo.transient_stage("gossip", n, 0.9, 16)
+    t_999 = topo.transient_stage("gossip", n, 0.999, 16)
+    p_9 = topo.transient_stage("gossip_pga", n, 0.9, 16)
+    p_999 = topo.transient_stage("gossip_pga", n, 0.999, 16)
+    # gossip grows ~(1-beta)^-4; PGA is capped by H
+    assert t_999 / t_9 > 1e3
+    assert p_999 / p_9 < 1e2
+
+
+def test_schedule_period():
+    assert topo.schedule_period("ring", 16) == 1
+    assert topo.schedule_period("one_peer_exp", 16) == 4
+    assert topo.schedule_period("one_peer_exp", 1) == 1
