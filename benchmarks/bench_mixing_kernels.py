@@ -1,0 +1,82 @@
+"""Reference vs fused-Pallas mixing backends — the paper's communication
+round as a kernel microbenchmark.
+
+For each topology (ring, one_peer_exp, grid) × node count × phase it times
+one full communication round over a synthetic parameter blob and emits
+
+    mixing/<phase>/<topology>/n<n>/<backend>,<us_per_call>,<speedup>
+
+CSV rows (benchmarks/common.emit convention; see benchmarks/README.md for
+how these relate to the paper's Table 2 communication model).  On this CPU
+container the pallas rows run in interpret mode, so absolute numbers are
+not meaningful there — the reference/pallas *ratio* becomes meaningful on
+TPU where the kernel compiles to Mosaic; what CPU CI checks is that both
+backends run end-to-end and agree (the parity gate lives in
+tests/test_mixing_kernels.py).
+
+    PYTHONPATH=src python -m benchmarks.bench_mixing_kernels [--dim 65536]
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, time_fn
+from repro.core import mixing
+from repro.kernels import mixing_pallas
+
+TOPOLOGIES = ("ring", "one_peer_exp", "grid")
+PHASES = ("gossip", "global", "pod_avg")
+
+
+def bench_round(phase: str, topology: str, n: int, dim: int, n_pods: int,
+                iters: int) -> None:
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (n, dim), jnp.float32)
+    g = jax.random.normal(jax.random.PRNGKey(1), (n, dim), jnp.float32)
+    gamma = 0.1
+
+    # Reference: unfused half-step then roll/mean mixing (2 + |shifts| passes)
+    @jax.jit
+    def ref_round(x, g):
+        return mixing.communicate(x - gamma * g, phase=phase,
+                                  topology=topology, n_nodes=n, step=0,
+                                  n_pods=n_pods)
+
+    # Pallas: half-step + mix fused into one pass
+    @jax.jit
+    def pallas_round(x, g):
+        return mixing_pallas.fused_step_mix(x, g, gamma, phase=phase,
+                                            topology=topology, n_nodes=n,
+                                            n_pods=n_pods)
+
+    base = f"mixing/{phase}/{topology}/n{n}"
+    t_ref = time_fn(ref_round, x, g, iters=iters)
+    t_pal = time_fn(pallas_round, x, g, iters=iters)
+    emit(f"{base}/reference", t_ref)
+    emit(f"{base}/pallas", t_pal, f"speedup={t_ref / t_pal:.2f}x")
+
+
+def main(dim: int = 65_536, nodes=(8, 16), iters: int = 10) -> None:
+    print(f"# mixing backends, dim={dim} fp32 per node, "
+          f"backend={jax.default_backend()} "
+          f"(pallas interpreted off-TPU)")
+    for topology in TOPOLOGIES:
+        for n in nodes:
+            for phase in PHASES:
+                if phase == "gossip" or topology == TOPOLOGIES[0]:
+                    # averaging phases are topology-independent: once is enough
+                    bench_round(phase, topology, n, dim, n_pods=2,
+                                iters=iters)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dim", type=int, default=65_536,
+                    help="per-node parameter count")
+    ap.add_argument("--nodes", type=int, nargs="+", default=[8, 16])
+    ap.add_argument("--iters", type=int, default=10)
+    args = ap.parse_args()
+    main(dim=args.dim, nodes=tuple(args.nodes), iters=args.iters)

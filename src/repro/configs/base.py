@@ -197,6 +197,9 @@ class DistConfig:
     comm_dtype: str = "float32"      # gossip/all-reduce wire dtype
                                      # ("bfloat16" halves collective bytes —
                                      # the paper's "orthogonal quantization")
+    comm_backend: str = "reference"  # "reference": roll/jnp.mean mixing
+                                     # "pallas": fused single-pass kernels
+                                     #           (repro.kernels.mixing_pallas)
     remat: str = "block"             # "none" | "block": jax.checkpoint each scanned block
     remat_policy: str = "nothing"    # "nothing" | "dots" (checkpoint_dots) — perf knob
     serve_param_sharding: str = "tp" # "tp" (model axis) | "2d" (data+model, big archs)
@@ -211,6 +214,8 @@ class DistConfig:
             raise ValueError("H must be >= 1")
         if self.node_axis not in ("data", "pod"):
             raise ValueError("node_axis must be 'data' or 'pod'")
+        if self.comm_backend not in ("reference", "pallas"):
+            raise ValueError("comm_backend must be 'reference' or 'pallas'")
         return self
 
 

@@ -43,13 +43,14 @@ class Decentralized:
         return self.schedule.phase(step)
 
     def communicate(self, params: PyTree, phase: str, step: int,
-                    axis: int = 0) -> PyTree:
+                    axis: int = 0, backend: Optional[str] = None) -> PyTree:
         if phase == "slowmo":  # parameter part only; momentum handled by caller
             phase = "global"
         return mixing.communicate(
             params, phase=phase, topology=self.dist.topology,
             n_nodes=self.n_nodes, step=step, axis=axis,
-            n_pods=self.dist.n_pods)
+            n_pods=self.dist.n_pods,
+            backend=backend or self.dist.comm_backend)
 
 
 # ---------------------------------------------------------------------------
@@ -71,17 +72,26 @@ def simulate(
     slowmo_lr: float = 1.0,
     aga_kwargs: Optional[dict] = None,
     eval_every: int = 10,
+    backend: str = "reference",
 ) -> Dict[str, np.ndarray]:
     """Run ``algorithm`` on n simulated nodes; returns the trajectory of the
     node-average loss f(x̄^k) and consensus distance ‖x − x̄‖²/n.
 
     grad_fn(x_stacked (n,d), key, step) -> per-node stochastic grads (n,d).
     loss_fn(x̄ (d,)) -> scalar global objective f(x̄).
+
+    ``backend="pallas"`` routes communication through the fused kernels
+    (repro.kernels.mixing_pallas): the SGD half-step and the mix run as one
+    pass, and at eval iterations the same pass also emits x̄ and the
+    consensus residual, so the eval loop never re-reads the parameters.
     """
     dist = DistConfig(algorithm=algorithm, topology=topology, H=H,
-                      **(aga_kwargs or {}))
+                      comm_backend=backend, **(aga_kwargs or {}))
     algo = Decentralized(dist, n)
     lr_fn = lr if callable(lr) else (lambda k: lr)
+    use_pallas = backend == "pallas"
+    if use_pallas:
+        from repro.kernels import mixing_pallas
 
     x = jnp.broadcast_to(x0, (n,) + x0.shape)          # x_i^(0) identical
     slow_x = x0                                         # SlowMo slow params
@@ -92,6 +102,15 @@ def simulate(
         g = grad_fn(x, key, k)
         x_half = x - gamma * g
         return algo.communicate(x_half, phase, shift_step)
+
+    @functools.partial(jax.jit,
+                       static_argnames=("phase", "shift_step",
+                                        "with_residual"))
+    def pallas_step_fn(x, key, k, gamma, phase, shift_step, with_residual):
+        g = grad_fn(x, key, k)
+        return mixing_pallas.fused_step_mix(
+            x, g, gamma, phase=phase, topology=topology, n_nodes=n,
+            step=shift_step, with_residual=with_residual)
 
     @jax.jit
     def slowmo_outer(x_half, slow_x, slow_u, gamma):
@@ -110,18 +129,30 @@ def simulate(
         gamma = float(lr_fn(k))
         phase = algo.phase(k)
         shift_step = algo.schedule.gossip_shift_step(k, period)
+        is_eval = k % eval_every == 0 or k == steps - 1
+        xbar = resid = None
         if phase == "slowmo":
             g = grad_fn(x, sub, k)
             x_half = x - gamma * g
             x, slow_x, slow_u = slowmo_outer(x_half, slow_x, slow_u, gamma)
+        elif use_pallas and phase in ("gossip", "global", "pod_avg"):
+            if is_eval:  # fused: mix + x̄ + consensus in one parameter pass
+                x, xbar, resid = pallas_step_fn(x, sub, k, gamma, phase,
+                                                shift_step, True)
+            else:
+                x = pallas_step_fn(x, sub, k, gamma, phase, shift_step,
+                                   False)
         else:
             x = step_fn(x, sub, k, gamma, phase, shift_step)
-        if k % eval_every == 0 or k == steps - 1:
-            xbar = jnp.mean(x, axis=0)
+        if is_eval:
+            if xbar is None:
+                xbar = jnp.mean(x, axis=0)
             f = float(eval_loss(xbar))
             algo.schedule.observe_loss(k, f)
             losses.append(f)
-            consensus.append(float(jnp.mean(jnp.sum((x - xbar) ** 2, -1))))
+            consensus.append(
+                float(resid) / n if resid is not None
+                else float(jnp.mean(jnp.sum((x - xbar) ** 2, -1))))
             its.append(k)
         else:
             # AGA still needs a loss signal between evals; reuse last.

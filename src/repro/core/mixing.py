@@ -1,19 +1,31 @@
 """Mixing primitives: gossip communication and global averaging.
 
-Two interchangeable implementations, proven equivalent by tests:
+Three interchangeable implementations, proven equivalent by tests, selected
+by the ``backend`` argument on :func:`communicate` (DESIGN.md §2.1):
 
-* **roll-based (pjit / GSPMD)** — ``W·x = Σ_s w_s · roll(x, s, node_axis)``.
-  Used inside jitted train steps where parameters carry a leading node axis
-  sharded over the mesh ``data`` (or flattened ``(pod, data)``) axis.  Each
-  roll along the sharded axis lowers to one ICI ``collective-permute``; the
-  global average lowers to an ``all-reduce``.  This is the production path.
+* **roll-based (pjit / GSPMD)** — ``backend="reference"``:
+  ``W·x = Σ_s w_s · roll(x, s, node_axis)``.  Used inside jitted train steps
+  where parameters carry a leading node axis sharded over the mesh ``data``
+  (or flattened ``(pod, data)``) axis.  Each roll along the sharded axis
+  lowers to one ICI ``collective-permute``; the global average lowers to an
+  ``all-reduce``.  This is the proven-equivalent oracle every other path is
+  tested against.
+
+* **fused Pallas kernels** — ``backend="pallas"``
+  (:mod:`repro.kernels.mixing_pallas`): the whole round (optional SGD
+  half-step, mix, optional consensus residual) in one pass over parameter
+  blocks — one HBM round-trip instead of ``1 + |shifts|``.  Runs in
+  interpret mode on CPU (same convention as kernels/ops.py) and compiles to
+  Mosaic on TPU.
 
 * **shard_map + ppermute** — the explicit decentralized runtime: each mesh
   slot *is* a node and exchanges its block with neighbors via
   ``jax.lax.ppermute`` / ``psum``.  Semantically identical; exposed for users
   who keep per-node state unstacked.
 
-Both views never materialize W (DESIGN.md §2.1).
+None of the views materialize W across nodes in the sharded hot path
+(DESIGN.md §2.1; the Pallas backend keeps a tiny n×n circulant factor in
+VMEM, which DESIGN.md §2.1 argues is the correct single-chip encoding).
 """
 from __future__ import annotations
 
@@ -26,6 +38,19 @@ import jax.numpy as jnp
 from repro.core import topology as topo
 
 PyTree = Any
+
+BACKENDS = ("reference", "pallas")
+
+
+def _check_backend(backend: str, axis: int) -> bool:
+    """True if the pallas backend should handle this call."""
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown mixing backend {backend!r} "
+                         f"(expected one of {BACKENDS})")
+    if backend == "pallas" and axis != 0:
+        raise ValueError("pallas mixing backend requires the node axis at "
+                         "position 0 (got axis={})".format(axis))
+    return backend == "pallas"
 
 
 # ---------------------------------------------------------------------------
@@ -73,11 +98,17 @@ def mix_array_grid(x: jax.Array, n: int, axis: int = 0) -> jax.Array:
 
 
 def mix_pytree(params: PyTree, topology: str, n: int, step: int = 0,
-               axis: int = 0, comm_dtype=None) -> PyTree:
+               axis: int = 0, comm_dtype=None,
+               backend: str = "reference") -> PyTree:
     """Gossip step ``x ← W x`` applied leaf-wise over a pytree whose leaves
     carry the node axis at ``axis``."""
     if n == 1 or topology == "disconnected":
         return params
+    if _check_backend(backend, axis):
+        from repro.kernels import mixing_pallas
+        return mixing_pallas.fused_step_mix(
+            params, phase="gossip", topology=topology, n_nodes=n, step=step,
+            comm_dtype=comm_dtype)
     if topology == "grid":
         return jax.tree.map(lambda p: mix_array_grid(p, n, axis), params)
     weights = topo.shift_weights(topology, n, step)
@@ -86,11 +117,17 @@ def mix_pytree(params: PyTree, topology: str, n: int, step: int = 0,
 
 
 def global_average_pytree(params: PyTree, axis: int = 0,
-                          comm_dtype=None) -> PyTree:
+                          comm_dtype=None,
+                          backend: str = "reference") -> PyTree:
     """Periodic global averaging ``x ← (1/n)𝟙𝟙ᵀ x`` (All-Reduce step).
     With ``comm_dtype`` the reduction runs on wire-dtype operands — the
     all-reduce moves half the bytes (node counts are small, so bf16
     accumulation over n ≤ 32 replicas is benign)."""
+    if _check_backend(backend, axis):
+        from repro.kernels import mixing_pallas
+        leaves = jax.tree.leaves(params)
+        return mixing_pallas.global_average(params, leaves[0].shape[0],
+                                            comm_dtype=comm_dtype)
     def avg(p):
         src = p.astype(comm_dtype) if comm_dtype is not None else p
         m = jnp.mean(src, axis=axis, keepdims=True)
@@ -99,11 +136,17 @@ def global_average_pytree(params: PyTree, axis: int = 0,
 
 
 def pod_average_pytree(params: PyTree, n_pods: int, axis: int = 0,
-                       comm_dtype=None) -> PyTree:
+                       comm_dtype=None,
+                       backend: str = "reference") -> PyTree:
     """Hierarchical averaging (beyond-paper Hier-PGA, DESIGN.md §4): exact
     average *within* each pod's block of nodes — an all-reduce over the
     cheap intra-pod ICI, leaving cross-pod DCI traffic to the (rarer)
     global step."""
+    if _check_backend(backend, axis):
+        from repro.kernels import mixing_pallas
+        leaves = jax.tree.leaves(params)
+        return mixing_pallas.pod_average(params, leaves[0].shape[0], n_pods,
+                                         comm_dtype=comm_dtype)
     def avg(p):
         n = p.shape[axis]
         per = n // n_pods
@@ -165,7 +208,7 @@ def make_shard_map_mixer(mesh: jax.sharding.Mesh, axis_name: str,
 # ---------------------------------------------------------------------------
 def communicate(params: PyTree, *, phase: str, topology: str, n_nodes: int,
                 step: int = 0, axis: int = 0, comm_dtype=None,
-                n_pods: int = 1) -> PyTree:
+                n_pods: int = 1, backend: str = "reference") -> PyTree:
     """Apply one communication round to decentralized parameters.
 
     phase:
@@ -174,16 +217,20 @@ def communicate(params: PyTree, *, phase: str, topology: str, n_nodes: int,
       "gossip"  — x ← W x
       "global"  — x ← x̄ (periodic All-Reduce global averaging)
       "pod_avg" — exact average within each pod block (Hier-PGA)
+
+    backend:
+      "reference" — the roll / jnp.mean path (oracle)
+      "pallas"    — fused single-pass kernels (repro.kernels.mixing_pallas)
     """
     if phase == "none" or n_nodes == 1:
         return params
     if phase == "gossip":
         return mix_pytree(params, topology, n_nodes, step=step, axis=axis,
-                          comm_dtype=comm_dtype)
+                          comm_dtype=comm_dtype, backend=backend)
     if phase == "global":
         return global_average_pytree(params, axis=axis,
-                                     comm_dtype=comm_dtype)
+                                     comm_dtype=comm_dtype, backend=backend)
     if phase == "pod_avg":
         return pod_average_pytree(params, n_pods, axis=axis,
-                                  comm_dtype=comm_dtype)
+                                  comm_dtype=comm_dtype, backend=backend)
     raise ValueError(f"unknown communication phase {phase!r}")

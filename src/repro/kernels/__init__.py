@@ -1,11 +1,19 @@
-"""Pallas TPU kernels for the substrate's compute hot spots.
+"""Pallas TPU kernels for the system's compute and communication hot spots.
 
-The paper's contribution is a communication schedule (no kernel-level
-contribution), so kernels/ holds the attention + norm hot spots of the model
-substrate (DESIGN.md §6): flash_attention.py, rmsnorm.py, with ops.py jit
-wrappers and ref.py pure-jnp oracles.
+Two families (DESIGN.md §6):
+
+* **substrate kernels** — flash_attention.py, rmsnorm.py, mlstm_chunk.py:
+  the attention/norm/recurrence hot spots of the model substrate, with
+  ops.py jit wrappers and ref.py pure-jnp oracles.
+* **mixing kernels** — mixing_pallas.py: the paper's own primitive
+  (gossip mixing + periodic averaging, DESIGN.md §2.1) fused into
+  single-pass kernels, selected via ``backend="pallas"`` on
+  ``repro.core.mixing.communicate``.
 """
 from repro.kernels.ops import (flash_attention_op, mlstm_chunk_op,  # noqa: F401
                                rmsnorm_op)
 from repro.kernels.ref import (flash_attention_ref, mlstm_chunk_ref,  # noqa: F401
                                rmsnorm_ref)
+from repro.kernels.mixing_pallas import (fused_step_mix,  # noqa: F401
+                                         global_average, mix_residual,
+                                         pod_average)

@@ -1,0 +1,319 @@
+"""Fused Pallas mixing kernels — the paper's communication primitive as a
+first-class TPU kernel (DESIGN.md §2.1, "pallas backend").
+
+The reference path in :mod:`repro.core.mixing` applies the gossip round as a
+chain of unfused jnp ops: the SGD half-step ``x − γg`` is one pass over HBM,
+then every circulant shift term ``w_s · roll(x, s)`` re-reads the parameters,
+then the weighted sum writes them back — ``2 + |shifts|`` HBM round-trips per
+round.  Here the whole round is one ``pallas_call``:
+
+* every leaf of the parameter pytree is flattened and concatenated into a
+  single ``(n, D)`` node-major matrix, so one kernel covers the whole model
+  instead of one dispatch per leaf.  The pack/unpack around the kernel is
+  itself one extra fp32 copy each way (visible to XLA, fused where it can
+  be), so the honest pass count is kernel(1) + pack/unpack — still ahead of
+  the reference's ``2 + |shifts|`` passes for multi-shift topologies;
+  input/output aliasing and per-leaf dispatch for very large leaves are the
+  next optimization (ROADMAP);
+* the grid walks ``D`` in ``block_d`` columns; each step loads an
+  ``(n, block_d)`` tile into VMEM exactly once, applies the half-step, the
+  mix, and (optionally) the consensus residual in-register, and writes the
+  tile back once — one HBM round-trip total;
+* the circulant mix itself runs as an ``(n, n) @ (n, block_d)`` matmul on the
+  MXU.  The node count is tiny (n ≤ 32), so the dense circulant factor lives
+  in VMEM for the whole kernel; the "never materialize W" rule (DESIGN.md
+  §2.1) is about the *sharded production path*, where W would be an n×n
+  matrix of cross-chip traffic — inside a fused single-chip kernel the n×n
+  factor is the cheapest possible encoding.
+
+Three public entry points, one kernel body:
+
+``fused_step_mix``   — ``W · (x − γg)`` (γ, g optional → plain ``W·x``)
+``global_average`` / ``pod_average`` — the same kernel with W = 𝟙𝟙ᵀ/n or its
+                       pod-block-diagonal variant (the PGA / Hier-PGA rounds)
+``mix_residual``     — additionally emits ``x̄`` and the consensus distance
+                       ``Σ_i ‖x_i − x̄‖²`` of the *mixed* iterate, so eval
+                       loops stop re-reading the parameters they just wrote
+
+Wire-dtype ("orthogonal quantization") semantics match the reference: for
+gossip rounds the *self* term stays in the storage dtype and only neighbor
+terms are cast to ``comm_dtype``; averaging rounds cast everything.  The grid
+topology ignores ``comm_dtype`` exactly like the reference does.
+
+``interpret`` defaults to True off-TPU (same convention as kernels/ops.py),
+so the backend is exercised end-to-end in CPU CI and compiles to Mosaic on
+TPU unchanged.
+
+Scope: these kernels operate on the *local, unsharded* stacked node axis —
+the simulator, single-host training, and the per-chip tail of a sharded
+step.  They are not yet shard_map-aware: selecting ``backend="pallas"``
+under a mesh whose node axis is sharded would gather the stacked state onto
+each device.  The sharded production path stays on ``backend="reference"``
+(whose rolls lower to collective-permutes) until the kernels grow a
+shard_map wrapper (DESIGN.md §2.1, ROADMAP).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core import topology as topo
+
+PyTree = Any
+
+KERNEL_PHASES = ("gossip", "global", "pod_avg")
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# Phase → (self-weight diagonal, off/cast factor) decomposition
+# ---------------------------------------------------------------------------
+def phase_matrices(phase: str, topology: str, n: int, step: int = 0,
+                   n_pods: int = 1) -> Tuple[np.ndarray, np.ndarray]:
+    """Decompose one communication round into ``x ← d ⊙ x + M · cast(x)``.
+
+    Returns ``(d, M)`` with ``d`` shape (n, 1), ``M`` shape (n, n):
+
+    * gossip:  ``d = diag(W)``, ``M = W − diag(W)`` — the self term is kept
+      out of ``M`` so the wire cast touches only neighbor traffic, matching
+      ``mixing.mix_array``.
+    * global:  ``d = 0``, ``M = 𝟙𝟙ᵀ/n`` — the reference all-reduce casts its
+      whole operand, and with ``d = 0`` the cast-everything semantics fall
+      out of the same ``d ⊙ x + M · cast(x)`` form.
+    * pod_avg: ``d = 0``, ``M = blockdiag(𝟙𝟙ᵀ/per)`` — likewise.
+    """
+    if phase == "gossip":
+        W = topo.mixing_matrix(topology, n, step=step)
+        d = np.diag(W).copy()
+        M = W - np.diag(d)
+        return d.reshape(n, 1).astype(np.float32), M.astype(np.float32)
+    if phase == "global":
+        M = np.full((n, n), 1.0 / n)
+        return np.zeros((n, 1), np.float32), M.astype(np.float32)
+    if phase == "pod_avg":
+        if n % n_pods != 0:
+            raise ValueError(f"n={n} not divisible by n_pods={n_pods}")
+        per = n // n_pods
+        M = np.zeros((n, n))
+        for p in range(n_pods):
+            M[p * per:(p + 1) * per, p * per:(p + 1) * per] = 1.0 / per
+        return np.zeros((n, 1), np.float32), M.astype(np.float32)
+    raise ValueError(f"no kernel decomposition for phase {phase!r}")
+
+
+# ---------------------------------------------------------------------------
+# PyTree <-> (n, D) node-major matrix
+# ---------------------------------------------------------------------------
+def flatten_nodes(tree: PyTree) -> Tuple[jax.Array, Callable]:
+    """Concatenate every leaf's non-node dims into one fp32 ``(n, D)`` matrix.
+
+    Returns ``(flat, unflatten)``; ``unflatten(flat2, drop_node=False)``
+    restores the original structure, shapes, and per-leaf dtypes.  With
+    ``drop_node=True`` it maps a ``(1, D)`` row (e.g. the kernel's x̄ output)
+    back to leaves without the node axis.
+    """
+    leaves, treedef = jax.tree.flatten(tree)
+    n = leaves[0].shape[0]
+    shapes = [l.shape for l in leaves]
+    dtypes = [l.dtype for l in leaves]
+    sizes = [int(np.prod(s[1:], dtype=np.int64)) for s in shapes]
+    flat = jnp.concatenate(
+        [l.reshape(n, -1).astype(jnp.float32) for l in leaves], axis=1)
+
+    def unflatten(f: jax.Array, drop_node: bool = False) -> PyTree:
+        out, off = [], 0
+        for shape, dtype, size in zip(shapes, dtypes, sizes):
+            piece = f[:, off:off + size]
+            if drop_node:
+                out.append(piece.reshape(shape[1:]).astype(dtype))
+            else:
+                out.append(piece.reshape((n,) + shape[1:]).astype(dtype))
+            off += size
+        return jax.tree.unflatten(treedef, out)
+
+    return flat, unflatten
+
+
+# ---------------------------------------------------------------------------
+# Kernel body (shared by all entry points)
+# ---------------------------------------------------------------------------
+def _mix_kernel(*refs, with_g: bool, with_residual: bool, wire: bool):
+    """One grid step: load an (n, bd) tile, fuse half-step + mix (+ residual).
+
+    Ref order: [gamma?, x, g?, d, M] then outputs [o, xbar?, r?].
+    """
+    idx = 0
+    if with_g:
+        gamma_ref = refs[idx]; idx += 1
+    x_ref = refs[idx]; idx += 1
+    if with_g:
+        g_ref = refs[idx]; idx += 1
+    d_ref = refs[idx]; idx += 1
+    m_ref = refs[idx]; idx += 1
+    o_ref = refs[idx]; idx += 1
+    if with_residual:
+        xbar_ref = refs[idx]; idx += 1
+        r_ref = refs[idx]; idx += 1
+
+    x = x_ref[...].astype(jnp.float32)                       # (n, bd)
+    if with_g:
+        x = x - gamma_ref[0, 0] * g_ref[...].astype(jnp.float32)
+    # wire-dtype cast applies to the M term only: neighbor traffic for gossip
+    # (d carries the uncast self term), everything for averages (d = 0)
+    onwire = x.astype(jnp.bfloat16).astype(jnp.float32) if wire else x
+    mixed = jnp.dot(m_ref[...], onwire, preferred_element_type=jnp.float32)
+    mixed = mixed + d_ref[...] * x
+    o_ref[...] = mixed.astype(o_ref.dtype)
+
+    if with_residual:
+        xbar = jnp.mean(mixed, axis=0, keepdims=True)        # (1, bd)
+        xbar_ref[...] = xbar.astype(xbar_ref.dtype)
+
+        @pl.when(pl.program_id(0) == 0)
+        def _init():
+            r_ref[0, 0] = 0.0
+
+        r_ref[0, 0] += jnp.sum(jnp.square(mixed - xbar))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("with_g", "with_residual", "wire", "block_d",
+                     "interpret"))
+def _mix_flat(xf: jax.Array, gf: Optional[jax.Array],
+              gamma: Optional[jax.Array], d: jax.Array, M: jax.Array, *,
+              with_g: bool, with_residual: bool, wire: bool,
+              block_d: int, interpret: bool):
+    """Run the fused kernel over an already-flattened (n, D) matrix."""
+    n, D = xf.shape
+    bd = max(1, min(block_d, D))
+    pad = (-D) % bd
+    if pad:  # zero columns: contribute 0 to mix and residual alike
+        xf = jnp.pad(xf, ((0, 0), (0, pad)))
+        if with_g:
+            gf = jnp.pad(gf, ((0, 0), (0, pad)))
+    Dp = D + pad
+
+    tile = lambda i: (0, i)
+    in_specs, inputs = [], []
+    if with_g:
+        in_specs.append(pl.BlockSpec((1, 1), lambda i: (0, 0)))
+        inputs.append(jnp.asarray(gamma, jnp.float32).reshape(1, 1))
+    in_specs.append(pl.BlockSpec((n, bd), tile))
+    inputs.append(xf)
+    if with_g:
+        in_specs.append(pl.BlockSpec((n, bd), tile))
+        inputs.append(gf)
+    in_specs.append(pl.BlockSpec((n, 1), lambda i: (0, 0)))
+    inputs.append(d)
+    in_specs.append(pl.BlockSpec((n, n), lambda i: (0, 0)))
+    inputs.append(M)
+
+    out_shape = [jax.ShapeDtypeStruct((n, Dp), xf.dtype)]
+    out_specs = [pl.BlockSpec((n, bd), tile)]
+    if with_residual:
+        out_shape.append(jax.ShapeDtypeStruct((1, Dp), jnp.float32))
+        out_specs.append(pl.BlockSpec((1, bd), tile))
+        out_shape.append(jax.ShapeDtypeStruct((1, 1), jnp.float32))
+        out_specs.append(pl.BlockSpec((1, 1), lambda i: (0, 0)))
+
+    kernel = functools.partial(_mix_kernel, with_g=with_g,
+                               with_residual=with_residual, wire=wire)
+    out = pl.pallas_call(
+        kernel,
+        grid=(Dp // bd,),
+        in_specs=in_specs,
+        out_specs=tuple(out_specs) if with_residual else out_specs[0],
+        out_shape=tuple(out_shape) if with_residual else out_shape[0],
+        interpret=interpret,
+    )(*inputs)
+
+    if with_residual:
+        mixed, xbar, r = out
+        return mixed[:, :D], xbar[:, :D], r[0, 0]
+    return out[:, :D]
+
+
+# ---------------------------------------------------------------------------
+# Public entry points
+# ---------------------------------------------------------------------------
+def fused_step_mix(params: PyTree, grads: Optional[PyTree] = None,
+                   gamma: Optional[jax.Array] = None, *, phase: str,
+                   topology: str = "ring", n_nodes: int, step: int = 0,
+                   comm_dtype=None, n_pods: int = 1, block_d: int = 2048,
+                   interpret: Optional[bool] = None,
+                   with_residual: bool = False):
+    """Fused ``W · (params − γ·grads)`` for one communication round.
+
+    With ``grads is None`` this is a plain mixing round (the production
+    trainer's optimizer already produced the half-step iterate); with grads
+    and γ it is the simulator's whole SGD+gossip step in one HBM pass.
+
+    Returns the mixed pytree; with ``with_residual=True`` returns
+    ``(mixed, xbar, residual)`` where ``xbar`` is the node average (leaves
+    without the node axis) and ``residual = Σ_i ‖x_i − x̄‖²`` of the mixed
+    iterate (divide by n for the paper's consensus distance).
+    """
+    if phase not in KERNEL_PHASES:
+        raise ValueError(f"phase {phase!r} has no fused kernel "
+                         f"(expected one of {KERNEL_PHASES})")
+    interp = _default_interpret() if interpret is None else interpret
+    d, M = phase_matrices(phase, topology, n_nodes, step=step, n_pods=n_pods)
+    # grid mixing ignores comm_dtype in the reference path — mirror that
+    wire = (comm_dtype is not None
+            and not (phase == "gossip" and topology == "grid"))
+    with_g = grads is not None
+    if with_g and gamma is None:
+        raise ValueError("grads given without gamma")
+
+    xf, unflatten = flatten_nodes(params)
+    gf = flatten_nodes(grads)[0] if with_g else None
+    out = _mix_flat(xf, gf, gamma if with_g else None,
+                    jnp.asarray(d), jnp.asarray(M),
+                    with_g=with_g, with_residual=with_residual, wire=wire,
+                    block_d=block_d, interpret=interp)
+    if with_residual:
+        mixed, xbar, r = out
+        return unflatten(mixed), unflatten(xbar, drop_node=True), r
+    return unflatten(out)
+
+
+def global_average(params: PyTree, n_nodes: int, *, comm_dtype=None,
+                   block_d: int = 2048, interpret: Optional[bool] = None,
+                   with_residual: bool = False):
+    """Fused periodic global averaging ``x ← (1/n)𝟙𝟙ᵀ x`` (PGA round)."""
+    return fused_step_mix(params, phase="global", n_nodes=n_nodes,
+                          comm_dtype=comm_dtype, block_d=block_d,
+                          interpret=interpret, with_residual=with_residual)
+
+
+def pod_average(params: PyTree, n_nodes: int, n_pods: int, *,
+                comm_dtype=None, block_d: int = 2048,
+                interpret: Optional[bool] = None,
+                with_residual: bool = False):
+    """Fused intra-pod exact averaging (Hier-PGA round, DESIGN.md §4)."""
+    return fused_step_mix(params, phase="pod_avg", n_nodes=n_nodes,
+                          n_pods=n_pods, comm_dtype=comm_dtype,
+                          block_d=block_d, interpret=interpret,
+                          with_residual=with_residual)
+
+
+def mix_residual(params: PyTree, grads: Optional[PyTree] = None,
+                 gamma: Optional[jax.Array] = None, *, phase: str,
+                 topology: str = "ring", n_nodes: int, step: int = 0,
+                 comm_dtype=None, n_pods: int = 1, block_d: int = 2048,
+                 interpret: Optional[bool] = None):
+    """``(W·x, x̄, Σ_i ‖x_i − x̄‖²)`` in one pass — eval without re-reading."""
+    return fused_step_mix(params, grads, gamma, phase=phase,
+                          topology=topology, n_nodes=n_nodes, step=step,
+                          comm_dtype=comm_dtype, n_pods=n_pods,
+                          block_d=block_d, interpret=interpret,
+                          with_residual=True)

@@ -27,6 +27,10 @@ def main() -> None:
     ap.add_argument("--seq-len", type=int, default=64)
     ap.add_argument("--optimizer", default="adamw")
     ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--comm-backend", default="reference",
+                    choices=("reference", "pallas"),
+                    help="mixing implementation (DESIGN.md §2.1): roll-based "
+                         "reference or fused Pallas kernels")
     ap.add_argument("--full-config", action="store_true",
                     help="full published dims (TPU-scale; default reduced)")
     ap.add_argument("--iid", action="store_true")
@@ -36,7 +40,7 @@ def main() -> None:
     tcfg = TrainConfig(
         model=cfg,
         dist=DistConfig(algorithm=args.algorithm, topology=args.topology,
-                        H=args.H),
+                        H=args.H, comm_backend=args.comm_backend),
         optimizer=OptimizerConfig(name=args.optimizer, lr=args.lr,
                                   schedule="warmup_cosine", warmup_steps=10,
                                   total_steps=args.steps),

@@ -88,6 +88,7 @@ def build_train_step(model: Model, tcfg: TrainConfig, n_nodes: int, *,
         params_half, opt_state = opt.update(grads, state.opt_state,
                                             state.params, lr)
         slow_params, slow_u = state.slow_params, state.slow_u
+        fused_consensus = None
         if phase == "slowmo":
             xbar = jax.tree.map(lambda p: jnp.mean(p.astype(jnp.float32), 0),
                                 params_half)
@@ -106,13 +107,29 @@ def build_train_step(model: Model, tcfg: TrainConfig, n_nodes: int, *,
         else:
             comm_dtype = (jnp.bfloat16 if dist.comm_dtype == "bfloat16"
                           else None)
-            new_params = mixing.communicate(
-                params_half, phase=phase, topology=dist.topology,
-                n_nodes=n_nodes, step=shift_step, axis=0,
-                comm_dtype=comm_dtype, n_pods=dist.n_pods)
+            new_params = None
+            if (dist.comm_backend == "pallas" and with_consensus
+                    and n_nodes > 1
+                    and phase in ("gossip", "global", "pod_avg")):
+                # fused: the mixing kernel emits the consensus residual in
+                # the same parameter pass instead of re-reading new_params
+                from repro.kernels import mixing_pallas
+                new_params, _xbar, resid = mixing_pallas.mix_residual(
+                    params_half, phase=phase, topology=dist.topology,
+                    n_nodes=n_nodes, step=shift_step,
+                    comm_dtype=comm_dtype, n_pods=dist.n_pods)
+                fused_consensus = resid / n_nodes
+            if new_params is None:
+                new_params = mixing.communicate(
+                    params_half, phase=phase, topology=dist.topology,
+                    n_nodes=n_nodes, step=shift_step, axis=0,
+                    comm_dtype=comm_dtype, n_pods=dist.n_pods,
+                    backend=dist.comm_backend)
         if with_consensus:
             metrics = dict(metrics)
-            metrics["consensus"] = consensus_distance(new_params)
+            metrics["consensus"] = (fused_consensus
+                                    if fused_consensus is not None
+                                    else consensus_distance(new_params))
         new_state = TrainState(params=new_params, opt_state=opt_state,
                                step=state.step + 1, slow_params=slow_params,
                                slow_u=slow_u)

@@ -1,0 +1,192 @@
+"""Pallas mixing-kernel parity: the fused backend must match the roll-based
+reference (itself proven ≡ dense W in test_mixing.py) for every phase ×
+topology × shape, including the bf16 wire-cast path and the fused residual
+outputs.  All kernels run in interpret mode on CPU (kernels/ops.py
+convention), so these tests exercise the exact code that compiles to Mosaic
+on TPU."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import mixing, topology as topo
+from repro.kernels import mixing_pallas as mp
+
+TOPOLOGIES = ["ring", "exp", "full", "grid", "one_peer_exp", "disconnected"]
+# deliberately odd/ragged shapes: exercises block-padding and multi-leaf concat
+SHAPES = [(5, 3), (7,), ()]
+
+
+def _tree(key, n, dtype=jnp.float32):
+    keys = jax.random.split(key, len(SHAPES))
+    return {f"leaf{i}": jax.random.normal(k, (n,) + s).astype(dtype)
+            for i, (k, s) in enumerate(zip(keys, SHAPES))}
+
+
+def _assert_tree_close(got, want, atol):
+    got_l, want_l = jax.tree.leaves(got), jax.tree.leaves(want)
+    assert jax.tree.structure(got) == jax.tree.structure(want)
+    for g, w in zip(got_l, want_l):
+        assert g.dtype == w.dtype
+        np.testing.assert_allclose(np.asarray(g, np.float32),
+                                   np.asarray(w, np.float32), atol=atol)
+
+
+# ---------------------------------------------------------------------------
+# Phase parity: gossip / global / pod_avg, fp32 and bf16 wire
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("t", TOPOLOGIES)
+@pytest.mark.parametrize("n", [4, 8])
+@pytest.mark.parametrize("comm_dtype", [None, jnp.bfloat16])
+def test_gossip_parity(t, n, comm_dtype, rng_key):
+    tree = _tree(rng_key, n)
+    want = mixing.mix_pytree(tree, t, n, step=3, comm_dtype=comm_dtype)
+    got = mixing.mix_pytree(tree, t, n, step=3, comm_dtype=comm_dtype,
+                            backend="pallas")
+    _assert_tree_close(got, want, atol=1e-5 if comm_dtype is None else 3e-2)
+
+
+@pytest.mark.parametrize("comm_dtype", [None, jnp.bfloat16])
+def test_global_parity(comm_dtype, rng_key):
+    tree = _tree(rng_key, 8)
+    want = mixing.global_average_pytree(tree, comm_dtype=comm_dtype)
+    got = mixing.global_average_pytree(tree, comm_dtype=comm_dtype,
+                                       backend="pallas")
+    _assert_tree_close(got, want, atol=1e-5 if comm_dtype is None else 3e-2)
+
+
+@pytest.mark.parametrize("n_pods", [2, 4])
+@pytest.mark.parametrize("comm_dtype", [None, jnp.bfloat16])
+def test_pod_avg_parity(n_pods, comm_dtype, rng_key):
+    tree = _tree(rng_key, 8)
+    want = mixing.pod_average_pytree(tree, n_pods, comm_dtype=comm_dtype)
+    got = mixing.pod_average_pytree(tree, n_pods, comm_dtype=comm_dtype,
+                                    backend="pallas")
+    _assert_tree_close(got, want, atol=1e-5 if comm_dtype is None else 3e-2)
+
+
+@pytest.mark.parametrize("phase", ["gossip", "global", "pod_avg"])
+def test_communicate_dispatch_parity(phase, rng_key):
+    """The selector on mixing.communicate reaches the same numbers."""
+    tree = _tree(rng_key, 8)
+    kw = dict(phase=phase, topology="one_peer_exp", n_nodes=8, step=2,
+              n_pods=2)
+    want = mixing.communicate(tree, **kw)
+    got = mixing.communicate(tree, backend="pallas", **kw)
+    _assert_tree_close(got, want, atol=1e-5)
+
+
+def test_one_peer_exp_time_varying_steps(rng_key):
+    """Shift step must select the right one-peer graph in the kernel too."""
+    n = 8
+    x = jax.random.normal(rng_key, (n, 6))
+    for step in range(4):
+        W = jnp.asarray(topo.mixing_matrix("one_peer_exp", n, step=step))
+        got = mp.fused_step_mix(x, phase="gossip", topology="one_peer_exp",
+                                n_nodes=n, step=step)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(W @ x),
+                                   atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Fused SGD half-step and residual outputs
+# ---------------------------------------------------------------------------
+def test_fused_half_step(rng_key):
+    n, gamma = 8, 0.37
+    k1, k2 = jax.random.split(rng_key)
+    x, g = _tree(k1, n), _tree(k2, n)
+    want = mixing.mix_pytree(
+        jax.tree.map(lambda p, q: p - gamma * q, x, g), "ring", n)
+    got = mp.fused_step_mix(x, g, gamma, phase="gossip", topology="ring",
+                            n_nodes=n)
+    _assert_tree_close(got, want, atol=1e-5)
+
+
+@pytest.mark.parametrize("phase", ["gossip", "global", "pod_avg"])
+def test_mix_residual_outputs(phase, rng_key):
+    n = 8
+    tree = _tree(rng_key, n)
+    mixed, xbar, resid = mp.mix_residual(tree, phase=phase, topology="ring",
+                                         n_nodes=n, n_pods=2)
+    want = mixing.communicate(tree, phase=phase, topology="ring", n_nodes=n,
+                              n_pods=2)
+    _assert_tree_close(mixed, want, atol=1e-5)
+    # x̄ = node average of the mixed iterate, leaves without the node axis
+    want_bar = jax.tree.map(lambda p: jnp.mean(p, axis=0), want)
+    _assert_tree_close(xbar, want_bar, atol=1e-5)
+    # residual = Σ_i ‖x_i − x̄‖² over every leaf of the mixed iterate
+    want_r = sum(float(jnp.sum((p - jnp.mean(p, 0, keepdims=True)) ** 2))
+                 for p in jax.tree.leaves(want))
+    np.testing.assert_allclose(float(resid), want_r, rtol=1e-4, atol=1e-6)
+
+
+def test_residual_zero_after_global(rng_key):
+    """Global averaging leaves all nodes identical ⇒ residual ≈ 0."""
+    _, _, resid = mp.mix_residual(_tree(rng_key, 8), phase="global",
+                                  n_nodes=8)
+    assert float(resid) < 1e-6
+
+
+# ---------------------------------------------------------------------------
+# Invariants and plumbing
+# ---------------------------------------------------------------------------
+def test_preserves_bf16_storage_dtype(rng_key):
+    tree = _tree(rng_key, 4, dtype=jnp.bfloat16)
+    out = mp.fused_step_mix(tree, phase="gossip", topology="ring", n_nodes=4)
+    want = mixing.mix_pytree(tree, "ring", 4)
+    # kernel accumulates in fp32 (reference accumulates in bf16): bf16 tol
+    _assert_tree_close(out, want, atol=3e-2)
+
+
+def test_gossip_preserves_node_average(rng_key):
+    """𝟙ᵀW = 𝟙ᵀ must survive the kernelization."""
+    x = jax.random.normal(rng_key, (8, 33))
+    mixed = mp.fused_step_mix(x, phase="gossip", topology="exp", n_nodes=8)
+    np.testing.assert_allclose(np.asarray(mixed.mean(0)),
+                               np.asarray(x.mean(0)), atol=1e-5)
+
+
+def test_block_boundary_independence(rng_key):
+    """Numbers must not depend on the grid block size (padding masked)."""
+    x = jax.random.normal(rng_key, (8, 37))
+    outs = [np.asarray(mp.fused_step_mix(x, phase="gossip", topology="ring",
+                                         n_nodes=8, block_d=bd))
+            for bd in (1, 8, 64, 2048)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(o, outs[0], atol=1e-6)
+
+
+def test_simulate_backend_parity(rng_key):
+    """Whole-trajectory check: simulate() with backend='pallas' (fused
+    half-step + eval residual) tracks the reference trajectory."""
+    from repro.core.algorithms import simulate
+    d = 6
+    A = np.asarray(np.random.default_rng(0).normal(size=(d, d)))
+    A = jnp.asarray(A @ A.T / d + np.eye(d), jnp.float32)
+
+    def grad_fn(xs, key, k):
+        return xs @ A + jax.random.normal(key, xs.shape) * 0.01
+
+    outs = {b: simulate(algorithm="gossip_pga", grad_fn=grad_fn,
+                        loss_fn=lambda x: 0.5 * x @ A @ x,
+                        x0=jnp.ones((d,), jnp.float32), n=8, steps=20,
+                        lr=0.05, topology="ring", H=4, eval_every=5,
+                        backend=b)
+            for b in ("reference", "pallas")}
+    np.testing.assert_allclose(outs["reference"]["loss"],
+                               outs["pallas"]["loss"], rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(outs["reference"]["consensus"],
+                               outs["pallas"]["consensus"], rtol=1e-3,
+                               atol=1e-5)
+
+
+def test_pallas_backend_rejects_nonzero_axis(rng_key):
+    x = jax.random.normal(rng_key, (3, 8))
+    with pytest.raises(ValueError, match="axis"):
+        mixing.mix_pytree(x, "ring", 8, axis=1, backend="pallas")
+
+
+def test_unknown_backend_rejected(rng_key):
+    x = jax.random.normal(rng_key, (8, 4))
+    with pytest.raises(ValueError, match="backend"):
+        mixing.mix_pytree(x, "ring", 8, backend="cuda")
