@@ -1,5 +1,5 @@
 """Reference vs fused-Pallas mixing backends — the paper's communication
-round as a kernel microbenchmark.
+round as a kernel microbenchmark, doubling as CI's perf-regression gate.
 
 For each topology (ring, one_peer_exp, grid) × node count × phase it times
 one full communication round over a synthetic parameter blob and emits
@@ -11,14 +11,32 @@ how these relate to the paper's Table 2 communication model).  On this CPU
 container the pallas rows run in interpret mode, so absolute numbers are
 not meaningful there — the reference/pallas *ratio* becomes meaningful on
 TPU where the kernel compiles to Mosaic; what CPU CI checks is that both
-backends run end-to-end and agree (the parity gate lives in
-tests/test_mixing_kernels.py).
+backends run end-to-end, agree (the parity gate lives in
+tests/test_mixing_kernels.py), and that the pallas path has not regressed
+against the reference.
+
+Perf-regression gate (CI): ``--out BENCH_mixing.json`` writes the rows,
+ratios, and gate verdict as JSON; ``--max-ratio R`` exits non-zero when
+pallas is *consistently* slower than reference by more than R — i.e. when
+the **minimum** pallas/reference ratio over the multi-shift rounds exceeds
+R.  A real regression (say, reintroducing the pack/unpack copies the
+aliased path eliminated) slows every round, so the minimum catches it;
+a single noisy row on a shared CI runner does not trip the gate (wall
+clock at these sizes jitters ±50% per row).  One-peer rows are excluded
+from the gate: their reference round is a single roll, so on the
+interpret-mode CPU path the comparison only measures Python interpreter
+overhead (DESIGN.md §2.1 caveat (a)); they are still reported in the
+JSON.
 
     PYTHONPATH=src python -m benchmarks.bench_mixing_kernels [--dim 65536]
+    PYTHONPATH=src python -m benchmarks.bench_mixing_kernels \
+        --dim 4096 --nodes 8 --iters 3 --out BENCH_mixing.json --max-ratio 1.25
 """
 from __future__ import annotations
 
 import argparse
+import json
+import sys
 
 import jax
 import jax.numpy as jnp
@@ -29,10 +47,12 @@ from repro.kernels import mixing_pallas
 
 TOPOLOGIES = ("ring", "one_peer_exp", "grid")
 PHASES = ("gossip", "global", "pod_avg")
+# one-peer gossip: single-shift reference — excluded from the CPU gate
+GATED_TOPOLOGIES = ("ring", "grid")
 
 
 def bench_round(phase: str, topology: str, n: int, dim: int, n_pods: int,
-                iters: int) -> None:
+                iters: int) -> dict:
     key = jax.random.PRNGKey(0)
     x = jax.random.normal(key, (n, dim), jnp.float32)
     g = jax.random.normal(jax.random.PRNGKey(1), (n, dim), jnp.float32)
@@ -45,7 +65,7 @@ def bench_round(phase: str, topology: str, n: int, dim: int, n_pods: int,
                                   topology=topology, n_nodes=n, step=0,
                                   n_pods=n_pods)
 
-    # Pallas: half-step + mix fused into one pass
+    # Pallas: half-step + mix fused into one pass (aliased staging buffer)
     @jax.jit
     def pallas_round(x, g):
         return mixing_pallas.fused_step_mix(x, g, gamma, phase=phase,
@@ -57,19 +77,41 @@ def bench_round(phase: str, topology: str, n: int, dim: int, n_pods: int,
     t_pal = time_fn(pallas_round, x, g, iters=iters)
     emit(f"{base}/reference", t_ref)
     emit(f"{base}/pallas", t_pal, f"speedup={t_ref / t_pal:.2f}x")
+    return {"name": base, "phase": phase, "topology": topology, "n": n,
+            "reference_us": t_ref, "pallas_us": t_pal,
+            "ratio": t_pal / t_ref,
+            "gated": phase != "gossip" or topology in GATED_TOPOLOGIES}
 
 
-def main(dim: int = 65_536, nodes=(8, 16), iters: int = 10) -> None:
+def main(dim: int = 65_536, nodes=(8, 16), iters: int = 10,
+         out: str | None = None, max_ratio: float | None = None) -> int:
     print(f"# mixing backends, dim={dim} fp32 per node, "
           f"backend={jax.default_backend()} "
           f"(pallas interpreted off-TPU)")
+    rows = []
     for topology in TOPOLOGIES:
         for n in nodes:
             for phase in PHASES:
                 if phase == "gossip" or topology == TOPOLOGIES[0]:
                     # averaging phases are topology-independent: once is enough
-                    bench_round(phase, topology, n, dim, n_pods=2,
-                                iters=iters)
+                    rows.append(bench_round(phase, topology, n, dim,
+                                            n_pods=2, iters=iters))
+    gated = sorted(r["ratio"] for r in rows if r["gated"])
+    best = gated[0] if gated else float("nan")
+    verdict = {"min_gated_ratio": best, "max_ratio": max_ratio,
+               "passed": max_ratio is None or best <= max_ratio}
+    print(f"# gate: min pallas/reference ratio {best:.3f} over "
+          f"{len(gated)} multi-shift rounds"
+          + ("" if max_ratio is None else
+             f" (limit {max_ratio:.2f}: "
+             f"{'PASS' if verdict['passed'] else 'FAIL'})"))
+    if out:
+        with open(out, "w") as f:
+            json.dump({"dim": dim, "nodes": list(nodes), "iters": iters,
+                       "jax_backend": jax.default_backend(),
+                       "rows": rows, "gate": verdict}, f, indent=2)
+        print(f"# wrote {out}")
+    return 0 if verdict["passed"] else 1
 
 
 if __name__ == "__main__":
@@ -78,5 +120,12 @@ if __name__ == "__main__":
                     help="per-node parameter count")
     ap.add_argument("--nodes", type=int, nargs="+", default=[8, 16])
     ap.add_argument("--iters", type=int, default=10)
+    ap.add_argument("--out", default=None,
+                    help="write rows + gate verdict as JSON (CI artifact)")
+    ap.add_argument("--max-ratio", type=float, default=None,
+                    help="fail (exit 1) when every multi-shift round is "
+                         "slower than reference by more than this ratio "
+                         "(min gated pallas/reference ratio)")
     args = ap.parse_args()
-    main(dim=args.dim, nodes=tuple(args.nodes), iters=args.iters)
+    sys.exit(main(dim=args.dim, nodes=tuple(args.nodes), iters=args.iters,
+                  out=args.out, max_ratio=args.max_ratio))

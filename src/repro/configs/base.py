@@ -200,6 +200,17 @@ class DistConfig:
     comm_backend: str = "reference"  # "reference": roll/jnp.mean mixing
                                      # "pallas": fused single-pass kernels
                                      #           (repro.kernels.mixing_pallas)
+    comm_shard_mode: str = "auto"    # pallas backend under a mesh-sharded
+                                     # node axis (DESIGN.md §2.1):
+                                     # "auto": per-shard kernels + ppermute
+                                     #         halo when the node axis spans
+                                     #         >1 device, stacked otherwise
+                                     # "stacked": always the local kernels
+                                     # "sharded": require a sharded mesh
+    pallas_leaf_threshold: int = 262_144
+                                     # per-node elements at which a leaf gets
+                                     # its own kernel dispatch instead of the
+                                     # concat staging buffer
     remat: str = "block"             # "none" | "block": jax.checkpoint each scanned block
     remat_policy: str = "nothing"    # "nothing" | "dots" (checkpoint_dots) — perf knob
     serve_param_sharding: str = "tp" # "tp" (model axis) | "2d" (data+model, big archs)
@@ -216,6 +227,11 @@ class DistConfig:
             raise ValueError("node_axis must be 'data' or 'pod'")
         if self.comm_backend not in ("reference", "pallas"):
             raise ValueError("comm_backend must be 'reference' or 'pallas'")
+        if self.comm_shard_mode not in ("auto", "stacked", "sharded"):
+            raise ValueError("comm_shard_mode must be 'auto', 'stacked', "
+                             "or 'sharded'")
+        if self.pallas_leaf_threshold < 1:
+            raise ValueError("pallas_leaf_threshold must be >= 1")
         return self
 
 

@@ -23,6 +23,14 @@ by the ``backend`` argument on :func:`communicate` (DESIGN.md §2.1):
   ``jax.lax.ppermute`` / ``psum``.  Semantically identical; exposed for users
   who keep per-node state unstacked.
 
+When :func:`communicate` is given a ``mesh`` whose node axis is sharded,
+the pallas backend routes through :func:`communicate_sharded` — a
+shard_map wrapper that halo-exchanges neighbor shard blocks via
+``ppermute`` and runs the fused per-shard kernel
+(:func:`repro.kernels.mixing_pallas.shard_mix_block`) on each shard's
+row-block, so ``backend="pallas"`` is safe (and collective-sparse) under
+mesh sharding (DESIGN.md §2.1 dispatch table).
+
 None of the views materialize W across nodes in the sharded hot path
 (DESIGN.md §2.1; the Pallas backend keeps a tiny n×n circulant factor in
 VMEM, which DESIGN.md §2.1 argues is the correct single-chip encoding).
@@ -30,27 +38,83 @@ VMEM, which DESIGN.md §2.1 argues is the correct single-chip encoding).
 from __future__ import annotations
 
 import functools
-from typing import Any, Callable, Dict, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import topology as topo
 
 PyTree = Any
 
 BACKENDS = ("reference", "pallas")
+SHARD_MODES = ("auto", "stacked", "sharded")
 
 
-def _check_backend(backend: str, axis: int) -> bool:
-    """True if the pallas backend should handle this call."""
+def _check_backend(backend: str, axis: int,
+                   caller: str = "mixing.communicate") -> bool:
+    """True if the pallas backend should handle this call.
+
+    ``caller`` names the public entry point that reached the check, so the
+    raise is attributable when routed through wrappers like
+    ``simulate(backend=...)`` or ``Decentralized.communicate``.
+    """
     if backend not in BACKENDS:
-        raise ValueError(f"unknown mixing backend {backend!r} "
+        raise ValueError(f"{caller}: unknown mixing backend {backend!r} "
                          f"(expected one of {BACKENDS})")
     if backend == "pallas" and axis != 0:
-        raise ValueError("pallas mixing backend requires the node axis at "
-                         "position 0 (got axis={})".format(axis))
+        raise ValueError(
+            f"{caller}: pallas mixing backend requires the node axis at "
+            f"position 0 (got axis={axis}); pass axis=0 or select "
+            f"backend='reference' for a non-leading node axis")
     return backend == "pallas"
+
+
+def node_axis_names(mesh: jax.sharding.Mesh, node_axis: str = "data"
+                    ) -> Tuple[str, ...]:
+    """Mesh axis names forming the gossip node axis under
+    ``DistConfig.node_axis`` semantics (launch/mesh.py): ``"data"`` flattens
+    ``(pod, data)`` when a pod axis exists; ``"pod"`` gossips across pods
+    only (hierarchical mode)."""
+    axes = dict(mesh.shape)
+    if node_axis == "data":
+        return tuple(a for a in ("pod", "data") if a in axes)
+    if node_axis == "pod":
+        # single-pod meshes have no 'pod' axis: one gossip node, no shards
+        return ("pod",) if "pod" in axes else ()
+    if node_axis in axes:  # explicit mesh axis (tests / custom meshes)
+        return (node_axis,)
+    raise ValueError(f"node_axis must be 'data', 'pod', or a mesh axis "
+                     f"name, got {node_axis!r}")
+
+
+def node_shard_count(mesh: Optional[jax.sharding.Mesh],
+                     node_axis: str = "data") -> int:
+    """How many shards the node axis is split over on ``mesh`` (1 = local)."""
+    if mesh is None:
+        return 1
+    names = node_axis_names(mesh, node_axis)
+    return int(np.prod([mesh.shape[a] for a in names], dtype=np.int64)) \
+        if names else 1
+
+
+def use_sharded_backend(backend: str, mesh: Optional[jax.sharding.Mesh],
+                        node_axis: str = "data",
+                        shard_mode: str = "auto") -> bool:
+    """True when ``communicate`` should route pallas through the shard_map
+    wrapper: the node axis is genuinely sharded and the mode allows it."""
+    if shard_mode not in SHARD_MODES:
+        raise ValueError(f"unknown comm_shard_mode {shard_mode!r} "
+                         f"(expected one of {SHARD_MODES})")
+    if backend != "pallas" or shard_mode == "stacked":
+        return False
+    sharded = node_shard_count(mesh, node_axis) > 1
+    if shard_mode == "sharded" and not sharded:
+        raise ValueError("comm_shard_mode='sharded' requires a mesh whose "
+                         "node axis spans more than one device (got "
+                         f"mesh={'None' if mesh is None else dict(mesh.shape)})")
+    return sharded
 
 
 # ---------------------------------------------------------------------------
@@ -99,16 +163,18 @@ def mix_array_grid(x: jax.Array, n: int, axis: int = 0) -> jax.Array:
 
 def mix_pytree(params: PyTree, topology: str, n: int, step: int = 0,
                axis: int = 0, comm_dtype=None,
-               backend: str = "reference") -> PyTree:
+               backend: str = "reference",
+               leaf_threshold: Optional[int] = None) -> PyTree:
     """Gossip step ``x ← W x`` applied leaf-wise over a pytree whose leaves
     carry the node axis at ``axis``."""
+    use_pallas = _check_backend(backend, axis, caller="mixing.mix_pytree")
     if n == 1 or topology == "disconnected":
         return params
-    if _check_backend(backend, axis):
+    if use_pallas:
         from repro.kernels import mixing_pallas
         return mixing_pallas.fused_step_mix(
             params, phase="gossip", topology=topology, n_nodes=n, step=step,
-            comm_dtype=comm_dtype)
+            comm_dtype=comm_dtype, leaf_threshold=leaf_threshold)
     if topology == "grid":
         return jax.tree.map(lambda p: mix_array_grid(p, n, axis), params)
     weights = topo.shift_weights(topology, n, step)
@@ -118,16 +184,18 @@ def mix_pytree(params: PyTree, topology: str, n: int, step: int = 0,
 
 def global_average_pytree(params: PyTree, axis: int = 0,
                           comm_dtype=None,
-                          backend: str = "reference") -> PyTree:
+                          backend: str = "reference",
+                          leaf_threshold: Optional[int] = None) -> PyTree:
     """Periodic global averaging ``x ← (1/n)𝟙𝟙ᵀ x`` (All-Reduce step).
     With ``comm_dtype`` the reduction runs on wire-dtype operands — the
     all-reduce moves half the bytes (node counts are small, so bf16
     accumulation over n ≤ 32 replicas is benign)."""
-    if _check_backend(backend, axis):
+    if _check_backend(backend, axis, caller="mixing.global_average_pytree"):
         from repro.kernels import mixing_pallas
         leaves = jax.tree.leaves(params)
         return mixing_pallas.global_average(params, leaves[0].shape[0],
-                                            comm_dtype=comm_dtype)
+                                            comm_dtype=comm_dtype,
+                                            leaf_threshold=leaf_threshold)
     def avg(p):
         src = p.astype(comm_dtype) if comm_dtype is not None else p
         m = jnp.mean(src, axis=axis, keepdims=True)
@@ -137,16 +205,18 @@ def global_average_pytree(params: PyTree, axis: int = 0,
 
 def pod_average_pytree(params: PyTree, n_pods: int, axis: int = 0,
                        comm_dtype=None,
-                       backend: str = "reference") -> PyTree:
+                       backend: str = "reference",
+                       leaf_threshold: Optional[int] = None) -> PyTree:
     """Hierarchical averaging (beyond-paper Hier-PGA, DESIGN.md §4): exact
     average *within* each pod's block of nodes — an all-reduce over the
     cheap intra-pod ICI, leaving cross-pod DCI traffic to the (rarer)
     global step."""
-    if _check_backend(backend, axis):
+    if _check_backend(backend, axis, caller="mixing.pod_average_pytree"):
         from repro.kernels import mixing_pallas
         leaves = jax.tree.leaves(params)
         return mixing_pallas.pod_average(params, leaves[0].shape[0], n_pods,
-                                         comm_dtype=comm_dtype)
+                                         comm_dtype=comm_dtype,
+                                         leaf_threshold=leaf_threshold)
     def avg(p):
         n = p.shape[axis]
         per = n // n_pods
@@ -208,7 +278,10 @@ def make_shard_map_mixer(mesh: jax.sharding.Mesh, axis_name: str,
 # ---------------------------------------------------------------------------
 def communicate(params: PyTree, *, phase: str, topology: str, n_nodes: int,
                 step: int = 0, axis: int = 0, comm_dtype=None,
-                n_pods: int = 1, backend: str = "reference") -> PyTree:
+                n_pods: int = 1, backend: str = "reference",
+                mesh: Optional[jax.sharding.Mesh] = None,
+                node_axis: str = "data", shard_mode: str = "auto",
+                leaf_threshold: Optional[int] = None) -> PyTree:
     """Apply one communication round to decentralized parameters.
 
     phase:
@@ -219,18 +292,192 @@ def communicate(params: PyTree, *, phase: str, topology: str, n_nodes: int,
       "pod_avg" — exact average within each pod block (Hier-PGA)
 
     backend:
-      "reference" — the roll / jnp.mean path (oracle)
+      "reference" — the roll / jnp.mean path (oracle; GSPMD handles any
+                    mesh sharding transparently)
       "pallas"    — fused single-pass kernels (repro.kernels.mixing_pallas)
+
+    With a ``mesh`` whose node axis (``node_axis`` under
+    ``DistConfig.node_axis`` semantics) spans more than one device, the
+    pallas backend routes through :func:`communicate_sharded` — per-shard
+    fused kernels with ppermute halo exchange — unless
+    ``shard_mode="stacked"`` forces the local path.  ``shard_mode``
+    mirrors ``DistConfig.comm_shard_mode``: "auto" (detect), "stacked"
+    (never shard), "sharded" (require a sharded mesh, else raise).
     """
+    _check_backend(backend, axis, caller="mixing.communicate")
     if phase == "none" or n_nodes == 1:
         return params
+    if use_sharded_backend(backend, mesh, node_axis, shard_mode):
+        return communicate_sharded(
+            params, phase=phase, topology=topology, n_nodes=n_nodes,
+            step=step, comm_dtype=comm_dtype, n_pods=n_pods, mesh=mesh,
+            node_axis=node_axis)
     if phase == "gossip":
         return mix_pytree(params, topology, n_nodes, step=step, axis=axis,
-                          comm_dtype=comm_dtype, backend=backend)
+                          comm_dtype=comm_dtype, backend=backend,
+                          leaf_threshold=leaf_threshold)
     if phase == "global":
         return global_average_pytree(params, axis=axis,
-                                     comm_dtype=comm_dtype, backend=backend)
+                                     comm_dtype=comm_dtype, backend=backend,
+                                     leaf_threshold=leaf_threshold)
     if phase == "pod_avg":
         return pod_average_pytree(params, n_pods, axis=axis,
-                                  comm_dtype=comm_dtype, backend=backend)
+                                  comm_dtype=comm_dtype, backend=backend,
+                                  leaf_threshold=leaf_threshold)
     raise ValueError(f"unknown communication phase {phase!r}")
+
+
+# ---------------------------------------------------------------------------
+# shard_map-aware pallas path: ppermute halo exchange + per-shard kernel
+# ---------------------------------------------------------------------------
+def _shard_blocks(M: np.ndarray, d: np.ndarray, n: int, k: int):
+    """Block decomposition of one round for k node-axis shards of m = n/k
+    rows each.
+
+    Returns ``(offsets, Mstack, dstack)``: ``offsets`` is the sorted list of
+    shard offsets q such that *some* shard r has a nonzero block
+    ``M[r, (r+q) mod k]`` — only those blocks are halo-exchanged;
+    ``Mstack[r]`` is shard r's ``(m, |offsets|·m)`` mixing factor over the
+    received blocks (circulant topologies make every row identical; pod_avg
+    is block-diagonal, hence per-shard rows), and ``dstack[r]`` its rows of
+    the self-weight diagonal.  Passing Mstack/dstack as shard_map inputs
+    sharded over the node axis hands each shard exactly its own factor with
+    no device-side gather."""
+    m = n // k
+    offsets = [q for q in range(k)
+               if any(np.any(M[r * m:(r + 1) * m,
+                              ((r + q) % k) * m:(((r + q) % k) + 1) * m])
+                      for r in range(k))]
+    if not offsets:  # e.g. disconnected gossip: M = 0, the round is d ⊙ x
+        offsets = [0]
+    Mstack = np.zeros((k, m, len(offsets) * m), np.float32)
+    for r in range(k):
+        for j, q in enumerate(offsets):
+            c = (r + q) % k
+            Mstack[r, :, j * m:(j + 1) * m] = \
+                M[r * m:(r + 1) * m, c * m:(c + 1) * m]
+    return offsets, Mstack, d.reshape(k, m, 1).astype(np.float32)
+
+
+def communicate_sharded(params: PyTree, *, phase: str, topology: str,
+                        n_nodes: int, step: int = 0, comm_dtype=None,
+                        n_pods: int = 1, mesh: jax.sharding.Mesh,
+                        node_axis: str = "data",
+                        grads: Optional[PyTree] = None,
+                        gamma=None, with_residual: bool = False,
+                        block_d: int = 2048,
+                        interpret: Optional[bool] = None):
+    """One communication round with the node axis sharded over ``mesh``.
+
+    The stacked ``(n, D)`` state never exists on one device: a shard_map
+    over the node axis gives each shard its ``(m, D)`` row-block, the
+    neighbor blocks named by the round's block decomposition arrive via
+    ``jax.lax.ppermute`` (wire-cast when ``comm_dtype`` is set — the cast
+    bytes are what crosses the ICI), and the fused per-shard kernel
+    (:func:`repro.kernels.mixing_pallas.shard_mix_block`) applies
+    ``d ⊙ x_local + M_r · xs`` in one pass.  The ``"global"`` phase skips
+    the halo machinery: it is a psum of wire-cast column sums (one
+    all-reduce, exactly the reference collective).
+
+    With ``grads``/``gamma`` the SGD half-step is applied before the
+    exchange (the sent blocks must be half-stepped).  With
+    ``with_residual`` returns ``(mixed, x̄, Σ_i‖x_i − x̄‖²)`` where the
+    consensus pieces are psum-combined from per-shard kernel partials.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    from repro.kernels import mixing_pallas
+
+    names = node_axis_names(mesh, node_axis)
+    if not names:
+        raise ValueError(f"communicate_sharded: mesh {dict(mesh.shape)} has "
+                         f"no axis for node_axis={node_axis!r} — use the "
+                         f"stacked path (communicate) instead")
+    k = node_shard_count(mesh, node_axis)
+    if n_nodes % k:
+        raise ValueError(f"communicate_sharded: n_nodes={n_nodes} not "
+                         f"divisible by the {k} node-axis shards of "
+                         f"mesh axes {names}")
+    if phase not in ("gossip", "global", "pod_avg"):
+        raise ValueError(f"communicate_sharded: no sharded kernel for "
+                         f"phase {phase!r}")
+    with_g = grads is not None
+    if with_g and gamma is None:
+        raise ValueError("grads given without gamma")
+    # grid gossip ignores comm_dtype in the reference path — mirror that
+    wire_dtype = None if (phase == "gossip" and topology == "grid") \
+        else comm_dtype
+
+    n = n_nodes
+    xf, unflatten = mixing_pallas.flatten_nodes(params)
+    gf = mixing_pallas.flatten_nodes(grads)[0] if with_g else None
+
+    d, M = mixing_pallas.phase_matrices(phase, topology, n, step=step,
+                                        n_pods=n_pods)
+    offsets, Mstack, dstack = _shard_blocks(M, d, n, k)
+    perms = {q: tuple(((r + q) % k, r) for r in range(k))
+             for q in offsets if q}
+
+    def half_step(xb, gb):
+        if gb is None:
+            return xb
+        return xb - jnp.asarray(gamma, jnp.float32) * gb
+
+    def finish(mixed, cs):
+        xbar = jax.lax.psum(cs, names) / n               # (1, D) over nodes
+        # cancellation-free consensus: Σ‖x_i − x̄‖² directly (the fused
+        # Σ‖x‖² − n‖x̄‖² form loses all precision when consensus ≪ ‖x‖²);
+        # the extra pass touches only the shard's local (m, D) block
+        resid = jax.lax.psum(jnp.sum(jnp.square(mixed - xbar)), names)
+        return mixed, xbar, resid
+
+    if phase == "global":
+        # x̄ everywhere: one all-reduce of wire-cast column sums; the mixed
+        # iterate is the broadcast mean, so the consensus residual is 0.
+        def body(xb, *rest):
+            x = half_step(xb, rest[0] if with_g else None)
+            xw = x.astype(wire_dtype).astype(jnp.float32) \
+                if wire_dtype is not None else x
+            xbar = jax.lax.psum(jnp.sum(xw, axis=0, keepdims=True),
+                                names) / n
+            mixed = jnp.broadcast_to(xbar, x.shape)
+            if with_residual:
+                return mixed, xbar, jnp.zeros((), jnp.float32)
+            return mixed
+
+        in_specs = (P(names),) + ((P(names),) if with_g else ())
+        operands = (xf,) + ((gf,) if with_g else ())
+    else:
+        def body(xb, *rest):
+            idx = 0
+            gb = None
+            if with_g:
+                gb = rest[idx]; idx += 1
+            Mr, dr = rest[idx], rest[idx + 1]
+            x = half_step(xb, gb)
+            send = x.astype(wire_dtype) if wire_dtype is not None else x
+            parts = [send if q == 0
+                     else jax.lax.ppermute(send, names, perms[q])
+                     for q in offsets]
+            xs = jnp.concatenate(parts, axis=0).astype(jnp.float32)
+            out = mixing_pallas.shard_mix_block(
+                x, xs, dr[0], Mr[0], with_residual=with_residual,
+                block_d=block_d, interpret=interpret)
+            if with_residual:
+                return finish(*out)
+            return out
+
+        in_specs = (P(names),) + ((P(names),) if with_g else ()) \
+            + (P(names), P(names))
+        operands = (xf,) + ((gf,) if with_g else ()) \
+            + (jnp.asarray(Mstack), jnp.asarray(dstack))
+
+    out_specs = (P(names), P(), P()) if with_residual else P(names)
+    fn = shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                   check_rep=False)
+    out = fn(*operands)
+
+    if with_residual:
+        mixed, xbar, resid = out
+        return unflatten(mixed), unflatten(xbar, drop_node=True), resid
+    return unflatten(out)

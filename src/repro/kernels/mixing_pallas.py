@@ -7,14 +7,17 @@ then every circulant shift term ``w_s · roll(x, s)`` re-reads the parameters,
 then the weighted sum writes them back — ``2 + |shifts|`` HBM round-trips per
 round.  Here the whole round is one ``pallas_call``:
 
-* every leaf of the parameter pytree is flattened and concatenated into a
-  single ``(n, D)`` node-major matrix, so one kernel covers the whole model
-  instead of one dispatch per leaf.  The pack/unpack around the kernel is
-  itself one extra fp32 copy each way (visible to XLA, fused where it can
-  be), so the honest pass count is kernel(1) + pack/unpack — still ahead of
-  the reference's ``2 + |shifts|`` passes for multi-shift topologies;
-  input/output aliasing and per-leaf dispatch for very large leaves are the
-  next optimization (ROADMAP);
+* leaves *below* ``leaf_threshold`` per-node elements are flattened and
+  concatenated into a single ``(n, D)`` node-major matrix, so one kernel
+  covers the long tail of small parameters; leaves *at or above* the
+  threshold get their own kernel dispatch on ``leaf.reshape(n, -1)`` and
+  never touch the concatenation staging buffer.  Every ``pallas_call``
+  aliases its packed input with the mixed output
+  (``input_output_aliases``), so inside a jitted caller (train step,
+  simulator) XLA reuses the staging buffer in place instead of allocating
+  and copying a second ``(n, D)`` output — the aliasing contract is that
+  the packed matrix is consumed by the kernel and must not be read again
+  (DESIGN.md §2.1);
 * the grid walks ``D`` in ``block_d`` columns; each step loads an
   ``(n, block_d)`` tile into VMEM exactly once, applies the half-step, the
   mix, and (optionally) the consensus residual in-register, and writes the
@@ -44,13 +47,15 @@ topology ignores ``comm_dtype`` exactly like the reference does.
 so the backend is exercised end-to-end in CPU CI and compiles to Mosaic on
 TPU unchanged.
 
-Scope: these kernels operate on the *local, unsharded* stacked node axis —
-the simulator, single-host training, and the per-chip tail of a sharded
-step.  They are not yet shard_map-aware: selecting ``backend="pallas"``
-under a mesh whose node axis is sharded would gather the stacked state onto
-each device.  The sharded production path stays on ``backend="reference"``
-(whose rolls lower to collective-permutes) until the kernels grow a
-shard_map wrapper (DESIGN.md §2.1, ROADMAP).
+Scope: ``fused_step_mix`` / ``global_average`` / ``pod_average`` /
+``mix_residual`` operate on the *local* stacked node axis — the simulator,
+single-host training, and the per-chip tail of a sharded step.  For a mesh
+whose node axis is sharded, :func:`shard_mix_block` is the per-shard kernel
+behind ``repro.core.mixing.communicate_sharded``: each shard holds an
+``(m, D)`` row-block of the stacked state, receives its neighbor blocks via
+``jax.lax.ppermute`` halo exchange, and this kernel fuses the rectangular
+mix ``d ⊙ x_local + M_r · xs`` (plus the consensus partial sums) in one
+pass over the local block (DESIGN.md §2.1 dispatch table).
 """
 from __future__ import annotations
 
@@ -67,6 +72,11 @@ from repro.core import topology as topo
 PyTree = Any
 
 KERNEL_PHASES = ("gossip", "global", "pod_avg")
+
+# Per-node element count at or above which a leaf gets its own kernel
+# dispatch instead of riding the concatenation staging buffer
+# (DistConfig.pallas_leaf_threshold overrides per run).
+LEAF_DISPATCH_THRESHOLD = 262_144
 
 
 def _default_interpret() -> bool:
@@ -112,21 +122,28 @@ def phase_matrices(phase: str, topology: str, n: int, step: int = 0,
 # ---------------------------------------------------------------------------
 # PyTree <-> (n, D) node-major matrix
 # ---------------------------------------------------------------------------
-def flatten_nodes(tree: PyTree) -> Tuple[jax.Array, Callable]:
-    """Concatenate every leaf's non-node dims into one fp32 ``(n, D)`` matrix.
+def _pack_rows(leaves, n: int) -> jax.Array:
+    """Concatenate leaves' non-node dims into one fp32 ``(n, D)`` matrix."""
+    cols = [l.reshape(n, -1).astype(jnp.float32) for l in leaves]
+    return cols[0] if len(cols) == 1 else jnp.concatenate(cols, axis=1)
 
-    Returns ``(flat, unflatten)``; ``unflatten(flat2, drop_node=False)``
-    restores the original structure, shapes, and per-leaf dtypes.  With
-    ``drop_node=True`` it maps a ``(1, D)`` row (e.g. the kernel's x̄ output)
-    back to leaves without the node axis.
+
+def flatten_nodes(tree: PyTree) -> Tuple[jax.Array, Callable]:
+    """``(flat, unflatten)`` for a node-stacked pytree: ``flat`` is the fp32
+    ``(n, D)`` node-major packing of every leaf;
+    ``unflatten(flat2, drop_node=False)`` restores the original structure,
+    shapes, and per-leaf dtypes.  With ``drop_node=True`` it maps a
+    ``(1, D)`` row (e.g. the kernel's x̄ output) back to leaves without the
+    node axis.  Shared by the stacked entry points and
+    ``mixing.communicate_sharded`` — the packing layout must stay identical
+    between them.
     """
     leaves, treedef = jax.tree.flatten(tree)
     n = leaves[0].shape[0]
     shapes = [l.shape for l in leaves]
     dtypes = [l.dtype for l in leaves]
     sizes = [int(np.prod(s[1:], dtype=np.int64)) for s in shapes]
-    flat = jnp.concatenate(
-        [l.reshape(n, -1).astype(jnp.float32) for l in leaves], axis=1)
+    flat = _pack_rows(leaves, n)
 
     def unflatten(f: jax.Array, drop_node: bool = False) -> PyTree:
         out, off = [], 0
@@ -227,12 +244,16 @@ def _mix_flat(xf: jax.Array, gf: Optional[jax.Array],
 
     kernel = functools.partial(_mix_kernel, with_g=with_g,
                                with_residual=with_residual, wire=wire)
+    # the packed (n, Dp) matrix is consumed in place: the mixed output
+    # aliases the x input, so jitted callers never allocate a second copy
+    x_idx = 1 if with_g else 0
     out = pl.pallas_call(
         kernel,
         grid=(Dp // bd,),
         in_specs=in_specs,
         out_specs=tuple(out_specs) if with_residual else out_specs[0],
         out_shape=tuple(out_shape) if with_residual else out_shape[0],
+        input_output_aliases={x_idx: 0},
         interpret=interpret,
     )(*inputs)
 
@@ -245,17 +266,35 @@ def _mix_flat(xf: jax.Array, gf: Optional[jax.Array],
 # ---------------------------------------------------------------------------
 # Public entry points
 # ---------------------------------------------------------------------------
+def _dispatch_groups(leaves, threshold: int):
+    """Leaf indices grouped per kernel dispatch: one group holding every
+    leaf below ``threshold`` per-node elements (concatenated into the
+    staging buffer), plus one single-leaf group per large leaf (dispatched
+    on ``leaf.reshape(n, -1)`` directly — no staging copy)."""
+    sizes = [int(np.prod(l.shape[1:], dtype=np.int64)) for l in leaves]
+    small = [i for i, s in enumerate(sizes) if s < threshold]
+    big = [i for i, s in enumerate(sizes) if s >= threshold]
+    groups = [small] if small else []
+    return groups + [[i] for i in big]
+
+
 def fused_step_mix(params: PyTree, grads: Optional[PyTree] = None,
                    gamma: Optional[jax.Array] = None, *, phase: str,
                    topology: str = "ring", n_nodes: int, step: int = 0,
                    comm_dtype=None, n_pods: int = 1, block_d: int = 2048,
                    interpret: Optional[bool] = None,
-                   with_residual: bool = False):
+                   with_residual: bool = False,
+                   leaf_threshold: Optional[int] = None):
     """Fused ``W · (params − γ·grads)`` for one communication round.
 
     With ``grads is None`` this is a plain mixing round (the production
     trainer's optimizer already produced the half-step iterate); with grads
     and γ it is the simulator's whole SGD+gossip step in one HBM pass.
+
+    Leaves at or above ``leaf_threshold`` per-node elements are dispatched
+    as their own kernel call and skip the concatenation staging buffer;
+    the residual/x̄ outputs are combined exactly across dispatches (the
+    consensus sum decomposes over columns).
 
     Returns the mixed pytree; with ``with_residual=True`` returns
     ``(mixed, xbar, residual)`` where ``xbar`` is the node average (leaves
@@ -266,7 +305,10 @@ def fused_step_mix(params: PyTree, grads: Optional[PyTree] = None,
         raise ValueError(f"phase {phase!r} has no fused kernel "
                          f"(expected one of {KERNEL_PHASES})")
     interp = _default_interpret() if interpret is None else interpret
+    thresh = LEAF_DISPATCH_THRESHOLD if leaf_threshold is None \
+        else leaf_threshold
     d, M = phase_matrices(phase, topology, n_nodes, step=step, n_pods=n_pods)
+    dj, Mj = jnp.asarray(d), jnp.asarray(M)
     # grid mixing ignores comm_dtype in the reference path — mirror that
     wire = (comm_dtype is not None
             and not (phase == "gossip" and topology == "grid"))
@@ -274,46 +316,151 @@ def fused_step_mix(params: PyTree, grads: Optional[PyTree] = None,
     if with_g and gamma is None:
         raise ValueError("grads given without gamma")
 
-    xf, unflatten = flatten_nodes(params)
-    gf = flatten_nodes(grads)[0] if with_g else None
-    out = _mix_flat(xf, gf, gamma if with_g else None,
-                    jnp.asarray(d), jnp.asarray(M),
-                    with_g=with_g, with_residual=with_residual, wire=wire,
-                    block_d=block_d, interpret=interp)
+    leaves, treedef = jax.tree.flatten(params)
+    gleaves = jax.tree.flatten(grads)[0] if with_g else None
+    n = leaves[0].shape[0]
+    mixed_leaves: list = [None] * len(leaves)
+    xbar_leaves: list = [None] * len(leaves)
+    resid = None
+    for group in _dispatch_groups(leaves, thresh):
+        xf = _pack_rows([leaves[i] for i in group], n)
+        gf = _pack_rows([gleaves[i] for i in group], n) if with_g else None
+        out = _mix_flat(xf, gf, gamma if with_g else None, dj, Mj,
+                        with_g=with_g, with_residual=with_residual,
+                        wire=wire, block_d=block_d, interpret=interp)
+        if with_residual:
+            mixed, xbar, r = out
+            resid = r if resid is None else resid + r
+        else:
+            mixed, xbar = out, None
+        off = 0
+        for i in group:
+            shape, size = leaves[i].shape, \
+                int(np.prod(leaves[i].shape[1:], dtype=np.int64))
+            piece = mixed[:, off:off + size]
+            mixed_leaves[i] = piece.reshape(shape).astype(leaves[i].dtype)
+            if with_residual:
+                xbar_leaves[i] = (xbar[:, off:off + size]
+                                  .reshape(shape[1:])
+                                  .astype(leaves[i].dtype))
+            off += size
+    mixed_tree = jax.tree.unflatten(treedef, mixed_leaves)
     if with_residual:
-        mixed, xbar, r = out
-        return unflatten(mixed), unflatten(xbar, drop_node=True), r
-    return unflatten(out)
+        return mixed_tree, jax.tree.unflatten(treedef, xbar_leaves), resid
+    return mixed_tree
 
 
 def global_average(params: PyTree, n_nodes: int, *, comm_dtype=None,
                    block_d: int = 2048, interpret: Optional[bool] = None,
-                   with_residual: bool = False):
+                   with_residual: bool = False,
+                   leaf_threshold: Optional[int] = None):
     """Fused periodic global averaging ``x ← (1/n)𝟙𝟙ᵀ x`` (PGA round)."""
     return fused_step_mix(params, phase="global", n_nodes=n_nodes,
                           comm_dtype=comm_dtype, block_d=block_d,
-                          interpret=interpret, with_residual=with_residual)
+                          interpret=interpret, with_residual=with_residual,
+                          leaf_threshold=leaf_threshold)
 
 
 def pod_average(params: PyTree, n_nodes: int, n_pods: int, *,
                 comm_dtype=None, block_d: int = 2048,
                 interpret: Optional[bool] = None,
-                with_residual: bool = False):
+                with_residual: bool = False,
+                leaf_threshold: Optional[int] = None):
     """Fused intra-pod exact averaging (Hier-PGA round, DESIGN.md §4)."""
     return fused_step_mix(params, phase="pod_avg", n_nodes=n_nodes,
                           n_pods=n_pods, comm_dtype=comm_dtype,
                           block_d=block_d, interpret=interpret,
-                          with_residual=with_residual)
+                          with_residual=with_residual,
+                          leaf_threshold=leaf_threshold)
 
 
 def mix_residual(params: PyTree, grads: Optional[PyTree] = None,
                  gamma: Optional[jax.Array] = None, *, phase: str,
                  topology: str = "ring", n_nodes: int, step: int = 0,
                  comm_dtype=None, n_pods: int = 1, block_d: int = 2048,
-                 interpret: Optional[bool] = None):
+                 interpret: Optional[bool] = None,
+                 leaf_threshold: Optional[int] = None):
     """``(W·x, x̄, Σ_i ‖x_i − x̄‖²)`` in one pass — eval without re-reading."""
     return fused_step_mix(params, grads, gamma, phase=phase,
                           topology=topology, n_nodes=n_nodes, step=step,
                           comm_dtype=comm_dtype, n_pods=n_pods,
                           block_d=block_d, interpret=interpret,
-                          with_residual=True)
+                          with_residual=True, leaf_threshold=leaf_threshold)
+
+
+# ---------------------------------------------------------------------------
+# Per-shard block kernel (the shard_map-aware path, DESIGN.md §2.1)
+# ---------------------------------------------------------------------------
+def _shard_mix_kernel(x_ref, xs_ref, d_ref, m_ref, *out_refs,
+                      with_residual: bool):
+    """One grid step of the per-shard mix: ``d ⊙ x + M · xs`` where ``x`` is
+    this shard's (m, bd) tile and ``xs`` stacks the halo-exchanged neighbor
+    blocks (already wire-cast by the caller).  With residual, also emits
+    the shard's column sums of the mixed tile — the caller psums them into
+    x̄.  (The consensus residual itself cannot be fused here: it needs the
+    cross-shard x̄, and the cancellation-free form Σ‖x − x̄‖² requires a
+    second local pass once the psum lands — see communicate_sharded.)"""
+    o_ref = out_refs[0]
+    x = x_ref[...].astype(jnp.float32)                       # (m, bd)
+    xs = xs_ref[...].astype(jnp.float32)                     # (K·m, bd)
+    mixed = jnp.dot(m_ref[...], xs, preferred_element_type=jnp.float32)
+    mixed = mixed + d_ref[...] * x
+    o_ref[...] = mixed.astype(o_ref.dtype)
+
+    if with_residual:
+        out_refs[1][...] = jnp.sum(mixed, axis=0,
+                                   keepdims=True).astype(out_refs[1].dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("with_residual", "block_d", "interpret"))
+def shard_mix_block(x: jax.Array, xs: jax.Array, d: jax.Array, M: jax.Array,
+                    *, with_residual: bool = False, block_d: int = 2048,
+                    interpret: Optional[bool] = None):
+    """Fused per-shard communication round over one ``(m, D)`` row-block.
+
+    Called inside ``shard_map`` (repro.core.mixing.communicate_sharded):
+    ``x`` is the shard's uncast local block, ``xs`` the ``(K·m, D)`` stack
+    of halo blocks (self + ppermute-received neighbors, wire-cast), ``d``
+    the shard's rows of the self-weight diagonal and ``M`` its
+    ``(m, K·m)`` row-block of the mixing matrix restricted to the received
+    blocks.  Returns the mixed ``(m, D)`` block; with residual also its
+    ``(1, D)`` column sums (the shard-local partial of x̄).  The x input
+    is aliased with the mixed output (same in-place contract as the
+    stacked kernel).
+    """
+    interp = _default_interpret() if interpret is None else interpret
+    m, D = x.shape
+    K = xs.shape[0]
+    bd = max(1, min(block_d, D))
+    pad = (-D) % bd
+    if pad:  # zero columns: contribute 0 to mix, column sums, and Σ‖·‖²
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+        xs = jnp.pad(xs, ((0, 0), (0, pad)))
+    Dp = D + pad
+
+    tile = lambda i: (0, i)
+    in_specs = [pl.BlockSpec((m, bd), tile),
+                pl.BlockSpec((K, bd), tile),
+                pl.BlockSpec((m, 1), lambda i: (0, 0)),
+                pl.BlockSpec((m, K), lambda i: (0, 0))]
+    out_shape = [jax.ShapeDtypeStruct((m, Dp), x.dtype)]
+    out_specs = [pl.BlockSpec((m, bd), tile)]
+    if with_residual:
+        out_shape.append(jax.ShapeDtypeStruct((1, Dp), jnp.float32))
+        out_specs.append(pl.BlockSpec((1, bd), tile))
+
+    out = pl.pallas_call(
+        functools.partial(_shard_mix_kernel, with_residual=with_residual),
+        grid=(Dp // bd,),
+        in_specs=in_specs,
+        out_specs=tuple(out_specs) if with_residual else out_specs[0],
+        out_shape=tuple(out_shape) if with_residual else out_shape[0],
+        input_output_aliases={0: 0},
+        interpret=interp,
+    )(x, xs, d, M)
+
+    if with_residual:
+        mixed, cs = out
+        return mixed[:, :D], cs[:, :D]
+    return out[:, :D]

@@ -86,7 +86,7 @@ def _compile_train(cfg, shape, mesh, *, dist: DistConfig, phase: str,
                        data=DataConfig(), global_batch=shape.global_batch,
                        seq_len=shape.seq_len, microbatches=microbatches)
     step = build_train_step(model, tcfg, specs.n_nodes, phase=phase,
-                            unroll=unroll)
+                            unroll=unroll, mesh=mesh)
     with mesh:
         lowered = jax.jit(
             step,

@@ -4,10 +4,18 @@ A FUNCTION, not a module-level constant — importing this module never touches
 jax device state.  Callers (dryrun.py) set
 ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
 import; smoke tests and benchmarks see the real single CPU device.
+
+The node-axis semantics (which mesh axes a gossip "node" spans under
+``DistConfig.node_axis``) are canonical in ``repro.core.mixing`` —
+``node_axis_names`` / ``node_shard_count`` — so the shard_map-aware comm
+path and these launch helpers can never disagree.
 """
 from __future__ import annotations
 
 import jax
+
+from repro.core.mixing import node_axis_names, node_shard_count  # noqa: F401
+                                                  # re-exported for launchers
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
@@ -17,11 +25,6 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
 
 
 def n_gossip_nodes(mesh: jax.sharding.Mesh, node_axis: str) -> int:
-    """Gossip node count for a mesh under DistConfig.node_axis semantics."""
-    axes = dict(mesh.shape)
-    if node_axis == "data":
-        # paper-faithful: nodes along data axis, flattened with pod if present
-        return axes.get("data", 1) * axes.get("pod", 1)
-    if node_axis == "pod":
-        return axes.get("pod", 1)
-    raise ValueError(node_axis)
+    """Gossip node count for a mesh under DistConfig.node_axis semantics
+    (paper-faithful "data" flattens (pod, data); "pod" is hierarchical)."""
+    return node_shard_count(mesh, node_axis)

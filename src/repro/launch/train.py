@@ -31,6 +31,15 @@ def main() -> None:
                     choices=("reference", "pallas"),
                     help="mixing implementation (DESIGN.md §2.1): roll-based "
                          "reference or fused Pallas kernels")
+    ap.add_argument("--comm-shard-mode", default="auto",
+                    choices=("auto", "stacked", "sharded"),
+                    help="pallas backend under a mesh-sharded node axis: "
+                         "auto-detect, force the local stacked kernels, or "
+                         "require the shard_map path (DESIGN.md §2.1)")
+    ap.add_argument("--leaf-threshold", type=int, default=262_144,
+                    help="per-node elements at which a parameter leaf gets "
+                         "its own pallas dispatch (skips the concat staging "
+                         "buffer)")
     ap.add_argument("--full-config", action="store_true",
                     help="full published dims (TPU-scale; default reduced)")
     ap.add_argument("--iid", action="store_true")
@@ -40,7 +49,9 @@ def main() -> None:
     tcfg = TrainConfig(
         model=cfg,
         dist=DistConfig(algorithm=args.algorithm, topology=args.topology,
-                        H=args.H, comm_backend=args.comm_backend),
+                        H=args.H, comm_backend=args.comm_backend,
+                        comm_shard_mode=args.comm_shard_mode,
+                        pallas_leaf_threshold=args.leaf_threshold),
         optimizer=OptimizerConfig(name=args.optimizer, lr=args.lr,
                                   schedule="warmup_cosine", warmup_steps=10,
                                   total_steps=args.steps),

@@ -27,13 +27,21 @@ PyTree = Any
 def build_train_step(model: Model, tcfg: TrainConfig, n_nodes: int, *,
                      phase: str, shift_step: int = 0,
                      with_consensus: bool = False,
-                     unroll: bool = False) -> Callable:
+                     unroll: bool = False,
+                     mesh: Optional[jax.sharding.Mesh] = None) -> Callable:
     """Returns step(state, batch, lr) -> (state, metrics).
 
     ``phase``: "gossip" | "global" | "none" | "slowmo".
     batch leaves carry leading (n_nodes, per_node_batch, …).
+
+    With a ``mesh`` whose node axis is sharded, the pallas comm backend
+    routes through the shard_map-aware path (DESIGN.md §2.1 dispatch
+    table) — per-shard fused kernels with ppermute halo exchange —
+    honoring ``DistConfig.comm_shard_mode``.
     """
     dist = tcfg.dist
+    sharded_comm = mixing.use_sharded_backend(
+        dist.comm_backend, mesh, dist.node_axis, dist.comm_shard_mode)
     opt = make_optimizer(tcfg.optimizer, per_node=True)
     # DistConfig.remat/remat_policy -> blocks.make_remat policy string
     if dist.remat == "none":
@@ -113,18 +121,30 @@ def build_train_step(model: Model, tcfg: TrainConfig, n_nodes: int, *,
                     and phase in ("gossip", "global", "pod_avg")):
                 # fused: the mixing kernel emits the consensus residual in
                 # the same parameter pass instead of re-reading new_params
-                from repro.kernels import mixing_pallas
-                new_params, _xbar, resid = mixing_pallas.mix_residual(
-                    params_half, phase=phase, topology=dist.topology,
-                    n_nodes=n_nodes, step=shift_step,
-                    comm_dtype=comm_dtype, n_pods=dist.n_pods)
+                if sharded_comm:
+                    new_params, _xbar, resid = mixing.communicate_sharded(
+                        params_half, phase=phase, topology=dist.topology,
+                        n_nodes=n_nodes, step=shift_step,
+                        comm_dtype=comm_dtype, n_pods=dist.n_pods,
+                        mesh=mesh, node_axis=dist.node_axis,
+                        with_residual=True)
+                else:
+                    from repro.kernels import mixing_pallas
+                    new_params, _xbar, resid = mixing_pallas.mix_residual(
+                        params_half, phase=phase, topology=dist.topology,
+                        n_nodes=n_nodes, step=shift_step,
+                        comm_dtype=comm_dtype, n_pods=dist.n_pods,
+                        leaf_threshold=dist.pallas_leaf_threshold)
                 fused_consensus = resid / n_nodes
             if new_params is None:
                 new_params = mixing.communicate(
                     params_half, phase=phase, topology=dist.topology,
                     n_nodes=n_nodes, step=shift_step, axis=0,
                     comm_dtype=comm_dtype, n_pods=dist.n_pods,
-                    backend=dist.comm_backend)
+                    backend=dist.comm_backend, mesh=mesh,
+                    node_axis=dist.node_axis,
+                    shard_mode=dist.comm_shard_mode,
+                    leaf_threshold=dist.pallas_leaf_threshold)
         if with_consensus:
             metrics = dict(metrics)
             metrics["consensus"] = (fused_consensus

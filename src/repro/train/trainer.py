@@ -69,7 +69,8 @@ class Trainer:
         if key not in self._compiled:
             fn = build_train_step(self.model, self.tcfg, self.n_nodes,
                                   phase=phase, shift_step=shift,
-                                  with_consensus=self.with_consensus)
+                                  with_consensus=self.with_consensus,
+                                  mesh=self.mesh)
             self._compiled[key] = jax.jit(fn, donate_argnums=(0,))
         return self._compiled[key]
 

@@ -1,9 +1,15 @@
 """Pallas mixing-kernel parity: the fused backend must match the roll-based
 reference (itself proven ≡ dense W in test_mixing.py) for every phase ×
-topology × shape, including the bf16 wire-cast path and the fused residual
-outputs.  All kernels run in interpret mode on CPU (kernels/ops.py
-convention), so these tests exercise the exact code that compiles to Mosaic
-on TPU."""
+topology × shape, including the bf16 wire-cast path, the fused residual
+outputs, per-leaf dispatch, and the shard_map-aware sharded path (run in a
+subprocess with 8 forced host devices, launch/dryrun.py convention).  All
+kernels run in interpret mode on CPU (kernels/ops.py convention), so these
+tests exercise the exact code that compiles to Mosaic on TPU."""
+import os
+import subprocess
+import sys
+import textwrap
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -190,3 +196,202 @@ def test_unknown_backend_rejected(rng_key):
     x = jax.random.normal(rng_key, (8, 4))
     with pytest.raises(ValueError, match="backend"):
         mixing.mix_pytree(x, "ring", 8, backend="cuda")
+
+
+def test_backend_error_names_entry_point(rng_key):
+    """The axis/backend raise must name the public entry point that reached
+    the check, so a failure routed through simulate()/Decentralized is
+    attributable (previously the message carried no caller)."""
+    x = jax.random.normal(rng_key, (3, 8))
+    with pytest.raises(ValueError, match=r"mixing\.mix_pytree.*axis=1"):
+        mixing.mix_pytree(x, "ring", 8, axis=1, backend="pallas")
+    with pytest.raises(ValueError, match=r"mixing\.communicate.*axis=2"):
+        mixing.communicate(x, phase="gossip", topology="ring", n_nodes=8,
+                           axis=2, backend="pallas")
+    with pytest.raises(ValueError, match=r"mixing\.communicate.*cuda"):
+        mixing.communicate(x, phase="gossip", topology="ring", n_nodes=8,
+                           backend="cuda")
+
+
+def test_backend_validated_before_noop_early_returns(rng_key):
+    """n == 1 / disconnected rounds are no-ops, but a bogus backend or axis
+    must still raise instead of silently dropping to the reference path."""
+    x = jax.random.normal(rng_key, (1, 4))
+    with pytest.raises(ValueError, match="backend"):
+        mixing.mix_pytree(x, "ring", 1, backend="cuda")
+    with pytest.raises(ValueError, match="axis"):
+        mixing.mix_pytree(x, "disconnected", 8, axis=1, backend="pallas")
+
+
+# ---------------------------------------------------------------------------
+# Per-leaf dispatch and the aliasing contract
+# ---------------------------------------------------------------------------
+def test_leaf_dispatch_threshold_independence(rng_key):
+    """Numbers must not depend on how leaves are grouped into dispatches:
+    all-in-one staging buffer, every-leaf-its-own-kernel, and mixed."""
+    tree = _tree(rng_key, 8)
+    base = mp.fused_step_mix(tree, phase="gossip", topology="ring", n_nodes=8)
+    for thresh in (1, 8, 10**9):  # all big / split / all small
+        got = mp.fused_step_mix(tree, phase="gossip", topology="ring",
+                                n_nodes=8, leaf_threshold=thresh)
+        _assert_tree_close(got, base, atol=0)  # per-column math is identical
+
+
+def test_leaf_dispatch_residual_combines_exactly(rng_key):
+    tree = _tree(rng_key, 8)
+    m0, x0, r0 = mp.mix_residual(tree, phase="gossip", topology="exp",
+                                 n_nodes=8)
+    m1, x1, r1 = mp.mix_residual(tree, phase="gossip", topology="exp",
+                                 n_nodes=8, leaf_threshold=1)
+    _assert_tree_close(m1, m0, atol=0)
+    _assert_tree_close(x1, x0, atol=1e-6)
+    np.testing.assert_allclose(float(r1), float(r0), rtol=1e-5)
+
+
+def test_aliasing_does_not_clobber_caller_input(rng_key):
+    """input_output_aliases is an in-place contract on the *packed staging
+    buffer*; the caller's arrays must come back untouched."""
+    x = jax.random.normal(rng_key, (8, 37))
+    before = np.asarray(x).copy()
+    mp.fused_step_mix(x, phase="gossip", topology="ring", n_nodes=8)
+    np.testing.assert_array_equal(np.asarray(x), before)
+
+
+# ---------------------------------------------------------------------------
+# shard_map-aware sharded path (8 forced host devices, subprocess)
+# ---------------------------------------------------------------------------
+_SHARDED_PARITY_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.core import mixing
+
+    mesh = jax.make_mesh((8,), ("data",))
+    SHAPES = [(5, 3), (7,), ()]
+
+    def tree(key, n):
+        ks = jax.random.split(key, len(SHAPES))
+        return {f"leaf{i}": jax.random.normal(k, (n,) + s)
+                for i, (k, s) in enumerate(zip(ks, SHAPES))}
+
+    def close(got, want, atol):
+        assert jax.tree.structure(got) == jax.tree.structure(want)
+        for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+            assert g.dtype == w.dtype
+            np.testing.assert_allclose(np.asarray(g, np.float32),
+                                       np.asarray(w, np.float32), atol=atol)
+
+    key, n = jax.random.PRNGKey(0), 16
+    CASES = ([("gossip", t, 1) for t in
+              ("ring", "exp", "one_peer_exp", "grid", "disconnected")]
+             + [("global", "ring", 1), ("pod_avg", "ring", 2),
+                ("pod_avg", "ring", 4)])
+    for phase, topol, n_pods in CASES:
+        for cd in (None, jnp.bfloat16):
+            t = tree(key, n)
+            kw = dict(phase=phase, topology=topol, n_nodes=n, step=3,
+                      comm_dtype=cd, n_pods=n_pods)
+            want = mixing.communicate(t, **kw)
+            got = mixing.communicate(t, backend="pallas", mesh=mesh, **kw)
+            close(got, want, 1e-5 if cd is None else 3e-2)
+            print(f"PARITY_OK {phase}/{topol}/p{n_pods}/"
+                  f"{'fp32' if cd is None else 'bf16'}")
+
+    # fused residual: psum-combined consensus matches the direct form
+    t = tree(key, n)
+    mixed, xbar, resid = mixing.communicate_sharded(
+        t, phase="gossip", topology="ring", n_nodes=n, mesh=mesh,
+        with_residual=True)
+    want = mixing.communicate(t, phase="gossip", topology="ring", n_nodes=n)
+    close(mixed, want, 1e-5)
+    close(xbar, jax.tree.map(lambda p: jnp.mean(p, 0), want), 1e-5)
+    want_r = sum(float(jnp.sum((p - jnp.mean(p, 0, keepdims=True)) ** 2))
+                 for p in jax.tree.leaves(want))
+    np.testing.assert_allclose(float(resid), want_r, rtol=1e-4, atol=1e-6)
+    print("RESIDUAL_OK")
+
+    # fused SGD half-step before the halo exchange
+    g = tree(jax.random.PRNGKey(1), n)
+    got = mixing.communicate_sharded(t, phase="gossip", topology="ring",
+                                     n_nodes=n, mesh=mesh, grads=g,
+                                     gamma=0.37)
+    want = mixing.communicate(jax.tree.map(lambda p, q: p - 0.37 * q, t, g),
+                              phase="gossip", topology="ring", n_nodes=n)
+    close(got, want, 1e-5)
+    print("HALFSTEP_OK")
+
+    # flattened (pod, data) node axis — DistConfig.node_axis="data" semantics
+    mesh2 = jax.make_mesh((2, 4), ("pod", "data"))
+    got = mixing.communicate(t, phase="gossip", topology="exp", n_nodes=n,
+                             backend="pallas", mesh=mesh2)
+    close(got, mixing.communicate(t, phase="gossip", topology="exp",
+                                  n_nodes=n), 1e-5)
+    print("POD_DATA_OK")
+
+    # shard_mode="stacked" forces the local kernels even under a mesh
+    got = mixing.communicate(t, phase="gossip", topology="ring", n_nodes=n,
+                             backend="pallas", mesh=mesh,
+                             shard_mode="stacked")
+    close(got, mixing.communicate(t, phase="gossip", topology="ring",
+                                  n_nodes=n, backend="pallas"), 1e-6)
+    print("STACKED_OVERRIDE_OK")
+
+    # constant state is a fixed point under sharding too
+    c = jax.tree.map(lambda p: jnp.full_like(p, 1.5), t)
+    got = mixing.communicate(c, phase="gossip", topology="ring", n_nodes=n,
+                             backend="pallas", mesh=mesh)
+    close(got, c, 1e-6)
+    print("CONSTANT_OK")
+""")
+
+
+def _run_forced_device_script(script: str) -> str:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         env.get("PYTHONPATH", "")])
+    out = subprocess.run([sys.executable, "-c", script],
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert out.returncode == 0, (out.stdout[-2000:] + out.stderr[-4000:])
+    return out.stdout
+
+
+def test_sharded_pallas_parity_8dev():
+    """backend='pallas' under a mesh whose node axis is sharded: the
+    shard_map wrapper (ppermute halo + per-shard fused kernel) must match
+    the roll-based oracle for every phase × topology × wire dtype, plus the
+    fused residual, half-step, flattened (pod, data) axis, and the
+    shard_mode override — all on 8 forced host devices."""
+    stdout = _run_forced_device_script(_SHARDED_PARITY_SCRIPT)
+    assert stdout.count("PARITY_OK") == 16, stdout
+    for marker in ("RESIDUAL_OK", "HALFSTEP_OK", "POD_DATA_OK",
+                   "STACKED_OVERRIDE_OK", "CONSTANT_OK"):
+        assert marker in stdout, stdout
+
+
+def test_node_axis_pod_without_pod_axis_is_unsharded():
+    """node_axis='pod' (DistConfig's hierarchical mode) on a single-pod mesh
+    — no 'pod' axis — means one gossip node and no shards, not a KeyError."""
+    mesh = jax.sharding.Mesh(
+        np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    assert mixing.node_axis_names(mesh, "pod") == ()
+    assert mixing.node_shard_count(mesh, "pod") == 1
+    assert not mixing.use_sharded_backend("pallas", mesh, "pod", "auto")
+    with pytest.raises(ValueError, match="no axis"):
+        mixing.communicate_sharded(jnp.ones((4, 2)), phase="gossip",
+                                   topology="ring", n_nodes=4, mesh=mesh,
+                                   node_axis="pod")
+
+
+def test_shard_mode_sharded_requires_sharded_mesh(rng_key):
+    """comm_shard_mode='sharded' with no mesh (or an unsharded node axis)
+    must raise, not silently fall back to the stacked kernels."""
+    x = jax.random.normal(rng_key, (8, 4))
+    with pytest.raises(ValueError, match="sharded"):
+        mixing.communicate(x, phase="gossip", topology="ring", n_nodes=8,
+                           backend="pallas", mesh=None,
+                           shard_mode="sharded")
+    with pytest.raises(ValueError, match="shard_mode"):
+        mixing.communicate(x, phase="gossip", topology="ring", n_nodes=8,
+                           backend="pallas", shard_mode="bogus")

@@ -54,6 +54,40 @@ def test_gossip_contracts_consensus_by_beta(n, t, seed):
     assert after <= b * before + 1e-4
 
 
+_BACKENDS = st.sampled_from(["reference", "pallas"])
+# constants bounded away from the subnormal range: the bitwise branch below
+# relies on exact power-of-two scaling, which subnormal quotients break
+_CONSTS = st.one_of(st.just(0.0),
+                    st.floats(1e-3, 1e3, width=32),
+                    st.floats(-1e3, -1e-3, width=32))
+
+
+@given(n=_SIZES, t=_TOPOS, step=st.integers(0, 7), c=_CONSTS,
+       backend=_BACKENDS)
+@settings(**_SETTINGS)
+def test_constant_tree_is_communication_fixed_point(n, t, step, c, backend):
+    """Row-stochasticity (W𝟙 = 𝟙): a constant state is a fixed point of one
+    ``communicate`` round for every backend × topology × phase.  Bitwise
+    for one-peer gossip, whose two ½-weights are exact binary fractions;
+    within a few ulp otherwise (neither backend's reduction of 1/3- or
+    1/n-weight terms is exactly associative — sequential dot sums round
+    even n identical addends)."""
+    tree = {"w": jnp.full((n, 3), c, jnp.float32),
+            "b": jnp.full((n,), c, jnp.float32)}
+    cases = [("gossip", {}), ("global", {}), ("pod_avg", {"n_pods": 2})]
+    for phase, kw in cases:
+        out = mixing.communicate(tree, phase=phase, topology=t, n_nodes=n,
+                                 step=step, backend=backend, **kw)
+        for got, want in zip(jax.tree.leaves(out), jax.tree.leaves(tree)):
+            if phase == "gossip" and t == "one_peer_exp":
+                np.testing.assert_array_equal(np.asarray(got),
+                                              np.asarray(want))
+            else:
+                np.testing.assert_allclose(np.asarray(got),
+                                           np.asarray(want),
+                                           rtol=5e-7, atol=0)
+
+
 @given(seed=st.integers(0, 10_000))
 @settings(**_SETTINGS)
 def test_global_average_is_idempotent(seed):
