@@ -1,0 +1,156 @@
+"""Compressed-gossip benchmark: bytes-on-wire, round latency, and
+convergence parity (DESIGN.md §2.3; registered in benchmarks/run.py).
+
+Three sections, CSV rows per benchmarks/common.emit:
+
+* ``compress/bytes/<name>`` — **measured** wire bytes (payload + aux of
+  the actual LeafWire arrays) for one gossip broadcast of a synthetic
+  parameter blob, with the fp32/compressed ratio as the derived column.
+  The acceptance gate from ISSUE 3 — int8 moves ≥ 4× fewer bytes than
+  fp32 — is asserted here (``--check``; exit 1 on failure).
+* ``compress/round/<phase>/<name>/<backend>`` — wall-clock of one full
+  communication round vs the uncompressed baseline.  On this CPU
+  container the pallas rows run in interpret mode (absolute numbers
+  meaningless, same caveat as bench_mixing_kernels); the reference rows
+  measure the jnp compressed math.
+* ``compress/logistic/*`` — the paper's §5.1 logistic problem under
+  Gossip-PGA: final suboptimality of int8(+EF) vs the uncompressed run.
+  Documented tolerance: int8+EF must land within ``--loss-rtol``
+  (default 10%) of the uncompressed final suboptimality; int8 without EF
+  is reported for contrast but not gated.
+
+    PYTHONPATH=src python -m benchmarks.bench_compression
+    PYTHONPATH=src python -m benchmarks.bench_compression --check
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, time_fn
+from repro import compress as C
+from repro.core import mixing, simulate
+from repro.data import make_logistic_problem
+
+NAMES = ("identity", "int8", "fp8", "topk", "randk")
+
+
+# ---------------------------------------------------------------------------
+# Bytes on wire (measured, not analytic)
+# ---------------------------------------------------------------------------
+def bench_bytes(n: int, dim: int, k: int) -> dict:
+    x = jax.random.normal(jax.random.PRNGKey(0), (n, dim), jnp.float32)
+    fp32 = n * dim * 4
+    ratios = {}
+    for name in NAMES:
+        comp = C.make_compressor(name, k=k)
+        wires, _ = C.compress_tree(comp, x, None, jnp.uint32(0))
+        measured = sum(w.nbytes for w in wires)
+        ratios[name] = fp32 / measured
+        emit(f"compress/bytes/{name}", float(measured),
+             f"fp32_ratio={ratios[name]:.2f}x")
+    return ratios
+
+
+# ---------------------------------------------------------------------------
+# Round latency
+# ---------------------------------------------------------------------------
+def bench_rounds(n: int, dim: int, k: int, iters: int) -> None:
+    x = jax.random.normal(jax.random.PRNGKey(0), (n, dim), jnp.float32)
+
+    @jax.jit
+    def base_round(x):
+        return mixing.communicate(x, phase="gossip", topology="ring",
+                                  n_nodes=n)
+
+    t0 = time_fn(base_round, x, iters=iters)
+    emit("compress/round/gossip/none/reference", t0)
+    for name in ("int8", "fp8", "topk"):
+        comp = C.make_compressor(name, k=k)
+        for backend in ("reference", "pallas"):
+            @jax.jit
+            def comp_round(x, _c=comp, _b=backend):
+                return mixing.communicate(x, phase="gossip", topology="ring",
+                                          n_nodes=n, compressor=_c, seed=1,
+                                          backend=_b)[0]
+
+            t = time_fn(comp_round, x, iters=iters)
+            emit(f"compress/round/gossip/{name}/{backend}", t,
+                 f"vs_uncompressed={t0 / t:.2f}x")
+
+
+# ---------------------------------------------------------------------------
+# Logistic transient (paper §5.1 protocol, reduced)
+# ---------------------------------------------------------------------------
+def bench_logistic(steps: int, seeds: int, n: int) -> dict:
+    prob = make_logistic_problem(n=n, M=2000, d=10, iid=False, seed=0)
+    loss_fn = prob.loss_fn()
+
+    def run(**kw):
+        finals = []
+        for seed in range(seeds):
+            out = simulate(algorithm="gossip_pga",
+                           grad_fn=prob.grad_fn(batch=8), loss_fn=loss_fn,
+                           x0=jnp.zeros(prob.d), n=n, steps=steps,
+                           lr=lambda kk: 0.2 * (0.5 ** (kk // 1000)),
+                           topology="ring", H=16, eval_every=50, seed=seed,
+                           **kw)
+            finals.append(out["loss"][-1])
+        return float(np.mean(finals))
+
+    ref = run()
+    int8_ef = run(compression="int8", error_feedback=True)
+    int8_noef = run(compression="int8")
+    emit("compress/logistic/uncompressed_final", ref)
+    emit("compress/logistic/int8_ef_final", int8_ef,
+         f"vs_uncompressed={int8_ef / max(ref, 1e-12):.4f}")
+    emit("compress/logistic/int8_noef_final", int8_noef,
+         f"vs_uncompressed={int8_noef / max(ref, 1e-12):.4f}")
+    return {"ref": ref, "int8_ef": int8_ef}
+
+
+def main(n: int = 8, dim: int = 65_536, k: int = 1024, iters: int = 5,
+         steps: int = 400, seeds: int = 2, loss_rtol: float = 0.10,
+         check: bool = False) -> int:
+    print(f"# compression wire/round/convergence, n={n} dim={dim} "
+          f"backend={jax.default_backend()} (pallas interpreted off-TPU)")
+    ratios = bench_bytes(n, dim, k)
+    bench_rounds(n, dim, k, iters)
+    logi = bench_logistic(steps, seeds, n)
+    # int8 moves exactly D bytes + one fp32 scale word per row, so the
+    # measured ratio is 4·D/(D+4) — ≥4× up to the scale overhead (<0.1%
+    # at any production leaf size); the gate allows exactly that slack
+    ok_bytes = ratios["int8"] >= 4.0 * dim / (dim + 4) - 1e-6
+    ok_loss = abs(logi["int8_ef"] - logi["ref"]) \
+        <= loss_rtol * max(abs(logi["ref"]), 1e-12)
+    emit("compress/gate/int8_bytes_4x", float(ok_bytes),
+         f"ratio={ratios['int8']:.2f}")
+    emit("compress/gate/int8_ef_matches_loss", float(ok_loss),
+         f"rtol={loss_rtol}")
+    if check and not (ok_bytes and ok_loss):
+        print("# compression gate FAILED", flush=True)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dim", type=int, default=65_536)
+    ap.add_argument("--nodes", type=int, default=8)
+    ap.add_argument("--k", type=int, default=1024)
+    ap.add_argument("--iters", type=int, default=5)
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--seeds", type=int, default=2)
+    ap.add_argument("--loss-rtol", type=float, default=0.10,
+                    help="documented tolerance for int8+EF final loss vs "
+                         "uncompressed")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 when the ≥4× int8 bytes gate or the "
+                         "int8+EF loss gate fails")
+    a = ap.parse_args()
+    sys.exit(main(n=a.nodes, dim=a.dim, k=a.k, iters=a.iters, steps=a.steps,
+                  seeds=a.seeds, loss_rtol=a.loss_rtol, check=a.check))

@@ -1,13 +1,23 @@
 """Generate the EXPERIMENTS.md §Dry-run / §Roofline / §Perf tables from the
-dry-run + hillclimb JSONL dumps.
+dry-run + hillclimb JSONL dumps, and maintain the perf-gate trend history.
 
     PYTHONPATH=src python -m benchmarks.report > /tmp/report.md
+    PYTHONPATH=src python -m benchmarks.report --append-history BENCH_mixing.json
+    PYTHONPATH=src python -m benchmarks.report --trend
+
+The trend history (``benchmarks/BENCH_history.jsonl``, tracked) exists
+because a single CI run's pallas/reference ratio jitters ±50% on shared
+runners (bench_mixing_kernels docstring): CI appends each run's
+``BENCH_mixing.json`` rows here, and the trend table shows per-row ratios
+across runs so a real regression (every recent run slower) is separable
+from one noisy row (ROADMAP "perf-gate trend" item).
 """
 from __future__ import annotations
 
 import json
 import os
 import sys
+import time
 from typing import Any, Dict, List
 
 FILES = {
@@ -15,6 +25,8 @@ FILES = {
     "multi": "results_dryrun_multi.jsonl",
     "hillclimb": "results_hillclimb.jsonl",
 }
+HISTORY = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                       "BENCH_history.jsonl")
 
 
 def _load(path: str) -> List[Dict[str, Any]]:
@@ -119,6 +131,65 @@ def hillclimb_table(rows: List[Dict[str, Any]]) -> None:
                   f'| {r["hypothesis"][:90]} |')
 
 
+def append_history(src: str = "BENCH_mixing.json",
+                   path: str = HISTORY) -> None:
+    """Append one perf-gate run's rows to the tracked trend history."""
+    with open(src) as f:
+        bench = json.load(f)
+    rec = {
+        "ts": int(time.time()),
+        "sha": os.environ.get("GITHUB_SHA", "local")[:12],
+        "jax_backend": bench.get("jax_backend"),
+        "dim": bench.get("dim"), "nodes": bench.get("nodes"),
+        "gate": bench.get("gate"),
+        "rows": [{"name": r["name"], "ratio": r["ratio"],
+                  "reference_us": r["reference_us"],
+                  "pallas_us": r["pallas_us"], "gated": r["gated"]}
+                 for r in bench.get("rows", [])],
+    }
+    with open(path, "a") as f:
+        f.write(json.dumps(rec) + "\n")
+    print(f"appended {len(rec['rows'])} rows ({rec['sha']}) to {path}")
+
+
+def trend_table(path: str = HISTORY, last: int = 10) -> None:
+    """Per-row pallas/reference ratio across the last ``last`` recorded
+    runs — the trend that makes the single-run gate's verdict meaningful."""
+    runs = _load(path)[-last:]
+    if not runs:
+        print(f"(no history at {path})")
+        return
+    names = []
+    for run in runs:
+        for row in run["rows"]:
+            if row["name"] not in names:
+                names.append(row["name"])
+    print(f"\n### Perf-gate trend — pallas/reference ratio, last "
+          f"{len(runs)} runs (oldest → newest)\n")
+    print("| row | " + " | ".join(r["sha"][:7] for r in runs)
+          + " | median |")
+    print("|---|" + "---|" * (len(runs) + 1))
+    for name in names:
+        cells, vals = [], []
+        for run in runs:
+            hit = [r for r in run["rows"] if r["name"] == name]
+            if hit:
+                cells.append(f'{hit[0]["ratio"]:.2f}')
+                vals.append(hit[0]["ratio"])
+            else:
+                cells.append("-")
+        vals.sort()
+        med = vals[len(vals) // 2] if vals else float("nan")
+        print(f"| {name} | " + " | ".join(cells) + f" | {med:.2f} |")
+    gates = [r.get("gate") or {} for r in runs]
+    worst = [g.get("min_gated_ratio") for g in gates
+             if g.get("min_gated_ratio") is not None]
+    if worst:
+        print(f"\nmin gated ratio across runs: best {min(worst):.2f}, "
+              f"worst {max(worst):.2f} "
+              f"(gate limit {gates[-1].get('max_ratio')})")
+
+
 def main() -> None:
     single = _load(FILES["single"])
     multi = _load(FILES["multi"])
@@ -166,7 +237,15 @@ def inject_into_experiments(path: str = "EXPERIMENTS.md") -> None:
 
 if __name__ == "__main__":
     import sys as _sys
-    if "--inject" in _sys.argv:
+    if "--append-history" in _sys.argv:
+        i = _sys.argv.index("--append-history")
+        src = _sys.argv[i + 1] if len(_sys.argv) > i + 1 \
+            and not _sys.argv[i + 1].startswith("-") else "BENCH_mixing.json"
+        append_history(src)
+    elif "--trend" in _sys.argv:
+        trend_table()
+    elif "--inject" in _sys.argv:
         inject_into_experiments()
     else:
         main()
+        trend_table()

@@ -7,6 +7,8 @@
   bench_period_sweep       — Tables 8, 15 (H sweep + SlowMo), real LM training
   bench_scalability        — Table 10 (node scaling)
   bench_roofline           — deliverable (g): roofline from the dry-run dumps
+  bench_compression        — wire compression: bytes/latency/convergence
+                             (DESIGN.md §2.3; beyond-paper)
 """
 from __future__ import annotations
 
@@ -15,7 +17,7 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (bench_comm_model, bench_hier,
+    from benchmarks import (bench_comm_model, bench_compression, bench_hier,
                             bench_logistic_transient, bench_period_sweep,
                             bench_roofline, bench_scalability,
                             bench_transient_theory)
@@ -27,6 +29,7 @@ def main() -> None:
         ("scalability", bench_scalability.main),
         ("hier_pga", bench_hier.main),
         ("roofline", bench_roofline.main),
+        ("compression", bench_compression.main),
     ]
     failures = []
     for name, fn in suites:

@@ -1,0 +1,104 @@
+"""Compressor registry + wire-bytes cost model (DESIGN.md §2.3).
+
+``make_compressor`` resolves ``DistConfig.comm_compression`` into a
+:class:`repro.compress.base.Compressor` (or None for the uncompressed
+path); ``round_wire_bytes`` is the analytic bytes-on-wire model the
+dry-run report and ``benchmarks/bench_compression.py`` share.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.compress.base import (Compressor, LeafWire, apply_tree,
+                                 column_bits, compress_tree, decompress_tree,
+                                 hash_u32, init_ef_state, leaf_seed,
+                                 tree_wire_bytes, uniform_columns)
+from repro.compress.quantize import Fp8Compressor, Int8Compressor
+from repro.compress.sparsify import RandKCompressor, TopKCompressor
+
+__all__ = [
+    "COMPRESSORS", "Compressor", "LeafWire", "apply_tree", "column_bits",
+    "compress_tree", "decompress_tree", "hash_u32", "init_ef_state",
+    "leaf_seed", "make_compressor", "round_wire_bytes", "tree_wire_bytes",
+    "uniform_columns",
+]
+
+# "none": no compressor object, the hook is inert.  "identity": a real
+# registry entry whose round is routed to the exact uncompressed code path
+# (bit-identical; it exists so the plumbing itself is testable).
+COMPRESSORS = ("none", "identity", "int8", "fp8", "topk", "randk")
+
+
+def make_compressor(name: str, k: int = 32) -> Optional[Compressor]:
+    """Resolve a ``DistConfig.comm_compression`` name.  ``k`` feeds the
+    sparsifiers (elements kept per node per leaf, clipped to leaf size)."""
+    if name == "none":
+        return None
+    if name == "identity":
+        return Compressor()
+    if name == "int8":
+        return Int8Compressor()
+    if name == "fp8":
+        return Fp8Compressor()
+    if name == "topk":
+        return TopKCompressor(k=k)
+    if name == "randk":
+        return RandKCompressor(k=k)
+    raise ValueError(f"unknown comm_compression {name!r} "
+                     f"(expected one of {COMPRESSORS})")
+
+
+def round_wire_bytes(phase: str, topology: str, n_nodes: int,
+                     per_node_params: int, *, comm_dtype: str = "float32",
+                     compression: str = "none", k: int = 32,
+                     step: int = 0, n_pods: int = 1,
+                     leaf_sizes=None) -> int:
+    """Per-node bytes crossing the interconnect for one communication
+    round (the dry-run cost model; DESIGN.md §2.3).
+
+    ``leaf_sizes`` — per-leaf flattened element counts — matters for the
+    compressed payload: scales are per leaf and the sparsifiers keep ``k``
+    elements *per leaf*, so collapsing the parameter vector into one leaf
+    would understate their bytes by ~num_leaves×.  Without it the model
+    treats the vector as a single leaf (fine for the quantizers).
+
+    * gossip: one collective-permute per nonzero off-diagonal shift, each
+      moving the (possibly compressed) per-node payload;
+    * global: one all-reduce of the full operand — the compressor applies
+      to the operand *values* but the psum stays an uncompressed
+      collective whose operand is wire-cast per ``comm_dtype``
+      (DESIGN.md §2.3 limitation), so bytes follow ``comm_dtype``;
+    * pod_avg: uncompressed, an intra-pod all-reduce (bytes follow
+      ``comm_dtype``); compressed, the sharded path serves it with the
+      compressed halo exchange — each node's payload reaches the other
+      ``n/n_pods − 1`` pod members.
+    """
+    from repro.core import topology as topo
+
+    elem = 2 if comm_dtype == "bfloat16" else 4
+    comp = make_compressor(compression, k=k)
+    lossy = comp is not None and comp.lossy
+    sizes = list(leaf_sizes) if leaf_sizes else [per_node_params]
+    payload = sum(int(comp.wire_bytes_per_send(1, d)) for d in sizes) \
+        if lossy else None
+    if phase == "global":
+        return per_node_params * elem
+    if phase == "pod_avg":
+        if not lossy:
+            return per_node_params * elem
+        per = max(n_nodes // max(n_pods, 1), 1)
+        return (per - 1) * payload
+    if phase != "gossip" or topology == "disconnected" or n_nodes == 1:
+        return 0
+    if topology == "grid":
+        shifts = sum(1 for s in topo.grid_shift_weights(n_nodes)
+                     if s != (0, 0))
+        elem = 4  # grid gossip ignores comm_dtype (mixing.mix_array_grid)
+    else:
+        shifts = sum(1 for s in topo.shift_weights(topology, n_nodes, step)
+                     if s != 0)
+    if not lossy:
+        return shifts * per_node_params * elem
+    return shifts * payload

@@ -1,0 +1,127 @@
+"""Stochastic-rounding quantizers: int8 and fp8 (e4m3) with per-leaf,
+per-node scales.
+
+The element-wise math lives in small pure functions (`int8_codes`,
+`fp8_codes`, …) shared verbatim by the reference compressor below and the
+fused Pallas kernel (kernels/mixing_pallas.py) — both backends therefore
+make bit-identical rounding decisions, and parity between them reduces to
+the mixing matmul's fp associativity (DESIGN.md §2.3).
+
+Randomness comes from :func:`repro.compress.base.column_bits`, keyed on
+(round seed, leaf salt, element column) and deliberately independent of
+the node index: all nodes round identically, which makes a constant state
+an exact fixed point of the compressed round.  The seed varies per
+training step, so the rounding is unbiased across steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compress.base import (Compressor, LeafWire, column_bits,
+                                 uniform_columns)
+
+# fp8 e4m3fn: 3 mantissa bits, max finite 448.  Stochastic rounding keeps
+# the top 3 fp32 mantissa bits after adding random low bits (carry performs
+# the round-up); _FP8_DROP is how many fp32 mantissa bits get dropped.
+_FP8_MAX = np.float32(448.0)
+_FP8_DROP = 23 - 3
+_FP8_MASK = np.uint32((1 << _FP8_DROP) - 1)
+_LOG2_FP8_MAX = float(np.log2(448.0))
+
+
+# ---------------------------------------------------------------------------
+# int8: symmetric absmax scale, stochastic floor
+# ---------------------------------------------------------------------------
+def int8_scale(y2: jax.Array) -> jax.Array:
+    """(rows, 1) per-row scale so codes land in [−127, 127]; an all-zero
+    row maps to scale 1 (codes 0 → exact zero round-trip)."""
+    m = jnp.max(jnp.abs(y2), axis=-1, keepdims=True)
+    return jnp.where(m > 0, m / np.float32(127.0), np.float32(1.0))
+
+
+def int8_codes(y2: jax.Array, scale: jax.Array, u: jax.Array) -> jax.Array:
+    """Stochastically rounded integer codes as fp32 values in [−127, 127]
+    (``floor(v + u)`` is exact on integer ``v``, so values already on the
+    grid — constants included — round-trip bit-exactly)."""
+    v = y2 / scale
+    return jnp.clip(jnp.floor(v + u), -127.0, 127.0)
+
+
+def int8_dequant(codes: jax.Array, scale: jax.Array) -> jax.Array:
+    return codes.astype(jnp.float32) * scale
+
+
+@dataclasses.dataclass(frozen=True)
+class Int8Compressor(Compressor):
+    """8-bit stochastic quantization, per-(node, leaf) absmax scale.
+    Wire: int8 codes + one fp32 scale per row → ~4× fewer bytes than fp32
+    (the acceptance ratio in bench_compression)."""
+    name: str = "int8"
+    lossy: bool = True
+
+    def compress_leaf(self, y2, seed):
+        cols = jnp.arange(y2.shape[-1], dtype=jnp.uint32)[None, :]
+        scale = int8_scale(y2)
+        codes = int8_codes(y2, scale, uniform_columns(seed, cols))
+        return LeafWire(payload=(codes.astype(jnp.int8),), aux=(scale,))
+
+    def decompress_leaf(self, wire, d):
+        return int8_dequant(wire.payload[0], wire.aux[0])
+
+    def wire_bytes(self, rows, d):
+        return rows * d * 1 + rows * 4          # codes + per-row scale
+
+
+# ---------------------------------------------------------------------------
+# fp8 (e4m3): power-of-two scale, mantissa-bit stochastic rounding
+# ---------------------------------------------------------------------------
+def fp8_scale(y2: jax.Array) -> jax.Array:
+    """(rows, 1) power-of-two scale with ``absmax/scale ≤ 448``.  A
+    power of two makes the scale division/multiplication exact in fp32,
+    so the only loss is the mantissa truncation itself."""
+    m = jnp.max(jnp.abs(y2), axis=-1, keepdims=True)
+    e = jnp.ceil(jnp.log2(jnp.maximum(m, np.float32(1e-30)))
+                 - np.float32(_LOG2_FP8_MAX))
+    e = jnp.clip(e, -100.0, 100.0)
+    return jnp.where(m > 0, jnp.exp2(e), np.float32(1.0))
+
+
+def fp8_codes(y2: jax.Array, scale: jax.Array, bits: jax.Array) -> jax.Array:
+    """Stochastically rounded e4m3 codes (returned as the fp8 array that
+    goes on the wire).  SR by the mantissa-bit trick: add random low bits,
+    truncate to the 3-bit grid (the carry rounds up with probability equal
+    to the dropped fraction; magnitudes round away from zero), then cast —
+    exact for normals, round-to-nearest on the fp8 denormal tail."""
+    v = jnp.clip(y2 / scale, -_FP8_MAX, _FP8_MAX)
+    b = jax.lax.bitcast_convert_type(v.astype(jnp.float32), jnp.uint32)
+    b = (b + (bits & _FP8_MASK)) & ~_FP8_MASK
+    f = jax.lax.bitcast_convert_type(b, jnp.float32)
+    return jnp.clip(f, -_FP8_MAX, _FP8_MAX).astype(jnp.float8_e4m3fn)
+
+
+def fp8_dequant(codes: jax.Array, scale: jax.Array) -> jax.Array:
+    return codes.astype(jnp.float32) * scale
+
+
+@dataclasses.dataclass(frozen=True)
+class Fp8Compressor(Compressor):
+    """fp8 (e4m3) stochastic quantization, per-(node, leaf) power-of-two
+    scale.  Wire: fp8 codes + one fp32 scale per row."""
+    name: str = "fp8"
+    lossy: bool = True
+
+    def compress_leaf(self, y2, seed):
+        cols = jnp.arange(y2.shape[-1], dtype=jnp.uint32)[None, :]
+        scale = fp8_scale(y2)
+        codes = fp8_codes(y2, scale, column_bits(seed, cols))
+        return LeafWire(payload=(codes,), aux=(scale,))
+
+    def decompress_leaf(self, wire, d):
+        return fp8_dequant(wire.payload[0], wire.aux[0])
+
+    def wire_bytes(self, rows, d):
+        return rows * d * 1 + rows * 4

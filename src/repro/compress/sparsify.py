@@ -1,0 +1,99 @@
+"""Sparsifying compressors: top-k (per-node magnitude selection) and
+rand-k (shared random column subset).
+
+Selection is per (node, leaf): each node keeps ``k`` of the leaf's ``D``
+flattened elements and the rest are zero on the wire.  Unsent coordinates
+are *not* rescaled (no D/k inflation): error feedback — not unbiasedness
+per round — is the convergence mechanism for sparsified gossip, and
+rescaling state (rather than gradient) payloads distorts the iterate.
+Pair these with ``comm_error_feedback=True`` (DESIGN.md §2.3).
+
+``randk`` draws its column subset from the shared per-step hash
+(:func:`repro.compress.base.uniform_columns`), so every node keeps the
+*same* columns — the indices never need to cross the wire (any receiver
+can re-derive them from the step seed), and at a consensus state all
+nodes transmit identical payloads, preserving the exact-fixed-point
+property.  ``topk`` indices are data-dependent per node and do ride the
+wire; ``jax.lax.top_k``'s deterministic tie-breaking keeps identical rows
+selecting identical columns.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.compress.base import Compressor, LeafWire, uniform_columns
+
+
+def _scatter_rows(vals: jax.Array, idx: jax.Array, d: int) -> jax.Array:
+    """(rows, k) values + column indices ((rows, k) or broadcastable
+    (1, k)) → dense (rows, d) with zeros."""
+    rows = vals.shape[0]
+    out = jnp.zeros((rows, d), jnp.float32)
+    idx = jnp.broadcast_to(idx, vals.shape)
+    return out.at[jnp.arange(rows)[:, None], idx].set(
+        vals.astype(jnp.float32))
+
+
+@dataclasses.dataclass(frozen=True)
+class TopKCompressor(Compressor):
+    """Keep each node's k largest-magnitude elements per leaf.
+    Wire: k fp32 values + k int32 column indices per row."""
+    name: str = "topk"
+    lossy: bool = True
+    k: int = 32
+
+    def _k(self, d: int) -> int:
+        return max(1, min(self.k, d))
+
+    def compress_leaf(self, y2, seed):
+        k = self._k(y2.shape[-1])
+        _, idx = jax.lax.top_k(jnp.abs(y2), k)
+        vals = jnp.take_along_axis(y2, idx, axis=-1)
+        return LeafWire(payload=(vals,), aux=(idx.astype(jnp.int32),))
+
+    def decompress_leaf(self, wire, d):
+        return _scatter_rows(wire.payload[0], wire.aux[0], d)
+
+    def wire_bytes(self, rows, d):
+        return rows * self._k(d) * (4 + 4)      # values + indices
+
+
+@dataclasses.dataclass(frozen=True)
+class RandKCompressor(Compressor):
+    """Keep a shared random subset of k columns per leaf, redrawn each
+    step from the round seed.  Wire: k fp32 values per row (the indices
+    are derivable from the seed on the receiver, so only a 4-byte count
+    of index bytes is budgeted for the one-off seed exchange)."""
+    name: str = "randk"
+    lossy: bool = True
+    k: int = 32
+
+    def _k(self, d: int) -> int:
+        return max(1, min(self.k, d))
+
+    def _columns(self, seed, d: int) -> jax.Array:
+        u = uniform_columns(seed, jnp.arange(d, dtype=jnp.uint32))
+        return jax.lax.top_k(-u, self._k(d))[1].astype(jnp.int32)
+
+    def compress_leaf(self, y2, seed):
+        idx = self._columns(seed, y2.shape[-1])
+        vals = jnp.take(y2, idx, axis=-1)
+        # indices ride as a single (1, k) row — node-independent by
+        # construction, so the sharded path replicates them instead of
+        # ppermuting a per-row copy (wire_bytes budgets them once)
+        return LeafWire(payload=(vals,), aux=(idx[None, :],))
+
+    def decompress_leaf(self, wire, d):
+        return _scatter_rows(wire.payload[0], wire.aux[0], d)
+
+    def wire_bytes(self, rows, d):
+        return rows * self._k(d) * 4 + self._k(d) * 4
+
+    def wire_bytes_per_send(self, rows, d):
+        # the shared indices are re-derived from the step seed on the
+        # receiver (and ride replicated on the sharded path): only the
+        # values cross per transmission
+        return rows * self._k(d) * 4

@@ -200,6 +200,19 @@ class DistConfig:
     comm_backend: str = "reference"  # "reference": roll/jnp.mean mixing
                                      # "pallas": fused single-pass kernels
                                      #           (repro.kernels.mixing_pallas)
+    comm_compression: str = "none"   # wire compressor (DESIGN.md §2.3):
+                                     # none | identity | int8 | fp8 | topk
+                                     # | randk (repro.compress registry);
+                                     # identity routes to the exact
+                                     # uncompressed path bit-identically
+    comm_compression_k: int = 32     # elements kept per node per leaf for
+                                     # the topk/randk sparsifiers (clipped
+                                     # to leaf size)
+    comm_error_feedback: bool = False
+                                     # per-node EF residual memory
+                                     # (TrainState.ef_state): compression
+                                     # error is fed back next round, not
+                                     # dropped
     comm_shard_mode: str = "auto"    # pallas backend under a mesh-sharded
                                      # node axis (DESIGN.md §2.1):
                                      # "auto": per-shard kernels + ppermute
@@ -227,6 +240,20 @@ class DistConfig:
             raise ValueError("node_axis must be 'data' or 'pod'")
         if self.comm_backend not in ("reference", "pallas"):
             raise ValueError("comm_backend must be 'reference' or 'pallas'")
+        # kept in sync with repro.compress.COMPRESSORS (test_compress.py
+        # pins the two tuples equal; no import here — configs must stay
+        # dependency-light)
+        if self.comm_compression not in ("none", "identity", "int8", "fp8",
+                                         "topk", "randk"):
+            raise ValueError(
+                f"unknown comm_compression {self.comm_compression!r} "
+                "(expected none|identity|int8|fp8|topk|randk)")
+        if self.comm_compression_k < 1:
+            raise ValueError("comm_compression_k must be >= 1")
+        if self.comm_error_feedback and self.comm_compression in (
+                "none", "identity"):
+            raise ValueError("comm_error_feedback requires a lossy "
+                             "comm_compression (int8|fp8|topk|randk)")
         if self.comm_shard_mode not in ("auto", "stacked", "sharded"):
             raise ValueError("comm_shard_mode must be 'auto', 'stacked', "
                              "or 'sharded'")

@@ -43,14 +43,17 @@ class Decentralized:
         return self.schedule.phase(step)
 
     def communicate(self, params: PyTree, phase: str, step: int,
-                    axis: int = 0, backend: Optional[str] = None) -> PyTree:
+                    axis: int = 0, backend: Optional[str] = None,
+                    compressor=None, ef_state: Optional[PyTree] = None,
+                    seed=0) -> PyTree:
         if phase == "slowmo":  # parameter part only; momentum handled by caller
             phase = "global"
         return mixing.communicate(
             params, phase=phase, topology=self.dist.topology,
             n_nodes=self.n_nodes, step=step, axis=axis,
             n_pods=self.dist.n_pods,
-            backend=backend or self.dist.comm_backend)
+            backend=backend or self.dist.comm_backend,
+            compressor=compressor, ef_state=ef_state, seed=seed)
 
 
 # ---------------------------------------------------------------------------
@@ -73,6 +76,9 @@ def simulate(
     aga_kwargs: Optional[dict] = None,
     eval_every: int = 10,
     backend: str = "reference",
+    compression: str = "none",
+    compression_k: int = 32,
+    error_feedback: bool = False,
 ) -> Dict[str, np.ndarray]:
     """Run ``algorithm`` on n simulated nodes; returns the trajectory of the
     node-average loss f(x̄^k) and consensus distance ‖x − x̄‖²/n.
@@ -84,16 +90,28 @@ def simulate(
     (repro.kernels.mixing_pallas): the SGD half-step and the mix run as one
     pass, and at eval iterations the same pass also emits x̄ and the
     consensus residual, so the eval loop never re-reads the parameters.
+
+    ``compression`` selects a wire compressor (repro.compress registry;
+    DESIGN.md §2.3); ``error_feedback=True`` threads per-node EF memory
+    through the trajectory.  The step index seeds the stochastic rounding,
+    so compressed runs are reproducible per seed.
     """
     dist = DistConfig(algorithm=algorithm, topology=topology, H=H,
-                      comm_backend=backend, **(aga_kwargs or {}))
+                      comm_backend=backend, comm_compression=compression,
+                      comm_compression_k=compression_k,
+                      comm_error_feedback=error_feedback,
+                      **(aga_kwargs or {})).validate()
     algo = Decentralized(dist, n)
     lr_fn = lr if callable(lr) else (lambda k: lr)
+    from repro.compress import init_ef_state, make_compressor
+    compressor = make_compressor(compression, k=compression_k)
+    lossy = compressor is not None and compressor.lossy
     use_pallas = backend == "pallas"
     if use_pallas:
         from repro.kernels import mixing_pallas
 
     x = jnp.broadcast_to(x0, (n,) + x0.shape)          # x_i^(0) identical
+    ef = init_ef_state(x) if (lossy and error_feedback) else None
     slow_x = x0                                         # SlowMo slow params
     slow_u = jnp.zeros_like(x0)
 
@@ -102,6 +120,14 @@ def simulate(
         g = grad_fn(x, key, k)
         x_half = x - gamma * g
         return algo.communicate(x_half, phase, shift_step)
+
+    @functools.partial(jax.jit, static_argnames=("phase", "shift_step"))
+    def comp_step_fn(x, ef, key, k, gamma, phase, shift_step):
+        """Compressed round (both backends route inside communicate)."""
+        g = grad_fn(x, key, k)
+        x_half = x - gamma * g
+        return algo.communicate(x_half, phase, shift_step,
+                                compressor=compressor, ef_state=ef, seed=k)
 
     @functools.partial(jax.jit,
                        static_argnames=("phase", "shift_step",
@@ -135,6 +161,8 @@ def simulate(
             g = grad_fn(x, sub, k)
             x_half = x - gamma * g
             x, slow_x, slow_u = slowmo_outer(x_half, slow_x, slow_u, gamma)
+        elif lossy and phase in ("gossip", "global", "pod_avg"):
+            x, ef = comp_step_fn(x, ef, sub, k, gamma, phase, shift_step)
         elif use_pallas and phase in ("gossip", "global", "pod_avg"):
             if is_eval:  # fused: mix + x̄ + consensus in one parameter pass
                 x, xbar, resid = pallas_step_fn(x, sub, k, gamma, phase,

@@ -34,6 +34,17 @@ mesh sharding (DESIGN.md §2.1 dispatch table).
 None of the views materialize W across nodes in the sharded hot path
 (DESIGN.md §2.1; the Pallas backend keeps a tiny n×n circulant factor in
 VMEM, which DESIGN.md §2.1 argues is the correct single-chip encoding).
+
+**Wire compression** (DESIGN.md §2.3): :func:`communicate` and
+:func:`communicate_sharded` take ``compressor=`` /  ``ef_state=`` /
+``seed=``.  A lossy compressor (repro.compress) replaces the neighbor
+payload with its compressed estimate ``q`` and the round runs in the
+self-compensated form ``x + (M·q − (1−d)⊙q)`` — the node's own state
+stays exact, the node average is preserved for any compressor, and the
+shared per-step randomness makes a constant state an exact fixed point.
+``compressor=None`` (or the identity compressor) routes to the exact
+pre-compression code path, bit-identically.  With a compressor the
+return value is ``(mixed, new_ef_state)``.
 """
 from __future__ import annotations
 
@@ -274,6 +285,86 @@ def make_shard_map_mixer(mesh: jax.sharding.Mesh, axis_name: str,
 
 
 # ---------------------------------------------------------------------------
+# Compressed rounds (reference math; DESIGN.md §2.3)
+# ---------------------------------------------------------------------------
+def compensated_round_factors(phase: str, topology: str, n: int,
+                              step: int = 0, n_pods: int = 1):
+    """``(w, M)`` for the self-compensated compressed round
+    ``mixed = x + (M·q − w ⊙ q)`` with ``w = 1 − diag(W)`` (= the row sums
+    of M for a doubly-stochastic round, so the correction vanishes when
+    every node transmits the same ``q``)."""
+    from repro.kernels.mixing_pallas import phase_matrices
+    d, M = phase_matrices(phase, topology, n, step=step, n_pods=n_pods)
+    return (1.0 - d).astype(np.float32), M
+
+
+def _compressed_round_reference(params: PyTree, q: PyTree, phase: str,
+                                topology: str, n: int, step: int,
+                                n_pods: int, comm_dtype=None) -> PyTree:
+    """Apply ``x + (M·q − w ⊙ q)`` leaf-wise (dense M: this is the oracle
+    the fused kernels are tested against; n ≤ 64 so the n×n factor is
+    trivial on one host).  For the ``"global"`` phase the estimate is
+    additionally wire-cast per ``comm_dtype`` — the one collective whose
+    operand is not the compressed payload (DESIGN.md §2.3); the cast
+    applies to *both* occurrences of q, so the constant fixed point
+    survives."""
+    w, M = compensated_round_factors(phase, topology, n, step, n_pods)
+    wj, Mj = jnp.asarray(w), jnp.asarray(M)
+    cast = comm_dtype if phase == "global" else None
+
+    def one(x, qq):
+        x2 = x.reshape(n, -1).astype(jnp.float32)
+        q2 = qq.reshape(n, -1).astype(jnp.float32)
+        if cast is not None:
+            q2 = q2.astype(cast).astype(jnp.float32)
+        corr = Mj @ q2 - wj * q2
+        return (x2 + corr).reshape(x.shape).astype(x.dtype)
+
+    return jax.tree.map(one, params, q)
+
+
+def _communicate_compressed(params: PyTree, *, compressor, ef_state,
+                            seed, phase: str, topology: str, n_nodes: int,
+                            step: int, axis: int, comm_dtype, n_pods: int,
+                            backend: str, mesh, node_axis: str,
+                            shard_mode: str, leaf_threshold):
+    """Compressor-aware dispatch behind :func:`communicate` — always
+    returns ``(mixed, new_ef_state)``."""
+    if phase == "none" or n_nodes == 1:
+        return params, ef_state
+    if not compressor.lossy:
+        # identity: the exact pre-compression path, bit-identically
+        mixed = communicate(
+            params, phase=phase, topology=topology, n_nodes=n_nodes,
+            step=step, axis=axis, comm_dtype=comm_dtype, n_pods=n_pods,
+            backend=backend, mesh=mesh, node_axis=node_axis,
+            shard_mode=shard_mode, leaf_threshold=leaf_threshold)
+        return mixed, ef_state
+    if phase not in ("gossip", "global", "pod_avg"):
+        raise ValueError(f"unknown communication phase {phase!r}")
+    # gossip/pod_avg: the lossy payload IS the wire, comm_dtype is
+    # superseded; global: the psum operand is uncompressed fp32 sums, so
+    # comm_dtype still wire-casts it on every backend (DESIGN.md §2.3)
+    if use_sharded_backend(backend, mesh, node_axis, shard_mode):
+        return communicate_sharded(
+            params, phase=phase, topology=topology, n_nodes=n_nodes,
+            step=step, comm_dtype=comm_dtype, n_pods=n_pods, mesh=mesh,
+            node_axis=node_axis, compressor=compressor, ef_state=ef_state,
+            seed=seed)
+    if backend == "pallas":
+        from repro.kernels import mixing_pallas
+        return mixing_pallas.compressed_step_mix(
+            params, compressor=compressor, ef_state=ef_state, seed=seed,
+            phase=phase, topology=topology, n_nodes=n_nodes, step=step,
+            n_pods=n_pods, comm_dtype=comm_dtype)
+    from repro import compress as compress_mod
+    q, new_ef = compress_mod.apply_tree(compressor, params, ef_state, seed)
+    mixed = _compressed_round_reference(params, q, phase, topology, n_nodes,
+                                        step, n_pods, comm_dtype=comm_dtype)
+    return mixed, new_ef
+
+
+# ---------------------------------------------------------------------------
 # Communication-op selector used by the training step
 # ---------------------------------------------------------------------------
 def communicate(params: PyTree, *, phase: str, topology: str, n_nodes: int,
@@ -281,7 +372,9 @@ def communicate(params: PyTree, *, phase: str, topology: str, n_nodes: int,
                 n_pods: int = 1, backend: str = "reference",
                 mesh: Optional[jax.sharding.Mesh] = None,
                 node_axis: str = "data", shard_mode: str = "auto",
-                leaf_threshold: Optional[int] = None) -> PyTree:
+                leaf_threshold: Optional[int] = None,
+                compressor=None, ef_state: Optional[PyTree] = None,
+                seed=0) -> PyTree:
     """Apply one communication round to decentralized parameters.
 
     phase:
@@ -303,8 +396,27 @@ def communicate(params: PyTree, *, phase: str, topology: str, n_nodes: int,
     ``shard_mode="stacked"`` forces the local path.  ``shard_mode``
     mirrors ``DistConfig.comm_shard_mode``: "auto" (detect), "stacked"
     (never shard), "sharded" (require a sharded mesh, else raise).
+
+    With a ``compressor`` (repro.compress; ``DistConfig.comm_compression``)
+    the wire payload is compressed and the return value becomes
+    ``(mixed, new_ef_state)``: ``ef_state`` is the per-node error-feedback
+    memory (None disables EF — the compensated round still keeps the self
+    term exact), ``seed`` the per-round randomness key (pass the training
+    step for unbiased stochastic rounding).  The identity compressor
+    routes to the exact uncompressed path, bit-identically
+    (DESIGN.md §2.3).
     """
     _check_backend(backend, axis, caller="mixing.communicate")
+    if compressor is not None:
+        if axis != 0:
+            raise ValueError("mixing.communicate: compression requires the "
+                             f"node axis at position 0 (got axis={axis})")
+        return _communicate_compressed(
+            params, compressor=compressor, ef_state=ef_state, seed=seed,
+            phase=phase, topology=topology, n_nodes=n_nodes, step=step,
+            axis=axis, comm_dtype=comm_dtype, n_pods=n_pods,
+            backend=backend, mesh=mesh, node_axis=node_axis,
+            shard_mode=shard_mode, leaf_threshold=leaf_threshold)
     if phase == "none" or n_nodes == 1:
         return params
     if use_sharded_backend(backend, mesh, node_axis, shard_mode):
@@ -366,7 +478,9 @@ def communicate_sharded(params: PyTree, *, phase: str, topology: str,
                         grads: Optional[PyTree] = None,
                         gamma=None, with_residual: bool = False,
                         block_d: int = 2048,
-                        interpret: Optional[bool] = None):
+                        interpret: Optional[bool] = None,
+                        compressor=None, ef_state: Optional[PyTree] = None,
+                        seed=0):
     """One communication round with the node axis sharded over ``mesh``.
 
     The stacked ``(n, D)`` state never exists on one device: a shard_map
@@ -383,6 +497,13 @@ def communicate_sharded(params: PyTree, *, phase: str, topology: str,
     exchange (the sent blocks must be half-stepped).  With
     ``with_residual`` returns ``(mixed, x̄, Σ_i‖x_i − x̄‖²)`` where the
     consensus pieces are psum-combined from per-shard kernel partials.
+
+    With a lossy ``compressor`` the ppermute halo exchange moves the
+    **compressed wire arrays** (int8/fp8 codes, top-k values + indices,
+    per-row scales) instead of the fp32 blocks — this is where the
+    wire-bytes reduction physically happens — and each shard rebuilds its
+    neighbors' estimates locally before the compensated per-shard kernel
+    (DESIGN.md §2.3).  Returns ``(mixed, new_ef_state)``.
     """
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
@@ -401,6 +522,24 @@ def communicate_sharded(params: PyTree, *, phase: str, topology: str,
     if phase not in ("gossip", "global", "pod_avg"):
         raise ValueError(f"communicate_sharded: no sharded kernel for "
                          f"phase {phase!r}")
+    if compressor is not None:
+        if not compressor.lossy:   # identity: exact uncompressed path
+            mixed = communicate_sharded(
+                params, phase=phase, topology=topology, n_nodes=n_nodes,
+                step=step, comm_dtype=comm_dtype, n_pods=n_pods, mesh=mesh,
+                node_axis=node_axis, block_d=block_d, interpret=interpret)
+            return mixed, ef_state
+        if grads is not None or with_residual:
+            raise ValueError("communicate_sharded: compression composes "
+                             "with neither the fused half-step nor the "
+                             "fused residual (apply the optimizer first; "
+                             "consensus falls back to "
+                             "train.state.consensus_distance)")
+        return _communicate_sharded_compressed(
+            params, compressor=compressor, ef_state=ef_state, seed=seed,
+            phase=phase, topology=topology, n_nodes=n_nodes, step=step,
+            n_pods=n_pods, mesh=mesh, names=names, k=k, block_d=block_d,
+            interpret=interpret, comm_dtype=comm_dtype)
     with_g = grads is not None
     if with_g and gamma is None:
         raise ValueError("grads given without gamma")
@@ -481,3 +620,99 @@ def communicate_sharded(params: PyTree, *, phase: str, topology: str,
         mixed, xbar, resid = out
         return unflatten(mixed), unflatten(xbar, drop_node=True), resid
     return unflatten(out)
+
+
+def _communicate_sharded_compressed(params: PyTree, *, compressor, ef_state,
+                                    seed, phase: str, topology: str,
+                                    n_nodes: int, step: int, n_pods: int,
+                                    mesh: jax.sharding.Mesh, names, k: int,
+                                    block_d: int,
+                                    interpret: Optional[bool],
+                                    comm_dtype=None):
+    """Compressed halo exchange: each shard compresses its own row-block
+    (row-local, so it runs *outside* the shard_map under GSPMD without
+    collectives), ``ppermute``s the wire arrays to the neighbors named by
+    the round's block decomposition, rebuilds their estimates ``q``, and
+    applies the compensated per-shard kernel
+    ``x + (M_r · qs − (1 − d_r) ⊙ q_self)``.  Node-independent wire
+    arrays (leading axis 1, e.g. randk's shared column indices) ride
+    replicated and are never ppermuted.
+
+    The ``"global"`` phase applies the compensation ``x + (q̄ − q)``
+    around one psum of column sums; the psum itself is the reference
+    collective (compressed all-reduce would need a compressed collective
+    — the documented DESIGN.md §2.3 limitation), so its operand is
+    wire-cast per ``comm_dtype`` exactly like the uncompressed path
+    (every backend applies the same cast to ``q``, keeping parity and the
+    constant fixed point).
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    from repro import compress as compress_mod
+    from repro.kernels import mixing_pallas
+
+    n = n_nodes
+    leaves = jax.tree.leaves(params)
+    sizes = [int(np.prod(l.shape[1:], dtype=np.int64)) for l in leaves]
+
+    # row-local compression of the local block (+ EF update); wire arrays
+    # with the leading node axis shard over it, leading-axis-1 arrays
+    # (shared/replicated metadata) do not
+    wires, new_ef = compress_mod.compress_tree(compressor, params, ef_state,
+                                               seed)
+    counts = [len(w.payload) + len(w.aux) for w in wires]
+    wire_arrs = [a for w in wires for a in (*w.payload, *w.aux)]
+    sharded_arr = [a.shape[0] == n for a in wire_arrs]
+    wire_specs = tuple(P(names) if s else P() for s in sharded_arr)
+
+    def build_q(arrs):
+        """Rebuild the dense (rows, D) estimate from a row-block's wire
+        arrays (row-local jnp; runs inside the shard_map body)."""
+        out, off = [], 0
+        for w0, c, d_leaf in zip(wires, counts, sizes):
+            grp = arrs[off:off + c]
+            wire = compress_mod.LeafWire(
+                payload=tuple(grp[:len(w0.payload)]),
+                aux=tuple(grp[len(w0.payload):]))
+            out.append(compressor.decompress_leaf(wire, d_leaf))
+            off += c
+        return out[0] if len(out) == 1 else jnp.concatenate(out, axis=1)
+
+    xf, unflatten = mixing_pallas.flatten_nodes(params)
+    d, M = mixing_pallas.phase_matrices(phase, topology, n, step=step,
+                                        n_pods=n_pods)
+
+    if phase == "global":
+        def body(xb, *arrs):
+            q = build_q(arrs)
+            if comm_dtype is not None:
+                q = q.astype(comm_dtype).astype(jnp.float32)
+            qbar = jax.lax.psum(jnp.sum(q, axis=0, keepdims=True), names) / n
+            return xb + (qbar - q)
+
+        fn = shard_map(body, mesh=mesh, in_specs=(P(names),) + wire_specs,
+                       out_specs=P(names), check_rep=False)
+        return unflatten(fn(xf, *wire_arrs)), new_ef
+
+    offsets, Mstack, dstack = _shard_blocks(M, d, n, k)
+    wstack = (1.0 - dstack).astype(np.float32)
+    perms = {q: tuple(((r + q) % k, r) for r in range(k))
+             for q in offsets if q}
+
+    def body(xb, Mr, wr, *arrs):
+        q_self = build_q(arrs)
+        parts = [q_self if q == 0
+                 else build_q([jax.lax.ppermute(a, names, perms[q])
+                               if s else a
+                               for a, s in zip(arrs, sharded_arr)])
+                 for q in offsets]
+        qs = jnp.concatenate(parts, axis=0)
+        return mixing_pallas.shard_comp_mix_block(
+            xb, q_self, qs, wr[0], Mr[0], block_d=block_d,
+            interpret=interpret)
+
+    in_specs = (P(names), P(names), P(names)) + wire_specs
+    fn = shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=P(names),
+                   check_rep=False)
+    out = fn(xf, jnp.asarray(Mstack), jnp.asarray(wstack), *wire_arrs)
+    return unflatten(out), new_ef

@@ -391,6 +391,272 @@ def mix_residual(params: PyTree, grads: Optional[PyTree] = None,
 # ---------------------------------------------------------------------------
 # Per-shard block kernel (the shard_map-aware path, DESIGN.md §2.1)
 # ---------------------------------------------------------------------------
+# ---------------------------------------------------------------------------
+# Compressed rounds: fused quantize → mix → dequantize (DESIGN.md §2.3)
+# ---------------------------------------------------------------------------
+def _cmix_kernel(*refs, kind: str, with_ef: bool, wire: bool):
+    """One grid step of the compensated compressed round
+    ``o = x + (M·q − w ⊙ q)``.
+
+    For the quantizer kinds ("int8", "fp8") the wire estimate ``q`` is
+    computed **in-register** from the tile: random bits from the shared
+    column hash (repro.compress.base), codes via the same element-wise
+    math as the reference compressor (repro.compress.quantize), dequant,
+    mix — the quantized payload never exists in HBM.  ``kind ==
+    "precomputed"`` takes ``q`` as an input (sparsifier selections are
+    data-dependent gathers, not tile-local ops) and fuses only the
+    compensated mix.
+
+    Ref order: [seed?, x, e?, scale?, q?, w, M] → [o, ef?]
+    (seed/scale for quantizers, e with error feedback, q precomputed).
+    ``wire=True`` (the global phase with a comm_dtype) additionally
+    bf16-casts the estimate — both occurrences, preserving the constant
+    fixed point — mirroring the reference collective's operand cast.
+    """
+    from repro.compress import base as cbase
+    from repro.compress import quantize as cq
+
+    quant = kind in ("int8", "fp8")
+    idx = 0
+    if quant:
+        seed_ref = refs[idx]; idx += 1
+    x_ref = refs[idx]; idx += 1
+    if with_ef and quant:
+        e_ref = refs[idx]; idx += 1
+    if quant:
+        scale_ref = refs[idx]; idx += 1
+    else:
+        q_ref = refs[idx]; idx += 1
+    w_ref = refs[idx]; idx += 1
+    m_ref = refs[idx]; idx += 1
+    o_ref = refs[idx]; idx += 1
+    if with_ef and quant:
+        ef_ref = refs[idx]; idx += 1
+
+    x = x_ref[...].astype(jnp.float32)                       # (n, bd)
+    if quant:
+        y = x + e_ref[...].astype(jnp.float32) if with_ef else x
+        n, bd = x.shape
+        base = (pl.program_id(0) * bd).astype(jnp.uint32)
+        cols = base + jax.lax.broadcasted_iota(jnp.uint32, (n, bd), 1)
+        scale = scale_ref[...]
+        if kind == "int8":
+            u = cbase.uniform_columns(seed_ref[0, 0], cols)
+            q = cq.int8_dequant(cq.int8_codes(y, scale, u), scale)
+        else:
+            bits = cbase.column_bits(seed_ref[0, 0], cols)
+            q = cq.fp8_dequant(cq.fp8_codes(y, scale, bits), scale)
+        if with_ef:
+            ef_ref[...] = (y - q).astype(ef_ref.dtype)
+    else:
+        q = q_ref[...].astype(jnp.float32)
+    if wire:
+        q = q.astype(jnp.bfloat16).astype(jnp.float32)
+    corr = jnp.dot(m_ref[...], q, preferred_element_type=jnp.float32) \
+        - w_ref[...] * q
+    o_ref[...] = (x + corr).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("kind", "with_ef", "wire", "block_d", "interpret"))
+def _cmix_flat(xf: jax.Array, ef: Optional[jax.Array],
+               qf: Optional[jax.Array], seed: Optional[jax.Array],
+               scale: Optional[jax.Array], w: jax.Array, M: jax.Array, *,
+               kind: str, with_ef: bool, wire: bool, block_d: int,
+               interpret: bool):
+    """Run the compressed-mix kernel over one flattened (n, D) leaf."""
+    n, D = xf.shape
+    bd = max(1, min(block_d, D))
+    pad = (-D) % bd
+    if pad:  # zero columns quantize to exact zero codes → contribute 0
+        xf = jnp.pad(xf, ((0, 0), (0, pad)))
+        if ef is not None:
+            ef = jnp.pad(ef, ((0, 0), (0, pad)))
+        if qf is not None:
+            qf = jnp.pad(qf, ((0, 0), (0, pad)))
+    Dp = D + pad
+    quant = kind in ("int8", "fp8")
+
+    tile = lambda i: (0, i)
+    scalar = lambda i: (0, 0)
+    in_specs, inputs = [], []
+    if quant:
+        in_specs.append(pl.BlockSpec((1, 1), scalar))
+        inputs.append(jnp.asarray(seed).astype(jnp.uint32).reshape(1, 1))
+    in_specs.append(pl.BlockSpec((n, bd), tile))
+    inputs.append(xf)
+    if with_ef and quant:
+        in_specs.append(pl.BlockSpec((n, bd), tile))
+        inputs.append(ef)
+    if quant:
+        in_specs.append(pl.BlockSpec((n, 1), scalar))
+        inputs.append(scale)
+    else:
+        in_specs.append(pl.BlockSpec((n, bd), tile))
+        inputs.append(qf)
+    in_specs.append(pl.BlockSpec((n, 1), scalar))
+    inputs.append(w)
+    in_specs.append(pl.BlockSpec((n, n), scalar))
+    inputs.append(M)
+
+    out_shape = [jax.ShapeDtypeStruct((n, Dp), xf.dtype)]
+    out_specs = [pl.BlockSpec((n, bd), tile)]
+    if with_ef and quant:
+        out_shape.append(jax.ShapeDtypeStruct((n, Dp), jnp.float32))
+        out_specs.append(pl.BlockSpec((n, bd), tile))
+
+    multi = with_ef and quant
+    x_idx = 1 if quant else 0
+    out = pl.pallas_call(
+        functools.partial(_cmix_kernel, kind=kind, with_ef=with_ef,
+                          wire=wire),
+        grid=(Dp // bd,),
+        in_specs=in_specs,
+        out_specs=tuple(out_specs) if multi else out_specs[0],
+        out_shape=tuple(out_shape) if multi else out_shape[0],
+        input_output_aliases={x_idx: 0},
+        interpret=interpret,
+    )(*inputs)
+
+    if multi:
+        mixed, ef_out = out
+        return mixed[:, :D], ef_out[:, :D]
+    return out[:, :D], None
+
+
+def compressed_step_mix(params: PyTree, *, compressor,
+                        ef_state: Optional[PyTree] = None, seed=0,
+                        phase: str, topology: str = "ring", n_nodes: int,
+                        step: int = 0, n_pods: int = 1, block_d: int = 2048,
+                        interpret: Optional[bool] = None, comm_dtype=None):
+    """Fused compressed communication round (DESIGN.md §2.3):
+    ``mixed = x + (M·q − (1−d)⊙q)`` with ``q`` the compressed-wire
+    estimate of ``x (+ ef)``, one HBM pass per leaf.
+
+    Quantizer compressors (int8/fp8) fuse quantize → mix → dequantize
+    in-register (the per-leaf scale is the one extra cheap reduction);
+    sparsifiers precompute ``q`` via the reference codec and fuse the
+    compensated mix.  Dispatch is always per-leaf — the scales, salts,
+    and (for sparsifiers) selections are per-leaf, so the concat staging
+    buffer of the uncompressed path would mix scales across leaves.
+
+    Returns ``(mixed, new_ef_state)`` (``new_ef_state`` is None when
+    ``ef_state`` is None).  Consensus-residual fusion deliberately does
+    not compose with compression — callers fall back to
+    ``train.state.consensus_distance`` (DESIGN.md §2.3).
+    """
+    from repro import compress as compress_mod
+    from repro.compress import quantize as cq
+
+    if phase not in KERNEL_PHASES:
+        raise ValueError(f"phase {phase!r} has no fused kernel "
+                         f"(expected one of {KERNEL_PHASES})")
+    interp = _default_interpret() if interpret is None else interpret
+    d, M = phase_matrices(phase, topology, n_nodes, step=step, n_pods=n_pods)
+    w = (1.0 - d).astype(np.float32)
+    wj, Mj = jnp.asarray(w), jnp.asarray(M)
+    kind = compressor.name if compressor.name in ("int8", "fp8") \
+        else "precomputed"
+    with_ef = ef_state is not None
+    # global phase: the collective operand is uncompressed fp32 sums, so
+    # comm_dtype still wire-casts the estimate (both occurrences; matches
+    # _compressed_round_reference and the sharded psum — DESIGN.md §2.3)
+    wire = phase == "global" and comm_dtype is not None
+    if wire and jnp.dtype(comm_dtype) != jnp.dtype(jnp.bfloat16):
+        # the kernel's wire cast is bf16 like _mix_kernel's; other dtypes
+        # would silently diverge from the reference backend
+        raise ValueError(
+            f"compressed_step_mix: the fused kernel wire-casts to bfloat16 "
+            f"only (got comm_dtype={jnp.dtype(comm_dtype)}); use "
+            f"backend='reference' for other wire dtypes")
+
+    leaves, treedef = jax.tree.flatten(params)
+    n = leaves[0].shape[0]
+    ef_leaves = jax.tree.flatten(ef_state)[0] if with_ef \
+        else [None] * len(leaves)
+
+    if kind == "precomputed":
+        q_tree, new_ef = compress_mod.apply_tree(compressor, params,
+                                                 ef_state, seed)
+        q_leaves = jax.tree.leaves(q_tree)
+    mixed_leaves, new_ef_leaves = [], []
+    for i, (leaf, e) in enumerate(zip(leaves, ef_leaves)):
+        x2 = leaf.reshape(n, -1).astype(jnp.float32)
+        e2 = e.reshape(n, -1).astype(jnp.float32) if e is not None else None
+        if kind == "precomputed":
+            q2 = q_leaves[i].reshape(n, -1).astype(jnp.float32)
+            mixed, _ = _cmix_flat(x2, None, q2, None, None, wj, Mj,
+                                  kind=kind, with_ef=False, wire=wire,
+                                  block_d=block_d, interpret=interp)
+        else:
+            y2 = x2 if e2 is None else x2 + e2
+            scale = cq.int8_scale(y2) if kind == "int8" else cq.fp8_scale(y2)
+            seed_i = compress_mod.leaf_seed(seed, i)
+            mixed, ef_out = _cmix_flat(x2, e2, None, seed_i, scale, wj, Mj,
+                                       kind=kind, with_ef=with_ef,
+                                       wire=wire, block_d=block_d,
+                                       interpret=interp)
+            if with_ef:
+                new_ef_leaves.append(ef_out.reshape(e.shape).astype(e.dtype))
+        mixed_leaves.append(mixed.reshape(leaf.shape).astype(leaf.dtype))
+    mixed_tree = jax.tree.unflatten(treedef, mixed_leaves)
+    if not with_ef:
+        return mixed_tree, None
+    if kind == "precomputed":
+        return mixed_tree, new_ef
+    return mixed_tree, jax.tree.unflatten(treedef, new_ef_leaves)
+
+
+def _shard_cmix_kernel(x_ref, q_ref, qs_ref, w_ref, m_ref, o_ref):
+    """Per-shard compensated compressed mix: ``x + (M_r·qs − w ⊙ q_self)``
+    where ``qs`` stacks the locally rebuilt neighbor estimates (the
+    compressed wire arrays were what crossed the ICI — see
+    ``mixing._communicate_sharded_compressed``)."""
+    x = x_ref[...].astype(jnp.float32)                       # (m, bd)
+    q = q_ref[...].astype(jnp.float32)                       # (m, bd)
+    qs = qs_ref[...].astype(jnp.float32)                     # (K·m, bd)
+    corr = jnp.dot(m_ref[...], qs, preferred_element_type=jnp.float32) \
+        - w_ref[...] * q
+    o_ref[...] = (x + corr).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def shard_comp_mix_block(x: jax.Array, q_self: jax.Array, qs: jax.Array,
+                         w: jax.Array, M: jax.Array, *, block_d: int = 2048,
+                         interpret: Optional[bool] = None):
+    """Compensated per-shard round over one ``(m, D)`` row-block (the
+    compressed-wire analogue of :func:`shard_mix_block`; same aliasing
+    contract on ``x``)."""
+    interp = _default_interpret() if interpret is None else interpret
+    m, D = x.shape
+    K = qs.shape[0]
+    bd = max(1, min(block_d, D))
+    pad = (-D) % bd
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+        q_self = jnp.pad(q_self, ((0, 0), (0, pad)))
+        qs = jnp.pad(qs, ((0, 0), (0, pad)))
+    Dp = D + pad
+
+    tile = lambda i: (0, i)
+    in_specs = [pl.BlockSpec((m, bd), tile),
+                pl.BlockSpec((m, bd), tile),
+                pl.BlockSpec((K, bd), tile),
+                pl.BlockSpec((m, 1), lambda i: (0, 0)),
+                pl.BlockSpec((m, K), lambda i: (0, 0))]
+    out = pl.pallas_call(
+        _shard_cmix_kernel,
+        grid=(Dp // bd,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((m, bd), tile),
+        out_shape=jax.ShapeDtypeStruct((m, Dp), x.dtype),
+        input_output_aliases={0: 0},
+        interpret=interp,
+    )(x, q_self, qs, w, M)
+    return out[:, :D]
+
+
 def _shard_mix_kernel(x_ref, xs_ref, d_ref, m_ref, *out_refs,
                       with_residual: bool):
     """One grid step of the per-shard mix: ``d ⊙ x + M · xs`` where ``x`` is

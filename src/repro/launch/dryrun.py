@@ -25,8 +25,10 @@ from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.compress import round_wire_bytes
 from repro.configs import (ASSIGNED_ARCHS, DistConfig, INPUT_SHAPES,
                            OptimizerConfig, TrainConfig, DataConfig,
                            get_model_config)
@@ -130,16 +132,36 @@ def dryrun_train(cfg, shape, mesh, *, dist: DistConfig, phases=("gossip",
         rl = from_costs(costs, model_flops=mf)
         rl_raw = from_costs(costs_full, model_flops=mf)
         mem = compiled.memory_analysis()
+        # analytic bytes-on-wire per node per round (DESIGN.md §2.3 cost
+        # model): what the configured compressor/wire-dtype puts on the
+        # ICI vs the uncompressed fp32 round
+        leaf_sizes = [int(np.prod(l.shape[1:], dtype=np.int64))
+                      for l in jax.tree.leaves(specs.state_sds.params)]
+        per_node_params = sum(leaf_sizes)
+        wb = round_wire_bytes(
+            phase, dist.topology, specs.n_nodes, per_node_params,
+            comm_dtype=dist.comm_dtype, compression=dist.comm_compression,
+            k=dist.comm_compression_k, n_pods=dist.n_pods,
+            leaf_sizes=leaf_sizes)
+        wb_fp32 = round_wire_bytes(phase, dist.topology, specs.n_nodes,
+                                   per_node_params, n_pods=dist.n_pods)
         out["phases"][phase] = {
             "compile_s": compile_s,
             "memory": _mem_dict(mem),
             "roofline": rl.to_dict(),
             "roofline_raw_scan": rl_raw.to_dict(),
+            "wire": {"bytes_per_node": wb,
+                     "fp32_bytes_per_node": wb_fp32,
+                     "compression": dist.comm_compression,
+                     "reduction": (wb_fp32 / wb) if wb else 1.0},
         }
         print(f"    [{phase:6s}] compile {compile_s:6.1f}s  "
               f"flops/chip {rl.flops:.3e}  bytes {rl.hlo_bytes:.3e}  "
               f"coll {rl.coll_bytes:.3e}  dominant={rl.dominant}  "
               f"useful={rl.useful_flops_ratio:.3f}", flush=True)
+        print(f"    wire(analytic): {wb:.3e} B/node/round "
+              f"({dist.comm_compression}; fp32 {wb_fp32:.3e}, "
+              f"reduction {(wb_fp32 / wb) if wb else 1.0:.2f}x)", flush=True)
         print(f"    memory_analysis: {mem}", flush=True)
         print(f"    cost_analysis(scan-corrected): flops={rl.flops:.4e} "
               f"bytes={rl.hlo_bytes:.4e}", flush=True)
@@ -226,7 +248,9 @@ def _mem_dict(mem) -> Dict[str, Any]:
 
 def run_one(arch: str, shape_name: str, mesh_kind: str, *,
             algorithm: str = "gossip_pga", topology: str = "ring",
-            H: int = 6, fast: bool = False) -> Dict[str, Any]:
+            H: int = 6, fast: bool = False, compression: str = "none",
+            compression_k: int = 32,
+            error_feedback: bool = False) -> Dict[str, Any]:
     plan = plan_for(arch, shape_name)
     rec: Dict[str, Any] = {"arch": arch, "shape": shape_name,
                            "mesh": mesh_kind}
@@ -242,7 +266,10 @@ def run_one(arch: str, shape_name: str, mesh_kind: str, *,
                          and mesh_kind == "multi" else "data")
             dist = DistConfig(algorithm=algorithm, topology=topology, H=H,
                               node_axis=node_axis,
-                              fsdp=arch in HIERARCHICAL_ARCHS)
+                              fsdp=arch in HIERARCHICAL_ARCHS,
+                              comm_compression=compression,
+                              comm_compression_k=compression_k,
+                              comm_error_feedback=error_feedback)
             rec.update(dryrun_train(cfg, shape, mesh, dist=dist, fast=fast))
         else:
             ps = "2d" if arch in SERVE_2D_ARCHS else "tp"
@@ -271,6 +298,14 @@ def main() -> int:
     ap.add_argument("--fast", action="store_true",
                     help="skip scan-cost correction compiles (compile-proof "
                          "only; roofline costs under-counted for scans)")
+    ap.add_argument("--comm-compression", default="none",
+                    choices=("none", "identity", "int8", "fp8", "topk",
+                             "randk"),
+                    help="wire compressor: lowers the compressed comm path "
+                         "and feeds the wire-bytes cost model "
+                         "(DESIGN.md §2.3)")
+    ap.add_argument("--comm-compression-k", type=int, default=32)
+    ap.add_argument("--error-feedback", action="store_true")
     args = ap.parse_args()
 
     archs = list(ASSIGNED_ARCHS) if (args.all or not args.arch) \
@@ -287,7 +322,10 @@ def main() -> int:
                 rec = run_one(arch, shape_name, mesh_kind,
                               algorithm=args.algorithm,
                               topology=args.topology, H=args.H,
-                              fast=args.fast)
+                              fast=args.fast,
+                              compression=args.comm_compression,
+                              compression_k=args.comm_compression_k,
+                              error_feedback=args.error_feedback)
                 results.append(rec)
                 if args.out:
                     with open(args.out, "a") as f:

@@ -24,8 +24,8 @@ from repro.launch.mesh import n_gossip_nodes
 from repro.models import sharding as shd
 from repro.models.model import Model, make_model
 from repro.optim import make_optimizer
-from repro.train.state import (TrainState, opt_state_axes, stack_for_nodes,
-                               stacked_axes)
+from repro.train.state import (TrainState, stack_for_nodes, stacked_axes,
+                               state_axes)
 
 PyTree = Any
 _IS_AXES = lambda x: isinstance(x, tuple)
@@ -110,6 +110,8 @@ def train_specs(cfg: ModelConfig, mesh: Mesh, shape: InputShape, *,
     slowmo = dist.algorithm == "slowmo"
     axes_box: Dict[str, Any] = {}
 
+    ef = dist.comm_error_feedback
+
     def build_state(key):
         params, axes = model.init(key)
         axes_box["axes"] = axes
@@ -118,19 +120,21 @@ def train_specs(cfg: ModelConfig, mesh: Mesh, shape: InputShape, *,
         slow_p = params if slowmo else None
         slow_u = (jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
                                params) if slowmo else None)
+        if ef:
+            from repro.compress import init_ef_state
+            ef_state = init_ef_state(stacked)
+        else:
+            ef_state = None
         return TrainState(params=stacked, opt_state=opt_state,
                           step=jnp.zeros((), jnp.int32),
-                          slow_params=slow_p, slow_u=slow_u)
+                          slow_params=slow_p, slow_u=slow_u,
+                          ef_state=ef_state)
 
     state_sds = jax.eval_shape(build_state, jax.random.PRNGKey(0))
     axes = axes_box["axes"]
     st_axes = stacked_axes(axes)
-    state_axes_tree = TrainState(
-        params=st_axes,
-        opt_state=opt_state_axes(optimizer.name, st_axes),
-        step=(),
-        slow_params=axes if slowmo else None,
-        slow_u=axes if slowmo else None)
+    state_axes_tree = state_axes(st_axes, optimizer.name, slowmo, axes,
+                                 ef=ef)
     state_sh = _shardings(state_axes_tree, mode, mesh, state_sds)
 
     b_sds, b_axes = batch_specs(cfg, n_nodes, shape.global_batch,

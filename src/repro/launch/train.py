@@ -40,6 +40,17 @@ def main() -> None:
                     help="per-node elements at which a parameter leaf gets "
                          "its own pallas dispatch (skips the concat staging "
                          "buffer)")
+    ap.add_argument("--comm-compression", default="none",
+                    choices=("none", "identity", "int8", "fp8", "topk",
+                             "randk"),
+                    help="wire compressor for the communication round "
+                         "(repro.compress, DESIGN.md §2.3); identity is "
+                         "bit-identical to none")
+    ap.add_argument("--comm-compression-k", type=int, default=32,
+                    help="elements kept per node per leaf for topk/randk")
+    ap.add_argument("--error-feedback", action="store_true",
+                    help="per-node error-feedback memory: compression "
+                         "error is fed back next round instead of dropped")
     ap.add_argument("--full-config", action="store_true",
                     help="full published dims (TPU-scale; default reduced)")
     ap.add_argument("--iid", action="store_true")
@@ -51,7 +62,10 @@ def main() -> None:
         dist=DistConfig(algorithm=args.algorithm, topology=args.topology,
                         H=args.H, comm_backend=args.comm_backend,
                         comm_shard_mode=args.comm_shard_mode,
-                        pallas_leaf_threshold=args.leaf_threshold),
+                        pallas_leaf_threshold=args.leaf_threshold,
+                        comm_compression=args.comm_compression,
+                        comm_compression_k=args.comm_compression_k,
+                        comm_error_feedback=args.error_feedback),
         optimizer=OptimizerConfig(name=args.optimizer, lr=args.lr,
                                   schedule="warmup_cosine", warmup_steps=10,
                                   total_steps=args.steps),

@@ -19,6 +19,12 @@ class TrainState:
     step: jax.Array
     slow_params: Optional[PyTree] = None   # SlowMo outer iterate (unstacked)
     slow_u: Optional[PyTree] = None        # SlowMo slow momentum
+    ef_state: Optional[PyTree] = None      # per-node error-feedback memory
+                                           # (compressed gossip, DESIGN.md
+                                           # §2.3): stacked, fp32, zeros at
+                                           # init; updated by the same
+                                           # compress call that produces
+                                           # the wire payload
 
 
 def stack_for_nodes(tree: PyTree, n_nodes: int) -> PyTree:
@@ -41,13 +47,15 @@ def opt_state_axes(opt_name: str, params_axes: PyTree) -> PyTree:
 
 
 def state_axes(params_axes_stacked: PyTree, opt_name: str,
-               slowmo: bool, params_axes_unstacked: PyTree) -> TrainState:
+               slowmo: bool, params_axes_unstacked: PyTree,
+               ef: bool = False) -> TrainState:
     return TrainState(
         params=params_axes_stacked,
         opt_state=opt_state_axes(opt_name, params_axes_stacked),
         step=(),
         slow_params=params_axes_unstacked if slowmo else None,
         slow_u=params_axes_unstacked if slowmo else None,
+        ef_state=params_axes_stacked if ef else None,
     )
 
 

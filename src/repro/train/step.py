@@ -14,6 +14,7 @@ from typing import Any, Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.compress import make_compressor
 from repro.configs.base import TrainConfig
 from repro.core import mixing
 from repro.core import topology as topo
@@ -42,6 +43,12 @@ def build_train_step(model: Model, tcfg: TrainConfig, n_nodes: int, *,
     dist = tcfg.dist
     sharded_comm = mixing.use_sharded_backend(
         dist.comm_backend, mesh, dist.node_axis, dist.comm_shard_mode)
+    # wire compressor (DESIGN.md §2.3): built once at step-build time; the
+    # identity compressor routes to the exact uncompressed path inside
+    # mixing.communicate, so only a *lossy* compressor changes the step
+    compressor = make_compressor(dist.comm_compression,
+                                 k=dist.comm_compression_k)
+    lossy_comm = compressor is not None and compressor.lossy
     opt = make_optimizer(tcfg.optimizer, per_node=True)
     # DistConfig.remat/remat_policy -> blocks.make_remat policy string
     if dist.remat == "none":
@@ -96,6 +103,7 @@ def build_train_step(model: Model, tcfg: TrainConfig, n_nodes: int, *,
         params_half, opt_state = opt.update(grads, state.opt_state,
                                             state.params, lr)
         slow_params, slow_u = state.slow_params, state.slow_u
+        new_ef = state.ef_state
         fused_consensus = None
         if phase == "slowmo":
             xbar = jax.tree.map(lambda p: jnp.mean(p.astype(jnp.float32), 0),
@@ -116,7 +124,23 @@ def build_train_step(model: Model, tcfg: TrainConfig, n_nodes: int, *,
             comm_dtype = (jnp.bfloat16 if dist.comm_dtype == "bfloat16"
                           else None)
             new_params = None
-            if (dist.comm_backend == "pallas" and with_consensus
+            if (lossy_comm and n_nodes > 1
+                    and phase in ("gossip", "global", "pod_avg")):
+                # compressed round: the SR seed is the absolute step (so
+                # rounding is unbiased across steps); consensus falls back
+                # to consensus_distance below — residual fusion does not
+                # compose with compression (DESIGN.md §2.3)
+                new_params, new_ef = mixing.communicate(
+                    params_half, phase=phase, topology=dist.topology,
+                    n_nodes=n_nodes, step=shift_step, axis=0,
+                    comm_dtype=comm_dtype, n_pods=dist.n_pods,
+                    backend=dist.comm_backend, mesh=mesh,
+                    node_axis=dist.node_axis,
+                    shard_mode=dist.comm_shard_mode,
+                    leaf_threshold=dist.pallas_leaf_threshold,
+                    compressor=compressor, ef_state=state.ef_state,
+                    seed=state.step)
+            elif (dist.comm_backend == "pallas" and with_consensus
                     and n_nodes > 1
                     and phase in ("gossip", "global", "pod_avg")):
                 # fused: the mixing kernel emits the consensus residual in
@@ -152,7 +176,7 @@ def build_train_step(model: Model, tcfg: TrainConfig, n_nodes: int, *,
                                     else consensus_distance(new_params))
         new_state = TrainState(params=new_params, opt_state=opt_state,
                                step=state.step + 1, slow_params=slow_params,
-                               slow_u=slow_u)
+                               slow_u=slow_u, ef_state=new_ef)
         return new_state, metrics
 
     return step

@@ -59,9 +59,14 @@ class Trainer:
         slow_u = (jax.tree.map(
             lambda p: jnp.zeros(p.shape, jnp.float32), slow_params)
             if slowmo else None)
+        ef_state = None
+        if self.tcfg.dist.comm_error_feedback:
+            from repro.compress import init_ef_state
+            ef_state = init_ef_state(params)
         return TrainState(params=params, opt_state=opt_state,
                           step=jnp.zeros((), jnp.int32),
-                          slow_params=slow_params, slow_u=slow_u)
+                          slow_params=slow_params, slow_u=slow_u,
+                          ef_state=ef_state)
 
     # ------------------------------------------------------------------
     def _get_step_fn(self, phase: str, shift: int):

@@ -26,6 +26,33 @@ def test_mixing_matrix_is_doubly_stochastic(n, t, step):
     assert topo.is_doubly_stochastic(W)
 
 
+@given(n=_SIZES, t=_TOPOS, step=st.integers(0, 7))
+@settings(**_SETTINGS)
+def test_topology_satisfies_assumption_3(n, t, step):
+    """Paper Assumption 3 for every topology × node count: W doubly
+    stochastic with contraction β < 1.  Static topologies contract per
+    step; the time-varying one-peer-exp graph has per-step β = 1 (each
+    matrix only pairs nodes) but every per-step W is still doubly
+    stochastic and the *effective* β over one period is < 1 (the period
+    product is exactly 𝟙𝟙ᵀ/n, paper §3).  ``disconnected`` (W = I, β = 1)
+    is the deliberate no-communication baseline and excluded from _TOPOS.
+    """
+    W = topo.mixing_matrix(t, n, step=step)
+    assert topo.is_doubly_stochastic(W)
+    if t == "one_peer_exp":
+        if n > 1:
+            period = topo.schedule_period(t, n)
+            P = np.eye(n)
+            for k in range(period):
+                Wk = topo.mixing_matrix(t, n, step=step + k)
+                assert topo.is_doubly_stochastic(Wk)
+                P = Wk @ P
+            np.testing.assert_allclose(P, np.ones((n, n)) / n, atol=1e-9)
+        assert topo.effective_beta(t, n) < 1.0
+    else:
+        assert topo.beta(W) < 1.0
+
+
 @given(n=_SIZES, t=_TOPOS, step=st.integers(0, 7),
        seed=st.integers(0, 1000))
 @settings(**_SETTINGS)
