@@ -13,11 +13,21 @@ Three sections, CSV rows per benchmarks/common.emit:
   container the pallas rows run in interpret mode (absolute numbers
   meaningless, same caveat as bench_mixing_kernels); the reference rows
   measure the jnp compressed math.
+* ``compress/global_bytes/<kind>`` — **measured** wire bytes of the
+  compressed global/pod-averaging collective (DESIGN.md §2.3 "Compressed
+  collectives"): the stage-1 reduce-scatter payload (int8/fp8 codes +
+  per-block scales) per node, vs the fp32 psum operand — the ISSUE-4 gate
+  asserts int8 moves ≥ 4× fewer bytes (up to the per-block scale words).
 * ``compress/logistic/*`` — the paper's §5.1 logistic problem under
   Gossip-PGA: final suboptimality of int8(+EF) vs the uncompressed run.
-  Documented tolerance: int8+EF must land within ``--loss-rtol``
+  Documented tolerance: int8+EF — and the fully-compressed run that adds
+  the int8 collective on the PGA round — must land within ``--loss-rtol``
   (default 10%) of the uncompressed final suboptimality; int8 without EF
   is reported for contrast but not gated.
+
+``--out FILE`` writes a BENCH_mixing-style JSON (rows + gate) so CI can
+append the global-phase bytes row to ``benchmarks/BENCH_history.jsonl``
+via ``report.py --append-history``.
 
     PYTHONPATH=src python -m benchmarks.bench_compression
     PYTHONPATH=src python -m benchmarks.bench_compression --check
@@ -25,6 +35,7 @@ Three sections, CSV rows per benchmarks/common.emit:
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 
 import jax
@@ -33,6 +44,7 @@ import numpy as np
 
 from benchmarks.common import emit, time_fn
 from repro import compress as C
+from repro.compress import collective as ccol
 from repro.core import mixing, simulate
 from repro.data import make_logistic_problem
 
@@ -53,6 +65,31 @@ def bench_bytes(n: int, dim: int, k: int) -> dict:
         ratios[name] = fp32 / measured
         emit(f"compress/bytes/{name}", float(measured),
              f"fp32_ratio={ratios[name]:.2f}x")
+    return ratios
+
+
+def bench_global_bytes(n: int, dim: int) -> dict:
+    """Measured wire bytes of the compressed collective's stage-1 payload
+    (per node — the same one-operand accounting as round_wire_bytes's
+    ``D·4`` for the uncompressed psum), plus the analytic cross-check."""
+    x = jax.random.normal(jax.random.PRNGKey(1), (n, dim), jnp.float32)
+    xp = ccol.pad_cols(x, ccol.QBLOCK)
+    s1, s2 = ccol.stage_seeds(jnp.uint32(0))
+    fp32 = dim * 4
+    ratios = {}
+    for kind in ("int8", "fp8"):
+        codes1, scales1, q1 = ccol.quantize_blocks(xp, kind, s1)
+        mbar = ccol.anchored_mean(q1)
+        codes2, scales2, _ = ccol.quantize_blocks(mbar, kind, s2)
+        measured = (np.asarray(codes1).nbytes + np.asarray(scales1).nbytes) \
+            // n
+        gather = np.asarray(codes2).nbytes + np.asarray(scales2).nbytes
+        ratios[kind] = fp32 / measured
+        emit(f"compress/global_bytes/{kind}", float(measured),
+             f"fp32_ratio={ratios[kind]:.2f}x gather_bytes={gather}")
+        analytic = C.round_wire_bytes("global", "ring", n, dim,
+                                      global_compression=kind)
+        assert measured == analytic, (kind, measured, analytic)
     return ratios
 
 
@@ -82,6 +119,25 @@ def bench_rounds(n: int, dim: int, k: int, iters: int) -> None:
             emit(f"compress/round/gossip/{name}/{backend}", t,
                  f"vs_uncompressed={t0 / t:.2f}x")
 
+    @jax.jit
+    def base_global(x):
+        return mixing.communicate(x, phase="global", topology="ring",
+                                  n_nodes=n)
+
+    tg = time_fn(base_global, x, iters=iters)
+    emit("compress/round/global/none/reference", tg)
+    gcomp = C.make_compressor("int8")
+    for backend in ("reference", "pallas"):
+        @jax.jit
+        def coll_round(x, _b=backend):
+            return mixing.communicate(x, phase="global", topology="ring",
+                                      n_nodes=n, global_compressor=gcomp,
+                                      seed=1, backend=_b)[0]
+
+        t = time_fn(coll_round, x, iters=iters)
+        emit(f"compress/round/global/int8/{backend}", t,
+             f"vs_uncompressed={tg / t:.2f}x")
+
 
 # ---------------------------------------------------------------------------
 # Logistic transient (paper §5.1 protocol, reduced)
@@ -105,33 +161,69 @@ def bench_logistic(steps: int, seeds: int, n: int) -> dict:
     ref = run()
     int8_ef = run(compression="int8", error_feedback=True)
     int8_noef = run(compression="int8")
+    # fully-compressed wire: int8 gossip halos + the int8 collective on
+    # the PGA round (comm_global_compression), EF absorbing both residuals
+    int8_full = run(compression="int8", global_compression="int8",
+                    error_feedback=True)
     emit("compress/logistic/uncompressed_final", ref)
     emit("compress/logistic/int8_ef_final", int8_ef,
          f"vs_uncompressed={int8_ef / max(ref, 1e-12):.4f}")
     emit("compress/logistic/int8_noef_final", int8_noef,
          f"vs_uncompressed={int8_noef / max(ref, 1e-12):.4f}")
-    return {"ref": ref, "int8_ef": int8_ef}
+    emit("compress/logistic/int8_global_ef_final", int8_full,
+         f"vs_uncompressed={int8_full / max(ref, 1e-12):.4f}")
+    return {"ref": ref, "int8_ef": int8_ef, "int8_full": int8_full}
 
 
 def main(n: int = 8, dim: int = 65_536, k: int = 1024, iters: int = 5,
          steps: int = 400, seeds: int = 2, loss_rtol: float = 0.10,
-         check: bool = False) -> int:
+         check: bool = False, out: str = "") -> int:
     print(f"# compression wire/round/convergence, n={n} dim={dim} "
           f"backend={jax.default_backend()} (pallas interpreted off-TPU)")
     ratios = bench_bytes(n, dim, k)
+    gratios = bench_global_bytes(n, dim)
     bench_rounds(n, dim, k, iters)
     logi = bench_logistic(steps, seeds, n)
     # int8 moves exactly D bytes + one fp32 scale word per row, so the
     # measured ratio is 4·D/(D+4) — ≥4× up to the scale overhead (<0.1%
     # at any production leaf size); the gate allows exactly that slack
     ok_bytes = ratios["int8"] >= 4.0 * dim / (dim + 4) - 1e-6
+    # global collective: codes + one scale word per QBLOCK columns
+    dp = -(-dim // ccol.QBLOCK) * ccol.QBLOCK
+    g_slack = 4.0 * dim / (dp + 4 * dp // ccol.QBLOCK)
+    ok_global = gratios["int8"] >= g_slack - 1e-6
     ok_loss = abs(logi["int8_ef"] - logi["ref"]) \
+        <= loss_rtol * max(abs(logi["ref"]), 1e-12)
+    ok_global_loss = abs(logi["int8_full"] - logi["ref"]) \
         <= loss_rtol * max(abs(logi["ref"]), 1e-12)
     emit("compress/gate/int8_bytes_4x", float(ok_bytes),
          f"ratio={ratios['int8']:.2f}")
+    emit("compress/gate/int8_global_bytes_4x", float(ok_global),
+         f"ratio={gratios['int8']:.2f} (floor {g_slack:.3f})")
     emit("compress/gate/int8_ef_matches_loss", float(ok_loss),
          f"rtol={loss_rtol}")
-    if check and not (ok_bytes and ok_loss):
+    emit("compress/gate/int8_global_ef_matches_loss", float(ok_global_loss),
+         f"rtol={loss_rtol}")
+    ok = ok_bytes and ok_global and ok_loss and ok_global_loss
+    if out:
+        rows = [
+            {"name": "compress/gossip_bytes/int8", "ratio": ratios["int8"],
+             "gated": True},
+            {"name": "compress/global_bytes/int8", "ratio": gratios["int8"],
+             "gated": True},
+            {"name": "compress/global_bytes/fp8", "ratio": gratios["fp8"],
+             "gated": False},
+            {"name": "compress/logistic/int8_global_ef_vs_ref",
+             "ratio": logi["int8_full"] / max(logi["ref"], 1e-12),
+             "gated": False},
+        ]
+        with open(out, "w") as f:
+            json.dump({"jax_backend": jax.default_backend(), "dim": dim,
+                       "nodes": n, "gate": {"ok": bool(ok),
+                                            "loss_rtol": loss_rtol},
+                       "rows": rows}, f, indent=1)
+        print(f"# wrote {out}")
+    if check and not ok:
         print("# compression gate FAILED", flush=True)
         return 1
     return 0
@@ -149,8 +241,12 @@ if __name__ == "__main__":
                     help="documented tolerance for int8+EF final loss vs "
                          "uncompressed")
     ap.add_argument("--check", action="store_true",
-                    help="exit 1 when the ≥4× int8 bytes gate or the "
-                         "int8+EF loss gate fails")
+                    help="exit 1 when a ≥4× bytes gate (gossip or global "
+                         "collective) or an EF loss gate fails")
+    ap.add_argument("--out", default="",
+                    help="write a BENCH_mixing-style JSON for "
+                         "report.py --append-history")
     a = ap.parse_args()
     sys.exit(main(n=a.nodes, dim=a.dim, k=a.k, iters=a.iters, steps=a.steps,
-                  seeds=a.seeds, loss_rtol=a.loss_rtol, check=a.check))
+                  seeds=a.seeds, loss_rtol=a.loss_rtol, check=a.check,
+                  out=a.out))

@@ -133,7 +133,9 @@ def hillclimb_table(rows: List[Dict[str, Any]]) -> None:
 
 def append_history(src: str = "BENCH_mixing.json",
                    path: str = HISTORY) -> None:
-    """Append one perf-gate run's rows to the tracked trend history."""
+    """Append one perf-gate run's rows to the tracked trend history.
+    Accepts BENCH_mixing.json (timed rows) and BENCH_compression.json
+    (byte-ratio rows without timings — bench_compression --out)."""
     with open(src) as f:
         bench = json.load(f)
     rec = {
@@ -143,8 +145,9 @@ def append_history(src: str = "BENCH_mixing.json",
         "dim": bench.get("dim"), "nodes": bench.get("nodes"),
         "gate": bench.get("gate"),
         "rows": [{"name": r["name"], "ratio": r["ratio"],
-                  "reference_us": r["reference_us"],
-                  "pallas_us": r["pallas_us"], "gated": r["gated"]}
+                  "reference_us": r.get("reference_us"),
+                  "pallas_us": r.get("pallas_us"),
+                  "gated": r.get("gated", False)}
                  for r in bench.get("rows", [])],
     }
     with open(path, "a") as f:
@@ -185,9 +188,12 @@ def trend_table(path: str = HISTORY, last: int = 10) -> None:
     worst = [g.get("min_gated_ratio") for g in gates
              if g.get("min_gated_ratio") is not None]
     if worst:
+        # newest record carrying a ratio limit (compression-gate records
+        # interleave in the history and have no max_ratio)
+        limit = next((g["max_ratio"] for g in reversed(gates)
+                      if g.get("max_ratio") is not None), None)
         print(f"\nmin gated ratio across runs: best {min(worst):.2f}, "
-              f"worst {max(worst):.2f} "
-              f"(gate limit {gates[-1].get('max_ratio')})")
+              f"worst {max(worst):.2f} (gate limit {limit})")
 
 
 def main() -> None:

@@ -3,19 +3,45 @@
 Arrays are gathered to host (``np.asarray`` addresses every shard), keyed by
 their tree path; restore rebuilds into the template's structure and re-applies
 the template's sharding via device_put.  msgpack-free, dependency-free.
+
+Two contracts added for compressed runs (ISSUE 4 bugfixes):
+
+* **dtype manifest** — npz cannot represent ml_dtypes leaves (bfloat16 /
+  fp8 params, wire buffers): depending on the numpy version ``np.savez``
+  either raises or silently degrades them to raw void (``|V2``) that
+  ``restore`` cannot cast back.  Such leaves are saved as same-width
+  unsigned-int **bit views** (uint16/uint8 — bit-exact, so resume is
+  bitwise) and their true dtype is recorded in the manifest's ``dtypes``
+  entry; restore views them back before the template cast.
+* **optional ``ef_state`` reconcile** — a ``TrainState`` checkpoint from a
+  compressed run carries error-feedback memory that a fresh template built
+  without compression lacks (and vice versa).  Restore reconciles instead
+  of KeyError-ing / silently dropping the EF memory: a checkpointed
+  ``ef_state`` is restored even when the template has ``ef_state=None``
+  (the template grows a params-shaped fp32 slot), and a template expecting
+  ``ef_state`` that the checkpoint predates gets fresh zeros (EF restarts
+  empty, the correct semantic for newly-enabled compression).
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 import re
-from typing import Any, Optional
+from typing import Any, Dict, Optional
 
 import jax
 import numpy as np
 
 PyTree = Any
 _MANIFEST = "manifest.json"
+_EF_PREFIX = ".ef_state/"
+_EF_KEY = ".ef_state"                      # bare-array (single-leaf) ef_state
+_DTYPES_KEY = "__dtype_manifest__"         # reserved npz entry, not a leaf
+
+
+def _is_ef_key(key: str) -> bool:
+    return key == _EF_KEY or key.startswith(_EF_PREFIX)
 
 
 def _flatten(tree: PyTree):
@@ -28,14 +54,47 @@ def _flatten(tree: PyTree):
     return out, treedef
 
 
+def _bit_view_dtype(dtype: np.dtype) -> Optional[np.dtype]:
+    """The unsigned-int dtype to store ``dtype``'s raw bits, or None when
+    npz handles it natively.  ml_dtypes types (bfloat16, float8_*) register
+    as kind 'V', which npz cannot round-trip."""
+    if dtype.kind != "V":
+        return None
+    return np.dtype({1: np.uint8, 2: np.uint16, 4: np.uint32}[dtype.itemsize])
+
+
+def _resolve_dtype(name: str) -> np.dtype:
+    """Dtype from its manifest name, covering the ml_dtypes families numpy
+    itself cannot name."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, name))
+
+
 def save_checkpoint(ckpt_dir: str, state: PyTree, step: int) -> str:
     os.makedirs(ckpt_dir, exist_ok=True)
     flat, _ = _flatten(state)
-    arrays = {k: np.asarray(v) for k, v in flat.items()}
+    arrays: Dict[str, np.ndarray] = {}
+    dtypes: Dict[str, str] = {}
+    for k, v in flat.items():
+        a = np.asarray(v)
+        view = _bit_view_dtype(a.dtype)
+        if view is not None:
+            dtypes[k] = a.dtype.name
+            a = a.view(view)
+        arrays[k] = a
     path = os.path.join(ckpt_dir, f"ckpt_{step:08d}.npz")
-    np.savez(path, **arrays)
+    # the dtype manifest rides INSIDE the npz (authoritative, per step):
+    # manifest.json only describes the latest save, so an older step
+    # restored after a leaf changed dtype would otherwise be value-cast
+    # from its raw bit view into garbage
+    np.savez(path, **arrays,
+             **{_DTYPES_KEY: np.asarray(json.dumps(dtypes))})
     with open(os.path.join(ckpt_dir, _MANIFEST), "w") as f:
-        json.dump({"latest_step": step, "keys": sorted(arrays)}, f, indent=1)
+        json.dump({"latest_step": step, "keys": sorted(arrays),
+                   "dtypes": dtypes}, f, indent=1)
     return path
 
 
@@ -47,16 +106,73 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
+def _load_manifest(ckpt_dir: str) -> Dict[str, Any]:
+    path = os.path.join(ckpt_dir, _MANIFEST)
+    if not os.path.exists(path):
+        return {}
+    with open(path) as f:
+        return json.load(f)
+
+
+def _reconcile_ef(template: PyTree, data) -> PyTree:
+    """Align an optional ``TrainState.ef_state`` between checkpoint and
+    template (see module docstring).  Non-TrainState templates pass
+    through untouched."""
+    try:
+        from repro.train.state import TrainState
+    except ImportError:                      # standalone-checkpoint usage
+        return template
+    if not isinstance(template, TrainState):
+        return template
+    ef_keys = [k for k in data.files if _is_ef_key(k)]
+    if ef_keys and template.ef_state is None:
+        import jax.numpy as jnp
+        if ef_keys == [_EF_KEY]:
+            # bare single-array EF memory: shape comes from the npz itself
+            ef_tmpl = jax.ShapeDtypeStruct(data[_EF_KEY].shape, jnp.float32)
+        else:
+            # params-mirroring EF tree: grow a params-shaped fp32 slot
+            ef_tmpl = jax.tree.map(
+                lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+                if isinstance(p, jax.ShapeDtypeStruct)
+                else jnp.zeros(p.shape, jnp.float32), template.params)
+        return dataclasses.replace(template, ef_state=ef_tmpl)
+    return template
+
+
 def restore_checkpoint(ckpt_dir: str, template: PyTree,
                        step: Optional[int] = None) -> PyTree:
     step = step if step is not None else latest_step(ckpt_dir)
     if step is None:
         raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
     data = np.load(os.path.join(ckpt_dir, f"ckpt_{step:08d}.npz"))
+    if _DTYPES_KEY in data.files:            # per-step, authoritative
+        dtypes = json.loads(str(data[_DTYPES_KEY]))
+    else:                                    # older save: latest-step record
+        dtypes = _load_manifest(ckpt_dir).get("dtypes", {})
+    template = _reconcile_ef(template, data)
     flat, treedef = _flatten(template)
     leaves = []
     for key, tmpl in flat.items():
+        if key not in data and _is_ef_key(key):
+            # template expects EF memory the checkpoint predates: fresh
+            # zeros (EF restarts empty when compression is newly enabled)
+            leaves.append(jax.numpy.zeros(tmpl.shape, tmpl.dtype))
+            continue
         arr = data[key]
+        if key in dtypes:
+            arr = arr.view(_resolve_dtype(dtypes[key]))
+        elif arr.dtype.kind == "V" and hasattr(tmpl, "dtype"):
+            # legacy checkpoint written before the dtype manifest: the npz
+            # degraded the leaf to raw void — reinterpret via the template
+            arr = arr.view(np.dtype(tmpl.dtype))
+        elif arr.dtype.kind == "u" and hasattr(tmpl, "dtype") \
+                and np.dtype(tmpl.dtype).kind == "V" \
+                and arr.dtype.itemsize == np.dtype(tmpl.dtype).itemsize:
+            # unsigned bit view whose manifest entry is missing (lost
+            # manifest + older npz): a value cast would manufacture
+            # garbage — reinterpret the bits via the template instead
+            arr = arr.view(np.dtype(tmpl.dtype))
         if hasattr(tmpl, "sharding") and hasattr(tmpl.sharding, "mesh"):
             leaves.append(jax.device_put(arr, tmpl.sharding))
         else:

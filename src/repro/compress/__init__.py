@@ -15,13 +15,16 @@ from repro.compress.base import (Compressor, LeafWire, apply_tree,
                                  column_bits, compress_tree, decompress_tree,
                                  hash_u32, init_ef_state, leaf_seed,
                                  tree_wire_bytes, uniform_columns)
+from repro.compress.collective import (COLLECTIVE_COMPRESSORS,
+                                       collective_wire_bytes)
 from repro.compress.quantize import Fp8Compressor, Int8Compressor
 from repro.compress.sparsify import RandKCompressor, TopKCompressor
 
 __all__ = [
-    "COMPRESSORS", "Compressor", "LeafWire", "apply_tree", "column_bits",
-    "compress_tree", "decompress_tree", "hash_u32", "init_ef_state",
-    "leaf_seed", "make_compressor", "round_wire_bytes", "tree_wire_bytes",
+    "COLLECTIVE_COMPRESSORS", "COMPRESSORS", "Compressor", "LeafWire",
+    "apply_tree", "collective_wire_bytes", "column_bits", "compress_tree",
+    "decompress_tree", "hash_u32", "init_ef_state", "leaf_seed",
+    "make_compressor", "round_wire_bytes", "tree_wire_bytes",
     "uniform_columns",
 ]
 
@@ -54,7 +57,8 @@ def round_wire_bytes(phase: str, topology: str, n_nodes: int,
                      per_node_params: int, *, comm_dtype: str = "float32",
                      compression: str = "none", k: int = 32,
                      step: int = 0, n_pods: int = 1,
-                     leaf_sizes=None) -> int:
+                     leaf_sizes=None, global_compression: str = "none"
+                     ) -> int:
     """Per-node bytes crossing the interconnect for one communication
     round (the dry-run cost model; DESIGN.md §2.3).
 
@@ -66,26 +70,35 @@ def round_wire_bytes(phase: str, topology: str, n_nodes: int,
 
     * gossip: one collective-permute per nonzero off-diagonal shift, each
       moving the (possibly compressed) per-node payload;
-    * global: one all-reduce of the full operand — the compressor applies
-      to the operand *values* but the psum stays an uncompressed
-      collective whose operand is wire-cast per ``comm_dtype``
-      (DESIGN.md §2.3 limitation), so bytes follow ``comm_dtype``;
-    * pod_avg: uncompressed, an intra-pod all-reduce (bytes follow
-      ``comm_dtype``); compressed, the sharded path serves it with the
-      compressed halo exchange — each node's payload reaches the other
-      ``n/n_pods − 1`` pod members.
+    * global / pod_avg: one (intra-pod) all-reduce of the full operand,
+      counted as one operand's worth of bytes.  With a lossy
+      ``global_compression`` the collective runs the compressed
+      reduce-scatter → all-gather (repro.compress.collective) and the
+      operand's worth becomes int8/fp8 codes + per-block scales — the
+      collective is *packed* (one operand spanning all leaves), so
+      ``leaf_sizes`` does not split it;
+    * pod_avg with only a lossy gossip ``compression``: the sharded path
+      serves it with the compressed halo exchange — each node's payload
+      reaches the other ``n/n_pods − 1`` pod members.
     """
     from repro.core import topology as topo
 
     elem = 2 if comm_dtype == "bfloat16" else 4
     comp = make_compressor(compression, k=k)
     lossy = comp is not None and comp.lossy
+    glossy = global_compression in ("int8", "fp8")
     sizes = list(leaf_sizes) if leaf_sizes else [per_node_params]
     payload = sum(int(comp.wire_bytes_per_send(1, d)) for d in sizes) \
         if lossy else None
     if phase == "global":
+        if glossy:
+            return collective_wire_bytes(global_compression,
+                                         per_node_params)
         return per_node_params * elem
     if phase == "pod_avg":
+        if glossy:
+            return collective_wire_bytes(global_compression,
+                                         per_node_params)
         if not lossy:
             return per_node_params * elem
         per = max(n_nodes // max(n_pods, 1), 1)

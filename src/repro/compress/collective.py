@@ -1,0 +1,229 @@
+"""Compressed global/pod-averaging collective (DESIGN.md §2.3 "Compressed
+collectives").
+
+The periodic All-Reduce was the last uncompressed phase on the wire: gossip
+and pod halos move int8/fp8 payloads (PR 3) while the PGA round still psums
+an fp32/bf16 operand.  This module is the reference math for the compressed
+replacement — a **chunked reduce-scatter → dequant-accumulate → all-gather**
+collective over int8/fp8 blocks with per-(row, block) scales:
+
+    stage 1 (reduce-scatter):  every node quantizes its operand ``y = x + e``
+        blockwise (``QBLOCK`` columns per scale) and sends each column
+        segment's codes+scales to the segment owner;
+    accumulate:                the owner dequantizes and averages in fp32,
+        **anchored at the first row**: ``m̄ = q₀ + mean(q − q₀)`` — the
+        subtraction makes a consensus state survive the accumulate bitwise
+        (mean of exact zeros is exactly zero), the compressed analogue of
+        the cancellation-free consensus pass (§2.1);
+    stage 2 (all-gather):      the owner re-quantizes the mean chunk and
+        broadcasts codes+scales; receivers dequantize to ``r``.
+
+The mixing layer applies the **self-compensated round**
+
+    mixed = x + (r − ρ),        ρ = Q₂(q₁),   q₁ = Q₁(x + e)
+
+where ``ρ`` is the node's *local* emulation of its own operand through both
+quantization stages.  Because the random bits of each stage are keyed on
+(stage seed, absolute column) — node-independent, same counter-hash as the
+gossip compressors — identical inputs produce identical codes at every
+stage, the anchored accumulate returns ``q₁`` bitwise, and ``r == ρ``:
+a constant state is an **exact fixed point** (bitwise, stronger than the
+psum path's ulp-level guarantee).  The node's own state enters at full
+precision, and error feedback absorbs the stage-1 residual
+``e' = (x + e) − q₁`` (the stage-2 error is common-mode across nodes and
+unbiased over steps).  The price of compressing the collective: the node
+*average* is preserved only to quantizer precision, not exactly — the
+common stage-2 error shifts all nodes together (DESIGN.md §2.3).
+
+Element-wise quantizer math is imported from :mod:`repro.compress.quantize`
+verbatim, so the fused Pallas kernel
+(:func:`repro.kernels.mixing_pallas.collective_step_mix`), this reference,
+and the sharded ``all_to_all``/``all_gather`` runtime
+(:func:`repro.core.mixing._communicate_sharded_collective`) make
+bit-identical rounding decisions; parity reduces to fp reduction order.
+
+Unlike the gossip compressors the collective operates on the **packed**
+``(n, D)`` node-major matrix (``mixing_pallas.flatten_nodes`` layout):
+scales are per ``QBLOCK``-column block, not per leaf, so one collective
+covers the whole parameter vector and the block grid is identical on all
+three backends.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compress import quantize as cq
+from repro.compress.base import column_bits, hash_u32, leaf_seed, \
+    uniform_columns
+
+# Columns per scale block ("per-shard scales"): 4 scale bytes amortized over
+# QBLOCK one-byte codes keeps the wire within 0.5% of exactly 4x vs fp32.
+QBLOCK = 1024
+
+# Compressors the collective supports: quantizers only.  Sparsifier payloads
+# cannot ride a reduce-scatter (per-node index sets make the accumulate
+# dense again and the gather stage saves nothing); configs/base.py mirrors
+# this vocabulary for DistConfig.comm_global_compression.
+COLLECTIVE_COMPRESSORS = ("none", "identity", "int8", "fp8")
+_KINDS = ("int8", "fp8")
+
+_STAGE2 = np.uint32(0x9E3779B9)
+
+
+def stage_seeds(seed: jax.Array, salt: int = 0) -> Tuple[jax.Array, jax.Array]:
+    """Decorrelated uint32 seeds for the two quantization stages of one
+    round.  Both derive from the round seed through the shared counter
+    hash, so every backend (and every node) draws the same bits."""
+    s1 = leaf_seed(seed, salt)
+    return s1, hash_u32(s1 ^ _STAGE2)
+
+
+def pad_cols(x2: Optional[jax.Array], mult: int) -> Optional[jax.Array]:
+    """Zero-pad the column axis to a multiple of ``mult``.  Zero columns
+    quantize to zero codes at every stage (the block absmax ignores them
+    and ``floor(0 + u) = 0``), so padding never leaks into real columns."""
+    if x2 is None:
+        return None
+    pad = (-x2.shape[1]) % mult
+    return jnp.pad(x2, ((0, 0), (0, pad))) if pad else x2
+
+
+def pow2_block_scale(y2b: jax.Array, shift: int) -> jax.Array:
+    """Per-(row, block) power-of-two scale ``2^(ceil(log2 absmax) − shift)``
+    computed purely by exponent **bit manipulation** (no log/exp libm).
+
+    Why powers of two, and why bit ops: the collective's fixed-point
+    guarantee needs the stage-2 codec applied to ``q₁`` (locally, for ρ)
+    and to ``m̄`` (possibly on another device, inside another fusion
+    context, for r) to produce **bit-identical** results on equal inputs.
+    XLA does not promise that two separately-fused instances of the same
+    formula round identically (e.g. one instance's ``/127`` may be
+    strength-reduced to a reciprocal multiply).  With a power-of-two
+    scale every downstream op is either *exact* (scale division,
+    dequantization multiply, integer hash) or a *single* IEEE-rounded op
+    (``v + u``), so any compiler schedule computes the same bits — the
+    same trick fp8 uses, extended to the int8 collective.  ``shift=7``
+    lands int8 codes in (−128, 128] (clipped to ±127); ``shift=8`` lands
+    fp8 operands within e4m3 range.  All-zero blocks map to scale 1.
+    """
+    m = jnp.max(jnp.abs(y2b), axis=-1, keepdims=True)
+    bits = jax.lax.bitcast_convert_type(m, jnp.uint32)
+    e = ((bits >> 23) & np.uint32(0xFF)).astype(jnp.int32)
+    e = e + (bits & np.uint32(0x7FFFFF) != 0)        # ceil to next pow2
+    sbits = jnp.clip(e - shift, 1, 254).astype(jnp.uint32) << 23
+    scale = jax.lax.bitcast_convert_type(sbits, jnp.float32)
+    return jnp.where(m > 0, scale, np.float32(1.0))
+
+
+def quantize_blocks(y2: jax.Array, kind: str, seed: jax.Array,
+                    qblock: int = QBLOCK, col0=0):
+    """Blockwise stochastic quantization of a ``(rows, Dp)`` fp32 matrix
+    (``Dp`` a multiple of ``qblock``).
+
+    Returns ``(codes, scales, q)``: ``codes`` the wire array (int8 or fp8,
+    ``(rows, Dp)``), ``scales`` one fp32 word per ``(row, block)``
+    (``(rows, Dp/qblock)``), ``q`` the dequantized fp32 estimate.  Random
+    bits are keyed on ``col0 +`` the local column index — pass the absolute
+    column offset when quantizing a segment of a wider matrix (the sharded
+    stage-2) so all backends agree.  Scales are powers of two
+    (:func:`pow2_block_scale`), making the codec's fp results independent
+    of compiler fusion — the load-bearing fact behind the bitwise
+    consensus fixed point.
+    """
+    if kind not in _KINDS:
+        raise ValueError(f"collective.quantize_blocks: unsupported kind "
+                         f"{kind!r} (expected one of {_KINDS})")
+    rows, Dp = y2.shape
+    if Dp % qblock:
+        raise ValueError(f"collective.quantize_blocks: {Dp} columns not a "
+                         f"multiple of qblock={qblock} (pad_cols first)")
+    nb = Dp // qblock
+    yb = y2.reshape(rows, nb, qblock)
+    cols = (jnp.asarray(col0, jnp.uint32)
+            + jnp.arange(Dp, dtype=jnp.uint32)).reshape(1, nb, qblock)
+    if kind == "int8":
+        scale = pow2_block_scale(yb, 7)                 # (rows, nb, 1)
+        codes = cq.int8_codes(yb, scale, uniform_columns(seed, cols))
+        q = cq.int8_dequant(codes, scale)
+        wire = codes.astype(jnp.int8)
+    else:
+        scale = pow2_block_scale(yb, 8)
+        codes = cq.fp8_codes(yb, scale, column_bits(seed, cols))
+        q = cq.fp8_dequant(codes, scale)
+        wire = codes
+    return (wire.reshape(rows, Dp), scale.reshape(rows, nb),
+            q.reshape(rows, Dp))
+
+
+def dequant_blocks(codes: jax.Array, scales: jax.Array,
+                   qblock: int = QBLOCK) -> jax.Array:
+    """Inverse of :func:`quantize_blocks`' wire arrays → fp32 estimate."""
+    rows, Dp = codes.shape
+    nb = Dp // qblock
+    return (codes.astype(jnp.float32).reshape(rows, nb, qblock)
+            * scales.reshape(rows, nb, 1)).reshape(rows, Dp)
+
+
+def anchored_mean(q1: jax.Array, n_pods: int = 1) -> jax.Array:
+    """Per-pod dequant-accumulate ``m̄_p = q_{p,0} + mean(q_p − q_{p,0})``
+    over the ``(n, Dp)`` stage-1 estimates → ``(n_pods, Dp)``.  Anchoring at
+    the pod's first row makes a consensus state pass through bitwise (the
+    mean of exact zeros is exactly zero)."""
+    n, Dp = q1.shape
+    per = n // n_pods
+    qp = q1.reshape(n_pods, per, Dp)
+    anchor = qp[:, 0]
+    return anchor + jnp.mean(qp - anchor[:, None], axis=1)
+
+
+def collective_mean(y2: jax.Array, kind: str, seed: jax.Array, *,
+                    n_pods: int = 1, qblock: int = QBLOCK):
+    """Reference two-stage compressed mean of a ``(n, D)`` operand block.
+
+    Returns ``(r, rho, q1)`` trimmed back to ``D`` columns: ``r`` the
+    broadcast mean estimate expanded to per-row ``(n, D)`` (each row its
+    pod's stage-2 estimate), ``rho`` the row's own operand through both
+    stages, ``q1`` the stage-1 estimate (whose residual feeds EF).
+    """
+    n, D = y2.shape
+    yp = pad_cols(y2, qblock)
+    s1, s2 = stage_seeds(seed)
+    _, _, q1 = quantize_blocks(yp, kind, s1, qblock)
+    mbar = anchored_mean(q1, n_pods)
+    _, _, r = quantize_blocks(mbar, kind, s2, qblock)
+    _, _, rho = quantize_blocks(q1, kind, s2, qblock)
+    per = n // n_pods
+    r_rows = jnp.broadcast_to(r[:, None], (n_pods, per, r.shape[1]))
+    r_rows = r_rows.reshape(n, -1)
+    return r_rows[:, :D], rho[:, :D], q1[:, :D]
+
+
+def collective_round(x2: jax.Array, e2: Optional[jax.Array], kind: str,
+                     seed: jax.Array, *, n_pods: int = 1,
+                     qblock: int = QBLOCK):
+    """One compensated compressed-averaging round on the packed ``(n, D)``
+    block: ``mixed = x + (r − ρ)``, EF residual ``e' = (x + e) − q₁``.
+    Returns ``(mixed, new_e)`` (``new_e`` None when ``e2`` is None).  This
+    is the oracle the fused kernel and the sharded runtime are tested
+    against."""
+    y2 = x2 if e2 is None else x2 + e2
+    r, rho, q1 = collective_mean(y2, kind, seed, n_pods=n_pods,
+                                 qblock=qblock)
+    mixed = x2 + (r - rho)
+    new_e = None if e2 is None else y2 - q1
+    return mixed, new_e
+
+
+def collective_wire_bytes(kind: str, d: int, qblock: int = QBLOCK) -> int:
+    """Analytic per-node bytes-on-wire for one compressed-collective round
+    over a ``d``-element operand — one operand's worth of stage-1 payload
+    (codes + per-block scales), the same accounting convention as the
+    uncompressed model's ``d · elem`` for the psum (round_wire_bytes)."""
+    if kind not in _KINDS:
+        raise ValueError(f"collective_wire_bytes: unsupported kind {kind!r}")
+    nb = -(-d // qblock)
+    return nb * qblock * 1 + nb * 4

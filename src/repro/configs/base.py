@@ -208,6 +208,19 @@ class DistConfig:
     comm_compression_k: int = 32     # elements kept per node per leaf for
                                      # the topk/randk sparsifiers (clipped
                                      # to leaf size)
+    comm_global_compression: str = "none"
+                                     # compressed collective for the
+                                     # global/pod-averaging phases
+                                     # (DESIGN.md §2.3 "Compressed
+                                     # collectives"): none | identity |
+                                     # int8 | fp8.  Quantizers only —
+                                     # sparsifier payloads cannot ride a
+                                     # reduce-scatter.  identity routes to
+                                     # the exact psum path bit-identically;
+                                     # a lossy choice supersedes
+                                     # comm_compression/comm_dtype for
+                                     # those phases (gossip rounds keep
+                                     # their own compressor)
     comm_error_feedback: bool = False
                                      # per-node EF residual memory
                                      # (TrainState.ef_state): compression
@@ -250,15 +263,40 @@ class DistConfig:
                 "(expected none|identity|int8|fp8|topk|randk)")
         if self.comm_compression_k < 1:
             raise ValueError("comm_compression_k must be >= 1")
+        # kept in sync with repro.compress.COLLECTIVE_COMPRESSORS
+        # (test_compress.py pins the tuples equal)
+        if self.comm_global_compression not in ("none", "identity", "int8",
+                                                "fp8"):
+            raise ValueError(
+                f"unknown comm_global_compression "
+                f"{self.comm_global_compression!r} (expected "
+                "none|identity|int8|fp8 — sparsifiers cannot ride the "
+                "reduce-scatter collective)")
         if self.comm_error_feedback and self.comm_compression in (
+                "none", "identity") and self.comm_global_compression in (
                 "none", "identity"):
             raise ValueError("comm_error_feedback requires a lossy "
-                             "comm_compression (int8|fp8|topk|randk)")
+                             "comm_compression (int8|fp8|topk|randk) or "
+                             "comm_global_compression (int8|fp8)")
+        if self.n_pods < 1:
+            raise ValueError("n_pods must be >= 1")
         if self.comm_shard_mode not in ("auto", "stacked", "sharded"):
             raise ValueError("comm_shard_mode must be 'auto', 'stacked', "
                              "or 'sharded'")
         if self.pallas_leaf_threshold < 1:
             raise ValueError("pallas_leaf_threshold must be >= 1")
+        return self
+
+    def validate_nodes(self, n_nodes: int) -> "DistConfig":
+        """Checks that need the runtime node count: any algorithm that runs
+        a ``pod_avg`` round requires ``n_pods`` to divide ``n_nodes`` —
+        caught here with a clear error instead of surfacing later as
+        mis-shaped pod blocks/halos in the mixing layer."""
+        if self.algorithm == "hier_pga" and n_nodes % self.n_pods:
+            raise ValueError(
+                f"DistConfig: n_pods={self.n_pods} does not divide "
+                f"n_nodes={n_nodes} — hier_pga's pod_avg round needs equal "
+                f"pod blocks")
         return self
 
 

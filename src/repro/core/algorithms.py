@@ -38,14 +38,23 @@ class Decentralized:
             self.schedule = make_schedule(self.dist)
 
     def phase(self, step: int) -> str:
+        """Pure phase query (schedule.peek_phase) — never advances a
+        stateful schedule; use :meth:`advance` for executed steps."""
         if self.n_nodes == 1:
             return "none"
-        return self.schedule.phase(step)
+        return self.schedule.peek_phase(step)
+
+    def advance(self, step: int) -> str:
+        """Phase of an *executed* step: commits stateful schedules (AGA's
+        period counter).  Call once per training step, in order."""
+        if self.n_nodes == 1:
+            return "none"
+        return self.schedule.advance(step)
 
     def communicate(self, params: PyTree, phase: str, step: int,
                     axis: int = 0, backend: Optional[str] = None,
                     compressor=None, ef_state: Optional[PyTree] = None,
-                    seed=0) -> PyTree:
+                    seed=0, global_compressor=None) -> PyTree:
         if phase == "slowmo":  # parameter part only; momentum handled by caller
             phase = "global"
         return mixing.communicate(
@@ -53,7 +62,8 @@ class Decentralized:
             n_nodes=self.n_nodes, step=step, axis=axis,
             n_pods=self.dist.n_pods,
             backend=backend or self.dist.comm_backend,
-            compressor=compressor, ef_state=ef_state, seed=seed)
+            compressor=compressor, ef_state=ef_state, seed=seed,
+            global_compressor=global_compressor)
 
 
 # ---------------------------------------------------------------------------
@@ -79,6 +89,7 @@ def simulate(
     compression: str = "none",
     compression_k: int = 32,
     error_feedback: bool = False,
+    global_compression: str = "none",
 ) -> Dict[str, np.ndarray]:
     """Run ``algorithm`` on n simulated nodes; returns the trajectory of the
     node-average loss f(x̄^k) and consensus distance ‖x − x̄‖²/n.
@@ -94,24 +105,30 @@ def simulate(
     ``compression`` selects a wire compressor (repro.compress registry;
     DESIGN.md §2.3); ``error_feedback=True`` threads per-node EF memory
     through the trajectory.  The step index seeds the stochastic rounding,
-    so compressed runs are reproducible per seed.
+    so compressed runs are reproducible per seed.  ``global_compression``
+    (int8|fp8) runs the averaging phases through the compressed
+    reduce-scatter → all-gather collective (DESIGN.md §2.3 "Compressed
+    collectives") instead of the exact mean.
     """
     dist = DistConfig(algorithm=algorithm, topology=topology, H=H,
                       comm_backend=backend, comm_compression=compression,
                       comm_compression_k=compression_k,
                       comm_error_feedback=error_feedback,
+                      comm_global_compression=global_compression,
                       **(aga_kwargs or {})).validate()
     algo = Decentralized(dist, n)
     lr_fn = lr if callable(lr) else (lambda k: lr)
     from repro.compress import init_ef_state, make_compressor
     compressor = make_compressor(compression, k=compression_k)
     lossy = compressor is not None and compressor.lossy
+    global_comp = make_compressor(global_compression)
+    glossy = global_comp is not None and global_comp.lossy
     use_pallas = backend == "pallas"
     if use_pallas:
         from repro.kernels import mixing_pallas
 
     x = jnp.broadcast_to(x0, (n,) + x0.shape)          # x_i^(0) identical
-    ef = init_ef_state(x) if (lossy and error_feedback) else None
+    ef = init_ef_state(x) if ((lossy or glossy) and error_feedback) else None
     slow_x = x0                                         # SlowMo slow params
     slow_u = jnp.zeros_like(x0)
 
@@ -127,7 +144,8 @@ def simulate(
         g = grad_fn(x, key, k)
         x_half = x - gamma * g
         return algo.communicate(x_half, phase, shift_step,
-                                compressor=compressor, ef_state=ef, seed=k)
+                                compressor=compressor, ef_state=ef, seed=k,
+                                global_compressor=global_comp)
 
     @functools.partial(jax.jit,
                        static_argnames=("phase", "shift_step",
@@ -153,15 +171,17 @@ def simulate(
     for k in range(steps):
         key, sub = jax.random.split(key)
         gamma = float(lr_fn(k))
-        phase = algo.phase(k)
+        phase = algo.advance(k)   # executed step: commit schedule state
         shift_step = algo.schedule.gossip_shift_step(k, period)
         is_eval = k % eval_every == 0 or k == steps - 1
         xbar = resid = None
+        lossy_round = (lossy and phase in ("gossip", "global", "pod_avg")) \
+            or (glossy and phase in ("global", "pod_avg"))
         if phase == "slowmo":
             g = grad_fn(x, sub, k)
             x_half = x - gamma * g
             x, slow_x, slow_u = slowmo_outer(x_half, slow_x, slow_u, gamma)
-        elif lossy and phase in ("gossip", "global", "pod_avg"):
+        elif lossy_round:
             x, ef = comp_step_fn(x, ef, sub, k, gamma, phase, shift_step)
         elif use_pallas and phase in ("gossip", "global", "pod_avg"):
             if is_eval:  # fused: mix + x̄ + consensus in one parameter pass

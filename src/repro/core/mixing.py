@@ -82,6 +82,17 @@ def _check_backend(backend: str, axis: int,
     return backend == "pallas"
 
 
+def _check_pods(n_nodes: int, n_pods: int, caller: str) -> None:
+    """pod_avg needs equal pod blocks; validated up front (before any no-op
+    early return) so a bad ``n_pods`` surfaces as this message instead of
+    mis-shaped pod blocks/halos deeper in the round."""
+    if n_pods < 1 or n_nodes % n_pods:
+        raise ValueError(
+            f"{caller}: n_pods={n_pods} does not divide n_nodes={n_nodes} "
+            f"— the pod_avg round needs equal pod blocks "
+            f"(DistConfig.validate_nodes catches this at config time)")
+
+
 def node_axis_names(mesh: jax.sharding.Mesh, node_axis: str = "data"
                     ) -> Tuple[str, ...]:
     """Mesh axis names forming the gossip node axis under
@@ -193,50 +204,114 @@ def mix_pytree(params: PyTree, topology: str, n: int, step: int = 0,
                         params)
 
 
+def _collective_round_reference(params: PyTree, compressor, ef_state,
+                                seed, n_pods: int = 1):
+    """Reference compressed-collective averaging round on the packed
+    ``(n, D)`` state (repro.compress.collective; DESIGN.md §2.3
+    "Compressed collectives").  Returns ``(mixed, new_ef_state)``."""
+    from repro.compress import collective as ccol
+    from repro.kernels.mixing_pallas import flatten_nodes
+
+    xf, unflatten = flatten_nodes(params)
+    ef2 = ef_unflatten = None
+    if ef_state is not None:
+        ef2, ef_unflatten = flatten_nodes(ef_state)
+    mixed, new_e = ccol.collective_round(xf, ef2, compressor.name, seed,
+                                         n_pods=n_pods)
+    return unflatten(mixed), (ef_unflatten(new_e) if ef2 is not None
+                              else None)
+
+
 def global_average_pytree(params: PyTree, axis: int = 0,
                           comm_dtype=None,
                           backend: str = "reference",
-                          leaf_threshold: Optional[int] = None) -> PyTree:
+                          leaf_threshold: Optional[int] = None,
+                          compressor=None, ef_state: Optional[PyTree] = None,
+                          seed=0):
     """Periodic global averaging ``x ← (1/n)𝟙𝟙ᵀ x`` (All-Reduce step).
     With ``comm_dtype`` the reduction runs on wire-dtype operands — the
     all-reduce moves half the bytes (node counts are small, so bf16
-    accumulation over n ≤ 32 replicas is benign)."""
-    if _check_backend(backend, axis, caller="mixing.global_average_pytree"):
+    accumulation over n ≤ 32 replicas is benign).
+
+    With a lossy ``compressor`` (``DistConfig.comm_global_compression``)
+    the round runs the compressed collective instead — the compensated
+    ``x + (r − ρ)`` around a chunked reduce-scatter → all-gather of
+    int8/fp8 blocks (DESIGN.md §2.3 "Compressed collectives"); the payload
+    supersedes ``comm_dtype`` and the return value becomes
+    ``(mixed, new_ef_state)``.
+    """
+    use_pallas = _check_backend(backend, axis,
+                                caller="mixing.global_average_pytree")
+    if compressor is not None and compressor.lossy:
+        if axis != 0:
+            raise ValueError("mixing.global_average_pytree: the compressed "
+                             "collective requires the node axis at "
+                             f"position 0 (got axis={axis})")
+        if use_pallas:
+            from repro.kernels import mixing_pallas
+            n = jax.tree.leaves(params)[0].shape[0]
+            return mixing_pallas.collective_step_mix(
+                params, compressor=compressor, ef_state=ef_state, seed=seed,
+                phase="global", n_nodes=n)
+        return _collective_round_reference(params, compressor, ef_state,
+                                           seed)
+    if use_pallas:
         from repro.kernels import mixing_pallas
         leaves = jax.tree.leaves(params)
-        return mixing_pallas.global_average(params, leaves[0].shape[0],
-                                            comm_dtype=comm_dtype,
-                                            leaf_threshold=leaf_threshold)
+        out = mixing_pallas.global_average(params, leaves[0].shape[0],
+                                           comm_dtype=comm_dtype,
+                                           leaf_threshold=leaf_threshold)
+        return (out, ef_state) if compressor is not None else out
     def avg(p):
         src = p.astype(comm_dtype) if comm_dtype is not None else p
         m = jnp.mean(src, axis=axis, keepdims=True)
         return jnp.broadcast_to(m, p.shape).astype(p.dtype)
-    return jax.tree.map(avg, params)
+    out = jax.tree.map(avg, params)
+    return (out, ef_state) if compressor is not None else out
 
 
 def pod_average_pytree(params: PyTree, n_pods: int, axis: int = 0,
                        comm_dtype=None,
                        backend: str = "reference",
-                       leaf_threshold: Optional[int] = None) -> PyTree:
+                       leaf_threshold: Optional[int] = None,
+                       compressor=None, ef_state: Optional[PyTree] = None,
+                       seed=0):
     """Hierarchical averaging (beyond-paper Hier-PGA, DESIGN.md §4): exact
     average *within* each pod's block of nodes — an all-reduce over the
     cheap intra-pod ICI, leaving cross-pod DCI traffic to the (rarer)
-    global step."""
-    if _check_backend(backend, axis, caller="mixing.pod_average_pytree"):
+    global step.  With a lossy ``compressor`` the intra-pod collective
+    runs compressed, same contract as :func:`global_average_pytree`."""
+    use_pallas = _check_backend(backend, axis,
+                                caller="mixing.pod_average_pytree")
+    n = jax.tree.leaves(params)[0].shape[axis]
+    _check_pods(n, n_pods, "mixing.pod_average_pytree")
+    if compressor is not None and compressor.lossy:
+        if axis != 0:
+            raise ValueError("mixing.pod_average_pytree: the compressed "
+                             "collective requires the node axis at "
+                             f"position 0 (got axis={axis})")
+        if use_pallas:
+            from repro.kernels import mixing_pallas
+            return mixing_pallas.collective_step_mix(
+                params, compressor=compressor, ef_state=ef_state, seed=seed,
+                phase="pod_avg", n_nodes=n, n_pods=n_pods)
+        return _collective_round_reference(params, compressor, ef_state,
+                                           seed, n_pods=n_pods)
+    if use_pallas:
         from repro.kernels import mixing_pallas
-        leaves = jax.tree.leaves(params)
-        return mixing_pallas.pod_average(params, leaves[0].shape[0], n_pods,
-                                         comm_dtype=comm_dtype,
-                                         leaf_threshold=leaf_threshold)
+        out = mixing_pallas.pod_average(params, n, n_pods,
+                                        comm_dtype=comm_dtype,
+                                        leaf_threshold=leaf_threshold)
+        return (out, ef_state) if compressor is not None else out
     def avg(p):
-        n = p.shape[axis]
-        per = n // n_pods
+        per = p.shape[axis] // n_pods
         shp = p.shape[:axis] + (n_pods, per) + p.shape[axis + 1:]
         src = p.astype(comm_dtype) if comm_dtype is not None else p
         g = src.reshape(shp)
         m = jnp.mean(g, axis=axis + 1, keepdims=True)
         return jnp.broadcast_to(m, g.shape).reshape(p.shape).astype(p.dtype)
-    return jax.tree.map(avg, params)
+    out = jax.tree.map(avg, params)
+    return (out, ef_state) if compressor is not None else out
 
 
 # ---------------------------------------------------------------------------
@@ -327,21 +402,44 @@ def _communicate_compressed(params: PyTree, *, compressor, ef_state,
                             seed, phase: str, topology: str, n_nodes: int,
                             step: int, axis: int, comm_dtype, n_pods: int,
                             backend: str, mesh, node_axis: str,
-                            shard_mode: str, leaf_threshold):
+                            shard_mode: str, leaf_threshold,
+                            global_compressor=None):
     """Compressor-aware dispatch behind :func:`communicate` — always
-    returns ``(mixed, new_ef_state)``."""
+    returns ``(mixed, new_ef_state)``.  ``global_compressor``
+    (``DistConfig.comm_global_compression``) overrides the averaging
+    phases with the compressed collective; ``compressor`` keeps handling
+    gossip rounds."""
+    if phase not in ("none", "gossip", "global", "pod_avg"):
+        raise ValueError(f"unknown communication phase {phase!r}")
+    if phase == "pod_avg":
+        _check_pods(n_nodes, n_pods, "mixing.communicate")
     if phase == "none" or n_nodes == 1:
         return params, ef_state
-    if not compressor.lossy:
-        # identity: the exact pre-compression path, bit-identically
+    glossy = global_compressor is not None and global_compressor.lossy
+    if glossy and phase in ("global", "pod_avg"):
+        # the collective supersedes the gossip compressor and comm_dtype
+        # for the averaging phases (DESIGN.md §2.3 Compressed collectives)
+        if use_sharded_backend(backend, mesh, node_axis, shard_mode):
+            return _communicate_sharded_collective(
+                params, compressor=global_compressor, ef_state=ef_state,
+                seed=seed, phase=phase, n_nodes=n_nodes, n_pods=n_pods,
+                mesh=mesh, node_axis=node_axis)
+        if phase == "global":
+            return global_average_pytree(
+                params, axis=axis, backend=backend,
+                compressor=global_compressor, ef_state=ef_state, seed=seed)
+        return pod_average_pytree(
+            params, n_pods, axis=axis, backend=backend,
+            compressor=global_compressor, ef_state=ef_state, seed=seed)
+    if compressor is None or not compressor.lossy:
+        # identity / no gossip compressor: the exact pre-compression path,
+        # bit-identically
         mixed = communicate(
             params, phase=phase, topology=topology, n_nodes=n_nodes,
             step=step, axis=axis, comm_dtype=comm_dtype, n_pods=n_pods,
             backend=backend, mesh=mesh, node_axis=node_axis,
             shard_mode=shard_mode, leaf_threshold=leaf_threshold)
         return mixed, ef_state
-    if phase not in ("gossip", "global", "pod_avg"):
-        raise ValueError(f"unknown communication phase {phase!r}")
     # gossip/pod_avg: the lossy payload IS the wire, comm_dtype is
     # superseded; global: the psum operand is uncompressed fp32 sums, so
     # comm_dtype still wire-casts it on every backend (DESIGN.md §2.3)
@@ -374,7 +472,7 @@ def communicate(params: PyTree, *, phase: str, topology: str, n_nodes: int,
                 node_axis: str = "data", shard_mode: str = "auto",
                 leaf_threshold: Optional[int] = None,
                 compressor=None, ef_state: Optional[PyTree] = None,
-                seed=0) -> PyTree:
+                seed=0, global_compressor=None) -> PyTree:
     """Apply one communication round to decentralized parameters.
 
     phase:
@@ -405,9 +503,16 @@ def communicate(params: PyTree, *, phase: str, topology: str, n_nodes: int,
     step for unbiased stochastic rounding).  The identity compressor
     routes to the exact uncompressed path, bit-identically
     (DESIGN.md §2.3).
+
+    ``global_compressor`` (``DistConfig.comm_global_compression``) adds
+    the compressed reduce-scatter → all-gather collective for the
+    ``"global"``/``"pod_avg"`` phases (DESIGN.md §2.3 "Compressed
+    collectives"); it supersedes ``compressor`` and ``comm_dtype`` there,
+    leaves gossip rounds untouched, and makes the return value
+    ``(mixed, new_ef_state)`` like ``compressor`` does.
     """
     _check_backend(backend, axis, caller="mixing.communicate")
-    if compressor is not None:
+    if compressor is not None or global_compressor is not None:
         if axis != 0:
             raise ValueError("mixing.communicate: compression requires the "
                              f"node axis at position 0 (got axis={axis})")
@@ -416,7 +521,10 @@ def communicate(params: PyTree, *, phase: str, topology: str, n_nodes: int,
             phase=phase, topology=topology, n_nodes=n_nodes, step=step,
             axis=axis, comm_dtype=comm_dtype, n_pods=n_pods,
             backend=backend, mesh=mesh, node_axis=node_axis,
-            shard_mode=shard_mode, leaf_threshold=leaf_threshold)
+            shard_mode=shard_mode, leaf_threshold=leaf_threshold,
+            global_compressor=global_compressor)
+    if phase == "pod_avg":
+        _check_pods(n_nodes, n_pods, "mixing.communicate")
     if phase == "none" or n_nodes == 1:
         return params
     if use_sharded_backend(backend, mesh, node_axis, shard_mode):
@@ -480,7 +588,7 @@ def communicate_sharded(params: PyTree, *, phase: str, topology: str,
                         block_d: int = 2048,
                         interpret: Optional[bool] = None,
                         compressor=None, ef_state: Optional[PyTree] = None,
-                        seed=0):
+                        seed=0, global_compressor=None):
     """One communication round with the node axis sharded over ``mesh``.
 
     The stacked ``(n, D)`` state never exists on one device: a shard_map
@@ -504,6 +612,12 @@ def communicate_sharded(params: PyTree, *, phase: str, topology: str,
     wire-bytes reduction physically happens — and each shard rebuilds its
     neighbors' estimates locally before the compensated per-shard kernel
     (DESIGN.md §2.3).  Returns ``(mixed, new_ef_state)``.
+
+    With a lossy ``global_compressor`` the averaging phases route to the
+    compressed reduce-scatter → all-gather collective
+    (:func:`_communicate_sharded_collective`; DESIGN.md §2.3 "Compressed
+    collectives"), superseding ``compressor``/``comm_dtype`` for those
+    phases; same ``(mixed, new_ef_state)`` contract.
     """
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
@@ -522,6 +636,27 @@ def communicate_sharded(params: PyTree, *, phase: str, topology: str,
     if phase not in ("gossip", "global", "pod_avg"):
         raise ValueError(f"communicate_sharded: no sharded kernel for "
                          f"phase {phase!r}")
+    if phase == "pod_avg":
+        _check_pods(n_nodes, n_pods, "mixing.communicate_sharded")
+    if global_compressor is not None and phase in ("global", "pod_avg"):
+        if grads is not None or with_residual:
+            raise ValueError("communicate_sharded: the compressed "
+                             "collective composes with neither the fused "
+                             "half-step nor the fused residual (apply the "
+                             "optimizer first; consensus falls back to "
+                             "train.state.consensus_distance)")
+        if global_compressor.lossy:
+            return _communicate_sharded_collective(
+                params, compressor=global_compressor, ef_state=ef_state,
+                seed=seed, phase=phase, n_nodes=n_nodes, n_pods=n_pods,
+                mesh=mesh, node_axis=node_axis)
+        # identity collective: the exact psum path, bit-identically
+        mixed = communicate_sharded(
+            params, phase=phase, topology=topology, n_nodes=n_nodes,
+            step=step, comm_dtype=comm_dtype, n_pods=n_pods, mesh=mesh,
+            node_axis=node_axis, block_d=block_d, interpret=interpret,
+            compressor=compressor, ef_state=ef_state, seed=seed)
+        return mixed if compressor is not None else (mixed, ef_state)
     if compressor is not None:
         if not compressor.lossy:   # identity: exact uncompressed path
             mixed = communicate_sharded(
@@ -716,3 +851,84 @@ def _communicate_sharded_compressed(params: PyTree, *, compressor, ef_state,
                    check_rep=False)
     out = fn(xf, jnp.asarray(Mstack), jnp.asarray(wstack), *wire_arrs)
     return unflatten(out), new_ef
+
+
+def _communicate_sharded_collective(params: PyTree, *, compressor, ef_state,
+                                    seed, phase: str, n_nodes: int,
+                                    n_pods: int, mesh: jax.sharding.Mesh,
+                                    node_axis: str = "data",
+                                    qblock: Optional[int] = None):
+    """Compressed global/pod-averaging collective with the node axis
+    sharded over ``mesh`` (DESIGN.md §2.3 "Compressed collectives").
+
+    The chunked reduce-scatter runs as one ``all_to_all`` of the stage-1
+    **wire arrays** (int8/fp8 codes + per-block fp32 scales) — the
+    compressed bytes are exactly what crosses the ICI; each column
+    segment's owner dequantizes, applies the anchored accumulate, and
+    re-quantizes the (per-pod) mean chunk, which returns via an
+    ``all_gather`` of stage-2 codes+scales.  Stage-1 quantization, the
+    EF residual ``e' = y − q₁``, and the local emulation ``ρ = Q₂(q₁)``
+    are row-local and run *outside* the shard_map, so GSPMD keeps them
+    collective-free; the compensated combine ``x + (r − ρ)`` is
+    elementwise.  Returns ``(mixed, new_ef_state)``.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    from repro.compress import collective as ccol
+    from repro.kernels import mixing_pallas
+
+    names = node_axis_names(mesh, node_axis)
+    k = node_shard_count(mesh, node_axis)
+    n = n_nodes
+    if n % k:
+        raise ValueError(f"communicate_sharded: n_nodes={n} not divisible "
+                         f"by the {k} node-axis shards of mesh axes {names}")
+    pods = n_pods if phase == "pod_avg" else 1
+    _check_pods(n, pods, "mixing.communicate_sharded")
+    kind = compressor.name
+    qb = ccol.QBLOCK if qblock is None else qblock
+
+    xf, unflatten = mixing_pallas.flatten_nodes(params)
+    ef2 = ef_unflatten = None
+    if ef_state is not None:
+        ef2, ef_unflatten = mixing_pallas.flatten_nodes(ef_state)
+    D = xf.shape[1]
+    # segment boundaries must land on scale blocks: pad to k·qblock
+    xp = ccol.pad_cols(xf, k * qb)
+    ep = ccol.pad_cols(ef2, k * qb)
+    Dp = xp.shape[1]
+    s1, s2 = ccol.stage_seeds(seed)
+
+    y = xp if ep is None else xp + ep
+    codes1, scales1, q1 = ccol.quantize_blocks(y, kind, s1, qb)
+    new_ef = None if ep is None else (y - q1)[:, :D]
+    _, _, rho = ccol.quantize_blocks(q1, kind, s2, qb)
+
+    seg = Dp // k
+    axis_sizes = [mesh.shape[a] for a in names]
+
+    def body(cb, sb):
+        # reduce-scatter: the compressed wire arrays cross the ICI
+        ac = jax.lax.all_to_all(cb, names, split_axis=1, concat_axis=0,
+                                tiled=True)                     # (n, seg)
+        asc = jax.lax.all_to_all(sb, names, split_axis=1, concat_axis=0,
+                                 tiled=True)                    # (n, nb/k)
+        q_seg = ccol.dequant_blocks(ac, asc, qb)
+        mbar = ccol.anchored_mean(q_seg, pods)                  # (p, seg)
+        shard = 0
+        for a, sz in zip(names, axis_sizes):
+            shard = shard * sz + jax.lax.axis_index(a)
+        c2, sc2, _ = ccol.quantize_blocks(mbar, kind, s2, qb,
+                                          col0=shard * seg)
+        gc = jax.lax.all_gather(c2, names, axis=1, tiled=True)  # (p, Dp)
+        gs = jax.lax.all_gather(sc2, names, axis=1, tiled=True)
+        return ccol.dequant_blocks(gc, gs, qb)                  # (p, Dp)
+
+    fn = shard_map(body, mesh=mesh, in_specs=(P(names), P(names)),
+                   out_specs=P(), check_rep=False)
+    r = fn(codes1, scales1)
+    per = n // pods
+    r_rows = jnp.broadcast_to(r[:, None], (pods, per, Dp)).reshape(n, Dp)
+    mixed = (xp + (r_rows - rho))[:, :D]
+    return unflatten(mixed), (ef_unflatten(new_ef) if ep is not None
+                              else None)

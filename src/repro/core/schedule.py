@@ -17,10 +17,33 @@ from repro.configs.base import DistConfig
 class CommSchedule:
     """Base: decides the communication phase of step k (0-based).  Phase of
     step k applies *after* the local SGD update of step k, matching paper
-    Alg. 1 where mod(k+1, H) == 0 triggers global averaging."""
+    Alg. 1 where mod(k+1, H) == 0 triggers global averaging.
+
+    Two entry points with distinct contracts:
+
+    * :meth:`peek_phase` (and its alias :meth:`phase`) is **pure** — it
+      never mutates schedule state, so dryrun/roofline/logging code can
+      query any step's phase without desyncing a stateful schedule (the
+      purity this module's docstring promises; regression-tested by
+      ``test_schedule.test_aga_phase_is_pure``).
+    * :meth:`advance` is the trainer's once-per-executed-step call: it
+      returns the step's phase *and* commits any internal counters (AGA's
+      period counter).  For stateless schedules the two coincide.
+    """
+
+    def peek_phase(self, step: int) -> str:
+        """Phase of step k, with no side effects."""
+        raise NotImplementedError
 
     def phase(self, step: int) -> str:
-        raise NotImplementedError
+        """Pure alias of :meth:`peek_phase` (kept for callers predating
+        the peek/advance split)."""
+        return self.peek_phase(step)
+
+    def advance(self, step: int) -> str:
+        """Phase of step k, committing schedule state.  Call exactly once
+        per executed training step, in step order."""
+        return self.peek_phase(step)
 
     def gossip_shift_step(self, step: int, period: int = 1) -> int:
         """Index fed to the time-varying one-peer-exp graph, reduced modulo
@@ -30,18 +53,30 @@ class CommSchedule:
     def observe_loss(self, step: int, loss: float) -> None:  # AGA hook
         pass
 
+    # -- resume support ---------------------------------------------------
+    def state_dict(self) -> dict:
+        """JSON-serializable internal state (empty for stateless
+        schedules).  Stateful schedules (AGA's period counter and H
+        adaptation) must round-trip through this, or a resumed run
+        desyncs from the uninterrupted one — the Trainer writes it next
+        to each checkpoint and reloads it on resume."""
+        return {}
+
+    def load_state_dict(self, state: dict) -> None:
+        pass
+
 
 @dataclass
 class ParallelSchedule(CommSchedule):
     """Parallel SGD: exact global average every step (W = J)."""
-    def phase(self, step: int) -> str:
+    def peek_phase(self, step: int) -> str:
         return "global"
 
 
 @dataclass
 class GossipSchedule(CommSchedule):
     """Gossip SGD: H → ∞ (paper Remark 4)."""
-    def phase(self, step: int) -> str:
+    def peek_phase(self, step: int) -> str:
         return "gossip"
 
 
@@ -50,7 +85,7 @@ class LocalSchedule(CommSchedule):
     """Local SGD: W = I between periodic All-Reduce syncs."""
     H: int = 6
 
-    def phase(self, step: int) -> str:
+    def peek_phase(self, step: int) -> str:
         return "global" if (step + 1) % self.H == 0 else "none"
 
 
@@ -59,7 +94,7 @@ class PGASchedule(CommSchedule):
     """Gossip-PGA (paper Alg. 1): gossip every step, All-Reduce every H."""
     H: int = 6
 
-    def phase(self, step: int) -> str:
+    def peek_phase(self, step: int) -> str:
         return "global" if (step + 1) % self.H == 0 else "gossip"
 
 
@@ -90,13 +125,32 @@ class AGASchedule(CommSchedule):
     def observe_loss(self, step: int, loss: float) -> None:
         self._F_last = float(loss)
 
-    def phase(self, step: int) -> str:
-        self._C += 1
-        if self._C >= self._H:
+    def peek_phase(self, step: int) -> str:
+        """Pure: what :meth:`advance` would return for the next executed
+        step, with the period counter untouched — safe for dryrun/roofline/
+        logging probes (the pre-split ``phase()`` advanced the live counter
+        on every query, silently desyncing H adaptation)."""
+        return "global" if self._C + 1 >= self._H else "gossip"
+
+    def advance(self, step: int) -> str:
+        ph = self.peek_phase(step)
+        if ph == "global":
             self._C = 0
             self._update_period(step)
-            return "global"
-        return "gossip"
+        else:
+            self._C += 1
+        return ph
+
+    def state_dict(self) -> dict:
+        return {"C": self._C, "H": self._H, "F_init": self._F_init,
+                "F_last": self._F_last, "history": list(self.history)}
+
+    def load_state_dict(self, state: dict) -> None:
+        self._C = int(state["C"])
+        self._H = int(state["H"])
+        self._F_init = state["F_init"]
+        self._F_last = state["F_last"]
+        self.history = list(state["history"])
 
     def _update_period(self, step: int) -> None:
         if self._F_last is None:
@@ -121,7 +175,7 @@ class HierPGASchedule(CommSchedule):
     H_pod: int = 3
     H_global: int = 12
 
-    def phase(self, step: int) -> str:
+    def peek_phase(self, step: int) -> str:
         if (step + 1) % self.H_global == 0:
             return "global"
         if (step + 1) % self.H_pod == 0:
@@ -136,7 +190,7 @@ class SlowMoSchedule(CommSchedule):
     trainer to dispatch the slow-momentum step variant."""
     H: int = 6
 
-    def phase(self, step: int) -> str:
+    def peek_phase(self, step: int) -> str:
         return "slowmo" if (step + 1) % self.H == 0 else "gossip"
 
 

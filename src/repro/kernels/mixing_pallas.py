@@ -608,6 +608,161 @@ def compressed_step_mix(params: PyTree, *, compressor,
     return mixed_tree, jax.tree.unflatten(treedef, new_ef_leaves)
 
 
+def _collective_kernel(*refs, kind: str, with_ef: bool, n_pods: int):
+    """One ``qblock`` tile of the compressed-collective averaging round
+    (DESIGN.md §2.3 "Compressed collectives"):
+
+        q₁ = Q₁(x + e);  m̄ = q₁[pod,0] + mean(q₁ − q₁[pod,0]);
+        o  = x + (Q₂(m̄)[pod] − Q₂(q₁));  e' = (x + e) − q₁
+
+    entirely in-register — stage-1 and stage-2 codes never exist in HBM on
+    the stacked path.  The kernel tile *is* the scale block (the grid walks
+    D in ``qblock`` columns), so the per-tile row absmax is exactly the
+    per-(row, block) scale of the reference
+    (repro.compress.collective.quantize_blocks), and the random bits come
+    from the same column hash — bit-identical rounding decisions.
+
+    Ref order: [s1, s2, x, e?] → [o, ef?].
+    """
+    from repro.compress import base as cbase
+    from repro.compress import collective as ccol
+    from repro.compress import quantize as cq
+
+    s1_ref, s2_ref, x_ref = refs[0], refs[1], refs[2]
+    idx = 3
+    if with_ef:
+        e_ref = refs[idx]; idx += 1
+    o_ref = refs[idx]; idx += 1
+    if with_ef:
+        ef_ref = refs[idx]; idx += 1
+
+    x = x_ref[...].astype(jnp.float32)                       # (n, bd)
+    y = x + e_ref[...].astype(jnp.float32) if with_ef else x
+    n, bd = x.shape
+    base = (pl.program_id(0) * bd).astype(jnp.uint32)
+    cols = base + jax.lax.broadcasted_iota(jnp.uint32, (n, bd), 1)
+
+    # power-of-two block scales (ccol.pow2_block_scale): every codec op is
+    # exact or single-rounded, so this in-kernel instance and the
+    # reference/sharded instances are bit-identical on equal inputs — the
+    # bitwise consensus fixed point does not depend on fusion decisions
+    if kind == "int8":
+        def enc(v, seed, c):
+            scale = ccol.pow2_block_scale(v, 7)
+            u = cbase.uniform_columns(seed, c)
+            return cq.int8_dequant(cq.int8_codes(v, scale, u), scale)
+    else:
+        def enc(v, seed, c):
+            scale = ccol.pow2_block_scale(v, 8)
+            bits = cbase.column_bits(seed, c)
+            return cq.fp8_dequant(cq.fp8_codes(v, scale, bits), scale)
+
+    q1 = enc(y, s1_ref[0, 0], cols)
+    if with_ef:
+        ef_ref[...] = (y - q1).astype(ef_ref.dtype)
+    per = n // n_pods
+    qp = q1.reshape(n_pods, per, bd)
+    anchor = qp[:, 0]
+    # anchored accumulate: a consensus tile passes through bitwise
+    mbar = anchor + jnp.mean(qp - anchor[:, None], axis=1)   # (p, bd)
+    r = enc(mbar, s2_ref[0, 0], cols[:n_pods])
+    rho = enc(q1, s2_ref[0, 0], cols)
+    r_rows = jnp.broadcast_to(r[:, None], (n_pods, per, bd)).reshape(n, bd)
+    o_ref[...] = (x + (r_rows - rho)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("kind", "with_ef", "n_pods", "qblock", "interpret"))
+def _collective_flat(xf: jax.Array, ef: Optional[jax.Array],
+                     s1: jax.Array, s2: jax.Array, *, kind: str,
+                     with_ef: bool, n_pods: int, qblock: int,
+                     interpret: bool):
+    """Run the collective kernel over the packed (n, D) matrix; the grid
+    tile equals the scale block, so padding to a ``qblock`` multiple keeps
+    block boundaries identical to the reference."""
+    from repro.compress import collective as ccol
+
+    n, D = xf.shape
+    xf = ccol.pad_cols(xf, qblock)
+    ef = ccol.pad_cols(ef, qblock)
+    Dp = xf.shape[1]
+
+    tile = lambda i: (0, i)
+    scalar = lambda i: (0, 0)
+    in_specs = [pl.BlockSpec((1, 1), scalar), pl.BlockSpec((1, 1), scalar),
+                pl.BlockSpec((n, qblock), tile)]
+    inputs = [jnp.asarray(s1).astype(jnp.uint32).reshape(1, 1),
+              jnp.asarray(s2).astype(jnp.uint32).reshape(1, 1), xf]
+    if with_ef:
+        in_specs.append(pl.BlockSpec((n, qblock), tile))
+        inputs.append(ef)
+
+    out_shape = [jax.ShapeDtypeStruct((n, Dp), xf.dtype)]
+    out_specs = [pl.BlockSpec((n, qblock), tile)]
+    if with_ef:
+        out_shape.append(jax.ShapeDtypeStruct((n, Dp), jnp.float32))
+        out_specs.append(pl.BlockSpec((n, qblock), tile))
+
+    out = pl.pallas_call(
+        functools.partial(_collective_kernel, kind=kind, with_ef=with_ef,
+                          n_pods=n_pods),
+        grid=(Dp // qblock,),
+        in_specs=in_specs,
+        out_specs=tuple(out_specs) if with_ef else out_specs[0],
+        out_shape=tuple(out_shape) if with_ef else out_shape[0],
+        input_output_aliases={2: 0},
+        interpret=interpret,
+    )(*inputs)
+
+    if with_ef:
+        mixed, ef_out = out
+        return mixed[:, :D], ef_out[:, :D]
+    return out[:, :D], None
+
+
+def collective_step_mix(params: PyTree, *, compressor,
+                        ef_state: Optional[PyTree] = None, seed=0,
+                        phase: str, n_nodes: int, n_pods: int = 1,
+                        qblock: Optional[int] = None,
+                        interpret: Optional[bool] = None):
+    """Fused compressed global/pod-averaging round (DESIGN.md §2.3
+    "Compressed collectives"): the packed ``(n, D)`` state goes through
+    quantize → anchored accumulate → re-quantize → compensate in one HBM
+    pass; int8/fp8 codes never hit HBM.  Unlike ``compressed_step_mix``
+    dispatch is the *packed* matrix, not per-leaf — collective scales are
+    per ``qblock`` column block, so leaf boundaries don't carry salts.
+
+    Returns ``(mixed, new_ef_state)`` (``new_ef_state`` None when
+    ``ef_state`` is None).
+    """
+    from repro.compress import collective as ccol
+
+    if phase not in ("global", "pod_avg"):
+        raise ValueError(f"collective_step_mix: phase {phase!r} is not an "
+                         f"averaging round (expected 'global' or 'pod_avg')")
+    pods = n_pods if phase == "pod_avg" else 1
+    if n_nodes % max(pods, 1) or pods < 1:
+        raise ValueError(f"collective_step_mix: n_pods={pods} does not "
+                         f"divide n_nodes={n_nodes}")
+    kind = compressor.name
+    qb = ccol.QBLOCK if qblock is None else qblock
+    interp = _default_interpret() if interpret is None else interpret
+
+    xf, unflatten = flatten_nodes(params)
+    with_ef = ef_state is not None
+    ef_unflatten = None
+    ef2 = None
+    if with_ef:
+        ef2, ef_unflatten = flatten_nodes(ef_state)
+    s1, s2 = ccol.stage_seeds(seed)
+    mixed, ef_out = _collective_flat(xf, ef2, s1, s2, kind=kind,
+                                     with_ef=with_ef, n_pods=pods,
+                                     qblock=qb, interpret=interp)
+    return (unflatten(mixed),
+            ef_unflatten(ef_out) if with_ef else None)
+
+
 def _shard_cmix_kernel(x_ref, q_ref, qs_ref, w_ref, m_ref, o_ref):
     """Per-shard compensated compressed mix: ``x + (M_r·qs − w ⊙ q_self)``
     where ``qs`` stacks the locally rebuilt neighbor estimates (the

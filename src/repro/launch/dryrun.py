@@ -142,7 +142,8 @@ def dryrun_train(cfg, shape, mesh, *, dist: DistConfig, phases=("gossip",
             phase, dist.topology, specs.n_nodes, per_node_params,
             comm_dtype=dist.comm_dtype, compression=dist.comm_compression,
             k=dist.comm_compression_k, n_pods=dist.n_pods,
-            leaf_sizes=leaf_sizes)
+            leaf_sizes=leaf_sizes,
+            global_compression=dist.comm_global_compression)
         wb_fp32 = round_wire_bytes(phase, dist.topology, specs.n_nodes,
                                    per_node_params, n_pods=dist.n_pods)
         out["phases"][phase] = {
@@ -153,6 +154,7 @@ def dryrun_train(cfg, shape, mesh, *, dist: DistConfig, phases=("gossip",
             "wire": {"bytes_per_node": wb,
                      "fp32_bytes_per_node": wb_fp32,
                      "compression": dist.comm_compression,
+                     "global_compression": dist.comm_global_compression,
                      "reduction": (wb_fp32 / wb) if wb else 1.0},
         }
         print(f"    [{phase:6s}] compile {compile_s:6.1f}s  "
@@ -250,7 +252,8 @@ def run_one(arch: str, shape_name: str, mesh_kind: str, *,
             algorithm: str = "gossip_pga", topology: str = "ring",
             H: int = 6, fast: bool = False, compression: str = "none",
             compression_k: int = 32,
-            error_feedback: bool = False) -> Dict[str, Any]:
+            error_feedback: bool = False,
+            global_compression: str = "none") -> Dict[str, Any]:
     plan = plan_for(arch, shape_name)
     rec: Dict[str, Any] = {"arch": arch, "shape": shape_name,
                            "mesh": mesh_kind}
@@ -269,7 +272,8 @@ def run_one(arch: str, shape_name: str, mesh_kind: str, *,
                               fsdp=arch in HIERARCHICAL_ARCHS,
                               comm_compression=compression,
                               comm_compression_k=compression_k,
-                              comm_error_feedback=error_feedback)
+                              comm_error_feedback=error_feedback,
+                              comm_global_compression=global_compression)
             rec.update(dryrun_train(cfg, shape, mesh, dist=dist, fast=fast))
         else:
             ps = "2d" if arch in SERVE_2D_ARCHS else "tp"
@@ -305,6 +309,12 @@ def main() -> int:
                          "and feeds the wire-bytes cost model "
                          "(DESIGN.md §2.3)")
     ap.add_argument("--comm-compression-k", type=int, default=32)
+    ap.add_argument("--comm-global-compression", default="none",
+                    choices=("none", "identity", "int8", "fp8"),
+                    help="compressed collective for the global/pod-avg "
+                         "phases: the wire record's global-phase row "
+                         "reports its real reduction (DESIGN.md §2.3 "
+                         "Compressed collectives)")
     ap.add_argument("--error-feedback", action="store_true")
     args = ap.parse_args()
 
@@ -325,7 +335,8 @@ def main() -> int:
                               fast=args.fast,
                               compression=args.comm_compression,
                               compression_k=args.comm_compression_k,
-                              error_feedback=args.error_feedback)
+                              error_feedback=args.error_feedback,
+                              global_compression=args.comm_global_compression)
                 results.append(rec)
                 if args.out:
                     with open(args.out, "a") as f:

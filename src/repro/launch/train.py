@@ -48,6 +48,11 @@ def main() -> None:
                          "bit-identical to none")
     ap.add_argument("--comm-compression-k", type=int, default=32,
                     help="elements kept per node per leaf for topk/randk")
+    ap.add_argument("--comm-global-compression", default="none",
+                    choices=("none", "identity", "int8", "fp8"),
+                    help="compressed collective for the global/pod-"
+                         "averaging phases (DESIGN.md §2.3 Compressed "
+                         "collectives); identity is bit-identical to none")
     ap.add_argument("--error-feedback", action="store_true",
                     help="per-node error-feedback memory: compression "
                          "error is fed back next round instead of dropped")
@@ -65,6 +70,7 @@ def main() -> None:
                         pallas_leaf_threshold=args.leaf_threshold,
                         comm_compression=args.comm_compression,
                         comm_compression_k=args.comm_compression_k,
+                        comm_global_compression=args.comm_global_compression,
                         comm_error_feedback=args.error_feedback),
         optimizer=OptimizerConfig(name=args.optimizer, lr=args.lr,
                                   schedule="warmup_cosine", warmup_steps=10,

@@ -41,6 +41,7 @@ def build_train_step(model: Model, tcfg: TrainConfig, n_nodes: int, *,
     honoring ``DistConfig.comm_shard_mode``.
     """
     dist = tcfg.dist
+    dist.validate_nodes(n_nodes)
     sharded_comm = mixing.use_sharded_backend(
         dist.comm_backend, mesh, dist.node_axis, dist.comm_shard_mode)
     # wire compressor (DESIGN.md §2.3): built once at step-build time; the
@@ -49,6 +50,11 @@ def build_train_step(model: Model, tcfg: TrainConfig, n_nodes: int, *,
     compressor = make_compressor(dist.comm_compression,
                                  k=dist.comm_compression_k)
     lossy_comm = compressor is not None and compressor.lossy
+    # compressed collective for the averaging phases (DESIGN.md §2.3
+    # "Compressed collectives"): identity routes to the exact psum path
+    # inside mixing, so only a lossy choice changes the step
+    global_compressor = make_compressor(dist.comm_global_compression)
+    lossy_global = global_compressor is not None and global_compressor.lossy
     opt = make_optimizer(tcfg.optimizer, per_node=True)
     # DistConfig.remat/remat_policy -> blocks.make_remat policy string
     if dist.remat == "none":
@@ -124,7 +130,9 @@ def build_train_step(model: Model, tcfg: TrainConfig, n_nodes: int, *,
             comm_dtype = (jnp.bfloat16 if dist.comm_dtype == "bfloat16"
                           else None)
             new_params = None
-            if (lossy_comm and n_nodes > 1
+            lossy_round = (lossy_comm or
+                           (lossy_global and phase in ("global", "pod_avg")))
+            if (lossy_round and n_nodes > 1
                     and phase in ("gossip", "global", "pod_avg")):
                 # compressed round: the SR seed is the absolute step (so
                 # rounding is unbiased across steps); consensus falls back
@@ -139,7 +147,7 @@ def build_train_step(model: Model, tcfg: TrainConfig, n_nodes: int, *,
                     shard_mode=dist.comm_shard_mode,
                     leaf_threshold=dist.pallas_leaf_threshold,
                     compressor=compressor, ef_state=state.ef_state,
-                    seed=state.step)
+                    seed=state.step, global_compressor=global_compressor)
             elif (dist.comm_backend == "pallas" and with_consensus
                     and n_nodes > 1
                     and phase in ("gossip", "global", "pod_avg")):

@@ -32,7 +32,7 @@ class Trainer:
     def __init__(self, tcfg: TrainConfig, n_nodes: int, *,
                  mesh: Optional[jax.sharding.Mesh] = None,
                  with_consensus: bool = False):
-        tcfg.dist.validate()
+        tcfg.dist.validate().validate_nodes(n_nodes)
         self.tcfg = tcfg
         self.n_nodes = n_nodes
         self.mesh = mesh
@@ -46,6 +46,8 @@ class Trainer:
                                   seq_len=tcfg.seq_len)
         self._compiled: Dict[Any, Any] = {}
         self.history: List[Dict[str, float]] = []
+        self._sched_live = False   # True once this process advanced the
+                                   # schedule (guards the resume reload)
 
     # ------------------------------------------------------------------
     def init_state(self, key: jax.Array) -> TrainState:
@@ -87,9 +89,20 @@ class Trainer:
         log_every = log_every if log_every is not None else tcfg.log_every
         t0 = time.time()
         start = int(state.step)  # resume-aware: schedule/lr/data keyed on the
-        for k in range(start, start + steps):  # absolute step counter
+        if start > 0 and not self._sched_live:  # absolute step counter —
+            # and a stateful schedule (AGA's period counter) is trajectory
+            # state too: a fresh process resuming a checkpoint reloads the
+            # sidecar written next to it (no-op for stateless schedules or
+            # in-process continuation, where the live state is already
+            # correct)
+            self.load_schedule(step=start)
+        self._sched_live = True
+        for k in range(start, start + steps):
             batch = jax.tree.map(jnp.asarray, self.stream.get_batch(k))
-            phase = (self.schedule.phase(k) if self.n_nodes > 1 else "none")
+            # advance() commits stateful schedules (AGA's period counter);
+            # phase()/peek_phase() stay pure for dryrun/roofline/logging
+            phase = (self.schedule.advance(k) if self.n_nodes > 1
+                     else "none")
             shift = self.schedule.gossip_shift_step(k, self.period)
             lr = jnp.asarray(self.lr_fn(k), jnp.float32)
             step_fn = self._get_step_fn(phase, shift)
@@ -110,7 +123,42 @@ class Trainer:
             if tcfg.ckpt_every and (k + 1) % tcfg.ckpt_every == 0:
                 from repro.checkpoint import save_checkpoint
                 save_checkpoint(tcfg.ckpt_dir, state, k + 1)
+                self._save_schedule(k + 1)
         return state
+
+    # ------------------------------------------------------------------
+    def _schedule_path(self, step: int) -> str:
+        import os
+        return os.path.join(self.tcfg.ckpt_dir,
+                            f"schedule_{step:08d}.json")
+
+    def _save_schedule(self, step: int) -> None:
+        """Sidecar for stateful schedules: AGA's period counter and H
+        adaptation are part of the training trajectory, so a resumed run
+        must reload them (stateless schedules write nothing)."""
+        sd = self.schedule.state_dict()
+        if not sd:
+            return
+        import json
+        with open(self._schedule_path(step), "w") as f:
+            json.dump(sd, f)
+
+    def load_schedule(self, step: Optional[int] = None) -> None:
+        """Restore the schedule's internal state saved alongside the
+        checkpoint at ``step`` (default: latest).  Call when resuming a
+        stateful-schedule run (gossip_aga) after
+        ``checkpoint.restore_checkpoint``; a missing sidecar is a no-op
+        (stateless schedules, or checkpoints predating the sidecar)."""
+        import json
+        import os
+        from repro.checkpoint import latest_step
+        step = step if step is not None else latest_step(self.tcfg.ckpt_dir)
+        if step is None:
+            return
+        path = self._schedule_path(step)
+        if os.path.exists(path):
+            with open(path) as f:
+                self.schedule.load_state_dict(json.load(f))
 
 
 def quick_train(tcfg: TrainConfig, n_nodes: int, steps: int, *,

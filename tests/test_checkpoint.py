@@ -1,0 +1,297 @@
+"""Checkpoint correctness for compressed runs (ISSUE-4 bugfixes).
+
+Pre-fix failure modes under test:
+
+* ``np.savez`` cannot round-trip ml_dtypes leaves (bf16 params, fp8
+  buffers) — depending on numpy it raises or silently degrades them to
+  raw ``|V``-kind void that restore cannot cast.  The fix stores such
+  leaves as same-width bit views recorded in the manifest's ``dtypes``
+  entry — bitwise, so resume is exact.
+* a ``TrainState`` with ``ef_state`` restored into a template whose
+  ``ef_state=None`` dropped the error-feedback memory (and the reverse
+  direction KeyError'd).  Restore now reconciles both directions.
+* the headline guarantee: train k compressed steps → save → restore →
+  continue equals the uninterrupted run **bitwise** — for the identity
+  compressor and for int8+EF (stochastic rounding is seeded by the
+  absolute step, the data stream and LR by the absolute counter, so a
+  bitwise state restore implies a bitwise trajectory).
+"""
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import restore_checkpoint, save_checkpoint
+from repro.configs import (DataConfig, DistConfig, OptimizerConfig,
+                           TrainConfig, get_model_config)
+from repro.train import Trainer
+from repro.train.state import TrainState
+
+CFG = get_model_config("qwen3-0.6b", reduced=True)
+
+
+def _state(params, ef=None, step=0):
+    return TrainState(params=params, opt_state={"momentum": params},
+                      step=jnp.asarray(step, jnp.int32), ef_state=ef)
+
+
+def _assert_tree_bitwise(got, want):
+    assert jax.tree.structure(got) == jax.tree.structure(want)
+    for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        assert g.dtype == w.dtype, (g.dtype, w.dtype)
+        gb, wb = np.asarray(g), np.asarray(w)
+        if gb.dtype.kind == "V":          # ml_dtypes: compare raw bits
+            view = {1: np.uint8, 2: np.uint16}[gb.dtype.itemsize]
+            gb, wb = gb.view(view), wb.view(view)
+        np.testing.assert_array_equal(gb, wb)
+
+
+# ---------------------------------------------------------------------------
+# dtype manifest: ml_dtypes leaves survive npz bitwise
+# ---------------------------------------------------------------------------
+def test_bf16_and_fp8_leaves_roundtrip_bitwise():
+    key = jax.random.PRNGKey(0)
+    params = {"w": jax.random.normal(key, (4, 3)).astype(jnp.bfloat16),
+              "b": jax.random.normal(key, (4,)).astype(jnp.float32),
+              "q": jax.random.normal(key, (4, 2)).astype(jnp.float8_e4m3fn),
+              "s": jnp.asarray(1.25, jnp.bfloat16)}       # 0-d bf16
+    st = _state(params, step=3)
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, st, 3)
+        restored = restore_checkpoint(d, _state(params))
+    _assert_tree_bitwise(restored.params, params)
+    assert int(restored.step) == 3
+
+
+def test_manifest_records_ml_dtypes():
+    import json
+    import os
+    params = {"w": jnp.ones((2, 2), jnp.bfloat16),
+              "b": jnp.ones((2,), jnp.float32)}
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, _state(params), 1)
+        man = json.load(open(os.path.join(d, "manifest.json")))
+        assert man["dtypes"] == {".params/w": "bfloat16",
+                                 ".opt_state/momentum/w": "bfloat16"}
+        # the npz itself holds the bit view, loadable by vanilla numpy
+        data = np.load(os.path.join(d, "ckpt_00000001.npz"))
+        assert data[".params/w"].dtype == np.uint16
+
+
+def test_old_step_keeps_its_own_dtypes_after_dtype_change():
+    """The dtype record rides inside each npz: saving a later checkpoint
+    with different leaf dtypes must not corrupt the restore of an older
+    step (the manifest.json 'dtypes' entry only describes the latest
+    save)."""
+    bf16 = {"w": jnp.full((3,), 1.5, jnp.bfloat16)}
+    fp32 = {"w": jnp.full((3,), 1.5, jnp.float32)}
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, _state(bf16), 2)
+        save_checkpoint(d, _state(fp32), 4)      # manifest now dtype-free
+        restored = restore_checkpoint(d, _state(bf16), step=2)
+    _assert_tree_bitwise(restored.params, bf16)  # 1.5, not 16320.0
+
+
+def test_bit_view_restores_even_without_any_manifest():
+    """A lost manifest.json must not silently value-cast the uint16 bit
+    view into garbage bf16 values."""
+    import os
+    params = {"w": jnp.full((3,), 1.5, jnp.bfloat16)}
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, _state(params), 1)
+        os.remove(os.path.join(d, "manifest.json"))
+        restored = restore_checkpoint(d, _state(params))
+    _assert_tree_bitwise(restored.params, params)
+
+
+# ---------------------------------------------------------------------------
+# ef_state reconcile, both directions
+# ---------------------------------------------------------------------------
+def test_bare_array_ef_state_reconciles_both_directions():
+    """A single-leaf ef_state flattens to the key '.ef_state' (no slash):
+    it must reconcile exactly like the params-mirroring tree."""
+    params = jnp.ones((4, 3), jnp.float32)          # bare-array params too
+    ef = jnp.full((4, 3), 0.25, jnp.float32)
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, _state(params, ef=ef, step=1), 1)
+        restored = restore_checkpoint(d, _state(params, ef=None))
+        assert restored.ef_state is not None
+        np.testing.assert_array_equal(np.asarray(restored.ef_state),
+                                      np.asarray(ef))
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, _state(params, ef=None, step=1), 1)
+        restored = restore_checkpoint(d, _state(params, ef=ef))
+        assert restored.ef_state is not None
+        assert float(jnp.sum(jnp.abs(restored.ef_state))) == 0.0
+def test_restore_ef_into_efless_template():
+    params = {"w": jnp.ones((4, 3), jnp.float32)}
+    ef = {"w": jnp.full((4, 3), 0.25, jnp.float32)}
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, _state(params, ef=ef, step=2), 2)
+        restored = restore_checkpoint(d, _state(params, ef=None))
+    assert restored.ef_state is not None
+    _assert_tree_bitwise(restored.ef_state, ef)
+
+
+def test_restore_efless_ckpt_into_ef_template():
+    params = {"w": jnp.ones((4, 3), jnp.float32)}
+    ef_tmpl = {"w": jnp.full((4, 3), 9.0, jnp.float32)}
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, _state(params, ef=None, step=2), 2)
+        restored = restore_checkpoint(d, _state(params, ef=ef_tmpl))
+    # EF restarts empty when compression is newly enabled
+    assert restored.ef_state is not None
+    assert float(jnp.sum(jnp.abs(restored.ef_state["w"]))) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# resume parity: save → restore → continue == uninterrupted, bitwise
+# ---------------------------------------------------------------------------
+def _tcfg(ckpt_dir, **dist_kw):
+    return TrainConfig(
+        model=CFG,
+        dist=DistConfig(algorithm="gossip_pga", topology="ring", H=2,
+                        **dist_kw),
+        optimizer=OptimizerConfig(name="sgd", lr=0.05, schedule="constant",
+                                  warmup_steps=0),
+        data=DataConfig(non_iid=True), global_batch=8, seq_len=16,
+        steps=4, log_every=0, ckpt_every=2, ckpt_dir=ckpt_dir)
+
+
+@pytest.mark.parametrize("dist_kw", [
+    {"comm_compression": "identity"},
+    {"comm_compression": "int8", "comm_error_feedback": True},
+    {"comm_global_compression": "int8", "comm_error_feedback": True},
+])
+def test_compressed_resume_matches_uninterrupted(dist_kw):
+    with tempfile.TemporaryDirectory() as d:
+        tcfg = _tcfg(d, **dist_kw)
+        # uninterrupted: 4 steps straight (checkpoints written at 2 and 4)
+        tr = Trainer(tcfg, n_nodes=4)
+        full = tr.run(tr.init_state(jax.random.PRNGKey(0)), steps=4)
+        # interrupted: a fresh Trainer restores the step-2 checkpoint and
+        # continues — schedule/LR/data/SR-seed all key on the absolute
+        # step, so the trajectories must coincide bitwise
+        tr2 = Trainer(tcfg, n_nodes=4)
+        template = tr2.init_state(jax.random.PRNGKey(0))
+        state = restore_checkpoint(d, template, step=2)
+        assert int(state.step) == 2
+        resumed = tr2.run(state, steps=2)
+        _assert_tree_bitwise(resumed.params, full.params)
+        _assert_tree_bitwise(resumed.opt_state, full.opt_state)
+        if full.ef_state is not None:
+            _assert_tree_bitwise(resumed.ef_state, full.ef_state)
+        assert int(resumed.step) == int(full.step) == 4
+
+
+def test_resume_across_ef_enablement():
+    """A run that newly enables compression restores an EF-less checkpoint
+    cleanly: EF starts at zeros instead of KeyError-ing."""
+    with tempfile.TemporaryDirectory() as d:
+        plain = _tcfg(d)
+        tr = Trainer(plain, n_nodes=4)
+        tr.run(tr.init_state(jax.random.PRNGKey(0)), steps=2)
+        comp = _tcfg(d, comm_compression="int8", comm_error_feedback=True)
+        tr2 = Trainer(comp, n_nodes=4)
+        template = tr2.init_state(jax.random.PRNGKey(0))
+        assert template.ef_state is not None
+        state = restore_checkpoint(d, template, step=2)
+        assert state.ef_state is not None
+        state = tr2.run(state, steps=2)
+        assert int(state.step) == 4
+        for leaf in jax.tree.leaves(state.params):
+            assert np.all(np.isfinite(np.asarray(leaf, np.float32)))
+
+
+def test_aga_resume_matches_uninterrupted_schedule():
+    """gossip_aga's period counter and H adaptation are training state:
+    the schedule sidecar written next to each checkpoint must restore
+    them, so a resumed run fires global rounds on the same steps as the
+    uninterrupted one."""
+    from repro.core.schedule import AGASchedule
+
+    def drive(sched, ks, losses):
+        out = []
+        for k in ks:
+            sched.observe_loss(k, losses(k))
+            out.append(sched.advance(k))
+        return out
+
+    losses = lambda k: 10.0 / (1 + k)
+    full = AGASchedule(H_init=2, warmup=4, H_max=32)
+    want = drive(full, range(24), losses)
+
+    first = AGASchedule(H_init=2, warmup=4, H_max=32)
+    got = drive(first, range(12), losses)
+    resumed = AGASchedule(H_init=2, warmup=4, H_max=32)
+    resumed.load_state_dict(first.state_dict())        # the sidecar payload
+    got += drive(resumed, range(12, 24), losses)
+    assert got == want
+    assert resumed.current_H == full.current_H
+
+
+def test_trainer_aga_resume_end_to_end_bitwise():
+    """The normal resume flow (restore_checkpoint → Trainer.run) reloads
+    the AGA sidecar automatically: the resumed run's params — which
+    depend on *when* global rounds fired and how H adapted — match the
+    uninterrupted run bitwise."""
+    def tcfg(d):
+        return TrainConfig(
+            model=CFG,
+            dist=DistConfig(algorithm="gossip_aga", topology="ring",
+                            aga_h_init=2, aga_warmup=1),
+            optimizer=OptimizerConfig(name="sgd", lr=0.05,
+                                      schedule="constant", warmup_steps=0),
+            data=DataConfig(non_iid=True), global_batch=8, seq_len=16,
+            steps=6, log_every=0, ckpt_every=3, ckpt_dir=d)
+
+    with tempfile.TemporaryDirectory() as d:
+        tr = Trainer(tcfg(d), n_nodes=4)
+        full = tr.run(tr.init_state(jax.random.PRNGKey(0)), steps=6)
+        tr2 = Trainer(tcfg(d), n_nodes=4)
+        state = restore_checkpoint(d, tr2.init_state(jax.random.PRNGKey(0)),
+                                   step=3)
+        resumed = tr2.run(state, steps=3)
+        _assert_tree_bitwise(resumed.params, full.params)
+        assert tr2.schedule.state_dict() == tr.schedule.state_dict()
+
+
+def test_trainer_writes_and_loads_aga_schedule_sidecar():
+    import os
+    with tempfile.TemporaryDirectory() as d:
+        tcfg = TrainConfig(
+            model=CFG,
+            dist=DistConfig(algorithm="gossip_aga", topology="ring",
+                            aga_h_init=2, aga_warmup=2),
+            optimizer=OptimizerConfig(name="sgd", lr=0.05,
+                                      schedule="constant", warmup_steps=0),
+            data=DataConfig(), global_batch=8, seq_len=16, steps=4,
+            log_every=0, ckpt_every=2, ckpt_dir=d)
+        tr = Trainer(tcfg, n_nodes=4)
+        tr.run(tr.init_state(jax.random.PRNGKey(0)), steps=4)
+        assert os.path.exists(os.path.join(d, "schedule_00000004.json"))
+        tr2 = Trainer(tcfg, n_nodes=4)
+        tr2.load_schedule(step=4)
+        assert tr2.schedule.state_dict() == tr.schedule.state_dict()
+
+
+# ---------------------------------------------------------------------------
+# pod_avg validation (ISSUE-4 satellite): clear error, not mis-shaped halos
+# ---------------------------------------------------------------------------
+def test_distconfig_validate_nodes_rejects_indivisible_pods():
+    dist = DistConfig(algorithm="hier_pga", n_pods=3).validate()
+    with pytest.raises(ValueError, match="n_pods=3 does not divide"):
+        dist.validate_nodes(8)
+    dist.validate_nodes(9)                       # divides: fine
+
+
+def test_trainer_rejects_indivisible_pods():
+    tcfg = TrainConfig(model=CFG,
+                       dist=DistConfig(algorithm="hier_pga", n_pods=3),
+                       optimizer=OptimizerConfig(name="sgd", lr=0.05),
+                       data=DataConfig(), global_batch=8, seq_len=16,
+                       log_every=0)
+    with pytest.raises(ValueError, match="n_pods=3 does not divide"):
+        Trainer(tcfg, n_nodes=8)

@@ -311,6 +311,174 @@ def test_train_step_threads_ef_state():
 
 
 # ---------------------------------------------------------------------------
+# Compressed global/pod-averaging collective (DESIGN.md §2.3 "Compressed
+# collectives"): the ISSUE-4 tentpole, stacked backends
+# ---------------------------------------------------------------------------
+COLLECTIVE = ["int8", "fp8"]
+AVG_PHASES = [("global", 1), ("pod_avg", 2), ("pod_avg", 4)]
+
+
+def test_collective_registry_matches_distconfig_vocabulary():
+    from repro.configs import DistConfig
+    for name in C.COLLECTIVE_COMPRESSORS:
+        kw = {"comm_global_compression": name}
+        if name in ("int8", "fp8"):
+            kw["comm_error_feedback"] = True
+        DistConfig(**kw).validate()
+    with pytest.raises(ValueError, match="comm_global_compression"):
+        DistConfig(comm_global_compression="topk").validate()
+    # EF is legal with only the collective compressed
+    DistConfig(comm_global_compression="int8",
+               comm_error_feedback=True).validate()
+
+
+@pytest.mark.parametrize("name", COLLECTIVE)
+@pytest.mark.parametrize("phase,n_pods", AVG_PHASES)
+def test_collective_backend_parity(name, phase, n_pods, rng_key):
+    comp = C.make_compressor(name)
+    tree = _tree(rng_key, 8)
+    kw = dict(phase=phase, topology="ring", n_nodes=8, n_pods=n_pods,
+              global_compressor=comp, seed=7)
+    ref, ef_r = mixing.communicate(tree, **kw)
+    pal, ef_p = mixing.communicate(tree, backend="pallas", **kw)
+    assert ef_r is None and ef_p is None
+    _close(pal, ref, atol=2e-5)
+    # the lossy collective actually moved the state (not a silent no-op)
+    moved = sum(float(jnp.sum(jnp.abs(a.astype(jnp.float32)
+                                      - b.astype(jnp.float32))))
+                for a, b in zip(jax.tree.leaves(ref),
+                                jax.tree.leaves(tree)))
+    assert moved > 0
+
+
+@pytest.mark.parametrize("name", COLLECTIVE)
+def test_collective_constant_fixed_point_bitwise(name):
+    """Stronger than the psum path: the anchored accumulate + shared
+    two-stage randomness make a consensus state survive **bitwise** on
+    both stacked backends."""
+    comp = C.make_compressor(name)
+    tree = {"w": jnp.full((8, 5, 3), -2.25, jnp.float32),
+            "b": jnp.full((8, 7), 0.1, jnp.float32)}
+    for phase, n_pods in AVG_PHASES:
+        for backend in ("reference", "pallas"):
+            got, _ = mixing.communicate(tree, phase=phase, topology="ring",
+                                        n_nodes=8, n_pods=n_pods,
+                                        backend=backend,
+                                        global_compressor=comp, seed=9)
+            for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(tree)):
+                np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+def test_collective_identity_bit_identical(backend, rng_key):
+    """comm_global_compression='identity' routes to the exact psum path."""
+    tree = _tree(rng_key, 8)
+    for phase, n_pods in AVG_PHASES:
+        kw = dict(phase=phase, topology="ring", n_nodes=8, n_pods=n_pods,
+                  backend=backend)
+        want = mixing.communicate(tree, **kw)
+        got, ef = mixing.communicate(
+            tree, global_compressor=C.make_compressor("identity"), **kw)
+        assert ef is None
+        for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+            assert g.dtype == w.dtype
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_collective_error_feedback_parity(rng_key):
+    comp = C.make_compressor("int8")
+    tree = _tree(rng_key, 8)
+    ef0 = C.init_ef_state(tree)
+    kw = dict(phase="global", topology="ring", n_nodes=8,
+              global_compressor=comp, ef_state=ef0, seed=1)
+    r_m, r_e = mixing.communicate(tree, **kw)
+    p_m, p_e = mixing.communicate(tree, backend="pallas", **kw)
+    _close(p_m, r_m, atol=2e-5)
+    _close(p_e, r_e, atol=2e-5)
+    assert sum(float(jnp.sum(jnp.abs(l))) for l in jax.tree.leaves(r_e)) > 0
+
+
+def test_collective_supersedes_gossip_compressor_on_global(rng_key):
+    """With both knobs lossy, the averaging phase is served by the
+    collective alone (per-phase override): identical to the run where only
+    the collective is configured."""
+    tree = _tree(rng_key, 8)
+    gc = C.make_compressor("int8")
+    kw = dict(phase="global", topology="ring", n_nodes=8,
+              global_compressor=gc, seed=5)
+    only_global, _ = mixing.communicate(tree, **kw)
+    both, _ = mixing.communicate(tree, compressor=C.make_compressor("topk",
+                                                                    k=3),
+                                 **kw)
+    for g, w in zip(jax.tree.leaves(both), jax.tree.leaves(only_global)):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+    # ...and gossip rounds stay with the gossip compressor
+    gossip_kw = dict(phase="gossip", topology="ring", n_nodes=8, seed=5)
+    want, _ = mixing.communicate(tree, compressor=C.make_compressor("int8"),
+                                 **gossip_kw)
+    got, _ = mixing.communicate(tree, compressor=C.make_compressor("int8"),
+                                global_compressor=gc, **gossip_kw)
+    for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+def test_collective_wire_bytes_model():
+    """The analytic global-phase model follows the collective payload
+    (codes + per-QBLOCK scale words): ≥4× vs fp32 up to the scale slack,
+    and the dry-run's honest 1.0× is gone."""
+    from repro.compress import collective as ccol
+    d = 1 << 20
+    fp32 = C.round_wire_bytes("global", "ring", 8, d)
+    comp = C.round_wire_bytes("global", "ring", 8, d,
+                              global_compression="int8")
+    dp = -(-d // ccol.QBLOCK) * ccol.QBLOCK
+    floor = 4.0 * d / (dp + 4 * dp // ccol.QBLOCK)
+    assert fp32 / comp >= floor - 1e-9
+    assert fp32 / comp > 3.9
+    # pod_avg follows the same collective accounting
+    assert C.round_wire_bytes("pod_avg", "ring", 8, d, n_pods=2,
+                              global_compression="int8") == comp
+    # without the knob the psum stays comm_dtype-bound (old behavior)
+    assert C.round_wire_bytes("global", "ring", 8, d) == d * 4
+    assert C.round_wire_bytes("global", "ring", 8, d,
+                              comm_dtype="bfloat16") == d * 2
+
+
+def test_collective_qblock_padding_invariance(rng_key):
+    """Padding amount must not leak into real columns: a ragged D and the
+    same data embedded in a wider zero-padded matrix quantize real columns
+    identically (block boundaries are absolute-column keyed)."""
+    from repro.compress import collective as ccol
+    x = jax.random.normal(rng_key, (8, 37))
+    a, _ = ccol.collective_round(x, None, "int8", jnp.uint32(3))
+    wide, _ = ccol.collective_round(ccol.pad_cols(x, 8 * ccol.QBLOCK), None,
+                                    "int8", jnp.uint32(3))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(wide[:, :37]))
+
+
+def test_collective_rejects_sparsifier_kind():
+    from repro.compress import collective as ccol
+    with pytest.raises(ValueError, match="unsupported kind"):
+        ccol.quantize_blocks(jnp.zeros((2, ccol.QBLOCK)), "topk",
+                             jnp.uint32(0))
+
+
+def test_pod_avg_rejects_indivisible_pods_before_noop(rng_key):
+    """Validation fires before any no-op early return: even the n_nodes=1
+    degenerate call reports the misconfiguration instead of silently
+    returning the input."""
+    x = jax.random.normal(rng_key, (8, 4))
+    for kw in (dict(), dict(global_compressor=C.make_compressor("int8")),
+               dict(compressor=C.make_compressor("int8"))):
+        with pytest.raises(ValueError, match="does not divide"):
+            mixing.communicate(x, phase="pod_avg", topology="ring",
+                               n_nodes=8, n_pods=3, seed=1, **kw)
+    with pytest.raises(ValueError, match="does not divide"):
+        mixing.communicate(jnp.zeros((1, 4)), phase="pod_avg",
+                           topology="ring", n_nodes=1, n_pods=3)
+
+
+# ---------------------------------------------------------------------------
 # Sharded path: compressed halo exchange (8 forced host devices)
 # ---------------------------------------------------------------------------
 _SHARDED_COMPRESSED_SCRIPT = textwrap.dedent("""
@@ -381,6 +549,59 @@ _SHARDED_COMPRESSED_SCRIPT = textwrap.dedent("""
                                 compressor=C.make_compressor("int8"), seed=5)
     close(got, ct, 1e-6)
     print("CCONSTANT_OK")
+
+    # ---- compressed collective (ISSUE 4): real all_to_all/all_gather of
+    # int8/fp8 wire arrays vs the local reference ----
+    for name, phase, pods in [("int8", "global", 1), ("int8", "pod_avg", 4),
+                              ("int8", "pod_avg", 8),
+                              ("fp8", "global", 1), ("fp8", "pod_avg", 4)]:
+        comp = C.make_compressor(name)
+        kw = dict(phase=phase, topology="ring", n_nodes=n, n_pods=pods,
+                  global_compressor=comp, seed=11)
+        want, _ = mixing.communicate(t, **kw)
+        got, _ = mixing.communicate(t, backend="pallas", mesh=mesh, **kw)
+        close(got, want, 2e-5)
+        print(f"COLL_OK {name}/{phase}/p{pods}")
+
+    # collective EF threading matches the local reference
+    comp = C.make_compressor("int8")
+    ef0 = C.init_ef_state(t)
+    kw = dict(phase="global", topology="ring", n_nodes=n,
+              global_compressor=comp, ef_state=ef0, seed=2)
+    wm, we = mixing.communicate(t, **kw)
+    gm, ge = mixing.communicate(t, backend="pallas", mesh=mesh, **kw)
+    close(gm, wm, 2e-5); close(ge, we, 2e-5)
+    print("COLL_EF_OK")
+
+    # consensus state is a bitwise fixed point through the real exchange
+    got, _ = mixing.communicate(ct, phase="global", topology="ring",
+                                n_nodes=n, backend="pallas", mesh=mesh,
+                                global_compressor=comp, seed=5)
+    for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(ct)):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+    print("COLL_CONSTANT_OK")
+
+    # identity collective under the mesh: bitwise vs the uncompressed psum
+    want = mixing.communicate(t, phase="global", topology="ring", n_nodes=n,
+                              backend="pallas", mesh=mesh)
+    got, ef = mixing.communicate(t, phase="global", topology="ring",
+                                 n_nodes=n, backend="pallas", mesh=mesh,
+                                 global_compressor=C.make_compressor(
+                                     "identity"))
+    assert ef is None
+    for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+    print("COLL_IDENTITY_OK")
+
+    # two-axis (pod, data) mesh: the flattened shard index keeps segment
+    # order, so parity holds on hierarchical meshes too
+    mesh2 = jax.make_mesh((2, 4), ("pod", "data"))
+    kw = dict(phase="global", topology="ring", n_nodes=n,
+              global_compressor=comp, seed=9)
+    want, _ = mixing.communicate(t, **kw)
+    got, _ = mixing.communicate(t, backend="pallas", mesh=mesh2, **kw)
+    close(got, want, 2e-5)
+    print("COLL_2AXIS_OK")
 """)
 
 
@@ -400,9 +621,14 @@ def test_sharded_compressed_parity_8dev():
     """Compressed halo exchange under a mesh-sharded node axis: the
     ppermuted wire arrays + compensated per-shard kernel must match the
     local reference for every compressor kind, EF included, with identity
-    bit-identical (DESIGN.md §2.3)."""
+    bit-identical (DESIGN.md §2.3).  The same subprocess also proves the
+    compressed collective: the all_to_all/all_gather of int8/fp8 wire
+    arrays matches both local backends, keeps consensus states bitwise
+    fixed, and holds on two-axis (pod, data) meshes."""
     stdout = _run_forced_device_script(_SHARDED_COMPRESSED_SCRIPT)
     assert stdout.count("CPARITY_OK") == 7, stdout
+    assert stdout.count("COLL_OK") == 5, stdout
     for marker in ("CGLOBAL_BF16_OK", "CEF_OK", "CIDENTITY_OK",
-                   "CCONSTANT_OK"):
+                   "CCONSTANT_OK", "COLL_EF_OK", "COLL_CONSTANT_OK",
+                   "COLL_IDENTITY_OK", "COLL_2AXIS_OK"):
         assert marker in stdout, stdout

@@ -143,7 +143,7 @@ def test_aga_h_always_bounded(h_init, h_max, losses):
     s = AGASchedule(H_init=h_init, warmup=5, H_max=h_max)
     for k, loss in enumerate(losses):
         s.observe_loss(k, loss)
-        s.phase(k)
+        s.advance(k)
         assert 1 <= s.current_H <= h_max
 
 

@@ -27,11 +27,11 @@ def test_aga_period_increases_as_loss_drops():
     # during warmup: collect F_init
     for k in range(16):
         s.observe_loss(k, 10.0)
-        s.phase(k)
+        s.advance(k)
     # loss drops 4x -> H should grow toward 16
     for k in range(16, 64):
         s.observe_loss(k, 2.5)
-        s.phase(k)
+        s.advance(k)
     assert s.current_H > 4
     assert s.current_H <= 64
 
@@ -40,8 +40,53 @@ def test_aga_h_bounded():
     s = AGASchedule(H_init=4, warmup=4, H_max=8)
     for k in range(64):
         s.observe_loss(k, 1e-9)   # catastrophic ratio
-        s.phase(k)
+        s.advance(k)
     assert 1 <= s.current_H <= 8
+
+
+def test_aga_phase_is_pure():
+    """ISSUE-4 regression: phase()/peek_phase() must not advance the live
+    period counter — a dryrun/roofline/logging probe between training
+    steps must not desync H adaptation."""
+    s = AGASchedule(H_init=3, warmup=4, H_max=16)
+    # calling phase(step) twice returns the same answer, and any number of
+    # peeks never changes what advance() will do
+    for k in range(24):
+        s.observe_loss(k, 5.0)
+        first = s.phase(k)
+        assert s.phase(k) == first
+        for probe in (0, k, k + 7):       # arbitrary-step probes are safe
+            s.peek_phase(probe)
+        assert s.advance(k) == first
+
+
+def test_aga_advance_matches_pre_split_sequence():
+    """advance() reproduces the pre-split mutate-on-phase sequence exactly
+    (global every current_H steps, counter reset on global)."""
+    s = AGASchedule(H_init=4, warmup=100, H_max=64)   # warmup: H stays 4
+    for k in range(24):
+        s.observe_loss(k, 1.0)
+        want = "global" if (k + 1) % 4 == 0 else "gossip"
+        assert s.advance(k) == want
+
+
+def test_aga_peek_does_not_desync_trainer_loop():
+    """Two identical AGA runs, one interleaved with peeks, produce the
+    same phase sequence and the same final H."""
+    def run(peek):
+        s = AGASchedule(H_init=2, warmup=4, H_max=32)
+        seq = []
+        for k in range(40):
+            s.observe_loss(k, 10.0 / (1 + k))
+            if peek:
+                for _ in range(3):
+                    s.phase(k)
+            seq.append(s.advance(k))
+        return seq, s.current_H
+
+    a, ha = run(peek=False)
+    b, hb = run(peek=True)
+    assert a == b and ha == hb
 
 
 def test_make_schedule_dispatch():
