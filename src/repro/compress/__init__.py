@@ -15,7 +15,7 @@ from repro.compress.base import (Compressor, LeafWire, apply_tree,
                                  column_bits, compress_tree, decompress_tree,
                                  hash_u32, init_ef_state, leaf_seed,
                                  tree_wire_bytes, uniform_columns)
-from repro.compress.collective import (COLLECTIVE_COMPRESSORS,
+from repro.compress.collective import (COLLECTIVE_COMPRESSORS, QBLOCK,
                                        collective_wire_bytes)
 from repro.compress.quantize import Fp8Compressor, Int8Compressor
 from repro.compress.sparsify import RandKCompressor, TopKCompressor
@@ -57,8 +57,8 @@ def round_wire_bytes(phase: str, topology: str, n_nodes: int,
                      per_node_params: int, *, comm_dtype: str = "float32",
                      compression: str = "none", k: int = 32,
                      step: int = 0, n_pods: int = 1,
-                     leaf_sizes=None, global_compression: str = "none"
-                     ) -> int:
+                     leaf_sizes=None, global_compression: str = "none",
+                     model_shards: int = 1) -> int:
     """Per-node bytes crossing the interconnect for one communication
     round (the dry-run cost model; DESIGN.md §2.3).
 
@@ -68,14 +68,25 @@ def round_wire_bytes(phase: str, topology: str, n_nodes: int,
     would understate their bytes by ~num_leaves×.  Without it the model
     treats the vector as a single leaf (fine for the quantizers).
 
+    ``model_shards`` — the model-axis size of a 2-D ``(node, model)``
+    mesh — turns the answer into **per-device** bytes: the sharded
+    runtime column-slices the packed state (and the quantizer code
+    arrays) over the model axis, so halo ppermutes, psum operands, and
+    the collective's stage payloads each move ``1/model_shards`` of the
+    columns per device (leaf columns are padded to the model grid, hence
+    the per-leaf ceil).  Sparsifier payloads ride model-replicated
+    (global index sets cannot column-slice) and are *not* divided;
+    quantizer per-row scale words are likewise replicated across the
+    model axis and stay whole.
+
     * gossip: one collective-permute per nonzero off-diagonal shift, each
       moving the (possibly compressed) per-node payload;
     * global / pod_avg: one (intra-pod) all-reduce of the full operand,
       counted as one operand's worth of bytes.  With a lossy
       ``global_compression`` the collective runs the compressed
       reduce-scatter → all-gather (repro.compress.collective) and the
-      operand's worth becomes int8/fp8 codes + per-block scales — the
-      collective is *packed* (one operand spanning all leaves), so
+      operand's worth becomes int8/fp8 codes + per-block scale exponents
+      — the collective is *packed* (one operand spanning all leaves), so
       ``leaf_sizes`` does not split it;
     * pod_avg with only a lossy gossip ``compression``: the sharded path
       serves it with the compressed halo exchange — each node's payload
@@ -86,21 +97,49 @@ def round_wire_bytes(phase: str, topology: str, n_nodes: int,
     elem = 2 if comm_dtype == "bfloat16" else 4
     comp = make_compressor(compression, k=k)
     lossy = comp is not None and comp.lossy
+    quant = lossy and comp.name in ("int8", "fp8")
     glossy = global_compression in ("int8", "fp8")
+    ms = max(int(model_shards), 1)
     sizes = list(leaf_sizes) if leaf_sizes else [per_node_params]
-    payload = sum(int(comp.wire_bytes_per_send(1, d)) for d in sizes) \
-        if lossy else None
+    # uncompressed operand columns per device: per-leaf padded to the
+    # model grid (flatten_nodes_sharded), then 1/ms of each leaf
+    dense_cols = sum(-(-d // ms) for d in sizes)
+    # a sparsifier-compressed round runs model-replicated end to end
+    # (kmq == 1 in _communicate_sharded_compressed), so even its
+    # global-phase psum operand stays full width per device
+    psum_cols = sum(sizes) if (lossy and not quant) else dense_cols
+    if lossy:
+        if quant and ms > 1:
+            # code bytes slice over the model axis; the per-row scale
+            # word (wire_bytes_per_send − d code bytes) stays whole
+            payload = sum(-(-d // ms)
+                          + int(comp.wire_bytes_per_send(1, d)) - d
+                          for d in sizes)
+        else:
+            payload = sum(int(comp.wire_bytes_per_send(1, d))
+                          for d in sizes)
+    else:
+        payload = None
+    def collective_dev_bytes():
+        # per-device stage payload: the packed operand splits into ms
+        # model slices of whole QBLOCK blocks (the runtime pads so every
+        # slice starts on a block boundary), each block one QBLOCK of
+        # codes + one exponent byte.  The runtime's further padding of
+        # each slice to k_node·QBLOCK segments is not modeled — at most
+        # k_node−1 blocks of slack per device, negligible at production D.
+        nb = -(-per_node_params // QBLOCK)
+        nb_dev = -(-nb // ms)
+        return nb_dev * (QBLOCK + 1)
+
     if phase == "global":
         if glossy:
-            return collective_wire_bytes(global_compression,
-                                         per_node_params)
-        return per_node_params * elem
+            return collective_dev_bytes()
+        return psum_cols * elem
     if phase == "pod_avg":
         if glossy:
-            return collective_wire_bytes(global_compression,
-                                         per_node_params)
+            return collective_dev_bytes()
         if not lossy:
-            return per_node_params * elem
+            return dense_cols * elem
         per = max(n_nodes // max(n_pods, 1), 1)
         return (per - 1) * payload
     if phase != "gossip" or topology == "disconnected" or n_nodes == 1:
@@ -113,5 +152,5 @@ def round_wire_bytes(phase: str, topology: str, n_nodes: int,
         shifts = sum(1 for s in topo.shift_weights(topology, n_nodes, step)
                      if s != 0)
     if not lossy:
-        return shifts * per_node_params * elem
+        return shifts * dense_cols * elem
     return shifts * payload

@@ -192,7 +192,11 @@ class DistConfig:
     aga_h_max: int = 64              # Corollary 1 requires bounded H
     # Mesh / sharding
     data_axis: str = "data"
-    model_axis: str = "model"
+    model_axis: str = "model"        # tensor-parallel mesh axis; when the
+                                     # mesh carries it, the sharded comm
+                                     # path runs 2-D (node, model): the
+                                     # packed state's columns are sliced
+                                     # over it (DESIGN.md §2.1)
     pod_axis: str = "pod"
     comm_dtype: str = "float32"      # gossip/all-reduce wire dtype
                                      # ("bfloat16" halves collective bytes —
@@ -251,6 +255,13 @@ class DistConfig:
             raise ValueError("H must be >= 1")
         if self.node_axis not in ("data", "pod"):
             raise ValueError("node_axis must be 'data' or 'pod'")
+        if (not self.model_axis
+                or self.model_axis in (self.data_axis, self.pod_axis)):
+            raise ValueError(
+                f"model_axis must be a mesh axis name distinct from "
+                f"data_axis={self.data_axis!r} and "
+                f"pod_axis={self.pod_axis!r} (got {self.model_axis!r}) — "
+                f"the 2-D comm path slices packed columns over it")
         if self.comm_backend not in ("reference", "pallas"):
             raise ValueError("comm_backend must be 'reference' or 'pallas'")
         # kept in sync with repro.compress.COMPRESSORS (test_compress.py

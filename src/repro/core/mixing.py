@@ -29,7 +29,10 @@ shard_map wrapper that halo-exchanges neighbor shard blocks via
 ``ppermute`` and runs the fused per-shard kernel
 (:func:`repro.kernels.mixing_pallas.shard_mix_block`) on each shard's
 row-block, so ``backend="pallas"`` is safe (and collective-sparse) under
-mesh sharding (DESIGN.md §2.1 dispatch table).
+mesh sharding (DESIGN.md §2.1 dispatch table).  A mesh that also carries
+the tensor-parallel ``model_axis`` runs the round 2-D: the packed
+state's columns are sliced over it, so every halo/psum/collective stage
+touches only ``D/k_model`` columns per device.
 
 None of the views materialize W across nodes in the sharded hot path
 (DESIGN.md §2.1; the Pallas backend keeps a tiny n×n circulant factor in
@@ -119,6 +122,41 @@ def node_shard_count(mesh: Optional[jax.sharding.Mesh],
     names = node_axis_names(mesh, node_axis)
     return int(np.prod([mesh.shape[a] for a in names], dtype=np.int64)) \
         if names else 1
+
+
+def model_axis_names(mesh: jax.sharding.Mesh, model_axis: str = "model",
+                     node_names: Tuple[str, ...] = ()) -> Tuple[str, ...]:
+    """Mesh axis names forming the tensor-parallel model axis for the 2-D
+    ``(node, model)`` sharded comm path (``DistConfig.model_axis``): the
+    named axis when it exists on ``mesh`` and is not already part of the
+    node axis, else ``()`` (column-replicated, the 1-D behavior)."""
+    if not model_axis:
+        return ()
+    axes = dict(mesh.shape)
+    if model_axis in axes and model_axis not in node_names:
+        return (model_axis,)
+    return ()
+
+
+def _model_names_count(mesh: jax.sharding.Mesh, model_axis: str,
+                       node_names: Tuple[str, ...]):
+    """``(mnames, k_model)`` for one sharded round — the single source of
+    the model-axis resolution every sharded entry point shares."""
+    mnames = model_axis_names(mesh, model_axis, node_names=node_names)
+    km = int(np.prod([mesh.shape[a] for a in mnames], dtype=np.int64)) \
+        if mnames else 1
+    return mnames, km
+
+
+def model_shard_count(mesh: Optional[jax.sharding.Mesh],
+                      model_axis: str = "model",
+                      node_axis: str = "data") -> int:
+    """How many column slices the model axis splits the packed comm state
+    into on ``mesh`` (1 = replicated columns, the pre-2-D behavior)."""
+    if mesh is None:
+        return 1
+    names = node_axis_names(mesh, node_axis)
+    return _model_names_count(mesh, model_axis, names)[1]
 
 
 def use_sharded_backend(backend: str, mesh: Optional[jax.sharding.Mesh],
@@ -403,11 +441,13 @@ def _communicate_compressed(params: PyTree, *, compressor, ef_state,
                             step: int, axis: int, comm_dtype, n_pods: int,
                             backend: str, mesh, node_axis: str,
                             shard_mode: str, leaf_threshold,
-                            global_compressor=None):
+                            global_compressor=None,
+                            model_axis: str = "model"):
     """Compressor-aware dispatch behind :func:`communicate` — always
     returns ``(mixed, new_ef_state)``.  ``global_compressor``
     (``DistConfig.comm_global_compression``) overrides the averaging
-    phases with the compressed collective; ``compressor`` keeps handling
+    phases — a lossy codec with the compressed collective, the identity
+    codec with the exact psum path — while ``compressor`` keeps handling
     gossip rounds."""
     if phase not in ("none", "gossip", "global", "pod_avg"):
         raise ValueError(f"unknown communication phase {phase!r}")
@@ -416,21 +456,38 @@ def _communicate_compressed(params: PyTree, *, compressor, ef_state,
     if phase == "none" or n_nodes == 1:
         return params, ef_state
     glossy = global_compressor is not None and global_compressor.lossy
-    if glossy and phase in ("global", "pod_avg"):
-        # the collective supersedes the gossip compressor and comm_dtype
-        # for the averaging phases (DESIGN.md §2.3 Compressed collectives)
-        if use_sharded_backend(backend, mesh, node_axis, shard_mode):
-            return _communicate_sharded_collective(
-                params, compressor=global_compressor, ef_state=ef_state,
-                seed=seed, phase=phase, n_nodes=n_nodes, n_pods=n_pods,
-                mesh=mesh, node_axis=node_axis)
-        if phase == "global":
-            return global_average_pytree(
-                params, axis=axis, backend=backend,
+    if global_compressor is not None and phase in ("global", "pod_avg"):
+        if glossy:
+            # the collective supersedes the gossip compressor and
+            # comm_dtype for the averaging phases (DESIGN.md §2.3
+            # Compressed collectives)
+            if use_sharded_backend(backend, mesh, node_axis, shard_mode):
+                return _communicate_sharded_collective(
+                    params, compressor=global_compressor, ef_state=ef_state,
+                    seed=seed, phase=phase, n_nodes=n_nodes, n_pods=n_pods,
+                    mesh=mesh, node_axis=node_axis, model_axis=model_axis,
+                    caller="mixing.communicate")
+            if phase == "global":
+                return global_average_pytree(
+                    params, axis=axis, backend=backend,
+                    compressor=global_compressor, ef_state=ef_state,
+                    seed=seed)
+            return pod_average_pytree(
+                params, n_pods, axis=axis, backend=backend,
                 compressor=global_compressor, ef_state=ef_state, seed=seed)
-        return pod_average_pytree(
-            params, n_pods, axis=axis, backend=backend,
-            compressor=global_compressor, ef_state=ef_state, seed=seed)
+        # identity global codec: the averaging phase runs the exact psum
+        # path bit-identically.  The global codec supersedes the gossip
+        # compressor for these phases exactly like a lossy codec does —
+        # recursing with the lossy gossip compressor attached would run
+        # the compensated-psum gossip round instead (the documented
+        # contract is "exact psum path, bit-identically")
+        mixed = communicate(
+            params, phase=phase, topology=topology, n_nodes=n_nodes,
+            step=step, axis=axis, comm_dtype=comm_dtype, n_pods=n_pods,
+            backend=backend, mesh=mesh, node_axis=node_axis,
+            shard_mode=shard_mode, leaf_threshold=leaf_threshold,
+            model_axis=model_axis)
+        return mixed, ef_state
     if compressor is None or not compressor.lossy:
         # identity / no gossip compressor: the exact pre-compression path,
         # bit-identically
@@ -438,7 +495,8 @@ def _communicate_compressed(params: PyTree, *, compressor, ef_state,
             params, phase=phase, topology=topology, n_nodes=n_nodes,
             step=step, axis=axis, comm_dtype=comm_dtype, n_pods=n_pods,
             backend=backend, mesh=mesh, node_axis=node_axis,
-            shard_mode=shard_mode, leaf_threshold=leaf_threshold)
+            shard_mode=shard_mode, leaf_threshold=leaf_threshold,
+            model_axis=model_axis)
         return mixed, ef_state
     # gossip/pod_avg: the lossy payload IS the wire, comm_dtype is
     # superseded; global: the psum operand is uncompressed fp32 sums, so
@@ -447,8 +505,8 @@ def _communicate_compressed(params: PyTree, *, compressor, ef_state,
         return communicate_sharded(
             params, phase=phase, topology=topology, n_nodes=n_nodes,
             step=step, comm_dtype=comm_dtype, n_pods=n_pods, mesh=mesh,
-            node_axis=node_axis, compressor=compressor, ef_state=ef_state,
-            seed=seed)
+            node_axis=node_axis, model_axis=model_axis,
+            compressor=compressor, ef_state=ef_state, seed=seed)
     if backend == "pallas":
         from repro.kernels import mixing_pallas
         return mixing_pallas.compressed_step_mix(
@@ -472,7 +530,8 @@ def communicate(params: PyTree, *, phase: str, topology: str, n_nodes: int,
                 node_axis: str = "data", shard_mode: str = "auto",
                 leaf_threshold: Optional[int] = None,
                 compressor=None, ef_state: Optional[PyTree] = None,
-                seed=0, global_compressor=None) -> PyTree:
+                seed=0, global_compressor=None,
+                model_axis: str = "model") -> PyTree:
     """Apply one communication round to decentralized parameters.
 
     phase:
@@ -504,12 +563,19 @@ def communicate(params: PyTree, *, phase: str, topology: str, n_nodes: int,
     routes to the exact uncompressed path, bit-identically
     (DESIGN.md §2.3).
 
-    ``global_compressor`` (``DistConfig.comm_global_compression``) adds
-    the compressed reduce-scatter → all-gather collective for the
-    ``"global"``/``"pod_avg"`` phases (DESIGN.md §2.3 "Compressed
-    collectives"); it supersedes ``compressor`` and ``comm_dtype`` there,
-    leaves gossip rounds untouched, and makes the return value
-    ``(mixed, new_ef_state)`` like ``compressor`` does.
+    ``global_compressor`` (``DistConfig.comm_global_compression``)
+    supersedes ``compressor`` for the ``"global"``/``"pod_avg"`` phases
+    (gossip rounds keep their own compressor): a lossy codec runs the
+    compressed reduce-scatter → all-gather collective (DESIGN.md §2.3
+    "Compressed collectives", superseding ``comm_dtype`` too), the
+    identity codec routes them to the exact psum path bit-identically —
+    even when the gossip ``compressor`` is lossy.  Either way the return
+    value becomes ``(mixed, new_ef_state)`` like ``compressor`` does.
+
+    ``model_axis`` (``DistConfig.model_axis``) names the tensor-parallel
+    mesh axis: when present on ``mesh`` the sharded path runs 2-D — the
+    packed state's columns are sliced over it, so halos/psums/collective
+    stages touch only ``D/k_model`` columns per device (DESIGN.md §2.1).
     """
     _check_backend(backend, axis, caller="mixing.communicate")
     if compressor is not None or global_compressor is not None:
@@ -522,7 +588,7 @@ def communicate(params: PyTree, *, phase: str, topology: str, n_nodes: int,
             axis=axis, comm_dtype=comm_dtype, n_pods=n_pods,
             backend=backend, mesh=mesh, node_axis=node_axis,
             shard_mode=shard_mode, leaf_threshold=leaf_threshold,
-            global_compressor=global_compressor)
+            global_compressor=global_compressor, model_axis=model_axis)
     if phase == "pod_avg":
         _check_pods(n_nodes, n_pods, "mixing.communicate")
     if phase == "none" or n_nodes == 1:
@@ -531,7 +597,7 @@ def communicate(params: PyTree, *, phase: str, topology: str, n_nodes: int,
         return communicate_sharded(
             params, phase=phase, topology=topology, n_nodes=n_nodes,
             step=step, comm_dtype=comm_dtype, n_pods=n_pods, mesh=mesh,
-            node_axis=node_axis)
+            node_axis=node_axis, model_axis=model_axis)
     if phase == "gossip":
         return mix_pytree(params, topology, n_nodes, step=step, axis=axis,
                           comm_dtype=comm_dtype, backend=backend,
@@ -583,6 +649,7 @@ def communicate_sharded(params: PyTree, *, phase: str, topology: str,
                         n_nodes: int, step: int = 0, comm_dtype=None,
                         n_pods: int = 1, mesh: jax.sharding.Mesh,
                         node_axis: str = "data",
+                        model_axis: str = "model",
                         grads: Optional[PyTree] = None,
                         gamma=None, with_residual: bool = False,
                         block_d: int = 2048,
@@ -600,6 +667,17 @@ def communicate_sharded(params: PyTree, *, phase: str, topology: str,
     ``d ⊙ x_local + M_r · xs`` in one pass.  The ``"global"`` phase skips
     the halo machinery: it is a psum of wire-cast column sums (one
     all-reduce, exactly the reference collective).
+
+    With a ``model_axis`` present on ``mesh`` (and distinct from the node
+    axis) the round runs **2-D**: the packed matrix's columns are
+    additionally sliced over the model axis
+    (``flatten_nodes_sharded``, in/out specs ``P(node_axes, model_axes)``),
+    so each device holds an ``(m, D/k_model)`` block, every halo
+    ``ppermute`` moves only the local column slice (per-device wire bytes
+    drop by ``k_model``), the global psum reduces over the node axis only,
+    and the per-shard kernels run on the narrower blocks unchanged
+    (DESIGN.md §2.1 dispatch table).  A mesh without the model axis
+    (``k_model == 1``) follows exactly the 1-D code path.
 
     With ``grads``/``gamma`` the SGD half-step is applied before the
     exchange (the sent blocks must be half-stepped).  With
@@ -638,6 +716,7 @@ def communicate_sharded(params: PyTree, *, phase: str, topology: str,
                          f"phase {phase!r}")
     if phase == "pod_avg":
         _check_pods(n_nodes, n_pods, "mixing.communicate_sharded")
+    mnames, km = _model_names_count(mesh, model_axis, names)
     if global_compressor is not None and phase in ("global", "pod_avg"):
         if grads is not None or with_residual:
             raise ValueError("communicate_sharded: the compressed "
@@ -649,20 +728,26 @@ def communicate_sharded(params: PyTree, *, phase: str, topology: str,
             return _communicate_sharded_collective(
                 params, compressor=global_compressor, ef_state=ef_state,
                 seed=seed, phase=phase, n_nodes=n_nodes, n_pods=n_pods,
-                mesh=mesh, node_axis=node_axis)
-        # identity collective: the exact psum path, bit-identically
+                mesh=mesh, node_axis=node_axis, model_axis=model_axis,
+                caller="mixing.communicate_sharded")
+        # identity collective: the averaging phase runs the exact psum
+        # path, bit-identically.  The global codec supersedes the gossip
+        # compressor here (identity and lossy alike), so the recursion
+        # must NOT re-attach a lossy gossip compressor — that would run
+        # the compensated psum instead of the documented exact one.
         mixed = communicate_sharded(
             params, phase=phase, topology=topology, n_nodes=n_nodes,
             step=step, comm_dtype=comm_dtype, n_pods=n_pods, mesh=mesh,
-            node_axis=node_axis, block_d=block_d, interpret=interpret,
-            compressor=compressor, ef_state=ef_state, seed=seed)
-        return mixed if compressor is not None else (mixed, ef_state)
+            node_axis=node_axis, model_axis=model_axis, block_d=block_d,
+            interpret=interpret)
+        return mixed, ef_state
     if compressor is not None:
         if not compressor.lossy:   # identity: exact uncompressed path
             mixed = communicate_sharded(
                 params, phase=phase, topology=topology, n_nodes=n_nodes,
                 step=step, comm_dtype=comm_dtype, n_pods=n_pods, mesh=mesh,
-                node_axis=node_axis, block_d=block_d, interpret=interpret)
+                node_axis=node_axis, model_axis=model_axis,
+                block_d=block_d, interpret=interpret)
             return mixed, ef_state
         if grads is not None or with_residual:
             raise ValueError("communicate_sharded: compression composes "
@@ -673,8 +758,9 @@ def communicate_sharded(params: PyTree, *, phase: str, topology: str,
         return _communicate_sharded_compressed(
             params, compressor=compressor, ef_state=ef_state, seed=seed,
             phase=phase, topology=topology, n_nodes=n_nodes, step=step,
-            n_pods=n_pods, mesh=mesh, names=names, k=k, block_d=block_d,
-            interpret=interpret, comm_dtype=comm_dtype)
+            n_pods=n_pods, mesh=mesh, names=names, k=k, mnames=mnames,
+            km=km, block_d=block_d, interpret=interpret,
+            comm_dtype=comm_dtype)
     with_g = grads is not None
     if with_g and gamma is None:
         raise ValueError("grads given without gamma")
@@ -683,8 +769,14 @@ def communicate_sharded(params: PyTree, *, phase: str, topology: str,
         else comm_dtype
 
     n = n_nodes
-    xf, unflatten = mixing_pallas.flatten_nodes(params)
-    gf = mixing_pallas.flatten_nodes(grads)[0] if with_g else None
+    xf, unflatten = mixing_pallas.flatten_nodes_sharded(params, km)
+    gf = mixing_pallas.flatten_nodes_sharded(grads, km)[0] if with_g \
+        else None
+    # 2-D specs: rows over the node axis, columns over the model axis
+    # (flatten_nodes_sharded pads so the column split is exact); km == 1
+    # keeps yesterday's 1-D specs verbatim
+    xspec = P(names, mnames) if mnames else P(names)
+    bar_spec = P(None, mnames) if mnames else P()
 
     d, M = mixing_pallas.phase_matrices(phase, topology, n, step=step,
                                         n_pods=n_pods)
@@ -698,16 +790,20 @@ def communicate_sharded(params: PyTree, *, phase: str, topology: str,
         return xb - jnp.asarray(gamma, jnp.float32) * gb
 
     def finish(mixed, cs):
-        xbar = jax.lax.psum(cs, names) / n               # (1, D) over nodes
+        xbar = jax.lax.psum(cs, names) / n        # (1, D/km) over nodes
         # cancellation-free consensus: Σ‖x_i − x̄‖² directly (the fused
         # Σ‖x‖² − n‖x̄‖² form loses all precision when consensus ≪ ‖x‖²);
-        # the extra pass touches only the shard's local (m, D) block
+        # the extra pass touches only the shard's local (m, D/km) block,
+        # and the scalar is completed by a psum over the model slices
         resid = jax.lax.psum(jnp.sum(jnp.square(mixed - xbar)), names)
+        if mnames:
+            resid = jax.lax.psum(resid, mnames)
         return mixed, xbar, resid
 
     if phase == "global":
-        # x̄ everywhere: one all-reduce of wire-cast column sums; the mixed
-        # iterate is the broadcast mean, so the consensus residual is 0.
+        # x̄ everywhere: one all-reduce of wire-cast column sums over the
+        # node axis only (each model shard averages its own column slice);
+        # the mixed iterate is the broadcast mean, so the residual is 0.
         def body(xb, *rest):
             x = half_step(xb, rest[0] if with_g else None)
             xw = x.astype(wire_dtype).astype(jnp.float32) \
@@ -719,7 +815,7 @@ def communicate_sharded(params: PyTree, *, phase: str, topology: str,
                 return mixed, xbar, jnp.zeros((), jnp.float32)
             return mixed
 
-        in_specs = (P(names),) + ((P(names),) if with_g else ())
+        in_specs = (xspec,) + ((xspec,) if with_g else ())
         operands = (xf,) + ((gf,) if with_g else ())
     else:
         def body(xb, *rest):
@@ -741,12 +837,12 @@ def communicate_sharded(params: PyTree, *, phase: str, topology: str,
                 return finish(*out)
             return out
 
-        in_specs = (P(names),) + ((P(names),) if with_g else ()) \
+        in_specs = (xspec,) + ((xspec,) if with_g else ()) \
             + (P(names), P(names))
         operands = (xf,) + ((gf,) if with_g else ()) \
             + (jnp.asarray(Mstack), jnp.asarray(dstack))
 
-    out_specs = (P(names), P(), P()) if with_residual else P(names)
+    out_specs = (xspec, bar_spec, P()) if with_residual else xspec
     fn = shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                    check_rep=False)
     out = fn(*operands)
@@ -761,6 +857,7 @@ def _communicate_sharded_compressed(params: PyTree, *, compressor, ef_state,
                                     seed, phase: str, topology: str,
                                     n_nodes: int, step: int, n_pods: int,
                                     mesh: jax.sharding.Mesh, names, k: int,
+                                    mnames=(), km: int = 1,
                                     block_d: int,
                                     interpret: Optional[bool],
                                     comm_dtype=None):
@@ -773,38 +870,77 @@ def _communicate_sharded_compressed(params: PyTree, *, compressor, ef_state,
     arrays (leading axis 1, e.g. randk's shared column indices) ride
     replicated and are never ppermuted.
 
+    2-D meshes (``km > 1``): for the quantizer compressors (int8/fp8,
+    whose code arrays share the leaf's column layout) each leaf is padded
+    to a ``km`` multiple *before* compression — inert zero columns, so
+    scales, column-hash randomness, and therefore every rounding decision
+    on real columns are bit-stable under resharding — and the code arrays
+    are column-sliced over the model axis alongside the packed matrix
+    (``flatten_nodes_sharded`` chunk order, spec negotiation in
+    ``models.sharding.wire_column_spec``): the ppermuted wire bytes per
+    device drop by ``km``.  Sparsifier payloads (top-k/rand-k values +
+    global index sets) cannot column-slice — they ride the
+    model-replicated 1-D path unchanged.
+
     The ``"global"`` phase applies the compensation ``x + (q̄ − q)``
-    around one psum of column sums; the psum itself is the reference
-    collective (compressed all-reduce would need a compressed collective
-    — the documented DESIGN.md §2.3 limitation), so its operand is
-    wire-cast per ``comm_dtype`` exactly like the uncompressed path
-    (every backend applies the same cast to ``q``, keeping parity and the
-    constant fixed point).
+    around one psum of column sums over the node axis; the psum itself is
+    the reference collective (compressed all-reduce would need a
+    compressed collective — the documented DESIGN.md §2.3 limitation), so
+    its operand is wire-cast per ``comm_dtype`` exactly like the
+    uncompressed path (every backend applies the same cast to ``q``,
+    keeping parity and the constant fixed point).
     """
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
     from repro import compress as compress_mod
     from repro.kernels import mixing_pallas
+    from repro.models.sharding import wire_column_spec
 
     n = n_nodes
     leaves = jax.tree.leaves(params)
     sizes = [int(np.prod(l.shape[1:], dtype=np.int64)) for l in leaves]
+    # only the quantizers' code arrays share the leaf column layout, so
+    # only they can ride the model-sliced 2-D path (sparsifier index sets
+    # are leaf-global); km == 1 keeps the 1-D path bit-identical
+    kmq = km if (km > 1 and compressor.name in ("int8", "fp8")) else 1
+    mn = mnames if kmq > 1 else ()
+    chunks = [-(-s // kmq) for s in sizes]
 
-    # row-local compression of the local block (+ EF update); wire arrays
-    # with the leading node axis shard over it, leading-axis-1 arrays
-    # (shared/replicated metadata) do not
-    wires, new_ef = compress_mod.compress_tree(compressor, params, ef_state,
-                                               seed)
+    # row-local compression of the local block (+ EF update), on the
+    # column-padded rows view when model-sliced (ccol.pad_cols semantics:
+    # appended zeros, so absmax scales and absolute-column random bits on
+    # real columns are unchanged and pad columns code to exact zero).
+    # Passing the 2-D views as a list keeps jax.tree leaf order == salt
+    # order.
+    from repro.compress.collective import pad_cols
+    x2 = [pad_cols(l.reshape(n, -1).astype(jnp.float32), kmq)
+          for l in leaves]
+    ef_leaves = jax.tree.leaves(ef_state) if ef_state is not None else None
+    e2 = None
+    if ef_leaves is not None:
+        e2 = [pad_cols(e.reshape(n, -1).astype(jnp.float32), kmq)
+              for e in ef_leaves]
+    wires, new_e2 = compress_mod.compress_tree(compressor, x2, e2, seed)
+    new_ef = None
+    if ef_leaves is not None:
+        new_ef = jax.tree.unflatten(
+            jax.tree.structure(ef_state),
+            [e[:, :s].reshape(l.shape).astype(l.dtype)
+             for e, s, l in zip(new_e2, sizes, ef_leaves)])
     counts = [len(w.payload) + len(w.aux) for w in wires]
     wire_arrs = [a for w in wires for a in (*w.payload, *w.aux)]
     sharded_arr = [a.shape[0] == n for a in wire_arrs]
-    wire_specs = tuple(P(names) if s else P() for s in sharded_arr)
+    wire_specs = tuple(wire_column_spec(a.shape, n, names, mn, kmq)
+                       for a in wire_arrs)
 
     def build_q(arrs):
-        """Rebuild the dense (rows, D) estimate from a row-block's wire
-        arrays (row-local jnp; runs inside the shard_map body)."""
+        """Rebuild the dense (rows, D_local) estimate from a row-block's
+        wire arrays (row-local jnp; runs inside the shard_map body).  On
+        the model-sliced path each code array arrives as its local column
+        chunk, so the concatenation is column-aligned with the packed
+        matrix's per-shard layout."""
         out, off = [], 0
-        for w0, c, d_leaf in zip(wires, counts, sizes):
+        for w0, c, d_leaf in zip(wires, counts, chunks):
             grp = arrs[off:off + c]
             wire = compress_mod.LeafWire(
                 payload=tuple(grp[:len(w0.payload)]),
@@ -813,7 +949,8 @@ def _communicate_sharded_compressed(params: PyTree, *, compressor, ef_state,
             off += c
         return out[0] if len(out) == 1 else jnp.concatenate(out, axis=1)
 
-    xf, unflatten = mixing_pallas.flatten_nodes(params)
+    xf, unflatten = mixing_pallas.flatten_nodes_sharded(params, kmq)
+    xspec = P(names, mn) if mn else P(names)
     d, M = mixing_pallas.phase_matrices(phase, topology, n, step=step,
                                         n_pods=n_pods)
 
@@ -825,8 +962,8 @@ def _communicate_sharded_compressed(params: PyTree, *, compressor, ef_state,
             qbar = jax.lax.psum(jnp.sum(q, axis=0, keepdims=True), names) / n
             return xb + (qbar - q)
 
-        fn = shard_map(body, mesh=mesh, in_specs=(P(names),) + wire_specs,
-                       out_specs=P(names), check_rep=False)
+        fn = shard_map(body, mesh=mesh, in_specs=(xspec,) + wire_specs,
+                       out_specs=xspec, check_rep=False)
         return unflatten(fn(xf, *wire_arrs)), new_ef
 
     offsets, Mstack, dstack = _shard_blocks(M, d, n, k)
@@ -846,8 +983,8 @@ def _communicate_sharded_compressed(params: PyTree, *, compressor, ef_state,
             xb, q_self, qs, wr[0], Mr[0], block_d=block_d,
             interpret=interpret)
 
-    in_specs = (P(names), P(names), P(names)) + wire_specs
-    fn = shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=P(names),
+    in_specs = (xspec, P(names), P(names)) + wire_specs
+    fn = shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=xspec,
                    check_rep=False)
     out = fn(xf, jnp.asarray(Mstack), jnp.asarray(wstack), *wire_arrs)
     return unflatten(out), new_ef
@@ -857,45 +994,70 @@ def _communicate_sharded_collective(params: PyTree, *, compressor, ef_state,
                                     seed, phase: str, n_nodes: int,
                                     n_pods: int, mesh: jax.sharding.Mesh,
                                     node_axis: str = "data",
-                                    qblock: Optional[int] = None):
+                                    model_axis: str = "model",
+                                    qblock: Optional[int] = None,
+                                    caller: Optional[str] = None):
     """Compressed global/pod-averaging collective with the node axis
     sharded over ``mesh`` (DESIGN.md §2.3 "Compressed collectives").
 
     The chunked reduce-scatter runs as one ``all_to_all`` of the stage-1
-    **wire arrays** (int8/fp8 codes + per-block fp32 scales) — the
-    compressed bytes are exactly what crosses the ICI; each column
+    **wire arrays** (int8/fp8 codes + one *uint8 exponent byte* per
+    power-of-two block scale — ``pow2_block_scale`` guarantees a pure
+    exponent, so the fp32 scale word never crosses the ICI) — the
+    compressed bytes are exactly what crosses the wire; each column
     segment's owner dequantizes, applies the anchored accumulate, and
     re-quantizes the (per-pod) mean chunk, which returns via an
-    ``all_gather`` of stage-2 codes+scales.  Stage-1 quantization, the
+    ``all_gather`` of stage-2 codes+exponents.  Stage-1 quantization, the
     EF residual ``e' = y − q₁``, and the local emulation ``ρ = Q₂(q₁)``
     are row-local and run *outside* the shard_map, so GSPMD keeps them
     collective-free; the compensated combine ``x + (r − ρ)`` is
     elementwise.  Returns ``(mixed, new_ef_state)``.
+
+    On a 2-D ``(node, model)`` mesh the packed columns are sliced over
+    the model axis: padding is to ``k_model · k · QBLOCK`` so every model
+    shard's slice starts on a scale-block boundary (absolute-column
+    randomness and block scales stay bit-stable under resharding), the
+    reduce-scatter segments split ``D/k_model`` instead of ``D``, and the
+    stage-2 column offset is ``model_slice + node_segment``.
+
+    ``caller`` names the public entry point for validation errors; both
+    dispatch paths (``communicate``/``communicate_sharded``) and direct
+    callers get their own message instead of an opaque shard_map trace
+    failure.
     """
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
     from repro.compress import collective as ccol
     from repro.kernels import mixing_pallas
 
+    who = caller or "mixing._communicate_sharded_collective"
     names = node_axis_names(mesh, node_axis)
+    if not names:
+        raise ValueError(f"{who}: mesh {dict(mesh.shape)} has no axis for "
+                         f"node_axis={node_axis!r} — the compressed "
+                         f"collective needs a sharded node axis (use the "
+                         f"stacked path instead)")
     k = node_shard_count(mesh, node_axis)
     n = n_nodes
     if n % k:
-        raise ValueError(f"communicate_sharded: n_nodes={n} not divisible "
-                         f"by the {k} node-axis shards of mesh axes {names}")
+        raise ValueError(f"{who}: n_nodes={n} not divisible by the {k} "
+                         f"node-axis shards of mesh axes {names}")
     pods = n_pods if phase == "pod_avg" else 1
-    _check_pods(n, pods, "mixing.communicate_sharded")
+    _check_pods(n, pods, who)
     kind = compressor.name
     qb = ccol.QBLOCK if qblock is None else qblock
+    mnames, km = _model_names_count(mesh, model_axis, names)
 
     xf, unflatten = mixing_pallas.flatten_nodes(params)
     ef2 = ef_unflatten = None
     if ef_state is not None:
         ef2, ef_unflatten = mixing_pallas.flatten_nodes(ef_state)
     D = xf.shape[1]
-    # segment boundaries must land on scale blocks: pad to k·qblock
-    xp = ccol.pad_cols(xf, k * qb)
-    ep = ccol.pad_cols(ef2, k * qb)
+    # segment boundaries must land on scale blocks for every model slice:
+    # pad to k_model·k·qblock (appended zero columns — real columns keep
+    # their absolute indices, so scales and random bits are unchanged)
+    xp = ccol.pad_cols(xf, km * k * qb)
+    ep = ccol.pad_cols(ef2, km * k * qb)
     Dp = xp.shape[1]
     s1, s2 = ccol.stage_seeds(seed)
 
@@ -904,29 +1066,39 @@ def _communicate_sharded_collective(params: PyTree, *, compressor, ef_state,
     new_ef = None if ep is None else (y - q1)[:, :D]
     _, _, rho = ccol.quantize_blocks(q1, kind, s2, qb)
 
-    seg = Dp // k
+    width = Dp // km          # columns per model slice
+    seg = width // k          # columns per (node shard, model shard) owner
     axis_sizes = [mesh.shape[a] for a in names]
+    msizes = [mesh.shape[a] for a in mnames]
+    wspec = P(names, mnames) if mnames else P(names)
 
-    def body(cb, sb):
-        # reduce-scatter: the compressed wire arrays cross the ICI
+    def body(cb, eb):
+        # reduce-scatter: the compressed wire arrays (codes + exponent
+        # bytes) cross the ICI, node axis only — each model slice reduces
+        # its own columns
         ac = jax.lax.all_to_all(cb, names, split_axis=1, concat_axis=0,
                                 tiled=True)                     # (n, seg)
-        asc = jax.lax.all_to_all(sb, names, split_axis=1, concat_axis=0,
-                                 tiled=True)                    # (n, nb/k)
-        q_seg = ccol.dequant_blocks(ac, asc, qb)
+        ae = jax.lax.all_to_all(eb, names, split_axis=1, concat_axis=0,
+                                tiled=True)                     # (n, seg/qb)
+        q_seg = ccol.dequant_blocks(ac, ccol.exponent_scales(ae), qb)
         mbar = ccol.anchored_mean(q_seg, pods)                  # (p, seg)
         shard = 0
         for a, sz in zip(names, axis_sizes):
             shard = shard * sz + jax.lax.axis_index(a)
+        mshard = 0
+        for a, sz in zip(mnames, msizes):
+            mshard = mshard * sz + jax.lax.axis_index(a)
         c2, sc2, _ = ccol.quantize_blocks(mbar, kind, s2, qb,
-                                          col0=shard * seg)
-        gc = jax.lax.all_gather(c2, names, axis=1, tiled=True)  # (p, Dp)
-        gs = jax.lax.all_gather(sc2, names, axis=1, tiled=True)
-        return ccol.dequant_blocks(gc, gs, qb)                  # (p, Dp)
+                                          col0=mshard * width + shard * seg)
+        gc = jax.lax.all_gather(c2, names, axis=1, tiled=True)  # (p, width)
+        ge = jax.lax.all_gather(ccol.scale_exponents(sc2), names, axis=1,
+                                tiled=True)
+        return ccol.dequant_blocks(gc, ccol.exponent_scales(ge), qb)
 
-    fn = shard_map(body, mesh=mesh, in_specs=(P(names), P(names)),
-                   out_specs=P(), check_rep=False)
-    r = fn(codes1, scales1)
+    fn = shard_map(body, mesh=mesh, in_specs=(wspec, wspec),
+                   out_specs=P(None, mnames) if mnames else P(),
+                   check_rep=False)
+    r = fn(codes1, ccol.scale_exponents(scales1))               # (p, Dp)
     per = n // pods
     r_rows = jnp.broadcast_to(r[:, None], (pods, per, Dp)).reshape(n, Dp)
     mixed = (xp + (r_rows - rho))[:, :D]

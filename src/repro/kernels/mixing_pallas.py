@@ -159,6 +159,56 @@ def flatten_nodes(tree: PyTree) -> Tuple[jax.Array, Callable]:
     return flat, unflatten
 
 
+def flatten_nodes_sharded(tree: PyTree, k_model: int
+                          ) -> Tuple[jax.Array, Callable]:
+    """Model-sharded variant of :func:`flatten_nodes` (``k_model == 1``
+    degenerates to it exactly, byte for byte).
+
+    Each leaf's flattened columns are zero-padded to a multiple of
+    ``k_model`` and split into ``k_model`` equal chunks; the packed matrix
+    concatenates chunk ``j`` of *every* leaf contiguously, so a
+    ``P(node_axes, model_axes)`` sharding hands model shard ``j`` exactly
+    chunk ``j`` of every leaf — a per-leaf wire array sharded
+    ``P(node_axes, model_axes)`` on its own column axis stays
+    column-aligned with the packed matrix inside the shard_map body
+    (``mixing._communicate_sharded_compressed``).  Zero padding is inert
+    (same pad-to-multiple semantics as ``compress.collective.pad_cols``,
+    inlined here to keep the kernels layer free of compress imports): pad
+    columns mix to zero and quantize to zero codes, and ``unflatten``
+    strips them per leaf.
+    """
+    if k_model <= 1:
+        return flatten_nodes(tree)
+    leaves, treedef = jax.tree.flatten(tree)
+    n = leaves[0].shape[0]
+    shapes = [l.shape for l in leaves]
+    dtypes = [l.dtype for l in leaves]
+    sizes = [int(np.prod(s[1:], dtype=np.int64)) for s in shapes]
+    chunks = [-(-s // k_model) for s in sizes]       # per-shard leaf width
+    width = sum(chunks)                              # columns per model shard
+    x2 = [l.reshape(n, -1).astype(jnp.float32) for l in leaves]
+    x2 = [jnp.pad(x, ((0, 0), (0, c * k_model - s))) if c * k_model != s
+          else x for x, c, s in zip(x2, chunks, sizes)]
+    cols = [x[:, j * c:(j + 1) * c]
+            for j in range(k_model) for x, c in zip(x2, chunks)]
+    flat = cols[0] if len(cols) == 1 else jnp.concatenate(cols, axis=1)
+
+    def unflatten(f: jax.Array, drop_node: bool = False) -> PyTree:
+        out, off = [], 0
+        for shape, dtype, size, c in zip(shapes, dtypes, sizes, chunks):
+            parts = [f[:, j * width + off:j * width + off + c]
+                     for j in range(k_model)]
+            piece = jnp.concatenate(parts, axis=1)[:, :size]
+            if drop_node:
+                out.append(piece.reshape(shape[1:]).astype(dtype))
+            else:
+                out.append(piece.reshape((n,) + shape[1:]).astype(dtype))
+            off += c
+        return jax.tree.unflatten(treedef, out)
+
+    return flat, unflatten
+
+
 # ---------------------------------------------------------------------------
 # Kernel body (shared by all entry points)
 # ---------------------------------------------------------------------------

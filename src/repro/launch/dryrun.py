@@ -32,6 +32,7 @@ from repro.compress import round_wire_bytes
 from repro.configs import (ASSIGNED_ARCHS, DistConfig, INPUT_SHAPES,
                            OptimizerConfig, TrainConfig, DataConfig,
                            get_model_config)
+from repro.core.mixing import model_shard_count, use_sharded_backend
 from repro.launch.mesh import make_production_mesh, n_gossip_nodes
 from repro.launch.specs import serve_specs, train_specs
 from repro.models.model import make_model
@@ -146,6 +147,21 @@ def dryrun_train(cfg, shape, mesh, *, dist: DistConfig, phases=("gossip",
             global_compression=dist.comm_global_compression)
         wb_fp32 = round_wire_bytes(phase, dist.topology, specs.n_nodes,
                                    per_node_params, n_pods=dist.n_pods)
+        # 2-D (node, model) runtime: per-device bytes divide by the model
+        # axis only when this run actually routes through the sharded
+        # path (same gate mixing uses) — stacked/reference runs keep
+        # replicated columns and must not report a phantom reduction
+        sharded_comm = use_sharded_backend(
+            dist.comm_backend, mesh, dist.node_axis, dist.comm_shard_mode)
+        model_shards = model_shard_count(
+            mesh, dist.model_axis, dist.node_axis) if sharded_comm else 1
+        wb_dev = round_wire_bytes(
+            phase, dist.topology, specs.n_nodes, per_node_params,
+            comm_dtype=dist.comm_dtype, compression=dist.comm_compression,
+            k=dist.comm_compression_k, n_pods=dist.n_pods,
+            leaf_sizes=leaf_sizes,
+            global_compression=dist.comm_global_compression,
+            model_shards=model_shards)
         out["phases"][phase] = {
             "compile_s": compile_s,
             "memory": _mem_dict(mem),
@@ -153,6 +169,8 @@ def dryrun_train(cfg, shape, mesh, *, dist: DistConfig, phases=("gossip",
             "roofline_raw_scan": rl_raw.to_dict(),
             "wire": {"bytes_per_node": wb,
                      "fp32_bytes_per_node": wb_fp32,
+                     "model_shards": model_shards,
+                     "bytes_per_device": wb_dev,
                      "compression": dist.comm_compression,
                      "global_compression": dist.comm_global_compression,
                      "reduction": (wb_fp32 / wb) if wb else 1.0},

@@ -14,8 +14,9 @@ from __future__ import annotations
 
 import jax
 
-from repro.core.mixing import node_axis_names, node_shard_count  # noqa: F401
-                                                  # re-exported for launchers
+from repro.core.mixing import (model_axis_names,  # noqa: F401
+                               model_shard_count, node_axis_names,
+                               node_shard_count)  # re-exported for launchers
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:

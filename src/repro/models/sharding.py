@@ -115,3 +115,28 @@ def constrain(x: jax.Array, spec: P) -> jax.Array:
         return jax.lax.with_sharding_constraint(x, spec)
     except (ValueError, RuntimeError):
         return x
+
+
+def wire_column_spec(shape: Tuple[int, ...], n_rows: int,
+                     node_names: Tuple[str, ...],
+                     model_names: Tuple[str, ...], k_model: int) -> P:
+    """Leaf→column-slice spec negotiation for the sharded communication
+    path's packed/wire arrays (``repro.core.mixing``, DESIGN.md §2.1).
+
+    * arrays carrying the node axis (leading dim == ``n_rows``) shard it
+      over ``node_names``;
+    * a node-sharded array whose trailing column axis divides the model
+      shard count is additionally column-sliced over ``model_names`` —
+      the caller guarantees the column layout matches the packed matrix's
+      (``mixing_pallas.flatten_nodes_sharded`` chunk order), and passes
+      ``model_names=()`` for payloads whose columns cannot slice
+      (sparsifier index sets, per-row scales);
+    * everything else (leading-axis-1 shared metadata, scalars) rides
+      replicated.
+    """
+    row = tuple(node_names) if shape and shape[0] == n_rows else None
+    if (row is not None and model_names and k_model > 1 and len(shape) >= 2
+            and shape[-1] >= k_model and shape[-1] % k_model == 0):
+        mid = (None,) * (len(shape) - 2)
+        return P(row, *mid, tuple(model_names))
+    return P(row) if row is not None else P()

@@ -143,7 +143,7 @@ def build_train_step(model: Model, tcfg: TrainConfig, n_nodes: int, *,
                     n_nodes=n_nodes, step=shift_step, axis=0,
                     comm_dtype=comm_dtype, n_pods=dist.n_pods,
                     backend=dist.comm_backend, mesh=mesh,
-                    node_axis=dist.node_axis,
+                    node_axis=dist.node_axis, model_axis=dist.model_axis,
                     shard_mode=dist.comm_shard_mode,
                     leaf_threshold=dist.pallas_leaf_threshold,
                     compressor=compressor, ef_state=state.ef_state,
@@ -159,7 +159,7 @@ def build_train_step(model: Model, tcfg: TrainConfig, n_nodes: int, *,
                         n_nodes=n_nodes, step=shift_step,
                         comm_dtype=comm_dtype, n_pods=dist.n_pods,
                         mesh=mesh, node_axis=dist.node_axis,
-                        with_residual=True)
+                        model_axis=dist.model_axis, with_residual=True)
                 else:
                     from repro.kernels import mixing_pallas
                     new_params, _xbar, resid = mixing_pallas.mix_residual(
@@ -174,7 +174,7 @@ def build_train_step(model: Model, tcfg: TrainConfig, n_nodes: int, *,
                     n_nodes=n_nodes, step=shift_step, axis=0,
                     comm_dtype=comm_dtype, n_pods=dist.n_pods,
                     backend=dist.comm_backend, mesh=mesh,
-                    node_axis=dist.node_axis,
+                    node_axis=dist.node_axis, model_axis=dist.model_axis,
                     shard_mode=dist.comm_shard_mode,
                     leaf_threshold=dist.pallas_leaf_threshold)
         if with_consensus:

@@ -398,6 +398,36 @@ def test_collective_error_feedback_parity(rng_key):
     assert sum(float(jnp.sum(jnp.abs(l))) for l in jax.tree.leaves(r_e)) > 0
 
 
+def test_identity_global_supersedes_lossy_gossip(rng_key):
+    """Regression: an averaging phase configured with the **identity**
+    global codec runs the documented "exact psum path, bit-identically"
+    even when the gossip ``compressor`` is lossy — previously the
+    dispatch recursed with the lossy gossip compressor still attached and
+    ran the compensated psum instead.  Gossip rounds keep the gossip
+    compressor."""
+    tree = _tree(rng_key, 8)
+    ident, lossy = C.make_compressor("identity"), C.make_compressor("int8")
+    for phase, n_pods in AVG_PHASES:
+        for backend in ("reference", "pallas"):
+            kw = dict(phase=phase, topology="ring", n_nodes=8,
+                      n_pods=n_pods, backend=backend)
+            want = mixing.communicate(tree, **kw)
+            got, ef = mixing.communicate(tree, compressor=lossy,
+                                         global_compressor=ident, seed=3,
+                                         **kw)
+            assert ef is None
+            for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+                assert g.dtype == w.dtype
+                np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+    # ...and the gossip phase still runs the lossy gossip compressor
+    gossip_kw = dict(phase="gossip", topology="ring", n_nodes=8, seed=3)
+    want, _ = mixing.communicate(tree, compressor=lossy, **gossip_kw)
+    got, _ = mixing.communicate(tree, compressor=lossy,
+                                global_compressor=ident, **gossip_kw)
+    for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
 def test_collective_supersedes_gossip_compressor_on_global(rng_key):
     """With both knobs lossy, the averaging phase is served by the
     collective alone (per-phase override): identical to the run where only
@@ -424,17 +454,18 @@ def test_collective_supersedes_gossip_compressor_on_global(rng_key):
 
 def test_collective_wire_bytes_model():
     """The analytic global-phase model follows the collective payload
-    (codes + per-QBLOCK scale words): ≥4× vs fp32 up to the scale slack,
-    and the dry-run's honest 1.0× is gone."""
+    (codes + one uint8 exponent per power-of-two block scale — the fp32
+    scale word no longer crosses the wire): ≥4× vs fp32 up to the
+    exponent-byte slack, and the dry-run's honest 1.0× is gone."""
     from repro.compress import collective as ccol
     d = 1 << 20
     fp32 = C.round_wire_bytes("global", "ring", 8, d)
     comp = C.round_wire_bytes("global", "ring", 8, d,
                               global_compression="int8")
     dp = -(-d // ccol.QBLOCK) * ccol.QBLOCK
-    floor = 4.0 * d / (dp + 4 * dp // ccol.QBLOCK)
+    floor = 4.0 * d / (dp + dp // ccol.QBLOCK)
     assert fp32 / comp >= floor - 1e-9
-    assert fp32 / comp > 3.9
+    assert fp32 / comp > 3.99
     # pod_avg follows the same collective accounting
     assert C.round_wire_bytes("pod_avg", "ring", 8, d, n_pods=2,
                               global_compression="int8") == comp
@@ -593,6 +624,23 @@ _SHARDED_COMPRESSED_SCRIPT = textwrap.dedent("""
         np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
     print("COLL_IDENTITY_OK")
 
+    # regression: identity collective + LOSSY gossip compressor still runs
+    # the exact psum on the averaging phases (the recursion used to
+    # re-attach the gossip compressor and run the compensated psum)
+    for phase, pods in (("global", 1), ("pod_avg", 4)):
+        want = mixing.communicate(t, phase=phase, topology="ring",
+                                  n_nodes=n, n_pods=pods, backend="pallas",
+                                  mesh=mesh)
+        got, ef = mixing.communicate(
+            t, phase=phase, topology="ring", n_nodes=n, n_pods=pods,
+            backend="pallas", mesh=mesh,
+            compressor=C.make_compressor("int8"),
+            global_compressor=C.make_compressor("identity"), seed=4)
+        assert ef is None
+        for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
+            np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+    print("COLL_IDENT_LOSSY_OK")
+
     # two-axis (pod, data) mesh: the flattened shard index keeps segment
     # order, so parity holds on hierarchical meshes too
     mesh2 = jax.make_mesh((2, 4), ("pod", "data"))
@@ -630,5 +678,6 @@ def test_sharded_compressed_parity_8dev():
     assert stdout.count("COLL_OK") == 5, stdout
     for marker in ("CGLOBAL_BF16_OK", "CEF_OK", "CIDENTITY_OK",
                    "CCONSTANT_OK", "COLL_EF_OK", "COLL_CONSTANT_OK",
-                   "COLL_IDENTITY_OK", "COLL_2AXIS_OK"):
+                   "COLL_IDENTITY_OK", "COLL_IDENT_LOSSY_OK",
+                   "COLL_2AXIS_OK"):
         assert marker in stdout, stdout
