@@ -11,9 +11,10 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from benchmarks.common import emit, time_fn
-from repro.core import mixing
+from repro.core import mixing, topology as topo
 
 ALPHA = 50e-6
 MODELS = {"resnet50": 25.5e6, "bert_large": 330e6}
@@ -30,6 +31,25 @@ def alpha_beta_times(d_params: float, n: int = 32, H: int = 6):
             "gossip_one_peer": one_peer, "gossip_pga_H6": pga}
 
 
+def push_sum_round_time(d_params: float, topology: str, n: int,
+                        n_dropped: int = 0) -> float:
+    """α-β time of one push-sum gossip round: wire traffic is the
+    *off-diagonal* nnz of the column-stochastic W (each entry is one
+    directed point-to-point message of the full parameter vector; the
+    diagonal is local).  Dropped nodes send nothing — their column is
+    e_j — and survivors renormalize over fewer receivers, so the dropped
+    round is strictly cheaper on the wire while the de-biased average
+    stays exact (DESIGN.md §2.5)."""
+    active = np.ones(n, dtype=bool)
+    active[:n_dropped] = False
+    W = topo.push_sum_matrix(topology, n, active=active)
+    msgs = int(np.count_nonzero(W - np.diag(np.diag(W))))
+    theta_d = d_params * 4 / BANDWIDTH
+    # per-node critical path: the busiest sender's message count
+    per_node = max(int(np.count_nonzero(col)) - 1 for col in W.T)
+    return per_node * theta_d + ALPHA, msgs
+
+
 def main() -> None:
     # --- (a) analytic, reproducing App. H / Table 17 structure -------------
     for name, d in MODELS.items():
@@ -44,6 +64,14 @@ def main() -> None:
         emit(f"table17_{name}_gossip_vs_allreduce_ratio",
              t["allreduce"] / t["gossip_one_peer"],
              "paper measured ~1.85x (ResNet50), ~2.6x (BERT)")
+
+    # --- push-sum rounds under faults (DESIGN.md §2.5) ---------------------
+    n = 32
+    for name, d in MODELS.items():
+        for n_dropped in (0, 2, 8):
+            t, msgs = push_sum_round_time(d, "directed_exp", n, n_dropped)
+            emit(f"push_sum_{name}_directed_exp_drop{n_dropped}_ms", t * 1e3,
+                 f"{msgs} directed msgs, n={n}")
 
     # --- (b) measured structural proxy on CPU ------------------------------
     n, dim = 8, 1_000_000

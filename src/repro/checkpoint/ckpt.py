@@ -21,6 +21,13 @@ Two contracts added for compressed runs (ISSUE 4 bugfixes):
   (the template grows a params-shaped fp32 slot), and a template expecting
   ``ef_state`` that the checkpoint predates gets fresh zeros (EF restarts
   empty, the correct semantic for newly-enabled compression).
+
+The push-sum weight scalar (``TrainState.push_weight``, DESIGN.md §2.5)
+gets the same optional-field reconcile: a checkpointed weight is restored
+into a template built without push-sum (the slot grows from the npz
+shape), and a push-sum template restoring a pre-push-sum checkpoint gets
+fresh **ones** — not zeros: w = 1 is the push-sum init (Σw = n), and a
+zero weight would make every de-biased read ``x/w`` infinite.
 """
 from __future__ import annotations
 
@@ -37,6 +44,7 @@ PyTree = Any
 _MANIFEST = "manifest.json"
 _EF_PREFIX = ".ef_state/"
 _EF_KEY = ".ef_state"                      # bare-array (single-leaf) ef_state
+_PUSH_KEY = ".push_weight"                 # push-sum weight scalar (n, 1)
 _DTYPES_KEY = "__dtype_manifest__"         # reserved npz entry, not a leaf
 
 
@@ -140,6 +148,22 @@ def _reconcile_ef(template: PyTree, data) -> PyTree:
     return template
 
 
+def _reconcile_push(template: PyTree, data) -> PyTree:
+    """Align the optional ``TrainState.push_weight`` between checkpoint and
+    template (same contract shape as :func:`_reconcile_ef`)."""
+    try:
+        from repro.train.state import TrainState
+    except ImportError:
+        return template
+    if not isinstance(template, TrainState):
+        return template
+    if _PUSH_KEY in data.files and template.push_weight is None:
+        import jax.numpy as jnp
+        slot = jax.ShapeDtypeStruct(data[_PUSH_KEY].shape, jnp.float32)
+        return dataclasses.replace(template, push_weight=slot)
+    return template
+
+
 def restore_checkpoint(ckpt_dir: str, template: PyTree,
                        step: Optional[int] = None) -> PyTree:
     step = step if step is not None else latest_step(ckpt_dir)
@@ -151,6 +175,7 @@ def restore_checkpoint(ckpt_dir: str, template: PyTree,
     else:                                    # older save: latest-step record
         dtypes = _load_manifest(ckpt_dir).get("dtypes", {})
     template = _reconcile_ef(template, data)
+    template = _reconcile_push(template, data)
     flat, treedef = _flatten(template)
     leaves = []
     for key, tmpl in flat.items():
@@ -158,6 +183,11 @@ def restore_checkpoint(ckpt_dir: str, template: PyTree,
             # template expects EF memory the checkpoint predates: fresh
             # zeros (EF restarts empty when compression is newly enabled)
             leaves.append(jax.numpy.zeros(tmpl.shape, tmpl.dtype))
+            continue
+        if key not in data and key == _PUSH_KEY:
+            # push-sum template, pre-push-sum checkpoint: the weight
+            # restarts at its init value 1 (zeros would blow up x/w)
+            leaves.append(jax.numpy.ones(tmpl.shape, tmpl.dtype))
             continue
         arr = data[key]
         if key in dtypes:

@@ -170,7 +170,13 @@ class ModelConfig:
 # ---------------------------------------------------------------------------
 ALGORITHMS = ("parallel", "gossip", "local", "gossip_pga", "gossip_aga",
               "slowmo", "hier_pga")
-TOPOLOGIES = ("ring", "grid", "exp", "one_peer_exp", "full", "disconnected")
+TOPOLOGIES = ("ring", "grid", "exp", "one_peer_exp", "full", "disconnected",
+              "directed_ring", "directed_exp")
+# push-sum works with any algorithm whose rounds are gossip and/or global
+# averaging — slowmo/hier_pga compose outer-iterate or pod rounds that have
+# no de-biased push-sum form yet (DESIGN.md §2.5)
+PUSH_SUM_ALGORITHMS = ("parallel", "local", "gossip", "gossip_pga",
+                       "gossip_aga")
 
 
 @dataclass(frozen=True)
@@ -241,6 +247,13 @@ class DistConfig:
                                      # per-node elements at which a leaf gets
                                      # its own kernel dispatch instead of the
                                      # concat staging buffer
+    push_sum: bool = False           # push-sum gossip (DESIGN.md §2.5):
+                                     # column-stochastic directed mixing +
+                                     # per-node weight scalar
+                                     # (TrainState.push_weight), de-biased
+                                     # reads x/w.  Required for the
+                                     # directed topologies and for fault
+                                     # injection (core.faults)
     remat: str = "block"             # "none" | "block": jax.checkpoint each scanned block
     remat_policy: str = "nothing"    # "nothing" | "dots" (checkpoint_dots) — perf knob
     serve_param_sharding: str = "tp" # "tp" (model axis) | "2d" (data+model, big archs)
@@ -296,6 +309,26 @@ class DistConfig:
                              "or 'sharded'")
         if self.pallas_leaf_threshold < 1:
             raise ValueError("pallas_leaf_threshold must be >= 1")
+        if self.topology in ("directed_ring", "directed_exp") \
+                and not self.push_sum:
+            raise ValueError(
+                f"topology {self.topology!r} is directed (column-"
+                f"stochastic): it requires push_sum=True so reads are "
+                f"de-biased by the weight scalar (DESIGN.md §2.5)")
+        if self.push_sum:
+            if self.algorithm not in PUSH_SUM_ALGORITHMS:
+                raise ValueError(
+                    f"push_sum composes with algorithms "
+                    f"{PUSH_SUM_ALGORITHMS}, not {self.algorithm!r}")
+            if self.topology == "grid":
+                raise ValueError(
+                    "push_sum has no 2-D grid decomposition — use a 1-D "
+                    "(directed) circulant topology")
+            if self.comm_global_compression != "none":
+                raise ValueError(
+                    "push_sum global rounds average the (x, w) pair over "
+                    "the active set and cannot ride the compressed "
+                    "collective — set comm_global_compression='none'")
         return self
 
     def validate_nodes(self, n_nodes: int) -> "DistConfig":

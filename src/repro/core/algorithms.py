@@ -90,6 +90,8 @@ def simulate(
     compression_k: int = 32,
     error_feedback: bool = False,
     global_compression: str = "none",
+    push_sum: bool = False,
+    fault_schedule=None,
 ) -> Dict[str, np.ndarray]:
     """Run ``algorithm`` on n simulated nodes; returns the trajectory of the
     node-average loss f(x̄^k) and consensus distance ‖x − x̄‖²/n.
@@ -109,12 +111,29 @@ def simulate(
     (int8|fp8) runs the averaging phases through the compressed
     reduce-scatter → all-gather collective (DESIGN.md §2.3 "Compressed
     collectives") instead of the exact mean.
+
+    ``push_sum=True`` (DESIGN.md §2.5) runs every round as a
+    column-stochastic push-sum step with a per-node weight scalar; eval
+    reads the de-biased average ``Σx/Σw`` and the output gains a per-step
+    ``mass`` trajectory (``Σw``, invariantly n).  ``fault_schedule``
+    (:class:`repro.core.faults.FaultSchedule`, requires push_sum) drops /
+    rejoins nodes and resamples the wiring per step — each step's W is a
+    host-built *runtime* operand, so the compiled step never recompiles
+    across failure patterns.
     """
+    if fault_schedule is not None:
+        if not push_sum:
+            raise ValueError("simulate: fault_schedule requires "
+                             "push_sum=True (DESIGN.md §2.5)")
+        if fault_schedule.n_nodes != n:
+            raise ValueError(f"simulate: fault_schedule built for "
+                             f"{fault_schedule.n_nodes} nodes, got n={n}")
     dist = DistConfig(algorithm=algorithm, topology=topology, H=H,
                       comm_backend=backend, comm_compression=compression,
                       comm_compression_k=compression_k,
                       comm_error_feedback=error_feedback,
                       comm_global_compression=global_compression,
+                      push_sum=push_sum,
                       **(aga_kwargs or {})).validate()
     algo = Decentralized(dist, n)
     lr_fn = lr if callable(lr) else (lambda k: lr)
@@ -156,6 +175,31 @@ def simulate(
             x, g, gamma, phase=phase, topology=topology, n_nodes=n,
             step=shift_step, with_residual=with_residual)
 
+    # Push-sum: one jitted round for every phase — W and the activity mask
+    # are *traced* operands, so drop / rejoin / resample never recompiles.
+    # Wire compression (when enabled) applies to gossip rounds only; the
+    # weight scalar and the global reset stay exact, because the de-bias
+    # denominator x/w must never pass through a lossy codec.
+    w = jnp.ones((n, 1), jnp.float32) if push_sum else None
+    mass_hist: List[float] = []
+
+    @functools.partial(jax.jit, static_argnames=("use_lossy", "is_global"))
+    def ps_step_fn(x, w, ef, key, k, gamma, W, active, use_lossy, is_global):
+        g = grad_fn(x, key, k)
+        x_half = x - gamma * (g * active[:, None])   # dropped nodes freeze
+        if use_lossy:
+            x2, w2, ef = mixing.communicate_push_sum(
+                x_half, w, W=W, n_nodes=n, backend=backend,
+                compressor=compressor, ef_state=ef, seed=k)
+        else:
+            x2, w2 = mixing.communicate_push_sum(x_half, w, W=W, n_nodes=n,
+                                                 backend=backend)
+        if is_global:
+            # full-participation global round: w_i = Σw/n = 1 exactly in
+            # exact arithmetic — snap to it to wash out fp drift in w
+            w2 = jnp.where(jnp.all(active > 0), jnp.ones_like(w2), w2)
+        return x2, w2, ef
+
     @jax.jit
     def slowmo_outer(x_half, slow_x, slow_u, gamma):
         xbar = jnp.mean(x_half, axis=0)
@@ -177,6 +221,39 @@ def simulate(
         xbar = resid = None
         lossy_round = (lossy and phase in ("gossip", "global", "pod_avg")) \
             or (glossy and phase in ("global", "pod_avg"))
+        if push_sum:
+            if fault_schedule is not None:
+                active = fault_schedule.advance(k)
+            else:
+                active = np.ones(n, dtype=bool)
+            if phase == "gossip":
+                if fault_schedule is not None:
+                    W = fault_schedule.matrix(topology, k,
+                                              shift_step=shift_step)
+                else:
+                    W = topo.push_sum_matrix(topology, n, step=shift_step)
+            elif phase in ("global", "pod_avg"):
+                W = topo.global_push_matrix(n, active)
+            else:                     # "none": identity keeps Σw checkable
+                W = np.eye(n)
+            x, w, ef = ps_step_fn(x, w, ef, sub, k, gamma,
+                                  jnp.asarray(W, jnp.float32),
+                                  jnp.asarray(active, jnp.float32),
+                                  use_lossy=lossy and phase == "gossip",
+                                  is_global=phase in ("global", "pod_avg"))
+            mass_hist.append(float(jnp.sum(w)))
+            if is_eval:
+                xbar = jnp.sum(x, axis=0) / jnp.sum(w)  # de-biased Σx/Σw
+                xd = x / w                              # per-node x_i/w_i
+                f = float(eval_loss(xbar))
+                algo.schedule.observe_loss(k, f)
+                losses.append(f)
+                consensus.append(
+                    float(jnp.mean(jnp.sum((xd - xbar) ** 2, -1))))
+                its.append(k)
+            elif losses:
+                algo.schedule.observe_loss(k, losses[-1])
+            continue
         if phase == "slowmo":
             g = grad_fn(x, sub, k)
             x_half = x - gamma * g
@@ -212,6 +289,9 @@ def simulate(
         "loss": np.array(losses),
         "consensus": np.array(consensus),
     }
+    if push_sum:
+        out["mass"] = np.array(mass_hist)       # Σw per step, invariantly n
+        out["push_weight"] = np.asarray(w)      # final (n, 1) weight scalar
     if hasattr(algo.schedule, "history"):
         out["H_history"] = np.array(getattr(algo.schedule, "history"))
     return out

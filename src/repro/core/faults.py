@@ -1,0 +1,175 @@
+"""Deterministic fault injection for push-sum gossip.
+
+A :class:`FaultSchedule` is the single source of truth for *who is alive* and
+*what the wiring looks like* at every step: it drops nodes mid-run, rejoins
+them later (from checkpoint, in the trainer), and optionally resamples the
+directed topology per step (GossipGraD-style partner rotation).  Everything is
+derived from ``(seed, step)`` through a counter-based Philox generator, so the
+schedule is a pure function of the step index — two processes (or a resumed
+checkpoint) replay the exact same failure trajectory without sharing state.
+
+The contract with the mixing layer: every matrix this schedule emits is
+column-stochastic (:func:`repro.core.topology.push_sum_matrix` renormalizes a
+sender's column over its surviving receivers), so the push-sum mass invariant
+``Σᵢ wᵢ = n`` holds at every step of every scenario — that invariant is what
+makes fault scenarios *checkable* rather than merely survivable.
+
+Like :class:`repro.core.schedule.CommSchedule`, the pure queries
+(``active_mask`` / ``out_weights`` / ``matrix``) never mutate, while
+``advance`` commits bookkeeping counters that ride the checkpoint sidecar
+(``state_dict`` / ``load_state_dict``) so a resumed run reports the same
+drop/rejoin totals as an uninterrupted one.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import topology as topo
+
+Events = Dict[int, Tuple[int, ...]]      # step -> node ids
+RESAMPLE_MODES = ("none", "hop", "peer")
+
+
+def parse_fault_events(spec: str) -> Events:
+    """Parse ``"step:id,id;step:id"`` (launch-flag syntax) into events."""
+    out: Events = {}
+    if not spec:
+        return out
+    for part in spec.split(";"):
+        part = part.strip()
+        if not part:
+            continue
+        step_s, ids_s = part.split(":")
+        ids = tuple(int(i) for i in ids_s.split(",") if i.strip() != "")
+        if ids:
+            out[int(step_s)] = tuple(sorted(set(out.get(int(step_s), ())
+                                                + ids)))
+    return out
+
+
+@dataclass
+class FaultSchedule:
+    """Seeded, deterministic drop/rejoin/resample schedule.
+
+    ``drops[t]`` lists nodes that go down *at* step t (inactive from t
+    inclusive); ``rejoins[t]`` lists nodes that come back at step t (active
+    from t inclusive — rejoin wins over a same-step drop).  ``resample``:
+
+    * ``"none"`` — static wiring from the topology's own shift set.
+    * ``"hop"``  — all nodes share one freshly drawn exponential hop per
+      step (a randomized one-peer exponential graph; still circulant).
+    * ``"peer"`` — every node draws its *own* hop per step: genuinely
+      asymmetric, column-stochastic-only wiring even with no faults.
+    """
+    n_nodes: int
+    drops: Events = field(default_factory=dict)
+    rejoins: Events = field(default_factory=dict)
+    resample: str = "none"
+    seed: int = 0
+
+    # bookkeeping committed by advance(); part of the checkpoint sidecar
+    steps_seen: int = 0
+    drops_applied: int = 0
+    rejoins_applied: int = 0
+
+    def __post_init__(self):
+        if self.resample not in RESAMPLE_MODES:
+            raise ValueError(f"resample must be one of {RESAMPLE_MODES}, "
+                             f"got {self.resample!r}")
+        for ev in (self.drops, self.rejoins):
+            for t, ids in ev.items():
+                bad = [i for i in ids if not (0 <= i < self.n_nodes)]
+                if bad:
+                    raise ValueError(f"fault event at step {t} names nodes "
+                                     f"{bad} outside [0, {self.n_nodes})")
+
+    # -- pure queries ------------------------------------------------------
+    def _rng(self, step: int) -> np.random.Generator:
+        # counter-based: (seed, step) -> independent stream, no global state
+        return np.random.Generator(
+            np.random.Philox(key=[self.seed & 0xFFFFFFFF, step]))
+
+    def active_mask(self, step: int) -> np.ndarray:
+        """Boolean (n,) mask of live nodes at ``step`` (pure)."""
+        inactive: set = set()
+        for t in sorted(set(self.drops) | set(self.rejoins)):
+            if t > step:
+                break
+            inactive |= set(self.drops.get(t, ()))
+            inactive -= set(self.rejoins.get(t, ()))
+        mask = np.ones(self.n_nodes, dtype=bool)
+        for i in inactive:
+            mask[i] = False
+        return mask
+
+    def out_weights(self, step: int
+                    ) -> Optional[List[topo.ShiftWeights]]:
+        """Per-node sender shift sets at ``step``; None = topology default."""
+        if self.resample == "none":
+            return None
+        n = self.n_nodes
+        if n == 1:
+            return [{0: 1.0}]
+        p = max(1, int(round(np.log2(n))))
+        rng = self._rng(step)
+        if self.resample == "hop":
+            hop = 2 ** int(rng.integers(0, p)) % n
+            shared = {0: 0.5} if hop == 0 else {0: 0.5, hop: 0.5}
+            return [shared] * n
+        # "peer": every node its own hop — asymmetric even fault-free
+        hops = 2 ** rng.integers(0, p, size=n) % n
+        return [({0: 0.5} if h == 0 else {0: 0.5, int(h): 0.5})
+                for h in hops]
+
+    def matrix(self, topology: str, step: int,
+               shift_step: Optional[int] = None) -> np.ndarray:
+        """Column-stochastic mixing matrix for the gossip round at ``step``
+        (pure).  ``shift_step`` is the period-reduced index used for the
+        topology's own time variation (one_peer_exp); defaults to ``step``."""
+        return topo.push_sum_matrix(
+            topology, self.n_nodes,
+            step=step if shift_step is None else shift_step,
+            active=self.active_mask(step),
+            out_weights=self.out_weights(step))
+
+    def hop_superset(self, topology: str) -> Tuple[int, ...]:
+        """Every shift any sender might ever use — the static superset the
+        sharded backend needs to precompute its ppermute sources once."""
+        shifts: set = set()
+        period = max(1, topo.schedule_period(topology, self.n_nodes))
+        for k in range(period):
+            shifts |= set(topo.shift_weights(topology, self.n_nodes, k))
+        if self.resample != "none" and self.n_nodes > 1:
+            p = max(1, int(round(np.log2(self.n_nodes))))
+            shifts |= {0} | {2 ** j % self.n_nodes for j in range(p)}
+        return tuple(sorted(shifts))
+
+    def events_before(self, step: int) -> Tuple[int, int]:
+        """(drops, rejoins) event counts at steps < ``step`` — what an
+        uninterrupted run would have committed by then."""
+        d = sum(len(ids) for t, ids in self.drops.items() if t < step)
+        r = sum(len(ids) for t, ids in self.rejoins.items() if t < step)
+        return d, r
+
+    # -- stateful commit / checkpoint -------------------------------------
+    def advance(self, step: int) -> np.ndarray:
+        """Commit step ``step``: return the active mask and update the
+        counters that ride the checkpoint sidecar."""
+        mask = self.active_mask(step)
+        self.steps_seen += 1
+        self.drops_applied += len(self.drops.get(step, ()))
+        self.rejoins_applied += len(self.rejoins.get(step, ()))
+        return mask
+
+    def state_dict(self) -> Dict[str, int]:
+        return {"steps_seen": self.steps_seen,
+                "drops_applied": self.drops_applied,
+                "rejoins_applied": self.rejoins_applied}
+
+    def load_state_dict(self, sd: Dict[str, int]) -> None:
+        self.steps_seen = int(sd.get("steps_seen", 0))
+        self.drops_applied = int(sd.get("drops_applied", 0))
+        self.rejoins_applied = int(sd.get("rejoins_applied", 0))

@@ -990,6 +990,218 @@ def _communicate_sharded_compressed(params: PyTree, *, compressor, ef_state,
     return unflatten(out), new_ef
 
 
+# ---------------------------------------------------------------------------
+# Push-sum: runtime dense column-stochastic W (DESIGN.md §2.5)
+# ---------------------------------------------------------------------------
+def push_sum_shard_offsets(n: int, k: int, shifts) -> Tuple[int, ...]:
+    """Static shard-offset superset for sharded push-sum rounds.
+
+    The phase-based sharded path derives its halo offsets from the concrete
+    W at trace time (:func:`_shard_blocks`); push-sum W is a *runtime*
+    operand, so the offsets must come from the static shift superset the
+    fault schedule can ever use.  A shift ``s`` over ``m = n/k`` rows per
+    shard reaches receiver shards ``(s // m) % k`` and — when it straddles a
+    shard boundary (``s % m != 0``) — ``(s // m + 1) % k``.  Offset 0 is
+    always included: fault renormalization puts dropped nodes on identity
+    (diagonal) entries.
+    """
+    m = n // k
+    offs = {0}
+    for s in shifts:
+        s = s % n
+        offs.add((s // m) % k)
+        if s % m:
+            offs.add((s // m + 1) % k)
+    return tuple(sorted(offs))
+
+
+def _dense_shard_stacks(W: jax.Array, n: int, k: int, offsets):
+    """Traced analogue of :func:`_shard_blocks` for a runtime dense W:
+    gather each shard's ``(m, |offsets|·m)`` mixing factor and ``(m, 1)``
+    self-diagonal from the (traced) matrix with jnp ops, so a new fault
+    pattern is new *data*, not a new compile."""
+    m = n // k
+    Wj = jnp.asarray(W, jnp.float32)
+    diag = jnp.diagonal(Wj)
+    Mj = Wj - jnp.diag(diag)
+    blocks = Mj.reshape(k, m, k, m)
+    cols = (jnp.arange(k)[:, None] + jnp.asarray(offsets)[None, :]) % k
+    # advanced indices split by a slice put the broadcast dims in front:
+    # (k, |off|, m, m) → (k, m, |off|·m)
+    picked = blocks[jnp.arange(k)[:, None], :, cols]
+    Mstack = jnp.transpose(picked, (0, 2, 1, 3)).reshape(
+        k, m, len(offsets) * m)
+    return Mstack, diag.reshape(k, m, 1)
+
+
+def _mix_dense_reference(params: PyTree, W: jax.Array, n: int,
+                         comm_dtype=None) -> PyTree:
+    """Reference dense round ``x ← d ⊙ x + M · cast(x)`` for a runtime W —
+    the oracle the dense pallas/sharded paths are tested against.  Gossip
+    wire semantics: only the off-diagonal (neighbor) term is wire-cast."""
+    Wj = jnp.asarray(W, jnp.float32)
+    dj = jnp.diagonal(Wj).reshape(n, 1)
+    Mj = Wj - jnp.diag(jnp.diagonal(Wj))
+
+    def one(x):
+        x2 = x.reshape(n, -1).astype(jnp.float32)
+        xw = x2.astype(comm_dtype).astype(jnp.float32) \
+            if comm_dtype is not None else x2
+        return (dj * x2 + Mj @ xw).reshape(x.shape).astype(x.dtype)
+
+    return jax.tree.map(one, params)
+
+
+def _compressed_round_dense(params: PyTree, q: PyTree, W: jax.Array,
+                            n: int) -> PyTree:
+    """Compensated compressed round ``x + (M·q − (1−d)⊙q)`` for a runtime
+    dense W (reference oracle for ``compressed_step_mix_dense``)."""
+    Wj = jnp.asarray(W, jnp.float32)
+    dj = jnp.diagonal(Wj).reshape(n, 1)
+    wj = 1.0 - dj
+    Mj = Wj - jnp.diag(jnp.diagonal(Wj))
+
+    def one(x, qq):
+        x2 = x.reshape(n, -1).astype(jnp.float32)
+        q2 = qq.reshape(n, -1).astype(jnp.float32)
+        return (x2 + (Mj @ q2 - wj * q2)).reshape(x.shape).astype(x.dtype)
+
+    return jax.tree.map(one, params, q)
+
+
+def _push_sum_sharded(joint: PyTree, *, W: jax.Array, n_nodes: int,
+                      offsets, comm_dtype, mesh: jax.sharding.Mesh,
+                      node_axis: str, model_axis: str, block_d: int,
+                      interpret: Optional[bool]) -> PyTree:
+    """Sharded push-sum round: ppermute halo exchange over the *static*
+    offset superset, per-shard factors gathered from the traced W.  The
+    ppermute path is already directional (shard r receives from shard
+    ``r+q``), so asymmetric W needs no new wiring — only the runtime
+    Mstack/dstack (transpose-free: the weight column is mixed by the same
+    per-shard kernel as the parameters, no Wᵀ ever forms)."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    from repro.kernels import mixing_pallas
+
+    names = node_axis_names(mesh, node_axis)
+    if not names:
+        raise ValueError(f"mixing._push_sum_sharded: mesh "
+                         f"{dict(mesh.shape)} has no axis for "
+                         f"node_axis={node_axis!r}")
+    k = node_shard_count(mesh, node_axis)
+    n = n_nodes
+    if n % k:
+        raise ValueError(f"mixing._push_sum_sharded: n_nodes={n} not "
+                         f"divisible by the {k} node-axis shards")
+    offsets = tuple(range(k)) if offsets is None else tuple(offsets)
+    mnames, km = _model_names_count(mesh, model_axis, names)
+
+    xf, unflatten = mixing_pallas.flatten_nodes_sharded(joint, km)
+    xspec = P(names, mnames) if mnames else P(names)
+    Mstack, dstack = _dense_shard_stacks(W, n, k, offsets)
+    perms = {q: tuple(((r + q) % k, r) for r in range(k))
+             for q in offsets if q}
+
+    def body(xb, Mr, dr):
+        send = xb.astype(comm_dtype) if comm_dtype is not None else xb
+        parts = [send if q == 0
+                 else jax.lax.ppermute(send, names, perms[q])
+                 for q in offsets]
+        xs = jnp.concatenate(parts, axis=0).astype(jnp.float32)
+        return mixing_pallas.shard_mix_block(
+            xb, xs, dr[0], Mr[0], block_d=block_d, interpret=interpret)
+
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(xspec, P(names), P(names)),
+                   out_specs=xspec, check_rep=False)
+    return unflatten(fn(xf, Mstack, dstack))
+
+
+def communicate_push_sum(params: PyTree, weight: jax.Array, *,
+                         W: jax.Array, n_nodes: int, comm_dtype=None,
+                         backend: str = "reference",
+                         mesh: Optional[jax.sharding.Mesh] = None,
+                         node_axis: str = "data",
+                         shard_mode: str = "auto",
+                         model_axis: str = "model",
+                         leaf_threshold: Optional[int] = None,
+                         offsets=None, block_d: int = 2048,
+                         interpret: Optional[bool] = None,
+                         compressor=None,
+                         ef_state: Optional[PyTree] = None, seed=0):
+    """One push-sum round: ``(x, w) ← (W·x, W·w)`` for a **runtime**
+    column-stochastic ``W`` (DESIGN.md §2.5).
+
+    ``weight`` is the per-node push-sum scalar, shape ``(n, 1)``; readers
+    de-bias with ``x/w`` (:func:`repro.train.state.debias`).  W is a traced
+    ``(n, n)`` operand — fault drops and per-step resampling change the
+    data, never the compiled program.  The weight column rides the same
+    round as the parameters (packed into the pallas staging buffer /
+    sharded row-blocks alongside them), so x and w experience bit-identical
+    mixing arithmetic and the de-bias ratio is exact at consensus.
+
+    Backends mirror :func:`communicate`: ``"reference"`` (dense jnp
+    oracle), ``"pallas"`` stacked (:func:`fused_step_mix_dense`), and —
+    when ``mesh``'s node axis is sharded — the ppermute path
+    (:func:`_push_sum_sharded`), whose halo set comes from the *static*
+    ``offsets`` superset (:func:`push_sum_shard_offsets`; default: all
+    shard offsets, always safe).
+
+    With a lossy ``compressor`` the parameters run the compensated
+    compressed round while the weight is mixed **exactly** (dense ``W·w``
+    outside the codec — the de-bias denominator must never be lossy);
+    returns ``(mixed, new_weight, new_ef_state)``.  Without a compressor
+    returns ``(mixed, new_weight)``.  Sharded + compressed push-sum is
+    unsupported (raise) — fall back to the stacked backends.
+    """
+    _check_backend(backend, 0, caller="mixing.communicate_push_sum")
+    n = n_nodes
+    if weight.shape[0] != n:
+        raise ValueError(f"communicate_push_sum: weight has {weight.shape[0]}"
+                         f" rows for n_nodes={n}")
+    w2 = weight.reshape(n, -1).astype(jnp.float32)
+    sharded = use_sharded_backend(backend, mesh, node_axis, shard_mode)
+
+    if compressor is not None and compressor.lossy:
+        if sharded:
+            raise ValueError(
+                "mixing.communicate_push_sum: compressed push-sum has no "
+                "sharded path (the fault-varying W would need runtime wire "
+                "layouts); use comm_shard_mode='stacked'")
+        # the weight is the de-bias denominator: mix it exactly, outside
+        # the lossy codec — column-stochastic W keeps Σw = n to fp exactness
+        Wj = jnp.asarray(W, jnp.float32)
+        new_w = (Wj @ w2).astype(weight.dtype).reshape(weight.shape)
+        if backend == "pallas":
+            from repro.kernels import mixing_pallas
+            mixed, new_ef = mixing_pallas.compressed_step_mix_dense(
+                params, W=W, compressor=compressor, ef_state=ef_state,
+                seed=seed, n_nodes=n, block_d=block_d, interpret=interpret)
+            return mixed, new_w, new_ef
+        from repro import compress as compress_mod
+        q, new_ef = compress_mod.apply_tree(compressor, params, ef_state,
+                                            seed)
+        mixed = _compressed_round_dense(params, q, W, n)
+        return mixed, new_w, new_ef
+
+    joint = {"x": params, "w": weight}
+    if sharded:
+        out = _push_sum_sharded(joint, W=W, n_nodes=n, offsets=offsets,
+                                comm_dtype=comm_dtype, mesh=mesh,
+                                node_axis=node_axis, model_axis=model_axis,
+                                block_d=block_d, interpret=interpret)
+    elif backend == "pallas":
+        from repro.kernels import mixing_pallas
+        out = mixing_pallas.fused_step_mix_dense(
+            joint, W, n_nodes=n, comm_dtype=comm_dtype, block_d=block_d,
+            interpret=interpret, leaf_threshold=leaf_threshold)
+    else:
+        out = _mix_dense_reference(joint, W, n, comm_dtype=comm_dtype)
+    if compressor is not None:       # identity codec: exact path + EF pass-through
+        return out["x"], out["w"], ef_state
+    return out["x"], out["w"]
+
+
 def _communicate_sharded_collective(params: PyTree, *, compressor, ef_state,
                                     seed, phase: str, n_nodes: int,
                                     n_pods: int, mesh: jax.sharding.Mesh,

@@ -14,16 +14,36 @@ lowers to a single ``collective-permute`` over ICI (DESIGN.md §2.1), so the
 sparse W is never materialized in the hot path.  The dense matrices built here
 are used by tests (roll-mixing ≡ dense-W mixing), the logistic-regression
 simulator, and β computation for the roofline/transient-stage analytics.
+
+**Push-sum / directed graphs** (DESIGN.md §2.5): the directed circulants
+(``directed_ring``, ``directed_exp``) are *asymmetric* (W ≠ Wᵀ) but still
+doubly stochastic under full participation — any circulant whose weights sum
+to 1 is.  Genuinely column-stochastic-only matrices arise from **faults**:
+:func:`push_sum_matrix` renormalizes a sender's column over its surviving
+receivers when nodes drop (or when per-node topology resampling gives every
+node its own out-neighbor set), which preserves column sums — the push-sum
+mass invariant ``Σ w = n`` — but not row sums.  :func:`beta` handles both
+regimes via the Perron vector: ``β = ‖W − π𝟙ᵀ‖₂`` with ``Wπ = π``,
+``Σπ = 1``, which reduces exactly to ``‖W − J‖₂`` when W is doubly
+stochastic (π = 𝟙/n).
 """
 from __future__ import annotations
 
 import math
-from typing import Dict, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 ShiftWeights = Dict[int, float]          # shift (along flattened node axis) -> weight
 GridShiftWeights = Dict[Tuple[int, int], float]
+
+# every topology with a 1-D circulant shift decomposition (grid is the one
+# 2-D exception); schedule_period validates against the full set so a typo'd
+# topology fails loudly instead of silently running as "static, period 1"
+CIRCULANT_TOPOLOGIES = ("ring", "exp", "one_peer_exp", "full",
+                        "disconnected", "directed_ring", "directed_exp")
+DIRECTED_TOPOLOGIES = ("directed_ring", "directed_exp")
+KNOWN_TOPOLOGIES = CIRCULANT_TOPOLOGIES + ("grid",)
 
 
 def _require_power_of_two(n: int, what: str) -> int:
@@ -65,6 +85,20 @@ def shift_weights(topology: str, n: int, step: int = 0) -> ShiftWeights:
         return {s: 1.0 / n for s in range(n)}
     if topology == "disconnected":   # W = I  => Local SGD
         return {0: 1.0}
+    if topology == "directed_ring":
+        # One out-neighbor, one hop downstream (SGP's directed cycle).  All
+        # weights are powers of two so W @ 1 is exact in floating point: the
+        # push-sum weight stays *bitwise* 1 under full participation.
+        return {0: 0.5, 1: 0.5}
+    if topology == "directed_exp":
+        # Directed exponential graph (Assran et al. 2019): node i sends to
+        # i+1, i+2, i+4, ... with dyadic weights 2^-1, 2^-2, ..., keeping
+        # 2^-p for itself.  Power-of-two weights => exact row/column sums.
+        p = _require_power_of_two(n, "directed exp topology")
+        out: ShiftWeights = {0: 2.0 ** -p}
+        for j in range(p):
+            out[2 ** j] = out.get(2 ** j, 0.0) + 2.0 ** -(j + 1)
+        return out
     raise ValueError(f"no 1D shift decomposition for topology {topology!r}")
 
 
@@ -109,10 +143,49 @@ def mixing_matrix(topology: str, n: int, step: int = 0) -> np.ndarray:
 
 
 def beta(W: np.ndarray) -> float:
-    """β = ‖W − (1/n)𝟙𝟙ᵀ‖₂ (paper Assumption 3 / Remark 1)."""
+    """Mixing rate of W (largest singular value of the deviation from the
+    stationary projector).
+
+    * Doubly stochastic W (paper Assumption 3 / Remark 1):
+      ``β = ‖W − (1/n)𝟙𝟙ᵀ‖₂`` — the original definition, unchanged.
+    * Column-stochastic-only W (push-sum, SGP): the stationary distribution
+      is the Perron vector π (``Wπ = π``, ``Σπ = 1``, π ≥ 0), and the rate
+      generalizes to ``β = ‖W − π𝟙ᵀ‖₂``.  For doubly stochastic W the two
+      coincide exactly (π = 𝟙/n), so the old code path is kept bitwise.
+    * Anything else (not even column-stochastic) has no well-defined mixing
+      rate here — raise instead of silently returning ‖W − J‖₂, which the
+      pre-push-sum helper did for *any* matrix.
+    """
     n = W.shape[0]
-    J = np.ones((n, n)) / n
-    return float(np.linalg.svd(W - J, compute_uv=False)[0])
+    if is_doubly_stochastic(W):
+        J = np.ones((n, n)) / n
+        return float(np.linalg.svd(W - J, compute_uv=False)[0])
+    if not is_column_stochastic(W):
+        raise ValueError(
+            "beta(W) needs a (column-)stochastic matrix; got one whose "
+            "columns do not sum to 1")
+    pi = perron_vector(W)
+    return float(np.linalg.svd(W - np.outer(pi, np.ones(n)),
+                               compute_uv=False)[0])
+
+
+def perron_vector(W: np.ndarray) -> np.ndarray:
+    """Right Perron vector of a column-stochastic W: ``Wπ = π``, ``Σπ = 1``.
+
+    Computed from the eigendecomposition (eigenvalue closest to 1).  For a
+    reducible W — e.g. a fault matrix where dropped nodes are isolated on
+    identity rows — the unit eigenvalue is degenerate and *a* stationary
+    vector is returned; the corresponding β is ≥ 1, which is the honest
+    answer (no global consensus while nodes are partitioned).
+    """
+    vals, vecs = np.linalg.eig(W)
+    idx = int(np.argmin(np.abs(vals - 1.0)))
+    pi = np.real(vecs[:, idx])
+    s = pi.sum()
+    if abs(s) < 1e-12:                      # defensive: degenerate eigvec
+        pi = np.abs(pi)
+        s = pi.sum()
+    return pi / s
 
 
 def effective_beta(topology: str, n: int) -> float:
@@ -134,7 +207,15 @@ def schedule_period(topology: str, n: int) -> int:
     """Number of distinct mixing matrices over time: 1 for static topologies,
     log2(n) for the time-varying one-peer exponential graph.  Callers reduce
     the step index modulo this before using it as a *static* jit argument —
-    bounding the number of compiled gossip-step variants."""
+    bounding the number of compiled gossip-step variants.
+
+    Unknown topologies raise: the old helper returned 1 for any string,
+    which silently ran a typo'd (or directed, pre-push-sum) topology as
+    "static with period 1" and only failed much later in ``shift_weights``.
+    """
+    if topology not in KNOWN_TOPOLOGIES:
+        raise ValueError(f"unknown topology {topology!r}; "
+                         f"expected one of {KNOWN_TOPOLOGIES}")
     if topology == "one_peer_exp" and n > 1:
         return _require_power_of_two(n, "one-peer exp topology")
     return 1
@@ -148,6 +229,94 @@ def is_doubly_stochastic(W: np.ndarray, tol: float = 1e-9) -> bool:
         and np.allclose(W @ ones, ones, atol=tol)
         and np.allclose(ones @ W, ones, atol=tol)
     )
+
+
+def is_column_stochastic(W: np.ndarray, tol: float = 1e-9) -> bool:
+    """Columns sum to 1 (and entries are nonnegative): the push-sum
+    contract.  ``𝟙ᵀW = 𝟙ᵀ`` is exactly what conserves total mass
+    ``Σᵢ wᵢ = n`` across a round ``w ← W·w``."""
+    n = W.shape[0]
+    ones = np.ones(n)
+    return (
+        bool(np.all(W >= -tol))
+        and np.allclose(ones @ W, ones, atol=tol)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Push-sum: column-stochastic matrices under faults / resampling
+# ---------------------------------------------------------------------------
+def push_sum_matrix(topology: str, n: int, step: int = 0,
+                    active: Optional[np.ndarray] = None,
+                    out_weights: Optional[List[ShiftWeights]] = None,
+                    ) -> np.ndarray:
+    """Column-stochastic W for one push-sum round, honoring failures.
+
+    Column j describes how (active) sender j splits its mass among its
+    receivers ``(j - s) % n`` for each shift s — the transpose convention of
+    :func:`mixing_matrix`, where ``W[i, (i+s) % n] = w_s`` means node i
+    *receives* from s hops upstream.  Under full participation this equals
+    ``mixing_matrix(topology, n, step)`` exactly.
+
+    Faults (``active[j] == False``): the dropped node neither sends nor
+    receives — its column and row collapse to ``e_j`` (it keeps its own mass,
+    frozen).  An active sender whose receiver is down renormalizes its
+    out-weights over the surviving receivers, keeping the column sum at 1 —
+    this is the whole trick: column-stochasticity (and hence ``Σw = n``)
+    survives arbitrary drop patterns, while row sums (doubly-stochasticity)
+    generally do not.
+
+    ``out_weights`` (optional, one ShiftWeights per node) lets each sender
+    use its *own* shift set — per-node topology resampling à la GossipGraD
+    partner rotation.  Defaults to ``shift_weights(topology, n, step)`` for
+    every node.
+    """
+    if active is None:
+        active = np.ones(n, dtype=bool)
+    active = np.asarray(active, dtype=bool)
+    if active.shape != (n,):
+        raise ValueError(f"active mask shape {active.shape} != ({n},)")
+    if out_weights is None:
+        shared = shift_weights(topology, n, step)
+        out_weights = [shared] * n
+    if len(out_weights) != n:
+        raise ValueError("out_weights must have one entry per node")
+    W = np.zeros((n, n))
+    for j in range(n):
+        if not active[j]:
+            W[j, j] = 1.0
+            continue
+        # surviving receivers for sender j (receiver of shift s is (j-s)%n)
+        live = {s: w for s, w in out_weights[j].items()
+                if active[(j - s) % n]}
+        z = sum(live.values())
+        if z <= 0.0:                      # all receivers down: keep own mass
+            W[j, j] = 1.0
+            continue
+        for s, w in live.items():
+            W[(j - s) % n, j] += w / z
+    return W
+
+
+def global_push_matrix(n: int, active: Optional[np.ndarray] = None
+                       ) -> np.ndarray:
+    """The PGA global round as a push-sum matrix: exact averaging of the
+    joint ``(x, w)`` pair over the **active** set,
+    ``W = a aᵀ/|A| + diag(1 − a)`` (dropped nodes keep their own mass).
+
+    Column-stochastic by construction (column j sums to ``a_j + (1−a_j) =
+    1``), so the mass invariant survives the global phase too; the
+    de-biased read after it is ``Σ_A x / Σ_A w`` — the true active-set
+    average — and under full participation it is exactly ``𝟙𝟙ᵀ/n``, which
+    resets every weight to ``mean(w) = 1``.
+    """
+    if active is None:
+        active = np.ones(n, dtype=bool)
+    a = np.asarray(active, dtype=float)
+    n_live = a.sum()
+    if n_live == 0:
+        return np.eye(n)
+    return np.outer(a, a) / n_live + np.diag(1.0 - a)
 
 
 # ---------------------------------------------------------------------------

@@ -400,6 +400,61 @@ def fused_step_mix(params: PyTree, grads: Optional[PyTree] = None,
     return mixed_tree
 
 
+def fused_step_mix_dense(params: PyTree, W: jax.Array, *, n_nodes: int,
+                         comm_dtype=None, block_d: int = 2048,
+                         interpret: Optional[bool] = None,
+                         leaf_threshold: Optional[int] = None) -> PyTree:
+    """Fused mixing round for a **runtime** dense ``W`` (push-sum,
+    DESIGN.md §2.5).
+
+    The phase-based entry points bake W in at trace time from the
+    ``(phase, topology, shift)`` triple — fine when the matrix repertoire
+    is small and static.  Push-sum under faults draws a *different*
+    column-stochastic W every step (drop renormalization, per-step
+    resampling), so here W is an ``(n, n)`` jax array threaded through jit
+    as a regular traced operand: one compiled kernel serves every failure
+    pattern, zero recompiles.  ``_mix_flat`` already treats ``d``/``M`` as
+    runtime data, so this is the same kernel body as
+    :func:`fused_step_mix` — only the factor construction moves into the
+    traced graph (``d = diag(W)``, ``M = W − diag(W)``).
+
+    Gossip wire semantics: ``comm_dtype`` (bf16 only, like the other fused
+    paths) casts the M (neighbor) term; the self term stays in the storage
+    dtype.  The push-sum weight column rides the packed matrix as just
+    another leaf — mixing x and w through the *same* kernel invocation is
+    what keeps the de-bias ratio consistent (DESIGN.md §2.5).
+    """
+    interp = _default_interpret() if interpret is None else interpret
+    thresh = LEAF_DISPATCH_THRESHOLD if leaf_threshold is None \
+        else leaf_threshold
+    if comm_dtype is not None \
+            and jnp.dtype(comm_dtype) != jnp.dtype(jnp.bfloat16):
+        raise ValueError(
+            f"fused_step_mix_dense wire-casts to bfloat16 only (got "
+            f"comm_dtype={jnp.dtype(comm_dtype)}); use backend='reference'")
+    Wj = jnp.asarray(W, jnp.float32)
+    dj = jnp.diagonal(Wj).reshape(n_nodes, 1)
+    Mj = Wj - jnp.diag(jnp.diagonal(Wj))
+    wire = comm_dtype is not None
+
+    leaves, treedef = jax.tree.flatten(params)
+    n = leaves[0].shape[0]
+    mixed_leaves: list = [None] * len(leaves)
+    for group in _dispatch_groups(leaves, thresh):
+        xf = _pack_rows([leaves[i] for i in group], n)
+        mixed = _mix_flat(xf, None, None, dj, Mj, with_g=False,
+                          with_residual=False, wire=wire, block_d=block_d,
+                          interpret=interp)
+        off = 0
+        for i in group:
+            shape = leaves[i].shape
+            size = int(np.prod(shape[1:], dtype=np.int64))
+            mixed_leaves[i] = (mixed[:, off:off + size]
+                               .reshape(shape).astype(leaves[i].dtype))
+            off += size
+    return jax.tree.unflatten(treedef, mixed_leaves)
+
+
 def global_average(params: PyTree, n_nodes: int, *, comm_dtype=None,
                    block_d: int = 2048, interpret: Optional[bool] = None,
                    with_residual: bool = False,
@@ -596,9 +651,6 @@ def compressed_step_mix(params: PyTree, *, compressor,
     not compose with compression — callers fall back to
     ``train.state.consensus_distance`` (DESIGN.md §2.3).
     """
-    from repro import compress as compress_mod
-    from repro.compress import quantize as cq
-
     if phase not in KERNEL_PHASES:
         raise ValueError(f"phase {phase!r} has no fused kernel "
                          f"(expected one of {KERNEL_PHASES})")
@@ -621,6 +673,22 @@ def compressed_step_mix(params: PyTree, *, compressor,
             f"only (got comm_dtype={jnp.dtype(comm_dtype)}); use "
             f"backend='reference' for other wire dtypes")
 
+    return _compressed_leaf_loop(params, compressor, ef_state, seed, wj, Mj,
+                                 kind=kind, wire=wire, block_d=block_d,
+                                 interp=interp)
+
+
+def _compressed_leaf_loop(params: PyTree, compressor, ef_state, seed,
+                          wj: jax.Array, Mj: jax.Array, *, kind: str,
+                          wire: bool, block_d: int, interp: bool):
+    """Per-leaf dispatch of the compensated compressed round — shared by
+    the phase-based (:func:`compressed_step_mix`) and runtime-dense-W
+    (:func:`compressed_step_mix_dense`) entry points.  Dispatch must stay
+    per-leaf: scales, salts, and sparsifier selections are per-leaf."""
+    from repro import compress as compress_mod
+    from repro.compress import quantize as cq
+
+    with_ef = ef_state is not None
     leaves, treedef = jax.tree.flatten(params)
     n = leaves[0].shape[0]
     ef_leaves = jax.tree.flatten(ef_state)[0] if with_ef \
@@ -656,6 +724,36 @@ def compressed_step_mix(params: PyTree, *, compressor,
     if kind == "precomputed":
         return mixed_tree, new_ef
     return mixed_tree, jax.tree.unflatten(treedef, new_ef_leaves)
+
+
+def compressed_step_mix_dense(params: PyTree, *, W: jax.Array, compressor,
+                              ef_state: Optional[PyTree] = None, seed=0,
+                              n_nodes: int, block_d: int = 2048,
+                              interpret: Optional[bool] = None):
+    """Compensated compressed gossip round for a runtime dense ``W``
+    (push-sum under faults — the dense-W analogue of
+    :func:`compressed_step_mix`, same kernel body, factors built in the
+    traced graph).
+
+    ``mixed = x + (M·q − (1−d)⊙q)`` with ``d = diag(W)``, ``M = W −
+    diag(W)``.  The correction is a weighted combination of a *shared*
+    per-node quantity q, so any column-stochastic W conserves push-sum
+    mass exactly like the uncompressed round does — the caller mixes the
+    weight column outside this lossy codec (DESIGN.md §2.5).  Returns
+    ``(mixed, new_ef_state)``.
+    """
+    interp = _default_interpret() if interpret is None else interpret
+    Wj = jnp.asarray(W, jnp.float32)
+    dj = jnp.diagonal(Wj).reshape(n_nodes, 1)
+    wj = 1.0 - dj
+    Mj = Wj - jnp.diag(jnp.diagonal(Wj))
+    kind = compressor.name if compressor.name in ("int8", "fp8") \
+        else "precomputed"
+    # gossip wire semantics only — the push-sum global phase is never
+    # compressed (DistConfig forbids it), so no wire flag here
+    return _compressed_leaf_loop(params, compressor, ef_state, seed, wj, Mj,
+                                 kind=kind, wire=False, block_d=block_d,
+                                 interp=interp)
 
 
 def _collective_kernel(*refs, kind: str, with_ef: bool, n_pods: int):

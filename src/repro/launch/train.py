@@ -56,6 +56,25 @@ def main() -> None:
     ap.add_argument("--error-feedback", action="store_true",
                     help="per-node error-feedback memory: compression "
                          "error is fed back next round instead of dropped")
+    ap.add_argument("--push-sum", action="store_true",
+                    help="push-sum gossip (DESIGN.md §2.5): column-"
+                         "stochastic directed mixing with a per-node weight "
+                         "scalar, de-biased at read time — required for "
+                         "directed topologies and fault injection")
+    ap.add_argument("--fault-drop", default="",
+                    help="drop events as 'step:id,id[;step:id,...]', e.g. "
+                         "'40:3,5;90:0' drops nodes 3,5 at step 40 and "
+                         "node 0 at step 90 (requires --push-sum)")
+    ap.add_argument("--fault-rejoin", default="",
+                    help="rejoin events, same syntax as --fault-drop")
+    ap.add_argument("--fault-resample", default="none",
+                    choices=("none", "hop", "peer"),
+                    help="re-draw the gossip wiring each step: 'hop' "
+                         "resamples one shared power-of-two hop, 'peer' "
+                         "gives every node its own draw")
+    ap.add_argument("--fault-seed", type=int, default=0,
+                    help="seed for the deterministic per-step fault/"
+                         "resample RNG (counter-based; resume-stable)")
     ap.add_argument("--full-config", action="store_true",
                     help="full published dims (TPU-scale; default reduced)")
     ap.add_argument("--iid", action="store_true")
@@ -71,14 +90,25 @@ def main() -> None:
                         comm_compression=args.comm_compression,
                         comm_compression_k=args.comm_compression_k,
                         comm_global_compression=args.comm_global_compression,
-                        comm_error_feedback=args.error_feedback),
+                        comm_error_feedback=args.error_feedback,
+                        push_sum=args.push_sum),
         optimizer=OptimizerConfig(name=args.optimizer, lr=args.lr,
                                   schedule="warmup_cosine", warmup_steps=10,
                                   total_steps=args.steps),
         data=DataConfig(non_iid=not args.iid),
         global_batch=args.global_batch, seq_len=args.seq_len,
         steps=args.steps, log_every=max(args.steps // 10, 1))
-    tr = Trainer(tcfg, n_nodes=args.nodes, with_consensus=True)
+    fault_schedule = None
+    if args.fault_drop or args.fault_rejoin or args.fault_resample != "none":
+        from repro.core.faults import FaultSchedule, parse_fault_events
+        fault_schedule = FaultSchedule(
+            n_nodes=args.nodes,
+            drops=parse_fault_events(args.fault_drop),
+            rejoins=parse_fault_events(args.fault_rejoin),
+            resample=args.fault_resample,
+            seed=args.fault_seed)
+    tr = Trainer(tcfg, n_nodes=args.nodes, with_consensus=True,
+                 fault_schedule=fault_schedule)
     state = tr.init_state(jax.random.PRNGKey(0))
     tr.run(state, steps=args.steps)
 

@@ -25,6 +25,38 @@ class TrainState:
                                            # init; updated by the same
                                            # compress call that produces
                                            # the wire payload
+    push_weight: Optional[jax.Array] = None
+                                           # push-sum weight scalar, (n, 1)
+                                           # fp32, ones at init (DESIGN.md
+                                           # §2.5): mixed by every
+                                           # column-stochastic round along
+                                           # with params; readers de-bias
+                                           # with debias(params, w).  Σw = n
+                                           # is the mass invariant.
+
+
+def init_push_weight(n_nodes: int) -> jax.Array:
+    """Push-sum weights start at 1 on every node (SGP init: Σw = n)."""
+    return jnp.ones((n_nodes, 1), jnp.float32)
+
+
+def debias(params_stacked: PyTree, push_weight: Optional[jax.Array]
+           ) -> PyTree:
+    """De-biased read ``x/w`` (the push-sum estimate of the true average).
+
+    ``push_weight is None`` (non-push-sum runs) is the identity.  The
+    division happens in fp32 and casts back per leaf; w broadcasts over
+    each leaf's trailing dims.
+    """
+    if push_weight is None:
+        return params_stacked
+    w = push_weight.reshape(-1).astype(jnp.float32)
+
+    def one(p):
+        wb = w.reshape((p.shape[0],) + (1,) * (p.ndim - 1))
+        return (p.astype(jnp.float32) / wb).astype(p.dtype)
+
+    return jax.tree.map(one, params_stacked)
 
 
 def stack_for_nodes(tree: PyTree, n_nodes: int) -> PyTree:
@@ -48,7 +80,7 @@ def opt_state_axes(opt_name: str, params_axes: PyTree) -> PyTree:
 
 def state_axes(params_axes_stacked: PyTree, opt_name: str,
                slowmo: bool, params_axes_unstacked: PyTree,
-               ef: bool = False) -> TrainState:
+               ef: bool = False, push: bool = False) -> TrainState:
     return TrainState(
         params=params_axes_stacked,
         opt_state=opt_state_axes(opt_name, params_axes_stacked),
@@ -56,6 +88,7 @@ def state_axes(params_axes_stacked: PyTree, opt_name: str,
         slow_params=params_axes_unstacked if slowmo else None,
         slow_u=params_axes_unstacked if slowmo else None,
         ef_state=params_axes_stacked if ef else None,
+        push_weight=("node", None) if push else None,
     )
 
 

@@ -20,7 +20,7 @@ from repro.core import mixing
 from repro.core import topology as topo
 from repro.models.model import Model
 from repro.optim import clip_by_global_norm, make_optimizer
-from repro.train.state import TrainState, consensus_distance
+from repro.train.state import TrainState, consensus_distance, debias
 
 PyTree = Any
 
@@ -29,7 +29,9 @@ def build_train_step(model: Model, tcfg: TrainConfig, n_nodes: int, *,
                      phase: str, shift_step: int = 0,
                      with_consensus: bool = False,
                      unroll: bool = False,
-                     mesh: Optional[jax.sharding.Mesh] = None) -> Callable:
+                     mesh: Optional[jax.sharding.Mesh] = None,
+                     fault_hops: Optional[Tuple[int, ...]] = None
+                     ) -> Callable:
     """Returns step(state, batch, lr) -> (state, metrics).
 
     ``phase``: "gossip" | "global" | "none" | "slowmo".
@@ -39,6 +41,15 @@ def build_train_step(model: Model, tcfg: TrainConfig, n_nodes: int, *,
     routes through the shard_map-aware path (DESIGN.md §2.1 dispatch
     table) — per-shard fused kernels with ppermute halo exchange —
     honoring ``DistConfig.comm_shard_mode``.
+
+    With ``DistConfig.push_sum`` the returned step has the 5-arg signature
+    ``step(state, batch, lr, W, active)`` (DESIGN.md §2.5): ``W`` is the
+    round's column-stochastic matrix as a **traced** ``(n, n)`` operand —
+    fault drops and resampling are new data, never new compiles — and
+    ``active`` the ``(n,)`` live mask; dropped nodes' grads are zeroed and
+    their params/opt rows frozen.  ``fault_hops`` (from
+    ``FaultSchedule.hop_superset``) statically bounds the sharded path's
+    halo offsets.
     """
     dist = tcfg.dist
     dist.validate_nodes(n_nodes)
@@ -97,6 +108,103 @@ def build_train_step(model: Model, tcfg: TrainConfig, n_nodes: int, *,
         grads, mets = jax.lax.scan(body, zeros, mbs)
         grads = jax.tree.map(lambda g: g / m, grads)
         return grads, jax.tree.map(jnp.mean, mets)
+
+    if dist.push_sum:
+        # static halo superset for the sharded ppermute path: every shift
+        # the topology (over its whole period) or the fault schedule's
+        # resampling can ever emit — the runtime W only re-weights them
+        ps_offsets = None
+        if sharded_comm:
+            k = mixing.node_shard_count(mesh, dist.node_axis)
+            if phase == "global":
+                ps_offsets = tuple(range(k))
+            else:
+                hops = set(fault_hops or ())
+                period = max(1, topo.schedule_period(dist.topology, n_nodes))
+                for s in range(period):
+                    hops |= set(topo.shift_weights(dist.topology, n_nodes, s))
+                ps_offsets = mixing.push_sum_shard_offsets(n_nodes, k, hops)
+        comm_dtype_ps = (jnp.bfloat16 if dist.comm_dtype == "bfloat16"
+                         else None)
+
+        def freeze_dropped(new: PyTree, old: PyTree,
+                           active: jax.Array) -> PyTree:
+            """Dropped nodes take no step: revert their node rows (params
+            AND optimizer state — a zero grad still decays momentum, which
+            would silently train the dead node).  Leaves without a node
+            axis (shared counters) pass through."""
+            a = active.astype(jnp.bool_)
+
+            def one(nw, od):
+                if not hasattr(nw, "ndim") or nw.ndim == 0 \
+                        or nw.shape[0] != n_nodes:
+                    return nw
+                m = a.reshape((n_nodes,) + (1,) * (nw.ndim - 1))
+                return jnp.where(m, nw, od)
+
+            return jax.tree.map(one, new, old)
+
+        def push_step(state: TrainState, batch: PyTree, lr: jax.Array,
+                      W: jax.Array, active: jax.Array
+                      ) -> Tuple[TrainState, Dict[str, jax.Array]]:
+            if tcfg.microbatches > 1:
+                grads, metrics = accum_grad_fn(state.params, batch)
+            else:
+                grads, metrics = grad_fn(state.params, batch)
+            af = active.astype(jnp.float32)
+            grads = jax.tree.map(
+                lambda g: g * af.reshape((n_nodes,) + (1,) * (g.ndim - 1)),
+                grads)
+            if tcfg.optimizer.grad_clip:
+                grads = clip_by_global_norm(grads, tcfg.optimizer.grad_clip)
+            params_half, opt_state = opt.update(grads, state.opt_state,
+                                                state.params, lr)
+            params_half = freeze_dropped(params_half, state.params, active)
+            opt_state = freeze_dropped(opt_state, state.opt_state, active)
+            new_ef = state.ef_state
+            new_w = state.push_weight
+            if phase == "none" or n_nodes == 1:
+                new_params = params_half
+            elif lossy_comm and phase == "gossip":
+                new_params, new_w, new_ef = mixing.communicate_push_sum(
+                    params_half, state.push_weight, W=W, n_nodes=n_nodes,
+                    comm_dtype=comm_dtype_ps, backend=dist.comm_backend,
+                    mesh=mesh, node_axis=dist.node_axis,
+                    shard_mode=dist.comm_shard_mode,
+                    model_axis=dist.model_axis,
+                    leaf_threshold=dist.pallas_leaf_threshold,
+                    offsets=ps_offsets, compressor=compressor,
+                    ef_state=state.ef_state, seed=state.step)
+            else:
+                new_params, new_w = mixing.communicate_push_sum(
+                    params_half, state.push_weight, W=W, n_nodes=n_nodes,
+                    comm_dtype=comm_dtype_ps, backend=dist.comm_backend,
+                    mesh=mesh, node_axis=dist.node_axis,
+                    shard_mode=dist.comm_shard_mode,
+                    model_axis=dist.model_axis,
+                    leaf_threshold=dist.pallas_leaf_threshold,
+                    offsets=ps_offsets)
+            if phase == "global":
+                # a full-participation global round sets every w_i to
+                # Σw/n = 1 in exact arithmetic; snap to it so the PGA
+                # reset also washes out accumulated fp drift in w
+                new_w = jnp.where(jnp.all(active > 0),
+                                  jnp.ones_like(new_w), new_w)
+            metrics = dict(metrics)
+            # the checkable invariant: Σw = n for every column-stochastic
+            # round, every fault pattern (DESIGN.md §2.5)
+            metrics["mass"] = jnp.sum(new_w.astype(jnp.float32))
+            if with_consensus:
+                metrics["consensus"] = consensus_distance(
+                    debias(new_params, new_w))
+            new_state = TrainState(params=new_params, opt_state=opt_state,
+                                   step=state.step + 1,
+                                   slow_params=state.slow_params,
+                                   slow_u=state.slow_u, ef_state=new_ef,
+                                   push_weight=new_w)
+            return new_state, metrics
+
+        return push_step
 
     def step(state: TrainState, batch: PyTree, lr: jax.Array
              ) -> Tuple[TrainState, Dict[str, jax.Array]]:

@@ -22,7 +22,7 @@ from repro.core.schedule import make_schedule
 from repro.data import make_stream
 from repro.models.model import Model, make_model
 from repro.optim import make_optimizer, make_schedule as make_lr
-from repro.train.state import TrainState, stack_for_nodes
+from repro.train.state import TrainState, init_push_weight, stack_for_nodes
 from repro.train.step import build_train_step
 
 PyTree = Any
@@ -31,8 +31,19 @@ PyTree = Any
 class Trainer:
     def __init__(self, tcfg: TrainConfig, n_nodes: int, *,
                  mesh: Optional[jax.sharding.Mesh] = None,
-                 with_consensus: bool = False):
+                 with_consensus: bool = False,
+                 fault_schedule=None):
         tcfg.dist.validate().validate_nodes(n_nodes)
+        if fault_schedule is not None:
+            if not tcfg.dist.push_sum:
+                raise ValueError(
+                    "Trainer: fault injection requires DistConfig."
+                    "push_sum=True — only the push-sum weight scalar keeps "
+                    "the average unbiased when nodes drop (DESIGN.md §2.5)")
+            if fault_schedule.n_nodes != n_nodes:
+                raise ValueError(
+                    f"Trainer: fault_schedule built for "
+                    f"{fault_schedule.n_nodes} nodes, trainer has {n_nodes}")
         self.tcfg = tcfg
         self.n_nodes = n_nodes
         self.mesh = mesh
@@ -41,6 +52,7 @@ class Trainer:
         self.schedule = make_schedule(tcfg.dist)
         self.period = topo.schedule_period(tcfg.dist.topology, n_nodes)
         self.with_consensus = with_consensus
+        self.fault_schedule = fault_schedule
         self.stream = make_stream(tcfg.model, tcfg.data, n_nodes=n_nodes,
                                   global_batch=tcfg.global_batch,
                                   seq_len=tcfg.seq_len)
@@ -48,6 +60,7 @@ class Trainer:
         self.history: List[Dict[str, float]] = []
         self._sched_live = False   # True once this process advanced the
                                    # schedule (guards the resume reload)
+        self._faults_live = False  # same guard for the fault counters
 
     # ------------------------------------------------------------------
     def init_state(self, key: jax.Array) -> TrainState:
@@ -65,21 +78,49 @@ class Trainer:
         if self.tcfg.dist.comm_error_feedback:
             from repro.compress import init_ef_state
             ef_state = init_ef_state(params)
+        push_weight = (init_push_weight(self.n_nodes)
+                       if self.tcfg.dist.push_sum else None)
         return TrainState(params=params, opt_state=opt_state,
                           step=jnp.zeros((), jnp.int32),
                           slow_params=slow_params, slow_u=slow_u,
-                          ef_state=ef_state)
+                          ef_state=ef_state, push_weight=push_weight)
 
     # ------------------------------------------------------------------
     def _get_step_fn(self, phase: str, shift: int):
         key = (phase, shift)
         if key not in self._compiled:
+            hops = (self.fault_schedule.hop_superset(self.tcfg.dist.topology)
+                    if self.fault_schedule is not None else None)
             fn = build_train_step(self.model, self.tcfg, self.n_nodes,
                                   phase=phase, shift_step=shift,
                                   with_consensus=self.with_consensus,
-                                  mesh=self.mesh)
+                                  mesh=self.mesh, fault_hops=hops)
             self._compiled[key] = jax.jit(fn, donate_argnums=(0,))
         return self._compiled[key]
+
+    # ------------------------------------------------------------------
+    def _push_round(self, phase: str, k: int, shift: int):
+        """Host-side (W, active) for the push-sum step at absolute step
+        ``k`` — values only, the compiled step is W-agnostic.  ``advance``
+        commits the fault counters (pure elsewhere)."""
+        n = self.n_nodes
+        if self.fault_schedule is not None:
+            active = self.fault_schedule.advance(k)
+        else:
+            active = np.ones(n, dtype=bool)
+        if phase == "gossip":
+            if self.fault_schedule is not None:
+                W = self.fault_schedule.matrix(self.tcfg.dist.topology, k,
+                                               shift_step=shift)
+            else:
+                W = topo.push_sum_matrix(self.tcfg.dist.topology, n,
+                                         step=shift)
+        elif phase == "global":
+            W = topo.global_push_matrix(n, active)
+        else:                       # "none": W is unused by the step
+            W = np.eye(n)
+        return (jnp.asarray(W, jnp.float32),
+                jnp.asarray(active, jnp.float32))
 
     # ------------------------------------------------------------------
     def run(self, state: TrainState, steps: Optional[int] = None,
@@ -97,6 +138,10 @@ class Trainer:
             # correct)
             self.load_schedule(step=start)
         self._sched_live = True
+        if start > 0 and not self._faults_live \
+                and self.fault_schedule is not None:
+            self.load_faults(step=start)
+        self._faults_live = True
         for k in range(start, start + steps):
             batch = jax.tree.map(jnp.asarray, self.stream.get_batch(k))
             # advance() commits stateful schedules (AGA's period counter);
@@ -106,7 +151,11 @@ class Trainer:
             shift = self.schedule.gossip_shift_step(k, self.period)
             lr = jnp.asarray(self.lr_fn(k), jnp.float32)
             step_fn = self._get_step_fn(phase, shift)
-            state, metrics = step_fn(state, batch, lr)
+            if tcfg.dist.push_sum:
+                W, active = self._push_round(phase, k, shift)
+                state, metrics = step_fn(state, batch, lr, W, active)
+            else:
+                state, metrics = step_fn(state, batch, lr)
             loss = float(metrics["loss"])
             self.schedule.observe_loss(k, loss)
             if log_every and (k % log_every == 0 or k == steps - 1):
@@ -124,6 +173,7 @@ class Trainer:
                 from repro.checkpoint import save_checkpoint
                 save_checkpoint(tcfg.ckpt_dir, state, k + 1)
                 self._save_schedule(k + 1)
+                self._save_faults(k + 1)
         return state
 
     # ------------------------------------------------------------------
@@ -159,6 +209,38 @@ class Trainer:
         if os.path.exists(path):
             with open(path) as f:
                 self.schedule.load_state_dict(json.load(f))
+
+    # ------------------------------------------------------------------
+    def _faults_path(self, step: int) -> str:
+        import os
+        return os.path.join(self.tcfg.ckpt_dir, f"faults_{step:08d}.json")
+
+    def _save_faults(self, step: int) -> None:
+        """Sidecar for the fault schedule's bookkeeping counters: a
+        resumed run must report the same drop/rejoin totals as an
+        uninterrupted one (the schedule itself is a pure function of the
+        step, so only the counters are trajectory state)."""
+        if self.fault_schedule is None:
+            return
+        import json
+        with open(self._faults_path(step), "w") as f:
+            json.dump(self.fault_schedule.state_dict(), f)
+
+    def load_faults(self, step: Optional[int] = None) -> None:
+        """Restore the fault counters saved alongside the checkpoint at
+        ``step`` (default: latest); missing sidecar is a no-op."""
+        if self.fault_schedule is None:
+            return
+        import json
+        import os
+        from repro.checkpoint import latest_step
+        step = step if step is not None else latest_step(self.tcfg.ckpt_dir)
+        if step is None:
+            return
+        path = self._faults_path(step)
+        if os.path.exists(path):
+            with open(path) as f:
+                self.fault_schedule.load_state_dict(json.load(f))
 
 
 def quick_train(tcfg: TrainConfig, n_nodes: int, steps: int, *,

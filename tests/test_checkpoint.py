@@ -147,13 +147,55 @@ def test_restore_efless_ckpt_into_ef_template():
 
 
 # ---------------------------------------------------------------------------
+# push_weight reconcile (DESIGN.md §2.5), both directions
+# ---------------------------------------------------------------------------
+def _push_state(params, w=None, step=0):
+    return TrainState(params=params, opt_state={"momentum": params},
+                      step=jnp.asarray(step, jnp.int32), push_weight=w)
+
+
+def test_push_weight_roundtrips_bitwise():
+    params = {"w": jnp.ones((4, 3), jnp.float32)}
+    pw = jnp.asarray([[0.75], [1.25], [0.5], [1.5]], jnp.float32)
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, _push_state(params, w=pw, step=2), 2)
+        restored = restore_checkpoint(d, _push_state(params, w=pw * 0 + 1))
+    np.testing.assert_array_equal(np.asarray(restored.push_weight),
+                                  np.asarray(pw))
+
+
+def test_push_weight_reconciles_into_none_template():
+    # enabling push_sum is not required to *read back* a push-sum ckpt
+    params = {"w": jnp.ones((4, 3), jnp.float32)}
+    pw = jnp.asarray([[0.75], [1.25], [0.5], [1.5]], jnp.float32)
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, _push_state(params, w=pw, step=1), 1)
+        restored = restore_checkpoint(d, _push_state(params, w=None))
+    assert restored.push_weight is not None
+    np.testing.assert_array_equal(np.asarray(restored.push_weight),
+                                  np.asarray(pw))
+
+
+def test_push_weight_backfills_ones_from_plain_ckpt():
+    # newly enabling push_sum on an old checkpoint: w must start at ONES
+    # (zeros would blow up the x/w de-bias), mirroring the EF-zeros rule
+    params = {"w": jnp.ones((4, 3), jnp.float32)}
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, _push_state(params, w=None, step=1), 1)
+        tmpl = _push_state(params, w=jnp.full((4, 1), 9.0, jnp.float32))
+        restored = restore_checkpoint(d, tmpl)
+    np.testing.assert_array_equal(np.asarray(restored.push_weight),
+                                  np.ones((4, 1), np.float32))
+
+
+# ---------------------------------------------------------------------------
 # resume parity: save → restore → continue == uninterrupted, bitwise
 # ---------------------------------------------------------------------------
 def _tcfg(ckpt_dir, **dist_kw):
+    dist_kw.setdefault("topology", "ring")
     return TrainConfig(
         model=CFG,
-        dist=DistConfig(algorithm="gossip_pga", topology="ring", H=2,
-                        **dist_kw),
+        dist=DistConfig(algorithm="gossip_pga", H=2, **dist_kw),
         optimizer=OptimizerConfig(name="sgd", lr=0.05, schedule="constant",
                                   warmup_steps=0),
         data=DataConfig(non_iid=True), global_batch=8, seq_len=16,
@@ -184,6 +226,35 @@ def test_compressed_resume_matches_uninterrupted(dist_kw):
         if full.ef_state is not None:
             _assert_tree_bitwise(resumed.ef_state, full.ef_state)
         assert int(resumed.step) == int(full.step) == 4
+
+
+def test_push_sum_fault_resume_matches_uninterrupted():
+    """Push-sum run with a mid-run drop: save → restore → continue equals
+    the uninterrupted run bitwise, including the push weight, and the
+    fault counters reconcile through the sidecar."""
+    from repro.core.faults import FaultSchedule
+
+    def faults():
+        return FaultSchedule(n_nodes=4, drops={1: (2,)}, rejoins={3: (2,)},
+                             seed=0)
+
+    with tempfile.TemporaryDirectory() as d:
+        tcfg = _tcfg(d, topology="directed_exp", push_sum=True)
+        tr = Trainer(tcfg, n_nodes=4, fault_schedule=faults())
+        full = tr.run(tr.init_state(jax.random.PRNGKey(0)), steps=4)
+        tr2 = Trainer(tcfg, n_nodes=4, fault_schedule=faults())
+        state = restore_checkpoint(d, tr2.init_state(jax.random.PRNGKey(0)),
+                                   step=2)
+        assert state.push_weight is not None
+        resumed = tr2.run(state, steps=2)
+        _assert_tree_bitwise(resumed.params, full.params)
+        _assert_tree_bitwise(resumed.opt_state, full.opt_state)
+        np.testing.assert_array_equal(np.asarray(resumed.push_weight),
+                                      np.asarray(full.push_weight))
+        assert tr2.fault_schedule.state_dict() == \
+            tr.fault_schedule.state_dict()
+        import os
+        assert os.path.exists(os.path.join(d, "faults_00000002.json"))
 
 
 def test_resume_across_ef_enablement():

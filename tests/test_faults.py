@@ -1,0 +1,362 @@
+"""Fault-injection scenario suite (DESIGN.md §2.5).
+
+The checkable invariant throughout: every matrix a FaultSchedule emits is
+column-stochastic, so the push-sum mass ``Σw = n`` survives every drop
+pattern, every resample draw, every step — asserted here per-step, by a
+deterministic seeded sweep that always runs and a hypothesis property test
+over (topology, n, drop pattern) when hypothesis is installed.
+"""
+import os
+import subprocess
+import sys
+import tempfile
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import mixing, topology as topo
+from repro.core.faults import FaultSchedule, parse_fault_events
+from repro.train.state import debias, init_push_weight
+
+DIRECTED = list(topo.DIRECTED_TOPOLOGIES)
+
+
+def _quadratic(d=6, m=48):
+    A = jax.random.normal(jax.random.PRNGKey(11), (m, d))
+    b = jax.random.normal(jax.random.PRNGKey(12), (m,))
+
+    def loss_fn(x):
+        return 0.5 * jnp.mean((A @ x - b) ** 2)
+
+    def grad_fn(xs, key, k):
+        return jax.vmap(jax.grad(loss_fn))(xs)
+
+    return loss_fn, grad_fn, d
+
+
+# ---------------------------------------------------------------------------
+# FaultSchedule semantics
+# ---------------------------------------------------------------------------
+def test_parse_fault_events():
+    assert parse_fault_events("") == {}
+    assert parse_fault_events("40:3,5;90:0") == {40: (3, 5), 90: (0,)}
+    assert parse_fault_events("7:2;7:1") == {7: (1, 2)}     # merged, sorted
+
+
+def test_active_mask_drop_rejoin_lifecycle():
+    fs = FaultSchedule(n_nodes=8, drops={5: (2, 6)}, rejoins={12: (2,)})
+    assert fs.active_mask(4).all()
+    m = fs.active_mask(5)
+    assert not m[2] and not m[6] and m.sum() == 6
+    m = fs.active_mask(12)
+    assert m[2] and not m[6]                  # 2 rejoined, 6 still down
+    # rejoin wins over a same-step drop
+    fs2 = FaultSchedule(n_nodes=4, drops={3: (1,)}, rejoins={3: (1,)})
+    assert fs2.active_mask(3).all()
+
+
+def test_fault_schedule_validates():
+    with pytest.raises(ValueError, match="resample"):
+        FaultSchedule(n_nodes=4, resample="bogus")
+    with pytest.raises(ValueError, match="outside"):
+        FaultSchedule(n_nodes=4, drops={0: (7,)})
+
+
+def test_resample_is_deterministic_and_step_keyed():
+    fs = FaultSchedule(n_nodes=16, resample="peer", seed=42)
+    fs_again = FaultSchedule(n_nodes=16, resample="peer", seed=42)
+    # pure function of (seed, step): two instances agree, any query order
+    for step in (9, 3, 9, 0):
+        assert fs.out_weights(step) == fs_again.out_weights(step)
+    # and the wiring actually varies across steps
+    mats = [fs.matrix("directed_exp", k) for k in range(8)]
+    assert any(not np.array_equal(mats[0], M) for M in mats[1:])
+    # different seed -> different trajectory
+    other = FaultSchedule(n_nodes=16, resample="peer", seed=43)
+    assert any(fs.out_weights(k) != other.out_weights(k) for k in range(8))
+
+
+@pytest.mark.parametrize("mode", ["hop", "peer"])
+def test_resampled_matrices_are_column_stochastic(mode):
+    fs = FaultSchedule(n_nodes=8, drops={3: (5,)}, resample=mode, seed=1)
+    for k in range(10):
+        W = fs.matrix("directed_exp", k)
+        assert topo.is_column_stochastic(W), (mode, k)
+
+
+def test_advance_counters_and_sidecar_roundtrip():
+    fs = FaultSchedule(n_nodes=8, drops={2: (1, 3)}, rejoins={5: (1,)})
+    for k in range(6):
+        fs.advance(k)
+    assert fs.state_dict() == {"steps_seen": 6, "drops_applied": 2,
+                               "rejoins_applied": 1}
+    assert fs.events_before(6) == (2, 1)
+    fresh = FaultSchedule(n_nodes=8, drops={2: (1, 3)}, rejoins={5: (1,)})
+    fresh.load_state_dict(fs.state_dict())
+    assert fresh.state_dict() == fs.state_dict()
+
+
+# ---------------------------------------------------------------------------
+# Mass conservation: every step of every scenario
+# ---------------------------------------------------------------------------
+def _run_scenario(t, n, fs, steps, backend="reference"):
+    """Drive raw push-sum rounds under ``fs``; assert Σw = n every step."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (n, 5))
+    w = init_push_weight(n)
+    for k in range(steps):
+        W = jnp.asarray(fs.matrix(t, k), jnp.float32)
+        x, w = mixing.communicate_push_sum(x, w, W=W, n_nodes=n,
+                                           backend=backend)
+        mass = float(jnp.sum(w))
+        assert abs(mass - n) < 1e-3 * n, (t, n, k, mass)
+    return x, w
+
+
+def test_mass_conserved_every_step_seeded_sweep():
+    # deterministic sweep over (topology, n, drop pattern, resample mode):
+    # runs always, independent of whether hypothesis is installed
+    rng = np.random.default_rng(123)
+    for t in DIRECTED:
+        for n in (4, 8, 16):
+            for mode in ("none", "hop", "peer"):
+                drops, rejoins = {}, {}
+                for step in rng.choice(12, size=3, replace=False):
+                    ids = rng.choice(n, size=rng.integers(1, max(2, n // 4)
+                                                          + 1),
+                                     replace=False)
+                    drops[int(step)] = tuple(int(i) for i in ids)
+                    rejoins[int(step) + 4] = drops[int(step)]
+                fs = FaultSchedule(n_nodes=n, drops=drops, rejoins=rejoins,
+                                   resample=mode, seed=int(rng.integers(100)))
+                _run_scenario(t, n, fs, steps=16)
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:                           # optional extra; sweep above
+    _HAVE_HYPOTHESIS = False                  # covers the same domain
+
+
+if _HAVE_HYPOTHESIS:
+    @given(t=st.sampled_from(DIRECTED),
+           n=st.sampled_from([4, 8, 16]),
+           drop_bits=st.integers(0, 2 ** 16 - 1),
+           drop_step=st.integers(0, 6),
+           rejoin_after=st.integers(1, 6),
+           mode=st.sampled_from(["none", "hop", "peer"]),
+           seed=st.integers(0, 999))
+    @settings(max_examples=30, deadline=None)
+    def test_mass_conservation_property(t, n, drop_bits, drop_step,
+                                        rejoin_after, mode, seed):
+        """Σw = n at every step for arbitrary (topology, n, drop pattern)."""
+        ids = tuple(i for i in range(n) if drop_bits & (1 << i))
+        drops = {drop_step: ids} if ids else {}
+        rejoins = {drop_step + rejoin_after: ids} if ids else {}
+        fs = FaultSchedule(n_nodes=n, drops=drops, rejoins=rejoins,
+                           resample=mode, seed=seed)
+        w = jnp.ones((n, 1), jnp.float32)
+        for k in range(drop_step + rejoin_after + 3):
+            W = fs.matrix(t, k)
+            assert topo.is_column_stochastic(W)
+            w = jnp.asarray(W, jnp.float32) @ w
+            assert abs(float(jnp.sum(w)) - n) < 1e-3 * n, k
+
+
+# ---------------------------------------------------------------------------
+# Convergence with faults: de-biased average stays intact
+# ---------------------------------------------------------------------------
+def test_dropout_midrun_converges_with_debiased_average_intact():
+    from repro.core.algorithms import simulate
+    loss_fn, grad_fn, d = _quadratic()
+    fs = FaultSchedule(n_nodes=8, drops={10: (2, 5)}, rejoins={25: (2, 5)},
+                       seed=0)
+    out = simulate(algorithm="gossip_pga", grad_fn=grad_fn, loss_fn=loss_fn,
+                   x0=jnp.zeros(d), n=8, steps=60, lr=0.05,
+                   topology="directed_exp", H=4, push_sum=True,
+                   fault_schedule=fs, eval_every=5)
+    clean = simulate(algorithm="gossip_pga", grad_fn=grad_fn,
+                     loss_fn=loss_fn, x0=jnp.zeros(d), n=8, steps=60,
+                     lr=0.05, topology="directed_exp", H=4, push_sum=True,
+                     eval_every=5)
+    np.testing.assert_allclose(out["mass"], 8.0, atol=1e-2)
+    # the de-biased trajectory survives the outage: same optimum, consensus
+    # re-collapses after rejoin
+    assert out["consensus"][-1] < 1e-6
+    assert abs(out["loss"][-1] - clean["loss"][-1]) < 0.05
+    assert fs.state_dict()["drops_applied"] == 2
+    assert fs.state_dict()["rejoins_applied"] == 2
+
+
+@pytest.mark.parametrize("mode", ["hop", "peer"])
+def test_per_step_resampling_converges(mode):
+    from repro.core.algorithms import simulate
+    loss_fn, grad_fn, d = _quadratic()
+    fs = FaultSchedule(n_nodes=8, resample=mode, seed=5)
+    out = simulate(algorithm="gossip_pga", grad_fn=grad_fn, loss_fn=loss_fn,
+                   x0=jnp.zeros(d), n=8, steps=48, lr=0.05,
+                   topology="directed_exp", H=4, push_sum=True,
+                   fault_schedule=fs, eval_every=8)
+    np.testing.assert_allclose(out["mass"], 8.0, atol=1e-2)
+    assert out["consensus"][-1] < 1e-5
+    assert out["loss"][-1] < out["loss"][0]
+
+
+# ---------------------------------------------------------------------------
+# Acceptance scenario: 16 nodes, drop 2, rejoin, all three backends
+# ---------------------------------------------------------------------------
+def _acceptance(backend):
+    from repro.core.algorithms import simulate
+    loss_fn, grad_fn, d = _quadratic()
+    fs = FaultSchedule(n_nodes=16, drops={12: (3, 11)},
+                       rejoins={28: (3, 11)}, seed=0)
+    return simulate(algorithm="gossip_pga", grad_fn=grad_fn,
+                    loss_fn=loss_fn, x0=jnp.zeros(d), n=16, steps=64,
+                    lr=0.05, topology="directed_exp", H=8, push_sum=True,
+                    backend=backend, fault_schedule=fs, eval_every=8)
+
+
+def test_acceptance_16node_drop2_rejoin_stacked_backends():
+    """16-node directed-exp, 2 nodes dropped at t=12, rejoined at t=28:
+    both stacked backends reach the same de-biased consensus fixed point."""
+    ref = _acceptance("reference")
+    pal = _acceptance("pallas")
+    for out in (ref, pal):
+        np.testing.assert_allclose(out["mass"], 16.0, atol=1e-2)
+        assert out["consensus"][-1] < 1e-6
+    np.testing.assert_allclose(ref["loss"], pal["loss"], rtol=1e-5)
+    np.testing.assert_allclose(ref["push_weight"], pal["push_weight"],
+                               atol=1e-6)
+
+
+_SHARDED_SCENARIO = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.core import mixing, topology as topo
+    from repro.core.faults import FaultSchedule
+
+    n, d = 16, 6
+    mesh = jax.make_mesh((8,), ("nodes",))
+    A = jax.random.normal(jax.random.PRNGKey(11), (48, d))
+    b = jax.random.normal(jax.random.PRNGKey(12), (48,))
+    loss = lambda x: 0.5 * jnp.mean((A @ x - b) ** 2)
+    gradf = jax.vmap(jax.grad(loss))
+    fs = FaultSchedule(n_nodes=n, drops={12: (3, 11)},
+                       rejoins={28: (3, 11)}, seed=0)
+    offs = mixing.push_sum_shard_offsets(n, 8, fs.hop_superset("directed_exp"))
+
+    def run(backend, mesh=None):
+        x = jnp.zeros((n, d)); w = jnp.ones((n, 1), jnp.float32)
+        for k in range(64):
+            active = jnp.asarray(fs.active_mask(k), jnp.float32)
+            if (k + 1) % 8 == 0:
+                W = topo.global_push_matrix(n, fs.active_mask(k))
+                off = tuple(range(8))
+            else:
+                W = fs.matrix("directed_exp", k)
+                off = offs
+            x = x - 0.05 * gradf(x) * active[:, None]
+            kw = dict(mesh=mesh, node_axis="nodes",
+                      shard_mode="sharded", offsets=off) if mesh else {}
+            x, w = mixing.communicate_push_sum(
+                x, w, W=jnp.asarray(W, jnp.float32), n_nodes=n,
+                backend=backend, **kw)
+            assert abs(float(jnp.sum(w)) - n) < 1e-2, (backend, k)
+        return np.asarray(x / w), np.asarray(w)
+
+    xr, wr = run("reference")
+    xs, ws = run("pallas", mesh=mesh)
+    np.testing.assert_allclose(xs, xr, atol=1e-5)
+    np.testing.assert_allclose(ws, wr, atol=1e-5)
+    spread = np.abs(xr - xr.mean(0)).max()
+    assert spread < 1e-5, spread        # de-biased consensus fixed point
+    print("FAULT_SHARDED_OK")
+""")
+
+
+def test_acceptance_sharded_backend_matches_reference():
+    """The same 16-node drop-2-rejoin scenario on the shard_map/ppermute
+    backend (8 forced host devices, 2 nodes per shard) lands on the same
+    de-biased fixed point as the dense reference."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         env.get("PYTHONPATH", "")])
+    out = subprocess.run([sys.executable, "-c", _SHARDED_SCENARIO],
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert "FAULT_SHARDED_OK" in out.stdout, out.stderr[-2000:]
+
+
+# ---------------------------------------------------------------------------
+# Trainer: drop → checkpoint → rejoin resumes bit-stably
+# ---------------------------------------------------------------------------
+def _trainer_cfg(ckpt_dir):
+    from repro.configs import (DataConfig, DistConfig, OptimizerConfig,
+                               TrainConfig, get_model_config)
+    return TrainConfig(
+        model=get_model_config("qwen3-0.6b", reduced=True),
+        dist=DistConfig(algorithm="gossip_pga", topology="directed_exp",
+                        H=2, push_sum=True),
+        optimizer=OptimizerConfig(name="sgd", lr=0.05, schedule="constant",
+                                  warmup_steps=0),
+        data=DataConfig(non_iid=True), global_batch=8, seq_len=16,
+        steps=6, log_every=0, ckpt_every=3, ckpt_dir=ckpt_dir)
+
+
+def _faults():
+    # drop node 1 at step 2 (before the checkpoint at 3), rejoin at step 4
+    # (after it): the restore lands mid-outage
+    return FaultSchedule(n_nodes=4, drops={2: (1,)}, rejoins={4: (1,)},
+                         seed=0)
+
+
+def test_trainer_drop_checkpoint_rejoin_resumes_bitwise():
+    from repro.checkpoint import restore_checkpoint
+    from repro.train import Trainer
+    with tempfile.TemporaryDirectory() as d:
+        tcfg = _trainer_cfg(d)
+        tr = Trainer(tcfg, n_nodes=4, fault_schedule=_faults())
+        full = tr.run(tr.init_state(jax.random.PRNGKey(0)), steps=6)
+        # fresh process: restore the mid-outage checkpoint and continue
+        tr2 = Trainer(tcfg, n_nodes=4, fault_schedule=_faults())
+        state = restore_checkpoint(d, tr2.init_state(jax.random.PRNGKey(0)),
+                                   step=3)
+        assert int(state.step) == 3
+        # push weight restored mid-outage: skewed, not ones
+        assert not np.allclose(np.asarray(state.push_weight), 1.0)
+        resumed = tr2.run(state, steps=3)
+        for a, b in zip(jax.tree.leaves(resumed.params),
+                        jax.tree.leaves(full.params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        np.testing.assert_array_equal(np.asarray(resumed.push_weight),
+                                      np.asarray(full.push_weight))
+        # counters reconciled through the sidecar
+        assert tr2.fault_schedule.state_dict() == \
+            tr.fault_schedule.state_dict()
+        assert float(jnp.sum(resumed.push_weight)) == pytest.approx(4.0,
+                                                                    abs=1e-4)
+
+
+def test_trainer_requires_push_sum_for_faults():
+    from repro.configs import (DataConfig, DistConfig, OptimizerConfig,
+                               TrainConfig, get_model_config)
+    from repro.train import Trainer
+    tcfg = TrainConfig(
+        model=get_model_config("qwen3-0.6b", reduced=True),
+        dist=DistConfig(algorithm="gossip_pga", topology="ring", H=2),
+        optimizer=OptimizerConfig(name="sgd", lr=0.05),
+        data=DataConfig(), global_batch=8, seq_len=16, log_every=0)
+    with pytest.raises(ValueError, match="push_sum"):
+        Trainer(tcfg, n_nodes=4, fault_schedule=_faults())
+    with pytest.raises(ValueError, match="4 nodes"):
+        Trainer(TrainConfig(
+            model=tcfg.model,
+            dist=DistConfig(algorithm="gossip_pga", topology="directed_exp",
+                            H=2, push_sum=True),
+            optimizer=tcfg.optimizer, data=tcfg.data, global_batch=8,
+            seq_len=16, log_every=0), n_nodes=8, fault_schedule=_faults())

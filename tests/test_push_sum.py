@@ -1,0 +1,337 @@
+"""Push-sum mixing (DESIGN.md §2.5): backend parity on directed topologies,
+the de-biased fixed point, the PGA global weight reset, and composition with
+wire compression — the weight scalar must stay exact throughout."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import mixing, topology as topo
+from repro.train.state import debias, init_push_weight
+
+DIRECTED = list(topo.DIRECTED_TOPOLOGIES)
+
+
+def _round(params, w, W, n, backend, **kw):
+    return mixing.communicate_push_sum(params, w, W=jnp.asarray(W, jnp.float32),
+                                       n_nodes=n, backend=backend, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Reference semantics: one round is exactly (W·x, W·w)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("t", DIRECTED)
+@pytest.mark.parametrize("n", [4, 8, 16])
+def test_reference_round_is_dense_matmul(t, n, rng_key):
+    x = jax.random.normal(rng_key, (n, 5, 3))
+    w = jax.random.uniform(jax.random.PRNGKey(7), (n, 1), minval=0.5,
+                           maxval=1.5)
+    W = topo.push_sum_matrix(t, n)
+    x2, w2 = _round(x, w, W, n, "reference")
+    want_x = jnp.einsum("ij,jab->iab", jnp.asarray(W, jnp.float32), x)
+    np.testing.assert_allclose(np.asarray(x2), np.asarray(want_x), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(w2),
+                               np.asarray(W, np.float32) @ np.asarray(w),
+                               atol=1e-6)
+
+
+@pytest.mark.parametrize("t", DIRECTED)
+def test_mass_conserved_bitwise(t):
+    # column-stochastic + dyadic weights: Σw stays exactly n round after round
+    n = 16
+    w = init_push_weight(n)
+    x = jax.random.normal(jax.random.PRNGKey(0), (n, 7))
+    for k in range(12):
+        active = np.ones(n, dtype=bool)
+        if k >= 4:
+            active[[2, 9]] = k >= 8    # drop mid-run, rejoin later
+        W = topo.push_sum_matrix(t, n, active=active)
+        x, w = _round(x, w, W, n, "reference")
+        assert float(jnp.sum(w)) == float(n), k
+
+
+# ---------------------------------------------------------------------------
+# Backend parity: reference ≡ pallas stacked ≡ shard_map/ppermute
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("t", DIRECTED)
+@pytest.mark.parametrize("with_fault", [False, True])
+def test_pallas_stacked_matches_reference(t, with_fault, rng_key):
+    n = 8
+    tree = {"a": jax.random.normal(rng_key, (n, 6, 4)),
+            "b": [jax.random.normal(jax.random.PRNGKey(3), (n, 17))]}
+    w = jax.random.uniform(jax.random.PRNGKey(5), (n, 1), minval=0.5,
+                           maxval=1.5)
+    active = np.ones(n, dtype=bool)
+    if with_fault:
+        active[[1, 6]] = False
+    W = topo.push_sum_matrix(t, n, active=active)
+    xr, wr = _round(tree, w, W, n, "reference")
+    xp, wp = _round(tree, w, W, n, "pallas")
+    for lr, lp in zip(jax.tree.leaves(xr), jax.tree.leaves(xp)):
+        np.testing.assert_allclose(np.asarray(lr), np.asarray(lp), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(wr), np.asarray(wp), atol=1e-6)
+
+
+_SHARDED_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.core import mixing, topology as topo
+
+    mesh = jax.make_mesh((8,), ("nodes",))
+    n = 8
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(n, 24)), jnp.float32)
+    w = jnp.asarray(rng.uniform(0.5, 1.5, size=(n, 1)), jnp.float32)
+    active = np.ones(n, dtype=bool)
+    for t in ("directed_ring", "directed_exp"):
+        for drop in (None, (3,)):
+            a = active.copy()
+            if drop:
+                a[list(drop)] = False
+            W = jnp.asarray(topo.push_sum_matrix(t, n, active=a), jnp.float32)
+            xr, wr = mixing.communicate_push_sum(
+                x, w, W=W, n_nodes=n, backend="reference")
+            xs, ws = mixing.communicate_push_sum(
+                x, w, W=W, n_nodes=n, backend="pallas", mesh=mesh,
+                node_axis="nodes", shard_mode="sharded")
+            np.testing.assert_allclose(np.asarray(xs), np.asarray(xr),
+                                       atol=1e-5)
+            np.testing.assert_allclose(np.asarray(ws), np.asarray(wr),
+                                       atol=1e-6)
+    # static offset superset from the fault schedule's hop set
+    offs = mixing.push_sum_shard_offsets(8, 8, (0, 1, 2, 4))
+    W = jnp.asarray(topo.push_sum_matrix("directed_exp", n), jnp.float32)
+    xs, ws = mixing.communicate_push_sum(
+        x, w, W=W, n_nodes=n, backend="pallas", mesh=mesh,
+        node_axis="nodes", shard_mode="sharded", offsets=offs)
+    xr, wr = mixing.communicate_push_sum(x, w, W=W, n_nodes=n,
+                                         backend="reference")
+    np.testing.assert_allclose(np.asarray(xs), np.asarray(xr), atol=1e-5)
+    print("PUSH_SUM_SHARDED_OK")
+""")
+
+
+def test_sharded_ppermute_matches_reference():
+    """The transpose-free sharded path (8 forced host devices) matches the
+    dense reference for directed + fault matrices — subprocess so this
+    session's device count is untouched."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         env.get("PYTHONPATH", "")])
+    out = subprocess.run([sys.executable, "-c", _SHARDED_SCRIPT],
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert "PUSH_SUM_SHARDED_OK" in out.stdout, out.stderr[-2000:]
+
+
+def test_push_sum_shard_offsets_superset():
+    # 16 nodes over 8 shards (m=2): shift 1 straddles -> offsets {0, 1};
+    # shift 4 is aligned -> offset 2; shift 2 -> offset 1
+    offs = mixing.push_sum_shard_offsets(16, 8, (1, 2, 4))
+    assert offs == (0, 1, 2)
+    # everything-reachable fallback for the global phase
+    assert mixing.push_sum_shard_offsets(8, 8, range(8)) == tuple(range(8))
+
+
+# ---------------------------------------------------------------------------
+# De-bias fixed point & PGA weight reset
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("t", DIRECTED)
+def test_debiased_constant_fixed_point_bitwise(t):
+    # x_i == c·w_i is invariant under the joint round, and while W's entries
+    # stay dyadic (full participation) power-of-two scaling commutes with
+    # fp rounding — the ratio x/w recovers c *bitwise* every round
+    n = 8
+    c = 2.0 ** -3
+    w = init_push_weight(n)
+    x = jnp.full((n, 4), c, jnp.float32)
+    for k in range(6):
+        W = topo.push_sum_matrix(t, n)
+        x, w = _round(x, w, W, n, "reference")
+        np.testing.assert_array_equal(np.asarray(debias(x, w)),
+                                      np.full((n, 4), c, np.float32))
+
+
+@pytest.mark.parametrize("t", DIRECTED)
+def test_debiased_constant_fixed_point_under_faults(t):
+    # fault renormalization makes W entries non-dyadic (e.g. 1/7), so the
+    # x- and w-matmuls may round in different orders — the fixed point
+    # holds to fp tolerance, and snaps back once participation is full
+    n = 8
+    c = 2.0 ** -3
+    w = init_push_weight(n)
+    x = jnp.full((n, 4), c, jnp.float32)
+    for k in range(8):
+        active = np.ones(n, dtype=bool)
+        if k in (2, 3):
+            active[5] = False
+        W = topo.push_sum_matrix(t, n, active=active)
+        x, w = _round(x, w, W, n, "reference")
+        np.testing.assert_allclose(np.asarray(debias(x, w)), c, atol=1e-6)
+
+
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+def test_global_round_averages_weight_to_one(backend):
+    # the raw kernel: a full-participation global round (W = 𝟙𝟙ᵀ/n) takes
+    # every w_i to Σw/n = 1 up to summation-order rounding (≤ a few ulp)
+    n = 8
+    w = init_push_weight(n)
+    x = jax.random.normal(jax.random.PRNGKey(1), (n, 5))
+    active = np.ones(n, dtype=bool)
+    active[4] = False
+    for k in range(3):    # skew the weights with fault gossip rounds
+        W = topo.push_sum_matrix("directed_exp", n, active=active)
+        x, w = _round(x, w, W, n, backend)
+    assert not np.allclose(np.asarray(w), 1.0)
+    G = topo.global_push_matrix(n)          # full participation: exactly J
+    x, w = _round(x, w, G, n, backend)
+    np.testing.assert_allclose(np.asarray(w), 1.0, atol=1e-6)
+    # and the de-biased params all equal the (exact) global average
+    xa = np.asarray(x)
+    assert np.abs(xa - xa[0]).max() < 1e-6
+
+
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+def test_pga_global_phase_resets_weight_bitwise(backend):
+    # the step layer snaps w to the exact-arithmetic result of the full-
+    # participation global round — after any PGA global phase the weight
+    # is *bitwise* 1.0 no matter how faults skewed it before
+    from repro.core.algorithms import simulate
+    from repro.core.faults import FaultSchedule
+    loss_fn, grad_fn, d = _quadratic()
+    n = 8
+    fs = FaultSchedule(n_nodes=n, drops={5: (1, 4)}, rejoins={13: (1, 4)},
+                       seed=2)
+    out = simulate(algorithm="gossip_pga", grad_fn=grad_fn, loss_fn=loss_fn,
+                   x0=jnp.zeros(d), n=n, steps=20, lr=0.05,
+                   topology="directed_exp", H=4, backend=backend,
+                   push_sum=True, fault_schedule=fs, eval_every=5)
+    # step 19 is a global phase (H=4) with everyone rejoined
+    np.testing.assert_array_equal(out["push_weight"],
+                                  np.ones((n, 1), np.float32))
+    np.testing.assert_allclose(out["mass"], float(n), atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Composition with wire compression (+ error feedback)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("codec", ["int8", "fp8"])
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+def test_compressed_push_sum_weight_stays_exact(codec, backend, rng_key):
+    from repro.compress import init_ef_state, make_compressor
+    n = 8
+    comp = make_compressor(codec)
+    x = jax.random.normal(rng_key, (n, 64))
+    w = jax.random.uniform(jax.random.PRNGKey(9), (n, 1), minval=0.5,
+                           maxval=1.5)
+    ef = init_ef_state(x)
+    W = topo.push_sum_matrix("directed_exp", n)
+    xq, wq, ef2 = _round(x, w, W, n, backend, compressor=comp, ef_state=ef,
+                         seed=3)
+    # the de-bias denominator bypasses the codec entirely: exact dense W·w
+    np.testing.assert_allclose(np.asarray(wq),
+                               np.asarray(W, np.float32) @ np.asarray(w),
+                               atol=1e-7)
+    # params follow the compensated compressed round, close to exact
+    xe, _ = _round(x, w, W, n, "reference")
+    err = np.abs(np.asarray(xq) - np.asarray(xe)).max()
+    assert 0 < err < 0.2, err
+    # EF memory picked up the quantization residual
+    assert any(float(jnp.abs(l).max()) > 0 for l in jax.tree.leaves(ef2))
+
+
+def test_identity_codec_is_exact_passthrough(rng_key):
+    from repro.compress import make_compressor
+    n = 8
+    comp = make_compressor("identity")
+    x = jax.random.normal(rng_key, (n, 16))
+    w = init_push_weight(n)
+    W = topo.push_sum_matrix("directed_ring", n)
+    xi, wi, ef = _round(x, w, W, n, "reference", compressor=comp)
+    xe, we = _round(x, w, W, n, "reference")
+    np.testing.assert_array_equal(np.asarray(xi), np.asarray(xe))
+    np.testing.assert_array_equal(np.asarray(wi), np.asarray(we))
+    assert ef is None
+
+
+def test_compressed_sharded_push_sum_raises(rng_key):
+    from repro.compress import make_compressor
+    n = len(jax.devices())  # whatever this host has; the check fires first
+
+    class FakeMesh:  # only consulted for the axis size via node_shard_count
+        shape = {"nodes": 8}
+        axis_names = ("nodes",)
+
+    comp = make_compressor("int8")
+    with pytest.raises(ValueError, match="no.*sharded|sharded path"):
+        mixing.communicate_push_sum(
+            jax.random.normal(rng_key, (8, 4)), init_push_weight(8),
+            W=jnp.asarray(topo.push_sum_matrix("directed_ring", 8)),
+            n_nodes=8, backend="pallas", mesh=FakeMesh(), node_axis="nodes",
+            shard_mode="sharded", compressor=comp)
+
+
+# ---------------------------------------------------------------------------
+# End-to-end: simulate() with push_sum on directed topologies
+# ---------------------------------------------------------------------------
+def _quadratic(d=6, m=48):
+    A = jax.random.normal(jax.random.PRNGKey(11), (m, d))
+    b = jax.random.normal(jax.random.PRNGKey(12), (m,))
+
+    def loss_fn(x):
+        return 0.5 * jnp.mean((A @ x - b) ** 2)
+
+    def grad_fn(xs, key, k):
+        return jax.vmap(jax.grad(loss_fn))(xs)
+
+    return loss_fn, grad_fn, d
+
+
+@pytest.mark.parametrize("t", DIRECTED)
+def test_simulate_push_sum_backend_parity(t):
+    from repro.core.algorithms import simulate
+    loss_fn, grad_fn, d = _quadratic()
+    outs = {}
+    for backend in ("reference", "pallas"):
+        outs[backend] = simulate(
+            algorithm="gossip_pga", grad_fn=grad_fn, loss_fn=loss_fn,
+            x0=jnp.zeros(d), n=8, steps=30, lr=0.05, topology=t, H=4,
+            backend=backend, push_sum=True, eval_every=5)
+    np.testing.assert_allclose(outs["reference"]["loss"],
+                               outs["pallas"]["loss"], rtol=1e-6)
+    for backend, out in outs.items():
+        np.testing.assert_allclose(out["mass"], 8.0, atol=1e-4,
+                                   err_msg=backend)
+        assert out["consensus"][-1] < 1e-6, backend
+
+
+def test_simulate_push_sum_compressed_ef_converges():
+    from repro.core.algorithms import simulate
+    loss_fn, grad_fn, d = _quadratic()
+    out = simulate(
+        algorithm="gossip_pga", grad_fn=grad_fn, loss_fn=loss_fn,
+        x0=jnp.zeros(d), n=8, steps=60, lr=0.05, topology="directed_exp",
+        H=4, push_sum=True, compression="int8", error_feedback=True,
+        eval_every=10)
+    np.testing.assert_allclose(out["mass"], 8.0, atol=1e-3)
+    assert out["loss"][-1] < out["loss"][0]
+    exact = simulate(
+        algorithm="gossip_pga", grad_fn=grad_fn, loss_fn=loss_fn,
+        x0=jnp.zeros(d), n=8, steps=60, lr=0.05, topology="directed_exp",
+        H=4, push_sum=True, eval_every=10)
+    assert abs(out["loss"][-1] - exact["loss"][-1]) < 0.05
+
+
+def test_directed_topology_requires_push_sum():
+    from repro.configs.base import DistConfig
+    with pytest.raises(ValueError, match="push_sum"):
+        DistConfig(algorithm="gossip", topology="directed_exp").validate()
+    DistConfig(algorithm="gossip", topology="directed_exp",
+               push_sum=True).validate()

@@ -97,3 +97,124 @@ def test_schedule_period():
     assert topo.schedule_period("ring", 16) == 1
     assert topo.schedule_period("one_peer_exp", 16) == 4
     assert topo.schedule_period("one_peer_exp", 1) == 1
+    assert topo.schedule_period("directed_ring", 16) == 1
+    assert topo.schedule_period("directed_exp", 16) == 1
+
+
+def test_schedule_period_unknown_topology_raises():
+    # regression: the old helper returned 1 for ANY string, silently running
+    # typo'd topologies as "static, period 1"
+    with pytest.raises(ValueError, match="unknown topology"):
+        topo.schedule_period("rnig", 16)
+    with pytest.raises(ValueError, match="unknown topology"):
+        topo.schedule_period("", 8)
+
+
+# ---------------------------------------------------------------------------
+# Directed topologies / push-sum matrices (DESIGN.md §2.5)
+# ---------------------------------------------------------------------------
+DIRECTED = list(topo.DIRECTED_TOPOLOGIES)
+
+
+@pytest.mark.parametrize("t", DIRECTED)
+@pytest.mark.parametrize("n", [2, 4, 8, 16, 32])
+def test_directed_doubly_stochastic_fault_free(t, n):
+    # circulants with weights summing to 1 are doubly stochastic even when
+    # asymmetric; column-stochasticity-only appears under faults
+    W = topo.mixing_matrix(t, n)
+    assert topo.is_doubly_stochastic(W), (t, n)
+    assert topo.is_column_stochastic(W), (t, n)
+    if n >= 4:   # n == 2 degenerates: the one-hop peer is symmetric
+        assert not np.array_equal(W, W.T), (t, n)   # genuinely directed
+
+
+@pytest.mark.parametrize("t", DIRECTED)
+@pytest.mark.parametrize("n", [4, 16])
+def test_push_sum_matrix_full_participation_equals_mixing_matrix(t, n):
+    for s in range(topo.schedule_period(t, n)):
+        np.testing.assert_array_equal(topo.push_sum_matrix(t, n, step=s),
+                                      topo.mixing_matrix(t, n, step=s))
+
+
+@pytest.mark.parametrize("t", DIRECTED)
+def test_push_sum_matrix_drop_is_column_stochastic_not_doubly(t):
+    n = 16
+    active = np.ones(n, dtype=bool)
+    active[[3, 5]] = False
+    W = topo.push_sum_matrix(t, n, active=active)
+    assert topo.is_column_stochastic(W)
+    assert not topo.is_doubly_stochastic(W)
+    # dropped nodes are isolated on identity rows/columns (frozen mass)
+    for j in (3, 5):
+        np.testing.assert_array_equal(W[j], np.eye(n)[j])
+        np.testing.assert_array_equal(W[:, j], np.eye(n)[:, j])
+
+
+@pytest.mark.parametrize("t", DIRECTED)
+@pytest.mark.parametrize("n", [4, 16, 64])
+def test_beta_directed_in_range(t, n):
+    b = topo.beta(topo.mixing_matrix(t, n))
+    assert 0.0 <= b < 1.0, (t, n, b)
+
+
+def test_beta_column_stochastic_uses_perron_vector():
+    # a weighted directed ring where one sender keeps extra self-mass:
+    # column-stochastic, NOT doubly stochastic, but irreducible+aperiodic
+    n = 4
+    W = topo.push_sum_matrix("directed_ring", n)
+    W[:, 0] = 0.0
+    W[0, 0], W[3, 0] = 0.75, 0.25
+    assert topo.is_column_stochastic(W)
+    assert not topo.is_doubly_stochastic(W)
+    b = topo.beta(W)
+    assert 0.0 < b < 1.0, b
+    pi = topo.perron_vector(W)
+    np.testing.assert_allclose(W @ pi, pi, atol=1e-12)
+    np.testing.assert_allclose(pi.sum(), 1.0, atol=1e-12)
+
+
+def test_beta_fault_matrix_is_honest_about_partition():
+    # dropped nodes partition the graph: no global consensus, so beta >= 1
+    n = 8
+    active = np.ones(n, dtype=bool)
+    active[2] = False
+    b = topo.beta(topo.push_sum_matrix("directed_exp", n, active=active))
+    assert b >= 1.0 - 1e-9, b
+
+
+def test_beta_rejects_non_stochastic():
+    # regression: the old beta() returned ||W - J||_2 for ANY matrix
+    with pytest.raises(ValueError, match="column.*stochastic"):
+        topo.beta(np.array([[0.5, 0.5], [0.5, 0.6]]))
+
+
+def test_beta_doubly_stochastic_path_unchanged():
+    # the Perron generalization must keep the Assumption-3 path bitwise
+    for t in ("ring", "exp", "full"):
+        W = topo.mixing_matrix(t, 16)
+        J = np.ones((16, 16)) / 16
+        want = float(np.linalg.svd(W - J, compute_uv=False)[0])
+        assert topo.beta(W) == want
+
+
+@pytest.mark.parametrize("n", [4, 8, 16])
+def test_global_push_matrix(n):
+    # full participation: exactly J (resets every weight to 1)
+    np.testing.assert_array_equal(topo.global_push_matrix(n),
+                                  np.ones((n, n)) / n)
+    active = np.ones(n, dtype=bool)
+    active[0] = False
+    G = topo.global_push_matrix(n, active)
+    assert topo.is_column_stochastic(G)
+    # active block averages over the live set; dropped node keeps its mass
+    np.testing.assert_array_equal(G[0], np.eye(n)[0])
+    np.testing.assert_allclose(G[1:, 1:], np.ones((n - 1, n - 1)) / (n - 1))
+
+
+def test_directed_weights_are_dyadic():
+    # power-of-two weights => exact fp column sums => the push-sum weight
+    # stays *bitwise* 1.0 under full participation
+    for t in DIRECTED:
+        for w in topo.shift_weights(t, 16).values():
+            m, e = np.frexp(w)
+            assert m == 0.5, (t, w)
