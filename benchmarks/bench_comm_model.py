@@ -31,6 +31,31 @@ def alpha_beta_times(d_params: float, n: int = 32, H: int = 6):
             "gossip_one_peer": one_peer, "gossip_pga_H6": pga}
 
 
+# representative fwd+bwd per-iteration compute (paper's V100 cluster,
+# order-of-magnitude — the overlap model only needs the comm/compute ratio)
+COMPUTE_S = {"resnet50": 0.120, "bert_large": 0.400}
+
+
+def overlapped_iteration_times(d_params: float, t_comp: float,
+                               n: int = 32, H: int = 6):
+    """Per-iteration α-β wall clock, synchronous vs pipelined
+    (DESIGN.md §2.6).  Synchronous: compute and the gossip round are
+    serial, ``t_comp + t_gossip``.  Overlapped: the round of step t rides
+    under the compute of step t+1, so the steady-state iteration costs
+    ``max(t_comp, t_gossip)`` — communication is fully hidden once
+    ``t_comp ≥ t_gossip``.  The PGA flush every H steps stays synchronous
+    (the period boundary drains the pipeline), so its all-reduce is
+    additive in both modes at amortized ``allreduce / H``."""
+    t = alpha_beta_times(d_params, n, H)
+    comm = t["gossip_one_peer"]
+    flush = t["allreduce"] / H
+    sync = t_comp + comm + flush
+    overlapped = max(t_comp, comm) + flush
+    return {"sync": sync, "overlap": overlapped,
+            "speedup": sync / overlapped,
+            "hidden_frac": min(t_comp, comm) / comm}
+
+
 def push_sum_round_time(d_params: float, topology: str, n: int,
                         n_dropped: int = 0) -> float:
     """α-β time of one push-sum gossip round: wire traffic is the
@@ -64,6 +89,15 @@ def main() -> None:
         emit(f"table17_{name}_gossip_vs_allreduce_ratio",
              t["allreduce"] / t["gossip_one_peer"],
              "paper measured ~1.85x (ResNet50), ~2.6x (BERT)")
+
+    # --- overlapped iteration model (DESIGN.md §2.6) -----------------------
+    for name, d in MODELS.items():
+        o = overlapped_iteration_times(d, COMPUTE_S[name])
+        emit(f"overlap_{name}_sync_iter_ms", o["sync"] * 1e3)
+        emit(f"overlap_{name}_overlap_iter_ms", o["overlap"] * 1e3,
+             f"{o['hidden_frac'] * 100:.0f}% of gossip hidden")
+        emit(f"overlap_{name}_speedup", o["speedup"],
+             "max(compute, comm) vs compute + comm, PGA flush additive")
 
     # --- push-sum rounds under faults (DESIGN.md §2.5) ---------------------
     n = 32

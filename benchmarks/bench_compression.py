@@ -104,21 +104,22 @@ def bench_global_bytes(n: int, dim: int) -> dict:
 def bench_rounds(n: int, dim: int, k: int, iters: int) -> None:
     x = jax.random.normal(jax.random.PRNGKey(0), (n, dim), jnp.float32)
 
+    spec = mixing.CommSpec(topology="ring", n_nodes=n)
+
     @jax.jit
     def base_round(x):
-        return mixing.communicate(x, phase="gossip", topology="ring",
-                                  n_nodes=n)
+        return mixing.communicate(x, spec, phase="gossip")
 
     t0 = time_fn(base_round, x, iters=iters)
     emit("compress/round/gossip/none/reference", t0)
     for name in ("int8", "fp8", "topk"):
         comp = C.make_compressor(name, k=k)
         for backend in ("reference", "pallas"):
+            sp = spec.replace(compressor=comp, backend=backend)
+
             @jax.jit
-            def comp_round(x, _c=comp, _b=backend):
-                return mixing.communicate(x, phase="gossip", topology="ring",
-                                          n_nodes=n, compressor=_c, seed=1,
-                                          backend=_b)[0]
+            def comp_round(x, _s=sp):
+                return mixing.communicate(x, _s, phase="gossip", seed=1)[0]
 
             t = time_fn(comp_round, x, iters=iters)
             emit(f"compress/round/gossip/{name}/{backend}", t,
@@ -126,18 +127,17 @@ def bench_rounds(n: int, dim: int, k: int, iters: int) -> None:
 
     @jax.jit
     def base_global(x):
-        return mixing.communicate(x, phase="global", topology="ring",
-                                  n_nodes=n)
+        return mixing.communicate(x, spec, phase="global")
 
     tg = time_fn(base_global, x, iters=iters)
     emit("compress/round/global/none/reference", tg)
     gcomp = C.make_compressor("int8")
     for backend in ("reference", "pallas"):
+        sp = spec.replace(global_compressor=gcomp, backend=backend)
+
         @jax.jit
-        def coll_round(x, _b=backend):
-            return mixing.communicate(x, phase="global", topology="ring",
-                                      n_nodes=n, global_compressor=gcomp,
-                                      seed=1, backend=_b)[0]
+        def coll_round(x, _s=sp):
+            return mixing.communicate(x, _s, phase="global", seed=1)[0]
 
         t = time_fn(coll_round, x, iters=iters)
         emit(f"compress/round/global/int8/{backend}", t,

@@ -150,6 +150,17 @@ def append_history(src: str = "BENCH_mixing.json",
                   "gated": r.get("gated", False)}
                  for r in bench.get("rows", [])],
     }
+    if bench.get("overlap_rows"):
+        # overlapped-round critical path (DESIGN.md §2.6): apply/sync
+        # ratio per multi-shift topology, gated strictly below 1.0
+        rec["overlap_gate"] = bench.get("overlap_gate")
+        rec["overlap_rows"] = [
+            {"name": r["name"], "ratio": r["ratio"],
+             "sync_us": r.get("sync_us"),
+             "overlap_apply_us": r.get("overlap_apply_us"),
+             "overlap_issue_us": r.get("overlap_issue_us"),
+             "gated": r.get("gated", False)}
+            for r in bench["overlap_rows"]]
     with open(path, "a") as f:
         f.write(json.dumps(rec) + "\n")
     print(f"appended {len(rec['rows'])} rows ({rec['sha']}) to {path}")

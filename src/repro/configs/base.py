@@ -254,6 +254,13 @@ class DistConfig:
                                      # reads x/w.  Required for the
                                      # directed topologies and for fault
                                      # injection (core.faults)
+    comm_overlap: bool = False       # pipelined gossip (DESIGN.md §2.6):
+                                     # the exchange of step t overlaps the
+                                     # compute of step t+1 (one-step-stale
+                                     # double-buffered wire state via
+                                     # mixing.start_round/finish_round);
+                                     # global/pod_avg rounds stay
+                                     # synchronous and flush the buffer
     remat: str = "block"             # "none" | "block": jax.checkpoint each scanned block
     remat_policy: str = "nothing"    # "nothing" | "dots" (checkpoint_dots) — perf knob
     serve_param_sharding: str = "tp" # "tp" (model axis) | "2d" (data+model, big archs)
@@ -329,7 +336,38 @@ class DistConfig:
                     "push_sum global rounds average the (x, w) pair over "
                     "the active set and cannot ride the compressed "
                     "collective — set comm_global_compression='none'")
+            if self.comm_overlap:
+                raise ValueError(
+                    "comm_overlap does not compose with push_sum: the "
+                    "de-biased read x/w needs x and w mixed by the *same* "
+                    "round, but the overlapped correction applies a stale "
+                    "buffer to a fresh iterate (DESIGN.md §2.6)")
         return self
+
+    def comm_spec(self, n_nodes: int, mesh=None):
+        """Canonical :class:`repro.core.mixing.CommSpec` constructor — the
+        single place the config's comm knobs become the round-invariant
+        spec every ``communicate``/``start_round``/``finish_round`` call
+        threads (imports stay lazy: configs are dependency-light)."""
+        import jax.numpy as jnp
+        from repro.compress import make_compressor
+        from repro.core.mixing import CommSpec
+        return CommSpec(
+            topology=self.topology,
+            n_nodes=n_nodes,
+            n_pods=self.n_pods,
+            backend=self.comm_backend,
+            mesh=mesh,
+            node_axis=self.node_axis,
+            model_axis=self.model_axis,
+            shard_mode=self.comm_shard_mode,
+            leaf_threshold=self.pallas_leaf_threshold,
+            comm_dtype=jnp.bfloat16 if self.comm_dtype == "bfloat16"
+            else None,
+            compressor=make_compressor(self.comm_compression,
+                                       k=self.comm_compression_k),
+            global_compressor=make_compressor(
+                self.comm_global_compression)).validate()
 
     def validate_nodes(self, n_nodes: int) -> "DistConfig":
         """Checks that need the runtime node count: any algorithm that runs

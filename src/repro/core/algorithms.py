@@ -28,14 +28,32 @@ PyTree = Any
 @dataclass
 class Decentralized:
     """The paper's technique as a composable object: owns the schedule and
-    applies the right communication round to decentralized parameters."""
+    applies the right communication round to decentralized parameters.
+
+    ``mesh`` (optional) rides the spec into every round — before the
+    CommSpec migration this wrapper hand-forwarded a subset of the comm
+    knobs and silently dropped ``mesh``/``node_axis``/``shard_mode``/
+    ``model_axis``, degrading spec-carried sharded routing to stacked
+    mode (ISSUE 7 regression test in tests/test_overlap.py)."""
     dist: DistConfig
     n_nodes: int
     schedule: CommSchedule = None  # type: ignore[assignment]
+    mesh: Optional[jax.sharding.Mesh] = None
 
     def __post_init__(self):
         if self.schedule is None:
             self.schedule = make_schedule(self.dist)
+        # round-invariant spec, with the compressor slots cleared: the
+        # legacy communicate() arity contract (plain pytree unless a
+        # compressor is passed) re-attaches them per call
+        self._spec = self.dist.comm_spec(self.n_nodes, mesh=self.mesh) \
+            .replace(compressor=None, global_compressor=None)
+
+    @property
+    def spec(self) -> mixing.CommSpec:
+        """The round-invariant :class:`repro.core.mixing.CommSpec` this
+        wrapper threads (compressor slots cleared — attach per call)."""
+        return self._spec
 
     def phase(self, step: int) -> str:
         """Pure phase query (schedule.peek_phase) — never advances a
@@ -57,13 +75,12 @@ class Decentralized:
                     seed=0, global_compressor=None) -> PyTree:
         if phase == "slowmo":  # parameter part only; momentum handled by caller
             phase = "global"
-        return mixing.communicate(
-            params, phase=phase, topology=self.dist.topology,
-            n_nodes=self.n_nodes, step=step, axis=axis,
-            n_pods=self.dist.n_pods,
-            backend=backend or self.dist.comm_backend,
-            compressor=compressor, ef_state=ef_state, seed=seed,
-            global_compressor=global_compressor)
+        spec = self._spec.replace(compressor=compressor,
+                                  global_compressor=global_compressor)
+        if backend is not None:
+            spec = spec.replace(backend=backend)
+        return mixing.communicate(params, spec, phase=phase, step=step,
+                                  axis=axis, ef_state=ef_state, seed=seed)
 
 
 # ---------------------------------------------------------------------------
@@ -92,6 +109,7 @@ def simulate(
     global_compression: str = "none",
     push_sum: bool = False,
     fault_schedule=None,
+    overlap: bool = False,
 ) -> Dict[str, np.ndarray]:
     """Run ``algorithm`` on n simulated nodes; returns the trajectory of the
     node-average loss f(x̄^k) and consensus distance ‖x − x̄‖²/n.
@@ -120,6 +138,21 @@ def simulate(
     rejoins nodes and resamples the wiring per step — each step's W is a
     host-built *runtime* operand, so the compiled step never recompiles
     across failure patterns.
+
+    ``overlap=True`` (DESIGN.md §2.6) runs the one-step-stale pipelined
+    semantics: each gossip step applies the *previous* step's buffered
+    half-step iterate as the compensated correction,
+    ``x_{k+1} = y_k + (W − I)·y_{k−1}`` with ``y_k = x_k − γ g_k`` and
+    the warm-up buffer ``y_{−1} = x_0`` — this is the reference recursion
+    the production train-step's ``start_round``/``finish_round`` pipeline
+    is tested bit-for-bit against.  The mixing matrix applied at step k
+    is the one of the buffer's *priming* step (time-varying topologies
+    stay aligned with the wire state actually in flight; the warm-up
+    round reuses step 0's shift).  Global/pod-averaging/SlowMo steps run
+    synchronously and re-prime the buffer (the period boundary is the
+    pipeline flush).  Composes with ``compression``/``error_feedback``
+    (EF updates against the payload actually buffered) but not
+    ``push_sum``.
     """
     if fault_schedule is not None:
         if not push_sum:
@@ -133,7 +166,7 @@ def simulate(
                       comm_compression_k=compression_k,
                       comm_error_feedback=error_feedback,
                       comm_global_compression=global_compression,
-                      push_sum=push_sum,
+                      push_sum=push_sum, comm_overlap=overlap,
                       **(aga_kwargs or {})).validate()
     algo = Decentralized(dist, n)
     lr_fn = lr if callable(lr) else (lambda k: lr)
@@ -142,6 +175,9 @@ def simulate(
     lossy = compressor is not None and compressor.lossy
     global_comp = make_compressor(global_compression)
     glossy = global_comp is not None and global_comp.lossy
+    ov_spec = algo.spec.replace(compressor=compressor,
+                                global_compressor=global_comp) \
+        if overlap else None
     use_pallas = backend == "pallas"
     if use_pallas:
         from repro.kernels import mixing_pallas
@@ -165,6 +201,25 @@ def simulate(
         return algo.communicate(x_half, phase, shift_step,
                                 compressor=compressor, ef_state=ef, seed=k,
                                 global_compressor=global_comp)
+
+    @functools.partial(jax.jit,
+                       static_argnames=("phase", "shift_step", "buf_shift"))
+    def ov_step_fn(x, buf, ef, key, k, gamma, phase, shift_step, buf_shift):
+        """One pipelined step (DESIGN.md §2.6): the half-step iterate
+        absorbs the *buffered* round on arrival (``finish_round`` with the
+        buffer's priming shift), then re-primes the double buffer from
+        itself; averaging phases flush synchronously."""
+        g = grad_fn(x, key, k)
+        y = x - gamma * g
+        if phase == "none":
+            return y, buf, ef
+        if phase == "gossip":
+            x2 = mixing.finish_round(y, buf, ov_spec, step=buf_shift)
+            buf2, ef2 = mixing.start_round(y, ov_spec, ef_state=ef, seed=k)
+            return x2, buf2, ef2
+        mixed, buf2, ef2 = mixing.overlap_flush(
+            y, ov_spec, phase=phase, step=shift_step, ef_state=ef, seed=k)
+        return mixed, buf2, ef2
 
     @functools.partial(jax.jit,
                        static_argnames=("phase", "shift_step",
@@ -212,6 +267,12 @@ def simulate(
     losses, consensus, its = [], [], []
     period = topo.schedule_period(topology, n)
 
+    buf = buf_shift = None
+    if overlap:
+        # warm-up buffer b = x_0; the warm-up round reuses step 0's shift
+        buf, ef = mixing.start_round(x, ov_spec, ef_state=ef, seed=0)
+        buf_shift = algo.schedule.gossip_shift_step(0, period)
+
     for k in range(steps):
         key, sub = jax.random.split(key)
         gamma = float(lr_fn(k))
@@ -258,6 +319,16 @@ def simulate(
             g = grad_fn(x, sub, k)
             x_half = x - gamma * g
             x, slow_x, slow_u = slowmo_outer(x_half, slow_x, slow_u, gamma)
+            if overlap:   # outer step is a synchronous flush: re-prime
+                buf, ef = mixing.start_round(x, ov_spec, ef_state=ef,
+                                             seed=k)
+                buf_shift = shift_step
+        elif overlap:
+            x, buf, ef = ov_step_fn(x, buf, ef, sub, k, gamma, phase=phase,
+                                    shift_step=shift_step,
+                                    buf_shift=buf_shift)
+            if phase != "none":   # "none" leaves the in-flight buffer alone
+                buf_shift = shift_step
         elif lossy_round:
             x, ef = comp_step_fn(x, ef, sub, k, gamma, phase, shift_step)
         elif use_pallas and phase in ("gossip", "global", "pod_avg"):

@@ -48,10 +48,30 @@ shared per-step randomness makes a constant state an exact fixed point.
 ``compressor=None`` (or the identity compressor) routes to the exact
 pre-compression code path, bit-identically.  With a compressor the
 return value is ``(mixed, new_ef_state)``.
+
+**CommSpec** (DESIGN.md §2.6): the ~12 round-invariant knobs above are
+captured once in a frozen :class:`CommSpec` —
+``communicate(params, spec, phase=..., step=...)`` is the primary
+signature, built canonically by ``DistConfig.comm_spec()``.  The legacy
+kwarg form still works as a thin shim that builds a spec (and emits a
+``DeprecationWarning``); per-round arguments (``phase``/``step``/
+``axis``/``ef_state``/``seed``) stay keyword arguments.
+
+**Async overlap** (DESIGN.md §2.6): :func:`start_round` /
+:func:`finish_round` split one gossip round around the compute of the
+next step — ``start_round`` captures (and compresses) the double-buffered
+wire payload, ``finish_round`` issues the ppermute of the *buffered*
+state inside the next step's graph and mixes on arrival as the
+self-compensated correction ``x ← y + (M·b − (1−d)⊙b)`` (≡
+``y + (W − I)·b``), which preserves the node average exactly for any
+buffer.  Global/PGA rounds stay synchronous — :func:`overlap_flush` runs
+the exact collective and re-primes the buffer at the period boundary.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
+import warnings
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -64,6 +84,66 @@ PyTree = Any
 
 BACKENDS = ("reference", "pallas")
 SHARD_MODES = ("auto", "stacked", "sharded")
+
+
+@dataclasses.dataclass(frozen=True)
+class CommSpec:
+    """Round-invariant communication configuration (DESIGN.md §2.6).
+
+    One frozen value object carries every knob of a communication round
+    that does not change between rounds — topology, node/pod counts,
+    backend routing (mesh/axes/shard mode), wire dtype, and the gossip /
+    global compressors — so call sites thread *one* argument instead of
+    hand-forwarding ~12 kwargs (the hand-forwarding is how PR 5's
+    ``model_axis`` was silently dropped by ``Decentralized.communicate``).
+    Per-round values (``phase``, ``step``, ``ef_state``, ``seed``) remain
+    arguments of :func:`communicate` / :func:`start_round` /
+    :func:`finish_round`.
+
+    Build it with ``DistConfig.comm_spec(n_nodes, mesh=...)`` (the
+    canonical constructor) and derive variants with :meth:`replace` —
+    e.g. ``spec.replace(compressor=None)`` for a round that must return
+    a bare pytree instead of the ``(mixed, ef)`` tuple.
+    """
+    topology: str
+    n_nodes: int
+    n_pods: int = 1
+    backend: str = "reference"
+    mesh: Optional[jax.sharding.Mesh] = None
+    node_axis: str = "data"
+    model_axis: str = "model"
+    shard_mode: str = "auto"
+    leaf_threshold: Optional[int] = None
+    comm_dtype: Any = None
+    compressor: Any = None
+    global_compressor: Any = None
+
+    def replace(self, **kw) -> "CommSpec":
+        return dataclasses.replace(self, **kw)
+
+    def validate(self) -> "CommSpec":
+        if self.backend not in BACKENDS:
+            raise ValueError(f"CommSpec: unknown backend {self.backend!r} "
+                             f"(expected one of {BACKENDS})")
+        if self.shard_mode not in SHARD_MODES:
+            raise ValueError(f"CommSpec: unknown shard_mode "
+                             f"{self.shard_mode!r} "
+                             f"(expected one of {SHARD_MODES})")
+        if self.n_nodes < 1:
+            raise ValueError("CommSpec: n_nodes must be >= 1")
+        if self.n_pods < 1:
+            raise ValueError("CommSpec: n_pods must be >= 1")
+        return self
+
+    @property
+    def lossy(self) -> bool:
+        """True when the gossip wire payload is lossy-compressed."""
+        return self.compressor is not None and self.compressor.lossy
+
+    def uses_sharded(self) -> bool:
+        """True when rounds route through the shard_map + ppermute path."""
+        return use_sharded_backend(self.backend, self.mesh, self.node_axis,
+                                   self.shard_mode)
 
 
 def _check_backend(backend: str, axis: int,
@@ -436,19 +516,17 @@ def _compressed_round_reference(params: PyTree, q: PyTree, phase: str,
     return jax.tree.map(one, params, q)
 
 
-def _communicate_compressed(params: PyTree, *, compressor, ef_state,
-                            seed, phase: str, topology: str, n_nodes: int,
-                            step: int, axis: int, comm_dtype, n_pods: int,
-                            backend: str, mesh, node_axis: str,
-                            shard_mode: str, leaf_threshold,
-                            global_compressor=None,
-                            model_axis: str = "model"):
+def _communicate_compressed(params: PyTree, *, spec: CommSpec, ef_state,
+                            seed, phase: str, step: int, axis: int):
     """Compressor-aware dispatch behind :func:`communicate` — always
-    returns ``(mixed, new_ef_state)``.  ``global_compressor``
+    returns ``(mixed, new_ef_state)``.  ``spec.global_compressor``
     (``DistConfig.comm_global_compression``) overrides the averaging
     phases — a lossy codec with the compressed collective, the identity
-    codec with the exact psum path — while ``compressor`` keeps handling
-    gossip rounds."""
+    codec with the exact psum path — while ``spec.compressor`` keeps
+    handling gossip rounds."""
+    compressor = spec.compressor
+    global_compressor = spec.global_compressor
+    n_nodes, n_pods = spec.n_nodes, spec.n_pods
     if phase not in ("none", "gossip", "global", "pod_avg"):
         raise ValueError(f"unknown communication phase {phase!r}")
     if phase == "pod_avg":
@@ -461,19 +539,20 @@ def _communicate_compressed(params: PyTree, *, compressor, ef_state,
             # the collective supersedes the gossip compressor and
             # comm_dtype for the averaging phases (DESIGN.md §2.3
             # Compressed collectives)
-            if use_sharded_backend(backend, mesh, node_axis, shard_mode):
+            if spec.uses_sharded():
                 return _communicate_sharded_collective(
                     params, compressor=global_compressor, ef_state=ef_state,
                     seed=seed, phase=phase, n_nodes=n_nodes, n_pods=n_pods,
-                    mesh=mesh, node_axis=node_axis, model_axis=model_axis,
+                    mesh=spec.mesh, node_axis=spec.node_axis,
+                    model_axis=spec.model_axis,
                     caller="mixing.communicate")
             if phase == "global":
                 return global_average_pytree(
-                    params, axis=axis, backend=backend,
+                    params, axis=axis, backend=spec.backend,
                     compressor=global_compressor, ef_state=ef_state,
                     seed=seed)
             return pod_average_pytree(
-                params, n_pods, axis=axis, backend=backend,
+                params, n_pods, axis=axis, backend=spec.backend,
                 compressor=global_compressor, ef_state=ef_state, seed=seed)
         # identity global codec: the averaging phase runs the exact psum
         # path bit-identically.  The global codec supersedes the gossip
@@ -481,58 +560,63 @@ def _communicate_compressed(params: PyTree, *, compressor, ef_state,
         # recursing with the lossy gossip compressor attached would run
         # the compensated-psum gossip round instead (the documented
         # contract is "exact psum path, bit-identically")
-        mixed = communicate(
-            params, phase=phase, topology=topology, n_nodes=n_nodes,
-            step=step, axis=axis, comm_dtype=comm_dtype, n_pods=n_pods,
-            backend=backend, mesh=mesh, node_axis=node_axis,
-            shard_mode=shard_mode, leaf_threshold=leaf_threshold,
-            model_axis=model_axis)
+        mixed = _communicate_impl(
+            params, spec.replace(compressor=None, global_compressor=None),
+            phase=phase, step=step, axis=axis)
         return mixed, ef_state
     if compressor is None or not compressor.lossy:
         # identity / no gossip compressor: the exact pre-compression path,
         # bit-identically
-        mixed = communicate(
-            params, phase=phase, topology=topology, n_nodes=n_nodes,
-            step=step, axis=axis, comm_dtype=comm_dtype, n_pods=n_pods,
-            backend=backend, mesh=mesh, node_axis=node_axis,
-            shard_mode=shard_mode, leaf_threshold=leaf_threshold,
-            model_axis=model_axis)
+        mixed = _communicate_impl(
+            params, spec.replace(compressor=None, global_compressor=None),
+            phase=phase, step=step, axis=axis)
         return mixed, ef_state
     # gossip/pod_avg: the lossy payload IS the wire, comm_dtype is
     # superseded; global: the psum operand is uncompressed fp32 sums, so
     # comm_dtype still wire-casts it on every backend (DESIGN.md §2.3)
-    if use_sharded_backend(backend, mesh, node_axis, shard_mode):
+    if spec.uses_sharded():
         return communicate_sharded(
-            params, phase=phase, topology=topology, n_nodes=n_nodes,
-            step=step, comm_dtype=comm_dtype, n_pods=n_pods, mesh=mesh,
-            node_axis=node_axis, model_axis=model_axis,
-            compressor=compressor, ef_state=ef_state, seed=seed)
-    if backend == "pallas":
+            params, spec.replace(global_compressor=None), phase=phase,
+            step=step, ef_state=ef_state, seed=seed)
+    if spec.backend == "pallas":
         from repro.kernels import mixing_pallas
         return mixing_pallas.compressed_step_mix(
             params, compressor=compressor, ef_state=ef_state, seed=seed,
-            phase=phase, topology=topology, n_nodes=n_nodes, step=step,
-            n_pods=n_pods, comm_dtype=comm_dtype)
+            phase=phase, topology=spec.topology, n_nodes=n_nodes, step=step,
+            n_pods=n_pods, comm_dtype=spec.comm_dtype)
     from repro import compress as compress_mod
     q, new_ef = compress_mod.apply_tree(compressor, params, ef_state, seed)
-    mixed = _compressed_round_reference(params, q, phase, topology, n_nodes,
-                                        step, n_pods, comm_dtype=comm_dtype)
+    mixed = _compressed_round_reference(params, q, phase, spec.topology,
+                                        n_nodes, step, n_pods,
+                                        comm_dtype=spec.comm_dtype)
     return mixed, new_ef
 
 
 # ---------------------------------------------------------------------------
 # Communication-op selector used by the training step
 # ---------------------------------------------------------------------------
-def communicate(params: PyTree, *, phase: str, topology: str, n_nodes: int,
-                step: int = 0, axis: int = 0, comm_dtype=None,
+def communicate(params: PyTree, spec: Optional[CommSpec] = None, *,
+                phase: str, step: int = 0, axis: int = 0,
+                ef_state: Optional[PyTree] = None, seed=0,
+                topology: Optional[str] = None,
+                n_nodes: Optional[int] = None, comm_dtype=None,
                 n_pods: int = 1, backend: str = "reference",
                 mesh: Optional[jax.sharding.Mesh] = None,
                 node_axis: str = "data", shard_mode: str = "auto",
                 leaf_threshold: Optional[int] = None,
-                compressor=None, ef_state: Optional[PyTree] = None,
-                seed=0, global_compressor=None,
+                compressor=None, global_compressor=None,
                 model_axis: str = "model") -> PyTree:
     """Apply one communication round to decentralized parameters.
+
+    Primary signature: ``communicate(params, spec, phase=..., step=...)``
+    with a :class:`CommSpec` carrying every round-invariant knob
+    (``DistConfig.comm_spec()`` builds it canonically).  Per-round values
+    — ``phase``, ``step``, ``axis``, ``ef_state``, ``seed`` — stay
+    keyword arguments.  The legacy all-kwargs form
+    (``communicate(params, phase=..., topology=..., n_nodes=..., ...)``)
+    still works as a thin shim that builds the spec, and emits a
+    ``DeprecationWarning``; mixing ``spec=`` with legacy round-invariant
+    kwargs is a ``TypeError`` (derive variants with ``spec.replace``).
 
     phase:
       "none"    — no communication (Local SGD between syncs; Parallel SGD's
@@ -577,39 +661,80 @@ def communicate(params: PyTree, *, phase: str, topology: str, n_nodes: int,
     packed state's columns are sliced over it, so halos/psums/collective
     stages touch only ``D/k_model`` columns per device (DESIGN.md §2.1).
     """
-    _check_backend(backend, axis, caller="mixing.communicate")
-    if compressor is not None or global_compressor is not None:
+    if spec is not None:
+        overridden = [name for name, val, default in (
+            ("topology", topology, None), ("n_nodes", n_nodes, None),
+            ("comm_dtype", comm_dtype, None), ("n_pods", n_pods, 1),
+            ("backend", backend, "reference"), ("mesh", mesh, None),
+            ("node_axis", node_axis, "data"),
+            ("shard_mode", shard_mode, "auto"),
+            ("leaf_threshold", leaf_threshold, None),
+            ("compressor", compressor, None),
+            ("global_compressor", global_compressor, None),
+            ("model_axis", model_axis, "model")) if val is not default]
+        if overridden:
+            raise TypeError(
+                "mixing.communicate: round-invariant knobs "
+                f"({', '.join(overridden)}) must live on the CommSpec — "
+                "derive a per-call variant with spec.replace(...) instead "
+                "of mixing spec= with legacy kwargs")
+        return _communicate_impl(params, spec, phase=phase, step=step,
+                                 axis=axis, ef_state=ef_state, seed=seed)
+    if topology is None or n_nodes is None:
+        raise TypeError("mixing.communicate: pass a CommSpec "
+                        "(communicate(params, spec, phase=...)) or, via the "
+                        "deprecated kwargs form, both topology= and "
+                        "n_nodes=")
+    warnings.warn(
+        "the all-kwargs form of mixing.communicate is deprecated: build a "
+        "CommSpec (DistConfig.comm_spec()) and call "
+        "communicate(params, spec, phase=..., step=...)",
+        DeprecationWarning, stacklevel=2)
+    spec = CommSpec(topology=topology, n_nodes=n_nodes, n_pods=n_pods,
+                    backend=backend, mesh=mesh, node_axis=node_axis,
+                    model_axis=model_axis, shard_mode=shard_mode,
+                    leaf_threshold=leaf_threshold, comm_dtype=comm_dtype,
+                    compressor=compressor,
+                    global_compressor=global_compressor)
+    return _communicate_impl(params, spec, phase=phase, step=step,
+                             axis=axis, ef_state=ef_state, seed=seed)
+
+
+def _communicate_impl(params: PyTree, spec: CommSpec, *, phase: str,
+                      step: int = 0, axis: int = 0,
+                      ef_state: Optional[PyTree] = None, seed=0) -> PyTree:
+    """Spec-driven body of :func:`communicate` (both signature shims land
+    here; internal recursions target it directly so identity/exact
+    re-dispatches never re-warn)."""
+    _check_backend(spec.backend, axis, caller="mixing.communicate")
+    if spec.compressor is not None or spec.global_compressor is not None:
         if axis != 0:
             raise ValueError("mixing.communicate: compression requires the "
                              f"node axis at position 0 (got axis={axis})")
-        return _communicate_compressed(
-            params, compressor=compressor, ef_state=ef_state, seed=seed,
-            phase=phase, topology=topology, n_nodes=n_nodes, step=step,
-            axis=axis, comm_dtype=comm_dtype, n_pods=n_pods,
-            backend=backend, mesh=mesh, node_axis=node_axis,
-            shard_mode=shard_mode, leaf_threshold=leaf_threshold,
-            global_compressor=global_compressor, model_axis=model_axis)
+        return _communicate_compressed(params, spec=spec, ef_state=ef_state,
+                                       seed=seed, phase=phase, step=step,
+                                       axis=axis)
     if phase == "pod_avg":
-        _check_pods(n_nodes, n_pods, "mixing.communicate")
-    if phase == "none" or n_nodes == 1:
+        _check_pods(spec.n_nodes, spec.n_pods, "mixing.communicate")
+    if phase == "none" or spec.n_nodes == 1:
         return params
-    if use_sharded_backend(backend, mesh, node_axis, shard_mode):
-        return communicate_sharded(
-            params, phase=phase, topology=topology, n_nodes=n_nodes,
-            step=step, comm_dtype=comm_dtype, n_pods=n_pods, mesh=mesh,
-            node_axis=node_axis, model_axis=model_axis)
+    if spec.uses_sharded():
+        return communicate_sharded(params, spec, phase=phase, step=step)
     if phase == "gossip":
-        return mix_pytree(params, topology, n_nodes, step=step, axis=axis,
-                          comm_dtype=comm_dtype, backend=backend,
-                          leaf_threshold=leaf_threshold)
+        return mix_pytree(params, spec.topology, spec.n_nodes, step=step,
+                          axis=axis, comm_dtype=spec.comm_dtype,
+                          backend=spec.backend,
+                          leaf_threshold=spec.leaf_threshold)
     if phase == "global":
         return global_average_pytree(params, axis=axis,
-                                     comm_dtype=comm_dtype, backend=backend,
-                                     leaf_threshold=leaf_threshold)
+                                     comm_dtype=spec.comm_dtype,
+                                     backend=spec.backend,
+                                     leaf_threshold=spec.leaf_threshold)
     if phase == "pod_avg":
-        return pod_average_pytree(params, n_pods, axis=axis,
-                                  comm_dtype=comm_dtype, backend=backend,
-                                  leaf_threshold=leaf_threshold)
+        return pod_average_pytree(params, spec.n_pods, axis=axis,
+                                  comm_dtype=spec.comm_dtype,
+                                  backend=spec.backend,
+                                  leaf_threshold=spec.leaf_threshold)
     raise ValueError(f"unknown communication phase {phase!r}")
 
 
@@ -645,9 +770,11 @@ def _shard_blocks(M: np.ndarray, d: np.ndarray, n: int, k: int):
     return offsets, Mstack, d.reshape(k, m, 1).astype(np.float32)
 
 
-def communicate_sharded(params: PyTree, *, phase: str, topology: str,
-                        n_nodes: int, step: int = 0, comm_dtype=None,
-                        n_pods: int = 1, mesh: jax.sharding.Mesh,
+def communicate_sharded(params: PyTree, spec: Optional[CommSpec] = None, *,
+                        phase: str, topology: Optional[str] = None,
+                        n_nodes: Optional[int] = None, step: int = 0,
+                        comm_dtype=None, n_pods: int = 1,
+                        mesh: Optional[jax.sharding.Mesh] = None,
                         node_axis: str = "data",
                         model_axis: str = "model",
                         grads: Optional[PyTree] = None,
@@ -657,6 +784,12 @@ def communicate_sharded(params: PyTree, *, phase: str, topology: str,
                         compressor=None, ef_state: Optional[PyTree] = None,
                         seed=0, global_compressor=None):
     """One communication round with the node axis sharded over ``mesh``.
+
+    Accepts the round-invariant knobs either on a :class:`CommSpec`
+    (``communicate_sharded(params, spec, phase=..., step=...)`` — the
+    ``backend``/``shard_mode``/``leaf_threshold`` fields are ignored:
+    calling this function *is* the sharded routing decision) or as the
+    direct kwargs below.
 
     The stacked ``(n, D)`` state never exists on one device: a shard_map
     over the node axis gives each shard its ``(m, D)`` row-block, the
@@ -701,6 +834,19 @@ def communicate_sharded(params: PyTree, *, phase: str, topology: str,
     from jax.sharding import PartitionSpec as P
     from repro.kernels import mixing_pallas
 
+    if spec is not None:
+        topology, n_nodes = spec.topology, spec.n_nodes
+        comm_dtype, n_pods = spec.comm_dtype, spec.n_pods
+        mesh, node_axis = spec.mesh, spec.node_axis
+        model_axis = spec.model_axis
+        compressor, global_compressor = spec.compressor, \
+            spec.global_compressor
+    if mesh is None:
+        raise ValueError("communicate_sharded: a mesh is required (pass a "
+                         "CommSpec built with mesh=..., or mesh= directly)")
+    if topology is None or n_nodes is None:
+        raise TypeError("communicate_sharded: pass a CommSpec or both "
+                        "topology= and n_nodes=")
     names = node_axis_names(mesh, node_axis)
     if not names:
         raise ValueError(f"communicate_sharded: mesh {dict(mesh.shape)} has "
@@ -892,27 +1038,65 @@ def _communicate_sharded_compressed(params: PyTree, *, compressor, ef_state,
     """
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
-    from repro import compress as compress_mod
     from repro.kernels import mixing_pallas
     from repro.models.sharding import wire_column_spec
 
     n = n_nodes
-    leaves = jax.tree.leaves(params)
-    sizes = [int(np.prod(l.shape[1:], dtype=np.int64)) for l in leaves]
     # only the quantizers' code arrays share the leaf column layout, so
     # only they can ride the model-sliced 2-D path (sparsifier index sets
     # are leaf-global); km == 1 keeps the 1-D path bit-identical
     kmq = km if (km > 1 and compressor.name in ("int8", "fp8")) else 1
     mn = mnames if kmq > 1 else ()
-    chunks = [-(-s // kmq) for s in sizes]
 
-    # row-local compression of the local block (+ EF update), on the
-    # column-padded rows view when model-sliced (ccol.pad_cols semantics:
-    # appended zeros, so absmax scales and absolute-column random bits on
-    # real columns are unchanged and pad columns code to exact zero).
-    # Passing the 2-D views as a list keeps jax.tree leaf order == salt
-    # order.
+    wires, new_ef, chunks = _sharded_wire_build(
+        params, compressor=compressor, ef_state=ef_state, seed=seed, n=n,
+        kmq=kmq)
+
+    if phase == "global":
+        wire_arrs = [a for w in wires for a in (*w.payload, *w.aux)]
+        wire_specs = tuple(wire_column_spec(a.shape, n, names, mn, kmq)
+                           for a in wire_arrs)
+        build_q = _wire_build_q(compressor, wires, chunks)
+        xf, unflatten = mixing_pallas.flatten_nodes_sharded(params, kmq)
+        xspec = P(names, mn) if mn else P(names)
+
+        def body(xb, *arrs):
+            q = build_q(arrs)
+            if comm_dtype is not None:
+                q = q.astype(comm_dtype).astype(jnp.float32)
+            qbar = jax.lax.psum(jnp.sum(q, axis=0, keepdims=True), names) / n
+            return xb + (qbar - q)
+
+        fn = shard_map(body, mesh=mesh, in_specs=(xspec,) + wire_specs,
+                       out_specs=xspec, check_rep=False)
+        return unflatten(fn(xf, *wire_arrs)), new_ef
+
+    out = _sharded_compensated_gossip(
+        params, wires, compressor=compressor, chunks=chunks, phase=phase,
+        topology=topology, n_nodes=n, step=step, n_pods=n_pods, mesh=mesh,
+        names=names, k=k, mn=mn, kmq=kmq, block_d=block_d,
+        interpret=interpret)
+    return out, new_ef
+
+
+def _sharded_wire_build(params: PyTree, *, compressor, ef_state, seed,
+                        n: int, kmq: int):
+    """Row-local compression of the stacked state into per-leaf wire
+    arrays (+ EF update) — the ``start_round`` half of a sharded
+    compressed exchange.  Compression happens on the column-padded rows
+    view when model-sliced (``ccol.pad_cols`` semantics: appended zeros,
+    so absmax scales and absolute-column random bits on real columns are
+    unchanged and pad columns code to exact zero); row-locality means it
+    runs *outside* the shard_map under GSPMD without collectives.
+    Passing the 2-D views as a list keeps jax.tree leaf order == salt
+    order.  Returns ``(wires, new_ef_state, chunks)`` with ``chunks`` the
+    per-leaf local column widths the decode side needs."""
+    from repro import compress as compress_mod
     from repro.compress.collective import pad_cols
+
+    leaves = jax.tree.leaves(params)
+    sizes = [int(np.prod(l.shape[1:], dtype=np.int64)) for l in leaves]
+    chunks = [-(-s // kmq) for s in sizes]
     x2 = [pad_cols(l.reshape(n, -1).astype(jnp.float32), kmq)
           for l in leaves]
     ef_leaves = jax.tree.leaves(ef_state) if ef_state is not None else None
@@ -927,18 +1111,21 @@ def _communicate_sharded_compressed(params: PyTree, *, compressor, ef_state,
             jax.tree.structure(ef_state),
             [e[:, :s].reshape(l.shape).astype(l.dtype)
              for e, s, l in zip(new_e2, sizes, ef_leaves)])
+    return wires, new_ef, chunks
+
+
+def _wire_build_q(compressor, wires, chunks):
+    """Factory for the row-block estimate rebuild: ``build_q(arrs)``
+    decodes a flat list of wire arrays back into the dense
+    ``(rows, D_local)`` estimate (row-local jnp; runs inside the
+    shard_map body).  On the model-sliced path each code array arrives as
+    its local column chunk, so the concatenation is column-aligned with
+    the packed matrix's per-shard layout."""
+    from repro import compress as compress_mod
+
     counts = [len(w.payload) + len(w.aux) for w in wires]
-    wire_arrs = [a for w in wires for a in (*w.payload, *w.aux)]
-    sharded_arr = [a.shape[0] == n for a in wire_arrs]
-    wire_specs = tuple(wire_column_spec(a.shape, n, names, mn, kmq)
-                       for a in wire_arrs)
 
     def build_q(arrs):
-        """Rebuild the dense (rows, D_local) estimate from a row-block's
-        wire arrays (row-local jnp; runs inside the shard_map body).  On
-        the model-sliced path each code array arrives as its local column
-        chunk, so the concatenation is column-aligned with the packed
-        matrix's per-shard layout."""
         out, off = [], 0
         for w0, c, d_leaf in zip(wires, counts, chunks):
             grp = arrs[off:off + c]
@@ -949,23 +1136,41 @@ def _communicate_sharded_compressed(params: PyTree, *, compressor, ef_state,
             off += c
         return out[0] if len(out) == 1 else jnp.concatenate(out, axis=1)
 
+    return build_q
+
+
+def _sharded_compensated_gossip(params: PyTree, wires, *, compressor,
+                                chunks, phase: str, topology: str,
+                                n_nodes: int, step: int, n_pods: int,
+                                mesh: jax.sharding.Mesh, names, k: int,
+                                mn=(), kmq: int = 1, block_d: int = 2048,
+                                interpret: Optional[bool] = None) -> PyTree:
+    """The ``finish_round`` half of a sharded compressed gossip round:
+    ``ppermute`` the wire arrays to the neighbors named by the round's
+    block decomposition, rebuild their estimates ``q``, and apply the
+    compensated per-shard kernel
+    ``x + (M_r · qs − (1 − d_r) ⊙ q_self)``.  Node-independent wire
+    arrays (leading axis 1, e.g. randk's shared column indices) ride
+    replicated and are never ppermuted.  ``wires`` may hold *stale*
+    payloads (the overlap double buffer) — the compensation preserves the
+    node average for any transmitted estimate, which is exactly why the
+    overlapped mode reuses this round unchanged."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    from repro.kernels import mixing_pallas
+    from repro.models.sharding import wire_column_spec
+
+    n = n_nodes
+    wire_arrs = [a for w in wires for a in (*w.payload, *w.aux)]
+    sharded_arr = [a.shape[0] == n for a in wire_arrs]
+    wire_specs = tuple(wire_column_spec(a.shape, n, names, mn, kmq)
+                       for a in wire_arrs)
+    build_q = _wire_build_q(compressor, wires, chunks)
+
     xf, unflatten = mixing_pallas.flatten_nodes_sharded(params, kmq)
     xspec = P(names, mn) if mn else P(names)
     d, M = mixing_pallas.phase_matrices(phase, topology, n, step=step,
                                         n_pods=n_pods)
-
-    if phase == "global":
-        def body(xb, *arrs):
-            q = build_q(arrs)
-            if comm_dtype is not None:
-                q = q.astype(comm_dtype).astype(jnp.float32)
-            qbar = jax.lax.psum(jnp.sum(q, axis=0, keepdims=True), names) / n
-            return xb + (qbar - q)
-
-        fn = shard_map(body, mesh=mesh, in_specs=(xspec,) + wire_specs,
-                       out_specs=xspec, check_rep=False)
-        return unflatten(fn(xf, *wire_arrs)), new_ef
-
     offsets, Mstack, dstack = _shard_blocks(M, d, n, k)
     wstack = (1.0 - dstack).astype(np.float32)
     perms = {q: tuple(((r + q) % k, r) for r in range(k))
@@ -987,7 +1192,213 @@ def _communicate_sharded_compressed(params: PyTree, *, compressor, ef_state,
     fn = shard_map(body, mesh=mesh, in_specs=in_specs, out_specs=xspec,
                    check_rep=False)
     out = fn(xf, jnp.asarray(Mstack), jnp.asarray(wstack), *wire_arrs)
-    return unflatten(out), new_ef
+    return unflatten(out)
+
+
+# ---------------------------------------------------------------------------
+# Async overlap: double-buffered gossip rounds (DESIGN.md §2.6)
+# ---------------------------------------------------------------------------
+def start_round(params: PyTree, spec: CommSpec, *,
+                ef_state: Optional[PyTree] = None, seed=0):
+    """Open one overlapped gossip round: capture the double-buffered wire
+    payload of ``params`` that :func:`finish_round` will exchange *during
+    the next step's compute* (DESIGN.md §2.6).
+
+    Returns ``(round_state, new_ef_state)``.  ``round_state`` is a
+    jit-carryable pytree (thread it through the step function / scan
+    carry):
+
+    * dense modes (no lossy gossip compressor) — ``{"q": buffer}`` where
+      the buffer is ``params`` cast to ``spec.comm_dtype`` when set (the
+      cast is the wire cast, applied once at capture: it halves both the
+      buffer bytes held across the step and the ppermute bytes, and both
+      occurrences of the buffer in the compensated apply use the same
+      cast value, so the node average survives exactly);
+    * lossy sharded mode — ``{"wire": [...]}`` holding the packed
+      codes/scales wire arrays of each leaf (the EF update happens here,
+      against the payload actually transmitted);
+    * lossy stacked modes — ``{"q": estimate}`` holding the dense
+      decompressed estimate (the stacked paths never materialize wire
+      bytes; EF updates here too).
+
+    The round is *issued* logically at capture: the mixing matrix
+    :func:`finish_round` applies must be the one of the issuing step
+    (pass the capture step's ``gossip_shift_step`` as ``step=``).
+    """
+    n = spec.n_nodes
+    if n == 1 or not spec.lossy:
+        buf = params
+        if spec.comm_dtype is not None and n > 1:
+            buf = jax.tree.map(lambda p: p.astype(spec.comm_dtype), params)
+        return {"q": buf}, ef_state
+    if spec.uses_sharded():
+        names = node_axis_names(spec.mesh, spec.node_axis)
+        mnames, km = _model_names_count(spec.mesh, spec.model_axis, names)
+        kmq = km if (km > 1 and spec.compressor.name in ("int8", "fp8")) \
+            else 1
+        wires, new_ef, _ = _sharded_wire_build(
+            params, compressor=spec.compressor, ef_state=ef_state,
+            seed=seed, n=n, kmq=kmq)
+        return {"wire": [{"payload": tuple(w.payload),
+                          "aux": tuple(w.aux)} for w in wires]}, new_ef
+    from repro import compress as compress_mod
+    q, new_ef = compress_mod.apply_tree(spec.compressor, params, ef_state,
+                                        seed)
+    return {"q": q}, new_ef
+
+
+def finish_round(params: PyTree, round_state, spec: CommSpec, *,
+                 step: int = 0, block_d: int = 2048,
+                 interpret: Optional[bool] = None) -> PyTree:
+    """Close the overlapped gossip round opened by :func:`start_round`:
+    exchange the buffered payload ``b`` and mix it on arrival into the
+    current iterate as the self-compensated correction
+
+        ``x ← params + (M·b − (1 − diag W) ⊙ b)``  (≡ ``params + (W−I)·b``)
+
+    which preserves the node average exactly for *any* buffer — in
+    particular the one-step-stale one, giving the reference recursion
+    ``x_{t+1} = (x_t − γ g_t) + (W − I)(x_{t−1} − γ g_{t−1})``
+    (DESIGN.md §2.6).  ``step`` must be the shift step of the *issuing*
+    step (the one that called ``start_round``).  Only gossip rounds
+    overlap; global/pod-averaging phases flush via
+    :func:`overlap_flush`.
+    """
+    if spec.n_nodes == 1:
+        return params
+    if "wire" in round_state:
+        return _overlap_finish_sharded_wire(params, round_state, spec,
+                                            step=step, block_d=block_d,
+                                            interpret=interpret)
+    q = round_state["q"]
+    if spec.uses_sharded():
+        return _overlap_finish_sharded_dense(params, q, spec, step=step,
+                                             block_d=block_d,
+                                             interpret=interpret)
+    if spec.backend == "pallas":
+        from repro.kernels import mixing_pallas
+        w, M = compensated_round_factors("gossip", spec.topology,
+                                         spec.n_nodes, step, spec.n_pods)
+        xf, unflatten = mixing_pallas.flatten_nodes(params)
+        qf = mixing_pallas.flatten_nodes(q)[0]
+        out = mixing_pallas.shard_comp_mix_block(
+            xf, qf, qf, jnp.asarray(w), jnp.asarray(M), block_d=block_d,
+            interpret=interpret)
+        return unflatten(out)
+    return _compressed_round_reference(params, q, "gossip", spec.topology,
+                                       spec.n_nodes, step, spec.n_pods)
+
+
+def overlap_flush(params: PyTree, spec: CommSpec, *, phase: str,
+                  step: int = 0, axis: int = 0,
+                  ef_state: Optional[PyTree] = None, seed=0):
+    """Synchronous round + buffer re-prime at a period boundary.
+
+    Global/pod-averaging phases do not overlap — their collective must
+    see the *current* iterate to restore the exact (pod) average, and the
+    PGA period boundary is the natural pipeline flush (DESIGN.md §2.6).
+    Runs the ordinary synchronous round for ``phase``, then re-opens the
+    double buffer from the averaged iterate so the next gossip step
+    overlaps against post-flush state.  Returns
+    ``(mixed, round_state, new_ef_state)``.
+
+    Note the EF state advances twice here when a lossy gossip compressor
+    is active — once inside the collective round, once in the re-prime —
+    matching the two payloads actually produced.
+    """
+    out = _communicate_impl(params, spec, phase=phase, step=step, axis=axis,
+                            ef_state=ef_state, seed=seed)
+    if spec.compressor is not None or spec.global_compressor is not None:
+        mixed, ef2 = out
+    else:
+        mixed, ef2 = out, ef_state
+    buf, ef3 = start_round(mixed, spec, ef_state=ef2, seed=seed)
+    return mixed, buf, ef3
+
+
+def _overlap_finish_sharded_dense(params: PyTree, q: PyTree,
+                                  spec: CommSpec, *, step: int,
+                                  block_d: int,
+                                  interpret: Optional[bool]) -> PyTree:
+    """Sharded finish for the dense (uncompressed) buffer: ppermute the
+    buffered row-blocks over the round's halo offsets and apply the
+    compensated per-shard kernel.  The buffer is already wire-cast
+    (``start_round``), so the f32 re-pack is an exact upcast and the
+    ppermute payload is re-cast to the wire dtype — the bytes crossing
+    the ICI match the synchronous path."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    from repro.kernels import mixing_pallas
+
+    n, mesh = spec.n_nodes, spec.mesh
+    names = node_axis_names(mesh, spec.node_axis)
+    if not names:
+        raise ValueError(f"mixing.finish_round: mesh {dict(mesh.shape)} "
+                         f"has no axis for node_axis={spec.node_axis!r}")
+    k = node_shard_count(mesh, spec.node_axis)
+    if n % k:
+        raise ValueError(f"mixing.finish_round: n_nodes={n} not divisible "
+                         f"by the {k} node-axis shards of mesh axes {names}")
+    mnames, km = _model_names_count(mesh, spec.model_axis, names)
+
+    xf, unflatten = mixing_pallas.flatten_nodes_sharded(params, km)
+    qf = mixing_pallas.flatten_nodes_sharded(q, km)[0]
+    xspec = P(names, mnames) if mnames else P(names)
+    d, M = mixing_pallas.phase_matrices("gossip", spec.topology, n,
+                                        step=step, n_pods=spec.n_pods)
+    offsets, Mstack, dstack = _shard_blocks(M, d, n, k)
+    wstack = (1.0 - dstack).astype(np.float32)
+    perms = {s: tuple(((r + s) % k, r) for r in range(k))
+             for s in offsets if s}
+    wire = spec.comm_dtype
+
+    def body(xb, qb, Mr, wr):
+        send = qb.astype(wire) if wire is not None else qb
+        parts = [send if s == 0
+                 else jax.lax.ppermute(send, names, perms[s])
+                 for s in offsets]
+        qs = jnp.concatenate(parts, axis=0).astype(jnp.float32)
+        return mixing_pallas.shard_comp_mix_block(
+            xb, qb, qs, wr[0], Mr[0], block_d=block_d, interpret=interpret)
+
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(xspec, xspec, P(names), P(names)),
+                   out_specs=xspec, check_rep=False)
+    return unflatten(fn(xf, qf, jnp.asarray(Mstack), jnp.asarray(wstack)))
+
+
+def _overlap_finish_sharded_wire(params: PyTree, round_state,
+                                 spec: CommSpec, *, step: int,
+                                 block_d: int,
+                                 interpret: Optional[bool]) -> PyTree:
+    """Sharded finish for the lossy buffer: rebuild the LeafWires held in
+    ``round_state`` and run the compensated gossip exchange on them — the
+    ppermute moves the buffered codes/scales themselves."""
+    from repro import compress as compress_mod
+
+    n, mesh = spec.n_nodes, spec.mesh
+    names = node_axis_names(mesh, spec.node_axis)
+    if not names:
+        raise ValueError(f"mixing.finish_round: mesh {dict(mesh.shape)} "
+                         f"has no axis for node_axis={spec.node_axis!r}")
+    k = node_shard_count(mesh, spec.node_axis)
+    if n % k:
+        raise ValueError(f"mixing.finish_round: n_nodes={n} not divisible "
+                         f"by the {k} node-axis shards of mesh axes {names}")
+    mnames, km = _model_names_count(mesh, spec.model_axis, names)
+    kmq = km if (km > 1 and spec.compressor.name in ("int8", "fp8")) else 1
+    mn = mnames if kmq > 1 else ()
+    sizes = [int(np.prod(l.shape[1:], dtype=np.int64))
+             for l in jax.tree.leaves(params)]
+    chunks = [-(-s // kmq) for s in sizes]
+    wires = [compress_mod.LeafWire(payload=tuple(w["payload"]),
+                                   aux=tuple(w["aux"]))
+             for w in round_state["wire"]]
+    return _sharded_compensated_gossip(
+        params, wires, compressor=spec.compressor, chunks=chunks,
+        phase="gossip", topology=spec.topology, n_nodes=n, step=step,
+        n_pods=spec.n_pods, mesh=mesh, names=names, k=k, mn=mn, kmq=kmq,
+        block_d=block_d, interpret=interpret)
 
 
 # ---------------------------------------------------------------------------

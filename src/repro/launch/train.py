@@ -56,6 +56,11 @@ def main() -> None:
     ap.add_argument("--error-feedback", action="store_true",
                     help="per-node error-feedback memory: compression "
                          "error is fed back next round instead of dropped")
+    ap.add_argument("--comm-overlap", action="store_true",
+                    help="pipelined gossip (DESIGN.md §2.6): the mixing "
+                         "round of step t overlaps the compute of step "
+                         "t+1 via a one-step-stale double buffer; global/"
+                         "PGA rounds stay synchronous")
     ap.add_argument("--push-sum", action="store_true",
                     help="push-sum gossip (DESIGN.md §2.5): column-"
                          "stochastic directed mixing with a per-node weight "
@@ -91,6 +96,7 @@ def main() -> None:
                         comm_compression_k=args.comm_compression_k,
                         comm_global_compression=args.comm_global_compression,
                         comm_error_feedback=args.error_feedback,
+                        comm_overlap=args.comm_overlap,
                         push_sum=args.push_sum),
         optimizer=OptimizerConfig(name=args.optimizer, lr=args.lr,
                                   schedule="warmup_cosine", warmup_steps=10,

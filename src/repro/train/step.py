@@ -14,7 +14,6 @@ from typing import Any, Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.compress import make_compressor
 from repro.configs.base import TrainConfig
 from repro.core import mixing
 from repro.core import topology as topo
@@ -27,6 +26,7 @@ PyTree = Any
 
 def build_train_step(model: Model, tcfg: TrainConfig, n_nodes: int, *,
                      phase: str, shift_step: int = 0,
+                     buf_shift: int = 0,
                      with_consensus: bool = False,
                      unroll: bool = False,
                      mesh: Optional[jax.sharding.Mesh] = None,
@@ -36,6 +36,16 @@ def build_train_step(model: Model, tcfg: TrainConfig, n_nodes: int, *,
 
     ``phase``: "gossip" | "global" | "none" | "slowmo".
     batch leaves carry leading (n_nodes, per_node_batch, …).
+
+    With ``DistConfig.comm_overlap`` the returned step has the 4-arg
+    signature ``step(state, batch, lr, comm_buf) -> (state, metrics,
+    comm_buf)`` (DESIGN.md §2.6): gossip phases *finish* the in-flight
+    round primed one step ago — applying W with ``buf_shift``, the shift
+    recorded when the buffer was primed — against the stale buffer, then
+    *start* the next round from this step's half-step params; global /
+    pod_avg / slowmo phases run synchronously (the period boundary is the
+    natural flush) and re-prime the buffer from their result; phase
+    "none" passes the buffer through untouched.
 
     With a ``mesh`` whose node axis is sharded, the pallas comm backend
     routes through the shard_map-aware path (DESIGN.md §2.1 dispatch
@@ -55,16 +65,20 @@ def build_train_step(model: Model, tcfg: TrainConfig, n_nodes: int, *,
     dist.validate_nodes(n_nodes)
     sharded_comm = mixing.use_sharded_backend(
         dist.comm_backend, mesh, dist.node_axis, dist.comm_shard_mode)
+    # the round-invariant knobs, captured once (DESIGN.md §2.1): every
+    # communicate call below goes through this spec, so a knob added to
+    # CommSpec is forwarded everywhere by construction
+    spec = dist.comm_spec(n_nodes, mesh=mesh)
+    spec_plain = spec.replace(compressor=None, global_compressor=None)
     # wire compressor (DESIGN.md §2.3): built once at step-build time; the
     # identity compressor routes to the exact uncompressed path inside
     # mixing.communicate, so only a *lossy* compressor changes the step
-    compressor = make_compressor(dist.comm_compression,
-                                 k=dist.comm_compression_k)
-    lossy_comm = compressor is not None and compressor.lossy
+    compressor = spec.compressor
+    lossy_comm = spec.lossy
     # compressed collective for the averaging phases (DESIGN.md §2.3
     # "Compressed collectives"): identity routes to the exact psum path
     # inside mixing, so only a lossy choice changes the step
-    global_compressor = make_compressor(dist.comm_global_compression)
+    global_compressor = spec.global_compressor
     lossy_global = global_compressor is not None and global_compressor.lossy
     opt = make_optimizer(tcfg.optimizer, per_node=True)
     # DistConfig.remat/remat_policy -> blocks.make_remat policy string
@@ -124,8 +138,7 @@ def build_train_step(model: Model, tcfg: TrainConfig, n_nodes: int, *,
                 for s in range(period):
                     hops |= set(topo.shift_weights(dist.topology, n_nodes, s))
                 ps_offsets = mixing.push_sum_shard_offsets(n_nodes, k, hops)
-        comm_dtype_ps = (jnp.bfloat16 if dist.comm_dtype == "bfloat16"
-                         else None)
+        comm_dtype_ps = spec.comm_dtype
 
         def freeze_dropped(new: PyTree, old: PyTree,
                            active: jax.Array) -> PyTree:
@@ -206,6 +219,73 @@ def build_train_step(model: Model, tcfg: TrainConfig, n_nodes: int, *,
 
         return push_step
 
+    if dist.comm_overlap:
+        def overlap_step(state: TrainState, batch: PyTree, lr: jax.Array,
+                         comm_buf
+                         ) -> Tuple[TrainState, Dict[str, jax.Array], Any]:
+            if tcfg.microbatches > 1:
+                grads, metrics = accum_grad_fn(state.params, batch)
+            else:
+                grads, metrics = grad_fn(state.params, batch)
+            if tcfg.optimizer.grad_clip:
+                grads = clip_by_global_norm(grads, tcfg.optimizer.grad_clip)
+            params_half, opt_state = opt.update(grads, state.opt_state,
+                                                state.params, lr)
+            slow_params, slow_u = state.slow_params, state.slow_u
+            new_ef = state.ef_state
+            new_buf = comm_buf
+            if phase == "none" or n_nodes == 1:
+                new_params = params_half
+            elif phase == "gossip":
+                # finish the round primed one step ago (its shift, not
+                # this step's), then immediately issue the next one from
+                # this half-step — x_{t+1} = y_t + (W(buf_shift) - I)·y_{t-1}
+                new_params = mixing.finish_round(params_half, comm_buf,
+                                                 spec, step=buf_shift)
+                new_buf, new_ef = mixing.start_round(
+                    params_half, spec, ef_state=state.ef_state,
+                    seed=state.step)
+            elif phase == "slowmo":
+                xbar = jax.tree.map(
+                    lambda p: jnp.mean(p.astype(jnp.float32), 0),
+                    params_half)
+                beta, alpha = dist.slowmo_beta, dist.slowmo_lr
+                slow_u = jax.tree.map(
+                    lambda u, s, xb: beta * u.astype(jnp.float32)
+                    + (s.astype(jnp.float32) - xb) / lr,
+                    state.slow_u, state.slow_params, xbar)
+                slow_params = jax.tree.map(
+                    lambda s, u: (s.astype(jnp.float32) - alpha * lr * u
+                                  ).astype(s.dtype),
+                    state.slow_params, slow_u)
+                new_params = jax.tree.map(
+                    lambda s, p: jnp.broadcast_to(s[None],
+                                                  p.shape).astype(p.dtype),
+                    slow_params, params_half)
+                new_buf, new_ef = mixing.start_round(
+                    new_params, spec, ef_state=state.ef_state,
+                    seed=state.step)
+                # the dense buffer aliases new_params; copy so the jit
+                # outputs (state, comm_buf) never share a buffer — both
+                # are donated back to the next step
+                new_buf = jax.tree.map(jnp.copy, new_buf)
+            else:
+                # global / pod_avg: synchronous flush + re-prime
+                new_params, new_buf, new_ef = mixing.overlap_flush(
+                    params_half, spec, phase=phase, step=shift_step,
+                    ef_state=state.ef_state, seed=state.step)
+                new_buf = jax.tree.map(jnp.copy, new_buf)
+            if with_consensus:
+                metrics = dict(metrics)
+                metrics["consensus"] = consensus_distance(new_params)
+            new_state = TrainState(params=new_params, opt_state=opt_state,
+                                   step=state.step + 1,
+                                   slow_params=slow_params, slow_u=slow_u,
+                                   ef_state=new_ef)
+            return new_state, metrics, new_buf
+
+        return overlap_step
+
     def step(state: TrainState, batch: PyTree, lr: jax.Array
              ) -> Tuple[TrainState, Dict[str, jax.Array]]:
         if tcfg.microbatches > 1:
@@ -235,8 +315,6 @@ def build_train_step(model: Model, tcfg: TrainConfig, n_nodes: int, *,
                 lambda s, p: jnp.broadcast_to(s[None], p.shape).astype(p.dtype),
                 slow_params, params_half)
         else:
-            comm_dtype = (jnp.bfloat16 if dist.comm_dtype == "bfloat16"
-                          else None)
             new_params = None
             lossy_round = (lossy_comm or
                            (lossy_global and phase in ("global", "pod_avg")))
@@ -247,15 +325,8 @@ def build_train_step(model: Model, tcfg: TrainConfig, n_nodes: int, *,
                 # to consensus_distance below — residual fusion does not
                 # compose with compression (DESIGN.md §2.3)
                 new_params, new_ef = mixing.communicate(
-                    params_half, phase=phase, topology=dist.topology,
-                    n_nodes=n_nodes, step=shift_step, axis=0,
-                    comm_dtype=comm_dtype, n_pods=dist.n_pods,
-                    backend=dist.comm_backend, mesh=mesh,
-                    node_axis=dist.node_axis, model_axis=dist.model_axis,
-                    shard_mode=dist.comm_shard_mode,
-                    leaf_threshold=dist.pallas_leaf_threshold,
-                    compressor=compressor, ef_state=state.ef_state,
-                    seed=state.step, global_compressor=global_compressor)
+                    params_half, spec, phase=phase, step=shift_step,
+                    axis=0, ef_state=state.ef_state, seed=state.step)
             elif (dist.comm_backend == "pallas" and with_consensus
                     and n_nodes > 1
                     and phase in ("gossip", "global", "pod_avg")):
@@ -263,28 +334,19 @@ def build_train_step(model: Model, tcfg: TrainConfig, n_nodes: int, *,
                 # the same parameter pass instead of re-reading new_params
                 if sharded_comm:
                     new_params, _xbar, resid = mixing.communicate_sharded(
-                        params_half, phase=phase, topology=dist.topology,
-                        n_nodes=n_nodes, step=shift_step,
-                        comm_dtype=comm_dtype, n_pods=dist.n_pods,
-                        mesh=mesh, node_axis=dist.node_axis,
-                        model_axis=dist.model_axis, with_residual=True)
+                        params_half, spec_plain, phase=phase,
+                        step=shift_step, with_residual=True)
                 else:
                     from repro.kernels import mixing_pallas
                     new_params, _xbar, resid = mixing_pallas.mix_residual(
                         params_half, phase=phase, topology=dist.topology,
                         n_nodes=n_nodes, step=shift_step,
-                        comm_dtype=comm_dtype, n_pods=dist.n_pods,
+                        comm_dtype=spec.comm_dtype, n_pods=dist.n_pods,
                         leaf_threshold=dist.pallas_leaf_threshold)
                 fused_consensus = resid / n_nodes
             if new_params is None:
                 new_params = mixing.communicate(
-                    params_half, phase=phase, topology=dist.topology,
-                    n_nodes=n_nodes, step=shift_step, axis=0,
-                    comm_dtype=comm_dtype, n_pods=dist.n_pods,
-                    backend=dist.comm_backend, mesh=mesh,
-                    node_axis=dist.node_axis, model_axis=dist.model_axis,
-                    shard_mode=dist.comm_shard_mode,
-                    leaf_threshold=dist.pallas_leaf_threshold)
+                    params_half, spec_plain, phase=phase, step=shift_step)
         if with_consensus:
             metrics = dict(metrics)
             metrics["consensus"] = (fused_consensus

@@ -57,6 +57,13 @@ class Trainer:
                                   global_batch=tcfg.global_batch,
                                   seq_len=tcfg.seq_len)
         self._compiled: Dict[Any, Any] = {}
+        # async overlap (DESIGN.md §2.6): the in-flight round's double
+        # buffer and the shift it was primed with — host-side trajectory
+        # state, primed lazily at run() start (resume == flush: a fresh
+        # process re-primes from the checkpointed params)
+        self._overlap = tcfg.dist.comm_overlap
+        self._comm_buf = None
+        self._buf_shift = 0
         self.history: List[Dict[str, float]] = []
         self._sched_live = False   # True once this process advanced the
                                    # schedule (guards the resume reload)
@@ -86,16 +93,21 @@ class Trainer:
                           ef_state=ef_state, push_weight=push_weight)
 
     # ------------------------------------------------------------------
-    def _get_step_fn(self, phase: str, shift: int):
-        key = (phase, shift)
+    def _get_step_fn(self, phase: str, shift: int, buf_shift: int = 0):
+        # buf_shift keys the compile cache only for overlapped gossip
+        # steps, where it is baked in statically (the W of the round
+        # being *finished* — DESIGN.md §2.6); 0 everywhere else
+        key = (phase, shift, buf_shift)
         if key not in self._compiled:
             hops = (self.fault_schedule.hop_superset(self.tcfg.dist.topology)
                     if self.fault_schedule is not None else None)
             fn = build_train_step(self.model, self.tcfg, self.n_nodes,
                                   phase=phase, shift_step=shift,
+                                  buf_shift=buf_shift,
                                   with_consensus=self.with_consensus,
                                   mesh=self.mesh, fault_hops=hops)
-            self._compiled[key] = jax.jit(fn, donate_argnums=(0,))
+            donate = (0, 3) if self._overlap else (0,)
+            self._compiled[key] = jax.jit(fn, donate_argnums=donate)
         return self._compiled[key]
 
     # ------------------------------------------------------------------
@@ -142,6 +154,25 @@ class Trainer:
                 and self.fault_schedule is not None:
             self.load_faults(step=start)
         self._faults_live = True
+        if self._overlap and self.n_nodes > 1 and self._comm_buf is None:
+            # prime the double buffer from the current params (warm-up
+            # round mixes x_0 with itself; on resume this is exactly the
+            # flush semantics — the stale buffer is not checkpointed)
+            from repro.core import mixing
+            spec = tcfg.dist.comm_spec(self.n_nodes, mesh=self.mesh)
+            buf, ef = mixing.start_round(
+                state.params, spec, ef_state=state.ef_state, seed=start)
+            # the dense buffer aliases state.params — copy so donating
+            # both state and buffer never hands XLA the same buffer twice
+            self._comm_buf = jax.tree.map(jnp.copy, buf)
+            if ef is not state.ef_state:
+                state = TrainState(
+                    params=state.params, opt_state=state.opt_state,
+                    step=state.step, slow_params=state.slow_params,
+                    slow_u=state.slow_u, ef_state=ef,
+                    push_weight=state.push_weight)
+            self._buf_shift = self.schedule.gossip_shift_step(
+                start, self.period)
         for k in range(start, start + steps):
             batch = jax.tree.map(jnp.asarray, self.stream.get_batch(k))
             # advance() commits stateful schedules (AGA's period counter);
@@ -150,11 +181,21 @@ class Trainer:
                      else "none")
             shift = self.schedule.gossip_shift_step(k, self.period)
             lr = jnp.asarray(self.lr_fn(k), jnp.float32)
-            step_fn = self._get_step_fn(phase, shift)
-            if tcfg.dist.push_sum:
+            if self._overlap:
+                bs = self._buf_shift if phase == "gossip" else 0
+                step_fn = self._get_step_fn(phase, shift, buf_shift=bs)
+                state, metrics, self._comm_buf = step_fn(
+                    state, batch, lr, self._comm_buf)
+                if phase != "none":
+                    # the buffer now in flight was primed at this step:
+                    # record its shift for the finish_round that applies it
+                    self._buf_shift = shift
+            elif tcfg.dist.push_sum:
+                step_fn = self._get_step_fn(phase, shift)
                 W, active = self._push_round(phase, k, shift)
                 state, metrics = step_fn(state, batch, lr, W, active)
             else:
+                step_fn = self._get_step_fn(phase, shift)
                 state, metrics = step_fn(state, batch, lr)
             loss = float(metrics["loss"])
             self.schedule.observe_loss(k, loss)

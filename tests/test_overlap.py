@@ -1,0 +1,344 @@
+"""Async overlap (DESIGN.md §2.6) + the CommSpec round API (ISSUE 7).
+
+Parity bar: the pipelined ``start_round``/``finish_round`` split must
+reproduce the one-step-stale reference recursion
+
+    x_{k+1} = y_k + (W − I)·y_{k−1},   y_k = x_k − γ g_k
+
+*bit-for-bit* on the stacked backends (everything runs under jit, where
+reference and pallas lower to the same fused arithmetic), and on the
+sharded ppermute path for single-shift topologies; multi-neighbor sharded
+rounds reduce neighbor terms in offset-block order, so they carry the
+same ≤1-ulp association caveat as the synchronous sharded path and are
+checked at atol.  Global/PGA rounds flush synchronously (exact global
+average), the EF-compensated round preserves the node average against the
+*stale* buffer, and one-step staleness only modestly lengthens the
+logistic transient (paper's PGA analysis: staleness ~ larger effective H).
+"""
+import functools
+import os
+import subprocess
+import sys
+import textwrap
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.compress import make_compressor
+from repro.configs.base import DistConfig
+from repro.core import mixing, topology as topo
+from repro.core.algorithms import Decentralized, simulate
+from repro.core.schedule import make_schedule
+from repro.data import make_logistic_problem
+
+PROBLEM = make_logistic_problem(n=8, M=200, d=10, iid=False, seed=0)
+
+
+# ---------------------------------------------------------------------------
+# Tentpole semantics: simulate(overlap=True) == the stale recursion, bitwise
+# ---------------------------------------------------------------------------
+def _manual_stale_trajectory(problem, *, topology, n, steps, H, lr,
+                             seed=0, eval_every=5):
+    """Hand-rolled unpipelined oracle for gossip_pga: the buffered round
+    of step k applies the compensated factors of the buffer's *priming*
+    shift to y_{k-1}; global steps average synchronously and re-prime."""
+    grad_fn = problem.grad_fn(batch=16)
+    loss_fn = jax.jit(problem.loss_fn())
+    sched = make_schedule(DistConfig(algorithm="gossip_pga",
+                                     topology=topology, H=H))
+    period = topo.schedule_period(topology, n)
+    x = jnp.broadcast_to(jnp.zeros(problem.d), (n, problem.d))
+
+    @functools.partial(jax.jit, static_argnames=("bshift",))
+    def gossip_step(x, buf, key, k, gamma, bshift):
+        g = grad_fn(x, key, k)
+        y = x - gamma * g
+        w, M = mixing.compensated_round_factors("gossip", topology, n,
+                                                bshift, 1)
+        x2 = y + (jnp.asarray(M) @ buf - jnp.asarray(w) * buf)
+        return x2, y
+
+    @jax.jit
+    def global_step(x, key, k, gamma):
+        g = grad_fn(x, key, k)
+        y = x - gamma * g
+        return jnp.broadcast_to(jnp.mean(y, axis=0), y.shape)
+
+    key = jax.random.PRNGKey(seed)
+    buf, bshift = x, sched.gossip_shift_step(0, period)
+    losses, consensus = [], []
+    for k in range(steps):
+        key, sub = jax.random.split(key)
+        gamma = float(lr(k)) if callable(lr) else float(lr)
+        phase = sched.advance(k)
+        shift = sched.gossip_shift_step(k, period)
+        if phase == "gossip":
+            x, buf = gossip_step(x, buf, sub, k, gamma, bshift=bshift)
+        else:
+            x = global_step(x, sub, k, gamma)
+            buf = x
+        bshift = shift
+        if k % eval_every == 0 or k == steps - 1:
+            xbar = jnp.mean(x, axis=0)
+            losses.append(float(loss_fn(xbar)))
+            consensus.append(float(jnp.mean(jnp.sum((x - xbar) ** 2, -1))))
+    return np.array(losses), np.array(consensus)
+
+
+@pytest.mark.parametrize("topology", ["ring", "one_peer_exp"])
+def test_overlap_simulate_matches_stale_recursion_bitwise(topology):
+    steps, H = 25, 6
+    out = simulate(algorithm="gossip_pga", grad_fn=PROBLEM.grad_fn(batch=16),
+                   loss_fn=PROBLEM.loss_fn(), x0=jnp.zeros(PROBLEM.d),
+                   n=PROBLEM.n, steps=steps, lr=0.1, topology=topology,
+                   H=H, eval_every=5, overlap=True)
+    want_loss, want_cons = _manual_stale_trajectory(
+        PROBLEM, topology=topology, n=PROBLEM.n, steps=steps, H=H, lr=0.1)
+    np.testing.assert_array_equal(out["loss"], want_loss)
+    np.testing.assert_array_equal(out["consensus"], want_cons)
+
+
+@pytest.mark.parametrize("topology", ["ring", "one_peer_exp", "grid"])
+def test_overlap_reference_pallas_bitwise(topology):
+    """Gossip-only pipelined trajectories are bit-identical across the
+    stacked backends: under jit both lower to the same compensated-round
+    arithmetic (global steps are excluded only because the *synchronous*
+    global collective was already non-bitwise across backends)."""
+    outs = {}
+    for backend in ("reference", "pallas"):
+        outs[backend] = simulate(
+            algorithm="gossip", grad_fn=PROBLEM.grad_fn(batch=16),
+            loss_fn=PROBLEM.loss_fn(), x0=jnp.zeros(PROBLEM.d),
+            n=PROBLEM.n, steps=20, lr=0.1, topology=topology,
+            eval_every=4, overlap=True, backend=backend)
+    np.testing.assert_array_equal(outs["reference"]["loss"],
+                                  outs["pallas"]["loss"])
+    np.testing.assert_array_equal(outs["reference"]["consensus"],
+                                  outs["pallas"]["consensus"])
+
+
+# ---------------------------------------------------------------------------
+# Sharded backend: start/finish over the ppermute halo (8 forced devices)
+# ---------------------------------------------------------------------------
+_SHARDED_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.core import mixing
+    from repro.compress import make_compressor, init_ef_state
+
+    mesh = jax.make_mesh((8,), ("data",))
+    n, d = 8, 96
+    rng = np.random.default_rng(0)
+    y = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+
+    def finish(spec, step=1):
+        rs, _ = mixing.start_round(b, spec)
+        return mixing.finish_round(y, rs, spec, step=step)
+
+    def jit_finish(spec, step=1):
+        rs, _ = mixing.start_round(b, spec)
+        return jax.jit(lambda yy, bb: mixing.finish_round(
+            yy, bb, spec, step=step))(y, rs)
+
+    # dense: single-shift topology is bitwise, multi-neighbor reduces
+    # neighbor terms in offset-block order (<= 1 ulp association)
+    for t, tol in (("one_peer_exp", 0.0), ("ring", 1e-6)):
+        ref = mixing.CommSpec(topology=t, n_nodes=n)
+        sh = mixing.CommSpec(topology=t, n_nodes=n, backend="pallas",
+                             mesh=mesh, shard_mode="sharded")
+        want = np.asarray(jit_finish(ref))
+        got = np.asarray(finish(sh))
+        if tol == 0.0:
+            np.testing.assert_array_equal(got, want)
+        else:
+            np.testing.assert_allclose(got, want, atol=tol)
+
+    # bf16 wire: both sides quantize the buffered payload identically
+    ref16 = mixing.CommSpec(topology="ring", n_nodes=n,
+                            comm_dtype=jnp.bfloat16)
+    sh16 = mixing.CommSpec(topology="ring", n_nodes=n, backend="pallas",
+                           mesh=mesh, shard_mode="sharded",
+                           comm_dtype=jnp.bfloat16)
+    np.testing.assert_allclose(np.asarray(finish(sh16)),
+                               np.asarray(jit_finish(ref16)), atol=1e-5)
+
+    # int8 wire + EF: the packed codes ride the double buffer; the
+    # compensated finish preserves the node average for any payload,
+    # and the EF update matches the stacked path
+    comp = make_compressor("int8")
+    ef0 = init_ef_state(b)
+    for t in ("one_peer_exp", "ring"):
+        refc = mixing.CommSpec(topology=t, n_nodes=n, compressor=comp)
+        shc = mixing.CommSpec(topology=t, n_nodes=n, backend="pallas",
+                              mesh=mesh, shard_mode="sharded",
+                              compressor=comp)
+        rs_r, ef_r = mixing.start_round(b, refc, ef_state=ef0, seed=3)
+        rs_s, ef_s = mixing.start_round(b, shc, ef_state=ef0, seed=3)
+        for lr_, ls_ in zip(jax.tree.leaves(ef_r), jax.tree.leaves(ef_s)):
+            np.testing.assert_allclose(np.asarray(lr_), np.asarray(ls_),
+                                       atol=1e-7)
+        got = np.asarray(mixing.finish_round(y, rs_s, shc, step=1))
+        want = np.asarray(jax.jit(lambda yy: mixing.finish_round(
+            yy, rs_r, refc, step=1))(y))
+        np.testing.assert_allclose(got, want, atol=1e-5)
+        np.testing.assert_allclose(got.mean(0), np.asarray(y).mean(0),
+                                   atol=1e-5)
+    print("OVERLAP_SHARDED_OK")
+""")
+
+
+def test_sharded_overlap_matches_reference():
+    """start/finish over the shard_map ppermute path (subprocess so the
+    forced 8-device host count never leaks into this session)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         env.get("PYTHONPATH", "")])
+    out = subprocess.run([sys.executable, "-c", _SHARDED_SCRIPT],
+                         capture_output=True, text=True, env=env,
+                         timeout=600)
+    assert "OVERLAP_SHARDED_OK" in out.stdout, out.stderr[-2000:]
+
+
+# ---------------------------------------------------------------------------
+# Flush, EF average preservation, staleness semantics
+# ---------------------------------------------------------------------------
+def test_pga_flush_restores_exact_global_average():
+    n, d = 8, 33
+    y = jax.random.normal(jax.random.PRNGKey(0), (n, d))
+    spec = mixing.CommSpec(topology="ring", n_nodes=n)
+    mixed, buf, ef = mixing.overlap_flush(y, spec, phase="global")
+    want = np.broadcast_to(np.asarray(jnp.mean(y, axis=0)), (n, d))
+    np.testing.assert_array_equal(np.asarray(mixed), want)
+    # the re-primed buffer is the flushed iterate itself
+    np.testing.assert_array_equal(np.asarray(buf["q"]), np.asarray(mixed))
+    assert ef is None
+
+
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+def test_ef_compressed_overlap_preserves_node_average(backend):
+    """The self-compensated finish ``y + (M·q − w⊙q)`` preserves the node
+    average for ANY buffered payload — including a stale int8+EF one."""
+    n, d = 8, 50
+    y = jax.random.normal(jax.random.PRNGKey(1), (n, d))
+    b = jax.random.normal(jax.random.PRNGKey(2), (n, d))
+    from repro.compress import init_ef_state
+    spec = mixing.CommSpec(topology="ring", n_nodes=n, backend=backend,
+                           compressor=make_compressor("int8"))
+    rs, ef = mixing.start_round(b, spec, ef_state=init_ef_state(b), seed=5)
+    out = mixing.finish_round(y, rs, spec, step=1)
+    np.testing.assert_allclose(np.asarray(jnp.mean(out, 0)),
+                               np.asarray(jnp.mean(y, 0)), atol=1e-5)
+    # EF memory advanced against the buffered (stale) payload
+    assert float(jnp.sum(jnp.abs(jax.tree.leaves(ef)[0]))) > 0.0
+
+
+def test_phase_none_leaves_buffer_in_flight():
+    """'none' steps neither finish nor re-prime: the stale buffer stays
+    exactly as primed (simulate's disconnected-local steps rely on it)."""
+    n, d = 4, 12
+    x = jax.random.normal(jax.random.PRNGKey(3), (n, d))
+    spec = mixing.CommSpec(topology="ring", n_nodes=n)
+    buf, _ = mixing.start_round(x, spec)
+    out = simulate(algorithm="local", grad_fn=PROBLEM.grad_fn(batch=16),
+                   loss_fn=PROBLEM.loss_fn(), x0=jnp.zeros(PROBLEM.d),
+                   n=PROBLEM.n, steps=12, lr=0.1, H=6, eval_every=3,
+                   overlap=True)
+    assert np.all(np.isfinite(out["loss"]))
+
+
+def test_overlap_transient_bounded_vs_sync():
+    """One-step staleness behaves like a modestly larger effective H
+    (paper's PGA bound): the pipelined transient must stay within a
+    small factor of the synchronous one and reach the same loss scale."""
+    kw = dict(algorithm="gossip_pga", grad_fn=PROBLEM.grad_fn(batch=16),
+              loss_fn=PROBLEM.loss_fn(), x0=jnp.zeros(PROBLEM.d),
+              n=PROBLEM.n, steps=300, lr=0.1, topology="ring", H=8,
+              eval_every=10)
+    sync = simulate(**kw)
+    over = simulate(**kw, overlap=True)
+    f_end = min(sync["loss"].min(), over["loss"].min())
+    sub_sync = np.maximum(sync["loss"] - f_end, 1e-12)
+    sub_over = np.maximum(over["loss"] - f_end, 1e-12)
+    assert over["loss"][-1] <= sync["loss"][-1] + 0.02
+    assert np.trapezoid(sub_over) <= 2.0 * np.trapezoid(sub_sync)
+
+
+def test_push_sum_overlap_rejected():
+    with pytest.raises(ValueError, match="comm_overlap"):
+        DistConfig(push_sum=True, comm_overlap=True,
+                   topology="directed_ring").validate()
+
+
+# ---------------------------------------------------------------------------
+# CommSpec API: shim deprecation, spec+legacy mixing, forwarding regression
+# ---------------------------------------------------------------------------
+def test_legacy_kwarg_form_deprecated_but_equivalent():
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 16))
+    with pytest.warns(DeprecationWarning, match="CommSpec"):
+        legacy = mixing.communicate(x, phase="gossip", topology="ring",
+                                    n_nodes=4)
+    spec = mixing.CommSpec(topology="ring", n_nodes=4)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")   # spec form must be warning-free
+        primary = mixing.communicate(x, spec, phase="gossip")
+    np.testing.assert_array_equal(np.asarray(legacy), np.asarray(primary))
+
+
+def test_spec_plus_legacy_kwarg_is_an_error():
+    x = jnp.zeros((4, 8))
+    spec = mixing.CommSpec(topology="ring", n_nodes=4)
+    with pytest.raises(TypeError, match="CommSpec"):
+        mixing.communicate(x, spec, phase="gossip", topology="ring")
+    with pytest.raises(TypeError, match="CommSpec"):
+        mixing.communicate(x, spec, phase="gossip", backend="pallas")
+
+
+def test_communicate_without_topology_raises():
+    with pytest.raises(TypeError):
+        mixing.communicate(jnp.zeros((4, 8)), phase="gossip")
+
+
+def test_commspec_validate_rejects_bad_knobs():
+    with pytest.raises(ValueError):
+        mixing.CommSpec(topology="ring", n_nodes=4,
+                        backend="cuda").validate()
+    with pytest.raises(ValueError):
+        mixing.CommSpec(topology="ring", n_nodes=4,
+                        shard_mode="maybe").validate()
+
+
+def test_dist_config_comm_spec_carries_every_knob():
+    dist = DistConfig(topology="grid", n_pods=2, comm_backend="pallas",
+                      comm_dtype="bfloat16", comm_compression="int8",
+                      comm_global_compression="fp8",
+                      node_axis="nodes", model_axis="mdl",
+                      comm_shard_mode="stacked",
+                      pallas_leaf_threshold=1234)
+    spec = dist.comm_spec(16)
+    assert (spec.topology, spec.n_nodes, spec.n_pods) == ("grid", 16, 2)
+    assert spec.backend == "pallas" and spec.comm_dtype == jnp.bfloat16
+    assert (spec.node_axis, spec.model_axis) == ("nodes", "mdl")
+    assert spec.shard_mode == "stacked" and spec.leaf_threshold == 1234
+    assert spec.compressor.name == "int8" and spec.lossy
+    assert spec.global_compressor.name == "fp8"
+
+
+def test_decentralized_forwards_sharded_routing():
+    """Regression (ISSUE 7): Decentralized used to hand-forward a subset
+    of the comm knobs, silently dropping mesh/shard_mode and degrading
+    spec-carried sharded routing to stacked mode.  With the CommSpec
+    migration the forced 'sharded' mode now *fails loudly* when no
+    multi-device mesh reaches the round — the silent fallback is gone."""
+    dist = DistConfig(comm_backend="pallas", comm_shard_mode="sharded")
+    algo = Decentralized(dist, 4)
+    assert algo.spec.shard_mode == "sharded"
+    assert algo.spec.backend == "pallas"
+    x = jnp.zeros((4, 8))
+    with pytest.raises(ValueError, match="more than one device"):
+        algo.communicate(x, "gossip", 0)
