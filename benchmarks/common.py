@@ -1,10 +1,24 @@
-"""Shared benchmark helpers: CSV emission + wall-clock timing."""
+"""Shared benchmark helpers: CSV emission + wall-clock timing.
+
+``time_fn`` delegates to :func:`repro.obs.trace.fenced_time` — the same
+fenced timing loop the telemetry layer uses — so BENCH rows and
+telemetry spans are the same numbers.  Set ``REPRO_BENCH_TRACE=<path>``
+to additionally record every timed call as a span and save a
+Chrome-trace timeline at interpreter exit.
+"""
 from __future__ import annotations
 
-import time
-from typing import Any, Callable, Iterable
+import atexit
+import os
+from typing import Callable, Optional
 
-import jax
+from repro.obs.trace import Tracer, fenced_time
+
+_TRACER: Optional[Tracer] = None
+_trace_path = os.environ.get("REPRO_BENCH_TRACE", "")
+if _trace_path:
+    _TRACER = Tracer()
+    atexit.register(lambda: _TRACER.save(_trace_path))
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> str:
@@ -13,14 +27,8 @@ def emit(name: str, us_per_call: float, derived: str = "") -> str:
     return line
 
 
-def time_fn(fn: Callable, *args, iters: int = 10, warmup: int = 2) -> float:
+def time_fn(fn: Callable, *args, iters: int = 10, warmup: int = 2,
+            name: Optional[str] = None) -> float:
     """Median wall-clock microseconds per call (blocks on jax results)."""
-    for _ in range(warmup):
-        jax.block_until_ready(fn(*args))
-    times = []
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
-        times.append(time.perf_counter() - t0)
-    times.sort()
-    return times[len(times) // 2] * 1e6
+    return fenced_time(fn, *args, iters=iters, warmup=warmup,
+                       name=name, tracer=_TRACER if name else None)

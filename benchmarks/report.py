@@ -27,6 +27,10 @@ FILES = {
 }
 HISTORY = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                        "BENCH_history.jsonl")
+# BENCH_history.jsonl row schema: v1 rows predate the stamp (unstamped),
+# v2 rows carry {"schema": 2}.  trend_table skips-but-warns on rows with
+# a newer schema instead of KeyError-ing on missing fields.
+HISTORY_SCHEMA = 2
 
 
 def _load(path: str) -> List[Dict[str, Any]]:
@@ -140,6 +144,7 @@ def append_history(src: str = "BENCH_mixing.json",
         bench = json.load(f)
     rec = {
         "ts": int(time.time()),
+        "schema": HISTORY_SCHEMA,
         "sha": os.environ.get("GITHUB_SHA", "local")[:12],
         "jax_backend": bench.get("jax_backend"),
         "dim": bench.get("dim"), "nodes": bench.get("nodes"),
@@ -173,10 +178,23 @@ def trend_table(path: str = HISTORY, last: int = 10) -> None:
     if not runs:
         print(f"(no history at {path})")
         return
+    kept = []
+    for run in runs:
+        sch = run.get("schema", 1)   # v1 rows predate the stamp
+        if sch > HISTORY_SCHEMA:
+            print(f"(skipping history row sha={run.get('sha', '?')}: "
+                  f"unknown schema {sch} > {HISTORY_SCHEMA} — written by "
+                  f"a newer tool)", file=sys.stderr)
+            continue
+        kept.append(run)
+    runs = kept
+    if not runs:
+        print(f"(no readable history rows at {path})")
+        return
     names = []
     for run in runs:
-        for row in run["rows"]:
-            if row["name"] not in names:
+        for row in run.get("rows") or []:
+            if "name" in row and "ratio" in row and row["name"] not in names:
                 names.append(row["name"])
     print(f"\n### Perf-gate trend — pallas/reference ratio, last "
           f"{len(runs)} runs (oldest → newest)\n")
@@ -186,7 +204,8 @@ def trend_table(path: str = HISTORY, last: int = 10) -> None:
     for name in names:
         cells, vals = [], []
         for run in runs:
-            hit = [r for r in run["rows"] if r["name"] == name]
+            hit = [r for r in run.get("rows") or []
+                   if r.get("name") == name and "ratio" in r]
             if hit:
                 cells.append(f'{hit[0]["ratio"]:.2f}')
                 vals.append(hit[0]["ratio"])
@@ -205,6 +224,93 @@ def trend_table(path: str = HISTORY, last: int = 10) -> None:
                       if g.get("max_ratio") is not None), None)
         print(f"\nmin gated ratio across runs: best {min(worst):.2f}, "
               f"worst {max(worst):.2f} (gate limit {limit})")
+
+
+def _pct(vals: List[float], q: float) -> float:
+    vals = sorted(vals)
+    return vals[min(int(q * len(vals)), len(vals) - 1)]
+
+
+def telemetry_table(path: str) -> None:
+    """Render a telemetry JSONL stream (``launch/train --telemetry-dir``,
+    ``launch/serve --telemetry-dir``) as markdown: per-phase comm cost
+    (analytic vs measured wire bytes, joined with the executed-round
+    counts), pipeline occupancy, loss/consensus trend, fault events, and
+    serving latency percentiles."""
+    recs = _load(path)
+    if not recs:
+        print(f"(no telemetry at {path})")
+        return
+    kept = []
+    for r in recs:
+        sch = r.get("schema", 1)
+        if sch > 1:
+            print(f"(skipping telemetry record type={r.get('type', '?')}: "
+                  f"unknown schema {sch})", file=sys.stderr)
+            continue
+        kept.append(r)
+    by: Dict[str, List[Dict[str, Any]]] = {}
+    for r in kept:
+        by.setdefault(r.get("type", "?"), []).append(r)
+    steps = by.get("step", [])
+    comm = by.get("comm_round", [])
+    counts = (steps[-1].get("phase_counts") or {}) if steps else {}
+
+    rounds = [r for r in comm if r.get("role") != "occupancy"]
+    if rounds:
+        print("\n### Telemetry — per-round communication\n")
+        print("| phase | role | topology | backend | compression | sends "
+              "| analytic B/round | measured B/round | rounds executed |")
+        print("|---|---|---|---|---|---|---|---|---|")
+        seen = set()
+        for r in rounds:
+            key = (r.get("phase"), r.get("role"), r.get("compression"),
+                   r.get("backend"))
+            if key in seen:
+                continue
+            seen.add(key)
+            ana = r.get("analytic_bytes")
+            print(f'| {r.get("phase")} | {r.get("role")} '
+                  f'| {r.get("topology")} | {r.get("backend")} '
+                  f'| {r.get("compression")} | {r.get("sends")} '
+                  f'| {ana if ana is not None else "-"} '
+                  f'| {r.get("measured_bytes")} '
+                  f'| {counts.get(r.get("phase"), "-")} |')
+
+    occ = [r for r in comm if r.get("role") == "occupancy"]
+    if occ:
+        o = occ[-1]
+        print(f"\npipeline occupancy: **{o.get('occupancy', 0.0):.2f}** "
+              f"(overlap step {o.get('t_step_overlap_us', 0):.0f}us, "
+              f"compute-only {o.get('t_step_compute_us', 0):.0f}us, "
+              f"sync round {o.get('t_round_sync_us', 0):.0f}us)")
+
+    if steps:
+        a, b = steps[0], steps[-1]
+        line = (f"\nloss: {a.get('loss', float('nan')):.4f} @ step "
+                f"{a.get('step')} -> {b.get('loss', float('nan')):.4f} "
+                f"@ step {b.get('step')}")
+        if "consensus" in b:
+            line += f"; final consensus {b['consensus']:.3e}"
+        print(line)
+    faults = by.get("fault", [])
+    if faults:
+        print(f"fault events: " + ", ".join(
+            f"step {f.get('step')} {f.get('kind')} {f.get('nodes')}"
+            for f in faults))
+    ckpts = by.get("ckpt", [])
+    if ckpts:
+        print(f"checkpoints: {len(ckpts)} "
+              f"(steps {[c.get('step') for c in ckpts]})")
+
+    serve = by.get("serve_req", [])
+    if serve:
+        lats = [r["latency_s"] for r in serve if "latency_s" in r]
+        tps = [r.get("tokens_per_s", 0.0) for r in serve]
+        print(f"\n### Telemetry — serving ({len(serve)} requests)\n")
+        print(f"latency p50 {_pct(lats, 0.5) * 1e3:.1f}ms / "
+              f"p99 {_pct(lats, 0.99) * 1e3:.1f}ms; "
+              f"mean tokens/s {sum(tps) / len(tps):.1f}")
 
 
 def main() -> None:
@@ -261,6 +367,9 @@ if __name__ == "__main__":
         append_history(src)
     elif "--trend" in _sys.argv:
         trend_table()
+    elif "--telemetry" in _sys.argv:
+        i = _sys.argv.index("--telemetry")
+        telemetry_table(_sys.argv[i + 1])
     elif "--inject" in _sys.argv:
         inject_into_experiments()
     else:

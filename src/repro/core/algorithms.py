@@ -110,6 +110,7 @@ def simulate(
     push_sum: bool = False,
     fault_schedule=None,
     overlap: bool = False,
+    telemetry=None,
 ) -> Dict[str, np.ndarray]:
     """Run ``algorithm`` on n simulated nodes; returns the trajectory of the
     node-average loss f(x̄^k) and consensus distance ‖x − x̄‖²/n.
@@ -153,7 +154,27 @@ def simulate(
     pipeline flush).  Composes with ``compression``/``error_feedback``
     (EF updates against the payload actually buffered) but not
     ``push_sum``.
+
+    ``telemetry`` (an :class:`repro.obs.Telemetry`) installs the hub as
+    ambient for the run — eval points emit ``step`` records, fault
+    injections emit ``fault`` records, and the mixing-layer comm meters
+    self-report ``comm_round`` records.  Equivalently, call inside an
+    enclosing ``obs.telemetry_scope``.
     """
+    if telemetry is not None:
+        from repro import obs
+        with obs.telemetry_scope(telemetry):
+            return simulate(
+                algorithm=algorithm, grad_fn=grad_fn, loss_fn=loss_fn,
+                x0=x0, n=n, steps=steps, lr=lr, topology=topology, H=H,
+                seed=seed, slowmo_beta=slowmo_beta, slowmo_lr=slowmo_lr,
+                aga_kwargs=aga_kwargs, eval_every=eval_every,
+                backend=backend, compression=compression,
+                compression_k=compression_k,
+                error_feedback=error_feedback,
+                global_compression=global_compression,
+                push_sum=push_sum, fault_schedule=fault_schedule,
+                overlap=overlap, telemetry=None)
     if fault_schedule is not None:
         if not push_sum:
             raise ValueError("simulate: fault_schedule requires "
@@ -266,6 +287,8 @@ def simulate(
     key = jax.random.PRNGKey(seed)
     losses, consensus, its = [], [], []
     period = topo.schedule_period(topology, n)
+    from repro.obs import get_telemetry
+    tel = get_telemetry()   # ambient hub (simulate(telemetry=...) installs)
 
     buf = buf_shift = None
     if overlap:
@@ -285,6 +308,13 @@ def simulate(
         if push_sum:
             if fault_schedule is not None:
                 active = fault_schedule.advance(k)
+                if tel is not None:
+                    if k in fault_schedule.drops:
+                        tel.emit("fault", step=k, kind="drop",
+                                 nodes=list(fault_schedule.drops[k]))
+                    if k in fault_schedule.rejoins:
+                        tel.emit("fault", step=k, kind="rejoin",
+                                 nodes=list(fault_schedule.rejoins[k]))
             else:
                 active = np.ones(n, dtype=bool)
             if phase == "gossip":
@@ -312,6 +342,9 @@ def simulate(
                 consensus.append(
                     float(jnp.mean(jnp.sum((xd - xbar) ** 2, -1))))
                 its.append(k)
+                if tel is not None:
+                    tel.emit("step", step=k, phase=phase, loss=f,
+                             consensus=consensus[-1], mass=mass_hist[-1])
             elif losses:
                 algo.schedule.observe_loss(k, losses[-1])
             continue
@@ -350,6 +383,9 @@ def simulate(
                 float(resid) / n if resid is not None
                 else float(jnp.mean(jnp.sum((x - xbar) ** 2, -1))))
             its.append(k)
+            if tel is not None:
+                tel.emit("step", step=k, phase=phase, loss=f,
+                         consensus=consensus[-1])
         else:
             # AGA still needs a loss signal between evals; reuse last.
             if losses:

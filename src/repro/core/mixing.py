@@ -69,6 +69,7 @@ the exact collective and re-primes the buffer at the period boundary.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 import warnings
@@ -144,6 +145,67 @@ class CommSpec:
         """True when rounds route through the shard_map + ppermute path."""
         return use_sharded_backend(self.backend, self.mesh, self.node_axis,
                                    self.shard_mode)
+
+
+# ---------------------------------------------------------------------------
+# Telemetry hooks (DESIGN.md §2.7): when an ambient obs.Telemetry hub is
+# installed, every round entry point self-reports a `comm_round` record
+# (analytic vs measured wire bytes, phase/shift/backend tags) and wraps
+# itself in a tracer span.  With no hub installed the hooks are a None
+# check — the hot path pays nothing.  Records emitted while *tracing*
+# (inside jit) carry traced=True and appear once per compiled variant;
+# per-executed-round counts come from the trainer's step records.
+# ---------------------------------------------------------------------------
+def _hub():
+    try:
+        from repro import obs
+    except ImportError:                              # pragma: no cover
+        return None
+    return obs.get_telemetry()
+
+
+def _meter(tel, params: PyTree, spec: CommSpec, *, phase: str, step: int,
+           role: str, wires=None) -> None:
+    """Emit one ``comm_round`` record; metering must never break a round,
+    so accounting errors degrade to a warning."""
+    try:
+        from repro.obs import meters as obs_meters
+        sharded = spec.uses_sharded()
+        km = 1
+        if sharded and spec.mesh is not None:
+            names = node_axis_names(spec.mesh, spec.node_axis)
+            km = _model_names_count(spec.mesh, spec.model_axis, names)[1]
+        fields = obs_meters.comm_round_fields(
+            params, phase=phase, topology=spec.topology,
+            n_nodes=spec.n_nodes, step=int(step), n_pods=spec.n_pods,
+            backend=spec.backend, sharded=sharded,
+            comm_dtype=spec.comm_dtype, compressor=spec.compressor,
+            global_compressor=spec.global_compressor, model_shards=km,
+            wires=wires, role=role)
+        tel.emit("comm_round", **fields)
+    except Exception as e:                           # pragma: no cover
+        warnings.warn(f"mixing: comm_round meter failed ({e}); "
+                      f"round unaffected")
+
+
+def meter_round(params: PyTree, spec: CommSpec, *, phase: str,
+                step: int = 0, role: str = "round", wires=None) -> None:
+    """Public metering hook for step functions whose fused kernels bypass
+    :func:`communicate` (e.g. the pallas residual-fused train step): emit
+    the same ``comm_round`` record the metered entry points would.  No-op
+    without an ambient telemetry hub."""
+    tel = _hub()
+    if tel is not None:
+        _meter(tel, params, spec, phase=phase, step=step, role=role,
+               wires=wires)
+
+
+def _fence_maybe(handle, out) -> None:
+    """Fence a span on concrete round outputs; inside a jit trace the
+    outputs are tracers (no device work to wait on) — skip."""
+    leaves = jax.tree.leaves(out)
+    if leaves and not isinstance(leaves[0], jax.core.Tracer):
+        handle.fence(leaves)
 
 
 def _check_backend(backend: str, axis: int,
@@ -678,8 +740,8 @@ def communicate(params: PyTree, spec: Optional[CommSpec] = None, *,
                 f"({', '.join(overridden)}) must live on the CommSpec — "
                 "derive a per-call variant with spec.replace(...) instead "
                 "of mixing spec= with legacy kwargs")
-        return _communicate_impl(params, spec, phase=phase, step=step,
-                                 axis=axis, ef_state=ef_state, seed=seed)
+        return _communicate_metered(params, spec, phase=phase, step=step,
+                                    axis=axis, ef_state=ef_state, seed=seed)
     if topology is None or n_nodes is None:
         raise TypeError("mixing.communicate: pass a CommSpec "
                         "(communicate(params, spec, phase=...)) or, via the "
@@ -696,8 +758,28 @@ def communicate(params: PyTree, spec: Optional[CommSpec] = None, *,
                     leaf_threshold=leaf_threshold, comm_dtype=comm_dtype,
                     compressor=compressor,
                     global_compressor=global_compressor)
-    return _communicate_impl(params, spec, phase=phase, step=step,
-                             axis=axis, ef_state=ef_state, seed=seed)
+    return _communicate_metered(params, spec, phase=phase, step=step,
+                                axis=axis, ef_state=ef_state, seed=seed)
+
+
+def _communicate_metered(params: PyTree, spec: CommSpec, *, phase: str,
+                         step: int = 0, axis: int = 0,
+                         ef_state: Optional[PyTree] = None,
+                         seed=0) -> PyTree:
+    """:func:`communicate` body + telemetry: one ``comm_round`` record
+    and a ``comm/round`` span per public round (internal identity/exact
+    re-dispatches go straight to ``_communicate_impl`` and never
+    double-report)."""
+    tel = _hub()
+    if tel is None:
+        return _communicate_impl(params, spec, phase=phase, step=step,
+                                 axis=axis, ef_state=ef_state, seed=seed)
+    _meter(tel, params, spec, phase=phase, step=step, role="round")
+    with tel.span("comm/round", phase=phase, shift=int(step)) as sp:
+        out = _communicate_impl(params, spec, phase=phase, step=step,
+                                axis=axis, ef_state=ef_state, seed=seed)
+        _fence_maybe(sp, out)
+    return out
 
 
 def _communicate_impl(params: PyTree, spec: CommSpec, *, phase: str,
@@ -1225,6 +1307,19 @@ def start_round(params: PyTree, spec: CommSpec, *,
     :func:`finish_round` applies must be the one of the issuing step
     (pass the capture step's ``gossip_shift_step`` as ``step=``).
     """
+    tel = _hub()
+    if tel is None:
+        return _start_round_impl(params, spec, ef_state=ef_state, seed=seed)
+    with tel.span("comm/issue") as sp:
+        out = _start_round_impl(params, spec, ef_state=ef_state, seed=seed)
+        _fence_maybe(sp, out)
+    _meter(tel, params, spec, phase="gossip", step=0, role="issue",
+           wires=out[0].get("wire") if isinstance(out[0], dict) else None)
+    return out
+
+
+def _start_round_impl(params: PyTree, spec: CommSpec, *,
+                      ef_state: Optional[PyTree] = None, seed=0):
     n = spec.n_nodes
     if n == 1 or not spec.lossy:
         buf = params
@@ -1264,6 +1359,23 @@ def finish_round(params: PyTree, round_state, spec: CommSpec, *,
     overlap; global/pod-averaging phases flush via
     :func:`overlap_flush`.
     """
+    tel = _hub()
+    if tel is None:
+        return _finish_round_impl(params, round_state, spec, step=step,
+                                  block_d=block_d, interpret=interpret)
+    _meter(tel, params, spec, phase="gossip", step=step, role="apply",
+           wires=round_state.get("wire")
+           if isinstance(round_state, dict) else None)
+    with tel.span("comm/apply", shift=int(step)) as sp:
+        out = _finish_round_impl(params, round_state, spec, step=step,
+                                 block_d=block_d, interpret=interpret)
+        _fence_maybe(sp, out)
+    return out
+
+
+def _finish_round_impl(params: PyTree, round_state, spec: CommSpec, *,
+                       step: int = 0, block_d: int = 2048,
+                       interpret: Optional[bool] = None) -> PyTree:
     if spec.n_nodes == 1:
         return params
     if "wire" in round_state:
@@ -1306,13 +1418,20 @@ def overlap_flush(params: PyTree, spec: CommSpec, *, phase: str,
     is active — once inside the collective round, once in the re-prime —
     matching the two payloads actually produced.
     """
-    out = _communicate_impl(params, spec, phase=phase, step=step, axis=axis,
-                            ef_state=ef_state, seed=seed)
-    if spec.compressor is not None or spec.global_compressor is not None:
-        mixed, ef2 = out
-    else:
-        mixed, ef2 = out, ef_state
-    buf, ef3 = start_round(mixed, spec, ef_state=ef2, seed=seed)
+    tel = _hub()
+    if tel is not None:
+        _meter(tel, params, spec, phase=phase, step=step, role="flush")
+    span = (tel.span("comm/flush", phase=phase) if tel is not None
+            else contextlib.nullcontext())
+    with span:
+        out = _communicate_impl(params, spec, phase=phase, step=step,
+                                axis=axis, ef_state=ef_state, seed=seed)
+        if spec.compressor is not None \
+                or spec.global_compressor is not None:
+            mixed, ef2 = out
+        else:
+            mixed, ef2 = out, ef_state
+        buf, ef3 = start_round(mixed, spec, ef_state=ef2, seed=seed)
     return mixed, buf, ef3
 
 
@@ -1572,6 +1691,32 @@ def communicate_push_sum(params: PyTree, weight: jax.Array, *,
                          f" rows for n_nodes={n}")
     w2 = weight.reshape(n, -1).astype(jnp.float32)
     sharded = use_sharded_backend(backend, mesh, node_axis, shard_mode)
+
+    tel = _hub()
+    if tel is not None:
+        # push-sum rounds mix against a *runtime* W (fault patterns are
+        # data, not programs — DESIGN.md §2.5), so the static shift/send
+        # accounting does not apply: report one send's worth of payload
+        # bytes from the live tree and flag sends as data-dependent (-1)
+        try:
+            from repro.obs import meters as obs_meters
+            sizes = obs_meters.per_node_leaf_sizes(params, n)
+            elem = (np.dtype(comm_dtype).itemsize
+                    if comm_dtype is not None else 4)
+            leaves = jax.tree.leaves(params)
+            tel.emit(
+                "comm_round", phase="push_sum", role="round",
+                topology="runtime", backend=backend, sharded=sharded,
+                n_nodes=int(n), sends=-1,
+                compression=(compressor.name if compressor is not None
+                             else "none"),
+                measured_bytes=int(sum(sizes)) * int(elem),
+                analytic_bytes=None,
+                traced=bool(leaves)
+                and isinstance(leaves[0], jax.core.Tracer))
+        except Exception as e:                       # pragma: no cover
+            warnings.warn(f"mixing: push-sum comm meter failed ({e}); "
+                          f"round unaffected")
 
     if compressor is not None and compressor.lossy:
         if sharded:

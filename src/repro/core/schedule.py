@@ -9,9 +9,28 @@ recompilation (DESIGN.md §2.2).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import List, Optional
+from typing import Any, List, Optional
 
 from repro.configs.base import DistConfig
+
+
+def _as_float(loss) -> Optional[float]:
+    """Materialize a loss observation on the host.
+
+    ``observe_loss`` accepts the loss *lazily* — a device scalar (or a
+    thunk returning one) — so the trainer's hot loop never blocks on a
+    per-step device→host sync; the transfer happens here, at period
+    boundaries only, as an **explicit** ``jax.device_get`` (allowed under
+    ``jax.transfer_guard_device_to_host("disallow")``, which the
+    zero-per-step-sync regression test runs the hot loop under)."""
+    if loss is None:
+        return None
+    if callable(loss):
+        loss = loss()
+    if hasattr(loss, "dtype") and hasattr(loss, "shape"):
+        import jax
+        loss = jax.device_get(loss)
+    return float(loss)
 
 
 class CommSchedule:
@@ -50,7 +69,12 @@ class CommSchedule:
         the topology's schedule period (bounds compiled variants)."""
         return step % max(period, 1)
 
-    def observe_loss(self, step: int, loss: float) -> None:  # AGA hook
+    def observe_loss(self, step: int, loss) -> None:  # AGA hook
+        """Feed the schedule a loss signal.  ``loss`` may be a python
+        float, a 0-d device array, or a thunk returning either —
+        stateful schedules hold it lazily and materialize only at
+        period boundaries (:func:`_as_float`), so calling this every
+        step costs no host sync."""
         pass
 
     # -- resume support ---------------------------------------------------
@@ -112,7 +136,10 @@ class AGASchedule(CommSchedule):
     _C: int = field(default=0, init=False)
     _H: int = field(default=0, init=False)
     _F_init: Optional[float] = field(default=None, init=False)
-    _F_last: Optional[float] = field(default=None, init=False)
+    # the latest observation, held LAZILY: a float, a 0-d device array,
+    # or a thunk — materialized by _as_float only at period boundaries
+    # (_update_period) / serialization, never per step
+    _F_last: Any = field(default=None, init=False)
     history: List[int] = field(default_factory=list, init=False)
 
     def __post_init__(self):
@@ -122,8 +149,8 @@ class AGASchedule(CommSchedule):
     def current_H(self) -> int:
         return self._H
 
-    def observe_loss(self, step: int, loss: float) -> None:
-        self._F_last = float(loss)
+    def observe_loss(self, step: int, loss) -> None:
+        self._F_last = loss
 
     def peek_phase(self, step: int) -> str:
         """Pure: what :meth:`advance` would return for the next executed
@@ -143,7 +170,8 @@ class AGASchedule(CommSchedule):
 
     def state_dict(self) -> dict:
         return {"C": self._C, "H": self._H, "F_init": self._F_init,
-                "F_last": self._F_last, "history": list(self.history)}
+                "F_last": _as_float(self._F_last),
+                "history": list(self.history)}
 
     def load_state_dict(self, state: dict) -> None:
         self._C = int(state["C"])
@@ -153,15 +181,17 @@ class AGASchedule(CommSchedule):
         self.history = list(state["history"])
 
     def _update_period(self, step: int) -> None:
-        if self._F_last is None:
+        f_last = _as_float(self._F_last)
+        if f_last is None:
             return
+        self._F_last = f_last  # cache the materialized value
         if step < self.warmup or self._F_init is None:
             # running average F_init <- (F_init + F)/2 (paper Alg. 2 warmup)
-            self._F_init = (self._F_last if self._F_init is None
-                            else 0.5 * (self._F_init + self._F_last))
+            self._F_init = (f_last if self._F_init is None
+                            else 0.5 * (self._F_init + f_last))
         else:
             import math
-            h = math.ceil(self._F_init / max(self._F_last, 1e-12) * self.H_init)
+            h = math.ceil(self._F_init / max(f_last, 1e-12) * self.H_init)
             self._H = int(min(max(h, 1), self.H_max))
         self.history.append(self._H)
 

@@ -83,6 +83,19 @@ def main() -> None:
     ap.add_argument("--full-config", action="store_true",
                     help="full published dims (TPU-scale; default reduced)")
     ap.add_argument("--iid", action="store_true")
+    ap.add_argument("--telemetry-dir", default="",
+                    help="write the structured telemetry stream "
+                         "(DESIGN.md §2.7) to <dir>/telemetry.jsonl: step "
+                         "records, per-round comm byte/latency meters, "
+                         "fault + checkpoint events")
+    ap.add_argument("--trace", default="",
+                    help="save a Chrome-trace-event timeline of the run's "
+                         "host spans to this path (load in Perfetto / "
+                         "chrome://tracing)")
+    ap.add_argument("--trace-fence", action="store_true",
+                    help="block_until_ready at span exits so spans measure "
+                         "device time instead of async dispatch time "
+                         "(serializes the pipeline it measures)")
     args = ap.parse_args()
 
     cfg = get_model_config(args.arch, reduced=not args.full_config)
@@ -113,10 +126,24 @@ def main() -> None:
             rejoins=parse_fault_events(args.fault_rejoin),
             resample=args.fault_resample,
             seed=args.fault_seed)
+    telemetry = None
+    if args.telemetry_dir or args.trace or args.trace_fence:
+        import os
+        from repro import obs
+        sinks = [obs.RingSink(), obs.PrettySink()]
+        if args.telemetry_dir:
+            os.makedirs(args.telemetry_dir, exist_ok=True)
+            sinks.insert(0, obs.JsonlSink(
+                os.path.join(args.telemetry_dir, "telemetry.jsonl")))
+        telemetry = obs.Telemetry(sinks=sinks, fence=args.trace_fence)
     tr = Trainer(tcfg, n_nodes=args.nodes, with_consensus=True,
-                 fault_schedule=fault_schedule)
+                 fault_schedule=fault_schedule, telemetry=telemetry)
     state = tr.init_state(jax.random.PRNGKey(0))
     tr.run(state, steps=args.steps)
+    if telemetry is not None:
+        if args.trace:
+            print("trace:", telemetry.tracer.save(args.trace))
+        telemetry.close()
 
 
 if __name__ == "__main__":

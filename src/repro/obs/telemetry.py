@@ -1,0 +1,245 @@
+"""Telemetry hub: typed records fanned out to pluggable sinks
+(DESIGN.md §2.7).
+
+One :class:`Telemetry` object is the process's metric bus.  Producers —
+the Trainer loop, ``simulate``, the mixing-round meters, the serving
+engine — call ``tel.emit(<type>, **fields)``; every record is stamped
+with the schema version and a wall-clock timestamp and forwarded to each
+sink.  Record types and their required fields::
+
+    step       {step, phase}    one training-step log point (loss, lr,
+                                consensus, grad_norm, mass, ... ride as
+                                free-form numeric fields)
+    comm_round {phase, role}    one communication round's byte/latency
+                                accounting (obs.meters); role is
+                                "round" | "issue" | "apply" | "flush" |
+                                "occupancy"
+    flush      {step, phase}    an overlap pipeline flush at a period
+                                boundary
+    fault      {step, kind}     a FaultSchedule event (kind "drop" /
+                                "rejoin", nodes=[...])
+    ckpt       {step}           a checkpoint write
+    serve_req  {uid, latency_s} one retired serving request
+
+Sinks: :class:`JsonlSink` (one JSON object per line), :class:`RingSink`
+(bounded in-memory deque — ``Trainer.history`` is a view over it), and
+:class:`PrettySink` (the stdout pretty-printer that subsumes the old
+``Trainer.run`` print path).
+
+Host-sync discipline: the hub never implicitly transfers device values.
+Producers hold device scalars and materialize them through
+:meth:`Telemetry.fetch` — one *explicit*, counted ``jax.device_get`` per
+log boundary (``tel.host_fetches`` is the regression-test counter for
+the zero-per-step-sync guarantee).
+
+The module-level ambient hub (:func:`set_telemetry` /
+:func:`get_telemetry` / :func:`telemetry_scope`) is how deep layers
+(``core/mixing`` round meters) find the active hub without threading it
+through every call; when no hub is installed the meters are no-ops.
+"""
+from __future__ import annotations
+
+import contextlib
+import json
+import sys
+import threading
+import time
+from collections import deque
+from typing import Any, Dict, Iterable, Iterator, List, Optional
+
+from repro.obs.trace import Tracer
+
+SCHEMA_VERSION = 1
+
+# record type -> required field names (extra numeric/str fields are free)
+RECORD_TYPES: Dict[str, tuple] = {
+    "step": ("step", "phase"),
+    "comm_round": ("phase", "role"),
+    "flush": ("step", "phase"),
+    "fault": ("step", "kind"),
+    "ckpt": ("step",),
+    "serve_req": ("uid", "latency_s"),
+}
+
+
+def _jsonify(v: Any) -> Any:
+    """JSON-safe scalar coercion (numpy / 0-d jax values -> python)."""
+    if isinstance(v, (str, int, float, bool)) or v is None:
+        return v
+    if isinstance(v, dict):
+        return {str(k): _jsonify(x) for k, x in v.items()}
+    if isinstance(v, (list, tuple)):
+        return [_jsonify(x) for x in v]
+    item = getattr(v, "item", None)
+    if callable(item) and getattr(v, "ndim", None) == 0:
+        return item()
+    tolist = getattr(v, "tolist", None)
+    if callable(tolist):
+        return tolist()
+    return repr(v)
+
+
+# ---------------------------------------------------------------------------
+# Sinks
+# ---------------------------------------------------------------------------
+class Sink:
+    def emit(self, rec: Dict[str, Any]) -> None:
+        raise NotImplementedError
+
+    def close(self) -> None:
+        pass
+
+
+class JsonlSink(Sink):
+    """One JSON object per line; the file format ``benchmarks.report
+    --telemetry`` renders."""
+
+    def __init__(self, path: str):
+        self.path = path
+        self._f = open(path, "a")
+
+    def emit(self, rec: Dict[str, Any]) -> None:
+        self._f.write(json.dumps(_jsonify(rec)) + "\n")
+
+    def close(self) -> None:
+        if not self._f.closed:
+            self._f.flush()
+            self._f.close()
+
+
+class RingSink(Sink):
+    """Bounded in-memory record buffer (``Trainer.history`` reads it)."""
+
+    def __init__(self, capacity: int = 4096):
+        self.ring: deque = deque(maxlen=capacity)
+
+    def emit(self, rec: Dict[str, Any]) -> None:
+        self.ring.append(rec)
+
+    def records(self, rtype: Optional[str] = None) -> List[Dict[str, Any]]:
+        if rtype is None:
+            return list(self.ring)
+        return [r for r in self.ring if r.get("type") == rtype]
+
+
+class PrettySink(Sink):
+    """Human-readable stdout lines — subsumes the legacy ``Trainer.run``
+    print format (``[{algorithm}] step {k} loss=... phase=...``).  Only
+    ``step`` records print by default; pass ``types`` to widen."""
+
+    def __init__(self, stream=None, types: Iterable[str] = ("step",)):
+        self.stream = stream if stream is not None else sys.stdout
+        self.types = frozenset(types)
+
+    def emit(self, rec: Dict[str, Any]) -> None:
+        if rec.get("type") not in self.types:
+            return
+        if rec["type"] == "step":
+            alg = rec.get("algorithm", "train")
+            line = f"[{alg:10s}] step {rec['step']:5d}"
+            if "loss" in rec:
+                line += f" loss={rec['loss']:.4f}"
+            line += f" phase={rec.get('phase')}"
+            if "consensus" in rec:
+                line += f" consensus={rec['consensus']:.3e}"
+        elif rec["type"] == "serve_req":
+            line = (f"[serve     ] req {rec['uid']} "
+                    f"latency={rec['latency_s'] * 1e3:.1f}ms "
+                    f"tok/s={rec.get('tokens_per_s', 0.0):.1f}")
+        else:
+            body = {k: v for k, v in rec.items()
+                    if k not in ("type", "ts", "schema")}
+            line = f"[{rec['type']:10s}] {_jsonify(body)}"
+        print(line, file=self.stream, flush=True)
+
+
+# ---------------------------------------------------------------------------
+# Hub
+# ---------------------------------------------------------------------------
+class Telemetry:
+    """The metric bus: validates + stamps records, fans out to sinks,
+    owns the span :class:`Tracer`, and counts explicit host fetches."""
+
+    def __init__(self, sinks: Iterable[Sink] = (),
+                 tags: Optional[Dict[str, Any]] = None,
+                 tracer: Optional[Tracer] = None, fence: bool = False):
+        self.sinks: List[Sink] = list(sinks)
+        self.tags: Dict[str, Any] = dict(tags or {})
+        self.tracer = tracer if tracer is not None else Tracer(fence=fence)
+        self.host_fetches = 0
+        self._lock = threading.Lock()
+
+    # -- records -------------------------------------------------------
+    def emit(self, rtype: str, **fields) -> Dict[str, Any]:
+        required = RECORD_TYPES.get(rtype)
+        if required is None:
+            raise ValueError(
+                f"Telemetry.emit: unknown record type {rtype!r} "
+                f"(expected one of {sorted(RECORD_TYPES)})")
+        missing = [f for f in required if f not in fields]
+        if missing:
+            raise ValueError(f"Telemetry.emit({rtype!r}): missing required "
+                             f"fields {missing}")
+        rec = {"type": rtype, "schema": SCHEMA_VERSION, "ts": time.time()}
+        rec.update(self.tags)
+        rec.update(fields)
+        with self._lock:
+            for sink in self.sinks:
+                sink.emit(rec)
+        return rec
+
+    # -- spans ---------------------------------------------------------
+    def span(self, name: str, **args):
+        return self.tracer.span(name, **args)
+
+    # -- host transfers ------------------------------------------------
+    def fetch(self, tree: Any) -> Any:
+        """The ONE sanctioned device→host materialization: an explicit,
+        counted ``jax.device_get`` over a whole pytree.  Producers batch
+        a log window's device scalars into a single call here — never a
+        per-step ``float()`` (which is an implicit, blocking transfer)."""
+        import jax
+        self.host_fetches += 1
+        return jax.device_get(tree)
+
+    # -- sinks ---------------------------------------------------------
+    def ring(self) -> Optional[RingSink]:
+        """First RingSink, if any (the Trainer.history backing store)."""
+        for s in self.sinks:
+            if isinstance(s, RingSink):
+                return s
+        return None
+
+    def close(self) -> None:
+        for s in self.sinks:
+            s.close()
+
+
+# ---------------------------------------------------------------------------
+# Ambient hub
+# ---------------------------------------------------------------------------
+_AMBIENT: List[Optional[Telemetry]] = [None]
+
+
+def set_telemetry(tel: Optional[Telemetry]) -> Optional[Telemetry]:
+    """Install ``tel`` as the ambient hub; returns the previous one."""
+    prev = _AMBIENT[0]
+    _AMBIENT[0] = tel
+    return prev
+
+
+def get_telemetry() -> Optional[Telemetry]:
+    """The ambient hub, or None when telemetry is inactive (the mixing
+    meters use this — a None return makes them near-zero-cost no-ops)."""
+    return _AMBIENT[0]
+
+
+@contextlib.contextmanager
+def telemetry_scope(tel: Optional[Telemetry]) -> Iterator[Optional[Telemetry]]:
+    """Ambient-hub scope: installs ``tel`` for the block, restores the
+    previous hub on exit (nesting-safe)."""
+    prev = set_telemetry(tel)
+    try:
+        yield tel
+    finally:
+        set_telemetry(prev)

@@ -104,14 +104,21 @@ class Request:
     max_new: int
     generated: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    t_admit: float = 0.0        # perf_counter at admission (telemetry)
 
 
 class BatchedServer:
     """Slot-based continuous batching: fixed B decode slots; finished
     requests retire and free their slot for the next queued request.
-    Per-slot prefill (B=1) keeps admission simple and bounded."""
+    Per-slot prefill (B=1) keeps admission simple and bounded.
 
-    def __init__(self, engine: Engine, params: PyTree, n_slots: int):
+    ``telemetry`` (repro.obs.Telemetry, optional): each retired request
+    emits a ``serve_req`` record (latency, prompt/new token counts,
+    tokens/s) and prefill/decode run under ``serve/*`` spans — the same
+    schema and sinks the training loop reports through."""
+
+    def __init__(self, engine: Engine, params: PyTree, n_slots: int,
+                 telemetry=None):
         self.engine = engine
         self.params = params
         self.n_slots = n_slots
@@ -120,14 +127,24 @@ class BatchedServer:
         self.tok = jnp.zeros((n_slots, 1), jnp.int32)
         self.pos = jnp.zeros((n_slots,), jnp.int32)
         self.slots: List[Optional[Request]] = [None] * n_slots
+        self.telemetry = telemetry
         self._decode = jax.jit(engine.model.decode_step)
         self._prefill1 = jax.jit(
             lambda p, t: engine.model.forward(p, {"inputs": t},
                                               mode="prefill", want_cache=True))
 
+    def _span(self, name: str, **args):
+        if self.telemetry is None:
+            import contextlib
+            return contextlib.nullcontext()
+        return self.telemetry.span(name, **args)
+
     def _admit(self, req: Request, slot: int) -> None:
+        import time
+        req.t_admit = time.perf_counter()
         prompt = jnp.asarray(req.prompt[None, :], jnp.int32)
-        logits, cache, _ = self._prefill1(self.params, prompt)
+        with self._span("serve/prefill", uid=req.uid, slot=slot):
+            logits, cache, _ = self._prefill1(self.params, prompt)
         cache = pad_cache_to(cache, self.engine.s_max)
         # write the slot: every cache leaf's batch axis is right after any
         # stacked-layer dims; use tree surgery via dynamic_update_slice
@@ -150,6 +167,17 @@ class BatchedServer:
         self.tok = self.tok.at[slot, 0].set(first)
         self.pos = self.pos.at[slot].set(len(req.prompt))
 
+    def _retire(self, req: Request) -> None:
+        if self.telemetry is None:
+            return
+        import time
+        latency = time.perf_counter() - req.t_admit
+        new_tokens = len(req.generated)
+        self.telemetry.emit(
+            "serve_req", uid=req.uid, latency_s=latency,
+            prompt_tokens=int(len(req.prompt)), new_tokens=new_tokens,
+            tokens_per_s=new_tokens / max(latency, 1e-9))
+
     def run(self, requests: List[Request]) -> List[Request]:
         queue = list(requests)
         finished: List[Request] = []
@@ -157,9 +185,10 @@ class BatchedServer:
             for i in range(self.n_slots):
                 if self.slots[i] is None and queue:
                     self._admit(queue.pop(0), i)
-            logits, self.caches = self._decode(self.params, self.caches,
-                                               self.tok, self.pos)
-            nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
+            with self._span("serve/decode"):
+                logits, self.caches = self._decode(self.params, self.caches,
+                                                   self.tok, self.pos)
+                nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
             self.pos = self.pos + 1
             for i, req in enumerate(self.slots):
                 if req is None:
@@ -168,6 +197,7 @@ class BatchedServer:
                 self.tok = self.tok.at[i, 0].set(int(nxt[i]))
                 if len(req.generated) >= req.max_new:
                     req.done = True
+                    self._retire(req)
                     finished.append(req)
                     self.slots[i] = None
         return finished

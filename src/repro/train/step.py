@@ -24,6 +24,14 @@ from repro.train.state import TrainState, consensus_distance, debias
 PyTree = Any
 
 
+def _grad_global_norm(grads: PyTree) -> jax.Array:
+    """Global L2 norm over all nodes' grads — a cheap on-device monitor
+    (one reduction per leaf inside the step; no host sync).  Emitted as
+    ``metrics["grad_norm"]`` when monitors are on (DESIGN.md §2.7)."""
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(grads)))
+
+
 def build_train_step(model: Model, tcfg: TrainConfig, n_nodes: int, *,
                      phase: str, shift_step: int = 0,
                      buf_shift: int = 0,
@@ -168,6 +176,9 @@ def build_train_step(model: Model, tcfg: TrainConfig, n_nodes: int, *,
             grads = jax.tree.map(
                 lambda g: g * af.reshape((n_nodes,) + (1,) * (g.ndim - 1)),
                 grads)
+            if with_consensus:
+                metrics = dict(metrics)
+                metrics["grad_norm"] = _grad_global_norm(grads)
             if tcfg.optimizer.grad_clip:
                 grads = clip_by_global_norm(grads, tcfg.optimizer.grad_clip)
             params_half, opt_state = opt.update(grads, state.opt_state,
@@ -227,6 +238,9 @@ def build_train_step(model: Model, tcfg: TrainConfig, n_nodes: int, *,
                 grads, metrics = accum_grad_fn(state.params, batch)
             else:
                 grads, metrics = grad_fn(state.params, batch)
+            if with_consensus:
+                metrics = dict(metrics)
+                metrics["grad_norm"] = _grad_global_norm(grads)
             if tcfg.optimizer.grad_clip:
                 grads = clip_by_global_norm(grads, tcfg.optimizer.grad_clip)
             params_half, opt_state = opt.update(grads, state.opt_state,
@@ -292,6 +306,9 @@ def build_train_step(model: Model, tcfg: TrainConfig, n_nodes: int, *,
             grads, metrics = accum_grad_fn(state.params, batch)
         else:
             grads, metrics = grad_fn(state.params, batch)
+        if with_consensus:
+            metrics = dict(metrics)
+            metrics["grad_norm"] = _grad_global_norm(grads)
         if tcfg.optimizer.grad_clip:
             grads = clip_by_global_norm(grads, tcfg.optimizer.grad_clip)
         params_half, opt_state = opt.update(grads, state.opt_state,
@@ -332,6 +349,9 @@ def build_train_step(model: Model, tcfg: TrainConfig, n_nodes: int, *,
                     and phase in ("gossip", "global", "pod_avg")):
                 # fused: the mixing kernel emits the consensus residual in
                 # the same parameter pass instead of re-reading new_params
+                # (bypasses communicate(), so meter the round explicitly)
+                mixing.meter_round(params_half, spec_plain, phase=phase,
+                                   step=shift_step)
                 if sharded_comm:
                     new_params, _xbar, resid = mixing.communicate_sharded(
                         params_half, spec_plain, phase=phase,

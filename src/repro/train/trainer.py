@@ -10,12 +10,14 @@ Works in two regimes:
 from __future__ import annotations
 
 import time
+from collections import deque
 from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs.base import TrainConfig
 from repro.core import topology as topo
 from repro.core.schedule import make_schedule
@@ -32,7 +34,9 @@ class Trainer:
     def __init__(self, tcfg: TrainConfig, n_nodes: int, *,
                  mesh: Optional[jax.sharding.Mesh] = None,
                  with_consensus: bool = False,
-                 fault_schedule=None):
+                 fault_schedule=None,
+                 telemetry: Optional[obs.Telemetry] = None,
+                 measure_occupancy: Optional[bool] = None):
         tcfg.dist.validate().validate_nodes(n_nodes)
         if fault_schedule is not None:
             if not tcfg.dist.push_sum:
@@ -64,10 +68,41 @@ class Trainer:
         self._overlap = tcfg.dist.comm_overlap
         self._comm_buf = None
         self._buf_shift = 0
-        self.history: List[Dict[str, float]] = []
+        # telemetry hub (DESIGN.md §2.7): the default hub preserves the
+        # legacy behavior — step records at log boundaries land in an
+        # in-memory ring (the .history view) and print via PrettySink;
+        # pass a hub with a JsonlSink (launch/train --telemetry-dir) for
+        # a persistent stream.  run() installs it as the ambient hub so
+        # the mixing-round meters self-report during compiles.
+        if telemetry is None:
+            telemetry = obs.Telemetry(
+                sinks=[obs.RingSink(), obs.PrettySink()])
+        elif telemetry.ring() is None:
+            telemetry.sinks.append(obs.RingSink())
+        telemetry.tags.setdefault("algorithm", tcfg.dist.algorithm)
+        self.telemetry = telemetry
+        # device-side monitor window: per-step (lr, metrics) DEVICE
+        # scalars accumulate here and materialize in ONE batched
+        # device_get at log boundaries — never a per-step host sync
+        self._pending: deque = deque(maxlen=1024)
+        self._phase_counts: Dict[str, int] = {}
+        # one-shot occupancy calibration for overlapped runs: costs two
+        # extra (non-donating) compiles, so default-on only when a
+        # persistent stream is attached (launch/train --telemetry-dir);
+        # pass True/False to force either way
+        self.measure_occupancy = measure_occupancy
+        self._occ_measured = False
         self._sched_live = False   # True once this process advanced the
                                    # schedule (guards the resume reload)
         self._faults_live = False  # same guard for the fault counters
+
+    @property
+    def history(self) -> List[Dict[str, float]]:
+        """Log-boundary step records — a view over the telemetry ring
+        sink (same dicts the JSONL stream carries; the legacy keys
+        ``step``/``phase``/``lr``/``time``/``loss``/... are preserved)."""
+        ring = self.telemetry.ring()
+        return ring.records("step") if ring is not None else []
 
     # ------------------------------------------------------------------
     def init_state(self, key: jax.Array) -> TrainState:
@@ -117,7 +152,14 @@ class Trainer:
         commits the fault counters (pure elsewhere)."""
         n = self.n_nodes
         if self.fault_schedule is not None:
-            active = self.fault_schedule.advance(k)
+            fs = self.fault_schedule
+            active = fs.advance(k)
+            if k in fs.drops:
+                self.telemetry.emit("fault", step=k, kind="drop",
+                                    nodes=list(fs.drops[k]))
+            if k in fs.rejoins:
+                self.telemetry.emit("fault", step=k, kind="rejoin",
+                                    nodes=list(fs.rejoins[k]))
         else:
             active = np.ones(n, dtype=bool)
         if phase == "gossip":
@@ -137,11 +179,23 @@ class Trainer:
     # ------------------------------------------------------------------
     def run(self, state: TrainState, steps: Optional[int] = None,
             log_every: Optional[int] = None) -> TrainState:
+        # install the hub as the ambient one for the whole loop so the
+        # mixing-round meters (core/mixing) self-report comm_round
+        # records during compiles without plumbing
+        with obs.telemetry_scope(self.telemetry):
+            return self._run(state, steps, log_every)
+
+    def _run(self, state: TrainState, steps: Optional[int],
+             log_every: Optional[int]) -> TrainState:
         tcfg = self.tcfg
         steps = steps if steps is not None else tcfg.steps
         log_every = log_every if log_every is not None else tcfg.log_every
         t0 = time.time()
-        start = int(state.step)  # resume-aware: schedule/lr/data keyed on the
+        # explicit transfer (allowed under a device->host transfer
+        # guard); the hot loop below performs ZERO implicit syncs —
+        # metrics stay on device until the batched log-boundary fetch
+        start = int(jax.device_get(state.step))
+        # resume-aware: schedule/lr/data keyed on the
         if start > 0 and not self._sched_live:  # absolute step counter —
             # and a stateful schedule (AGA's period counter) is trajectory
             # state too: a fresh process resuming a checkpoint reloads the
@@ -181,41 +235,140 @@ class Trainer:
                      else "none")
             shift = self.schedule.gossip_shift_step(k, self.period)
             lr = jnp.asarray(self.lr_fn(k), jnp.float32)
-            if self._overlap:
-                bs = self._buf_shift if phase == "gossip" else 0
-                step_fn = self._get_step_fn(phase, shift, buf_shift=bs)
-                state, metrics, self._comm_buf = step_fn(
-                    state, batch, lr, self._comm_buf)
-                if phase != "none":
-                    # the buffer now in flight was primed at this step:
-                    # record its shift for the finish_round that applies it
-                    self._buf_shift = shift
-            elif tcfg.dist.push_sum:
-                step_fn = self._get_step_fn(phase, shift)
-                W, active = self._push_round(phase, k, shift)
-                state, metrics = step_fn(state, batch, lr, W, active)
-            else:
-                step_fn = self._get_step_fn(phase, shift)
-                state, metrics = step_fn(state, batch, lr)
-            loss = float(metrics["loss"])
-            self.schedule.observe_loss(k, loss)
+            with self.telemetry.span("train/step", step=k,
+                                     phase=phase) as sp:
+                if self._overlap:
+                    bs = self._buf_shift if phase == "gossip" else 0
+                    step_fn = self._get_step_fn(phase, shift, buf_shift=bs)
+                    state, metrics, self._comm_buf = step_fn(
+                        state, batch, lr, self._comm_buf)
+                    if phase != "none":
+                        # the buffer now in flight was primed at this
+                        # step: record its shift for the finish_round
+                        # that applies it
+                        self._buf_shift = shift
+                elif tcfg.dist.push_sum:
+                    step_fn = self._get_step_fn(phase, shift)
+                    W, active = self._push_round(phase, k, shift)
+                    state, metrics = step_fn(state, batch, lr, W, active)
+                else:
+                    step_fn = self._get_step_fn(phase, shift)
+                    state, metrics = step_fn(state, batch, lr)
+                # --trace-fence: serialize the pipeline so the span is
+                # device time, not async dispatch time
+                sp.fence(metrics["loss"])
+            # lazily: the schedule holds the DEVICE scalar and
+            # materializes it only at period boundaries (explicit
+            # device_get in schedule._as_float) — no per-step sync
+            self.schedule.observe_loss(k, metrics["loss"])
+            self._phase_counts[phase] = self._phase_counts.get(phase, 0) + 1
+            self._pending.append((k, phase, lr, metrics))
+            if self._overlap and phase not in ("gossip", "none"):
+                # period boundary: the compiled step flushed the
+                # in-flight round before its collective (DESIGN.md §2.6)
+                self.telemetry.emit("flush", step=k, phase=phase)
             if log_every and (k % log_every == 0 or k == steps - 1):
-                rec = {"step": k, "phase": phase, "lr": float(lr),
-                       "time": time.time() - t0}
-                rec.update({m: float(v) for m, v in metrics.items()})
-                self.history.append(rec)
-                extra = ""
-                if "consensus" in rec:
-                    extra = f" consensus={rec['consensus']:.3e}"
-                print(f"[{tcfg.dist.algorithm:10s}] step {k:5d} "
-                      f"loss={rec['loss']:.4f} phase={phase}{extra}",
-                      flush=True)
+                self._log_boundary(k, phase, t0)
+                mo = self.measure_occupancy
+                if mo is None:
+                    mo = any(isinstance(s, obs.JsonlSink)
+                             for s in self.telemetry.sinks)
+                if (mo and self._overlap and self.n_nodes > 1
+                        and not self._occ_measured and k > start):
+                    self._occ_measured = True
+                    self._measure_occupancy(state, k)
             if tcfg.ckpt_every and (k + 1) % tcfg.ckpt_every == 0:
                 from repro.checkpoint import save_checkpoint
                 save_checkpoint(tcfg.ckpt_dir, state, k + 1)
                 self._save_schedule(k + 1)
                 self._save_faults(k + 1)
+                self.telemetry.emit("ckpt", step=k + 1,
+                                    path=tcfg.ckpt_dir)
         return state
+
+    # ------------------------------------------------------------------
+    def _log_boundary(self, k: int, phase: str, t0: float) -> None:
+        """Materialize the device-side monitor window in ONE batched,
+        explicit transfer (``Telemetry.fetch``) and emit the ``step``
+        record — ring sink (``.history``), pretty print, JSONL."""
+        window = list(self._pending)
+        self._pending.clear()
+        if not window:
+            return
+        _, _, lr, metrics = window[-1]
+        host = self.telemetry.fetch({
+            "lr": lr, "metrics": metrics,
+            "window_loss": [w[3]["loss"] for w in window]})
+        rec = {"step": k, "phase": phase, "lr": float(host["lr"]),
+               "time": time.time() - t0}
+        rec.update({m: float(v) for m, v in host["metrics"].items()})
+        wl = [float(x) for x in host["window_loss"]]
+        rec["loss_window_mean"] = sum(wl) / len(wl)
+        rec["window"] = len(wl)
+        # executed-round counts by phase: joins the traced comm_round
+        # records (emitted once per compiled variant) back to reality
+        rec["phase_counts"] = dict(self._phase_counts)
+        self.telemetry.emit("step", **rec)
+
+    # ------------------------------------------------------------------
+    def _measure_occupancy(self, state: TrainState, k: int) -> None:
+        """One-shot pipeline-occupancy calibration for overlapped runs
+        (DESIGN.md §2.7): time the overlapped step, the comm-free step,
+        and a synchronous issue+apply round, then report
+
+            occupancy = clip(1 - max(0, t_overlap - t_compute) / t_sync,
+                             0, 1)
+
+        — the fraction of the synchronous round cost hidden under
+        compute.  Uses fresh non-donating jits so ``state`` survives;
+        runs with the ambient hub scoped out so the probe rounds do not
+        spam ``comm_round`` records."""
+        try:
+            self._measure_occupancy_impl(state, k)
+        except Exception as e:   # calibration is best-effort telemetry
+            import warnings
+            warnings.warn(f"Trainer: occupancy calibration failed ({e}); "
+                          f"continuing without an occupancy record")
+
+    def _measure_occupancy_impl(self, state: TrainState, k: int) -> None:
+        from repro.core import mixing
+        tcfg = self.tcfg
+        spec = tcfg.dist.comm_spec(self.n_nodes, mesh=self.mesh)
+        shift = self.schedule.gossip_shift_step(k, self.period)
+        batch = jax.tree.map(jnp.asarray, self.stream.get_batch(k))
+        lr = jnp.asarray(self.lr_fn(k), jnp.float32)
+
+        def build(phase):
+            fn = build_train_step(self.model, tcfg, self.n_nodes,
+                                  phase=phase, shift_step=shift,
+                                  buf_shift=shift,
+                                  with_consensus=self.with_consensus,
+                                  mesh=self.mesh)
+            return jax.jit(fn)   # no donation: timing-only probes
+
+        step_ov, step_cmp = build("gossip"), build("none")
+        with obs.telemetry_scope(None):
+            t_ov = obs.fenced_time(step_ov, state, batch, lr,
+                                   self._comm_buf, iters=3, warmup=1)
+            t_cmp = obs.fenced_time(step_cmp, state, batch, lr,
+                                    self._comm_buf, iters=3, warmup=1)
+            t_issue = obs.fenced_time(
+                mixing.start_round, state.params, spec, iters=3,
+                warmup=1, ef_state=state.ef_state, seed=k)
+            rs, _ = mixing.start_round(state.params, spec,
+                                       ef_state=state.ef_state, seed=k)
+            t_apply = obs.fenced_time(
+                mixing.finish_round, state.params, rs, spec, iters=3,
+                warmup=1, step=shift)
+        t_sync = t_issue + t_apply
+        occ = obs.meters.occupancy(
+            t_cmp * 1e-6, t_sync * 1e-6, t_ov * 1e-6)
+        self.telemetry.emit(
+            "comm_round", phase="gossip", role="occupancy",
+            occupancy=occ, t_step_overlap_us=t_ov,
+            t_step_compute_us=t_cmp, t_round_sync_us=t_sync,
+            topology=tcfg.dist.topology, backend=tcfg.dist.comm_backend,
+            n_nodes=self.n_nodes, step=k)
 
     # ------------------------------------------------------------------
     def _schedule_path(self, step: int) -> str:
