@@ -18,7 +18,7 @@ def load(files: List[str]) -> List[Dict[str, Any]]:
     for f in files:
         if os.path.exists(f):
             with open(f) as fh:
-                rows += [json.loads(l) for l in fh if l.strip()]
+                rows += [json.loads(ln) for ln in fh if ln.strip()]
     return rows
 
 

@@ -9,8 +9,8 @@ from __future__ import annotations
 
 import jax
 
-from benchmarks.common import emit
 from benchmarks.bench_comm_model import alpha_beta_times
+from benchmarks.common import emit
 from repro.configs import (DataConfig, DistConfig, OptimizerConfig,
                            TrainConfig, get_model_config)
 from repro.train import Trainer

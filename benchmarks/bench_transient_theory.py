@@ -63,7 +63,8 @@ def main() -> None:
                 emit(f"table5_{t}_n{n}_{tag}_transient_time_gossip_s", tt_g)
                 emit(f"table5_{t}_n{n}_{tag}_transient_time_pga_s", tt_p)
                 emit(f"table5_{t}_n{n}_{tag}_pga_time_shorter",
-                     float(tt_p <= tt_g), f"ratio={tt_g / max(tt_p, 1e-12):.3g}")
+                     float(tt_p <= tt_g),
+                     f"ratio={tt_g / max(tt_p, 1e-12):.3g}")
 
 
 if __name__ == "__main__":

@@ -2,7 +2,8 @@
 dry-run + hillclimb JSONL dumps, and maintain the perf-gate trend history.
 
     PYTHONPATH=src python -m benchmarks.report > /tmp/report.md
-    PYTHONPATH=src python -m benchmarks.report --append-history BENCH_mixing.json
+    PYTHONPATH=src python -m benchmarks.report \
+        --append-history BENCH_mixing.json
     PYTHONPATH=src python -m benchmarks.report --trend
 
 The trend history (``benchmarks/BENCH_history.jsonl``, tracked) exists
@@ -37,7 +38,7 @@ def _load(path: str) -> List[Dict[str, Any]]:
     if not os.path.exists(path):
         return []
     with open(path) as f:
-        return [json.loads(l) for l in f if l.strip()]
+        return [json.loads(ln) for ln in f if ln.strip()]
 
 
 def _fmt_s(x: float) -> str:
@@ -49,8 +50,8 @@ def _gb(x) -> str:
 
 
 def dryrun_table(rows: List[Dict[str, Any]], mesh: str) -> None:
-    print(f"\n### Dry-run — {mesh} mesh "
-          f"({'512 chips (2,16,16)' if mesh == 'multi' else '256 chips (16,16)'})\n")
+    chips = "512 chips (2,16,16)" if mesh == "multi" else "256 chips (16,16)"
+    print(f"\n### Dry-run — {mesh} mesh ({chips})\n")
     print("| arch | shape | status | mode | temp GB/dev | args GB/dev | "
           "compile s |")
     print("|---|---|---|---|---|---|---|")
@@ -338,7 +339,8 @@ def _capture(fn, *a) -> str:
 def inject_into_experiments(path: str = "EXPERIMENTS.md") -> None:
     """Replace the <!-- REPORT:X --> markers with generated tables.
     Corrected-roofline rows come from the train_4k corrected sweep when
-    present (results_dryrun_train4k.jsonl) with fast-sweep rows for the rest."""
+    present (results_dryrun_train4k.jsonl) with fast-sweep rows for
+    the rest."""
     single = _load(FILES["single"])
     train4k = _load("results_dryrun_train4k.jsonl")
     multi = _load(FILES["multi"])

@@ -1,0 +1,24 @@
+"""repro.analysis — repo-specific static analysis for the comm stack.
+
+``python -m repro.analysis [paths...]`` walks the Python sources and
+enforces the invariants DESIGN.md documents and earlier PRs established
+at runtime: host-sync-free hot paths (RPR001), the CommSpec call form
+(RPR002), donation safety around the overlap double buffer (RPR003),
+traced-W recompile discipline (RPR004), counter-hash-only randomness in
+device modules (RPR005), and ``pl.pallas_call`` contracts (RPR006).
+
+Stdlib-only on purpose: the CI ``analyze`` job runs it before any heavy
+dependency is installed, and importing it never initializes jax.
+"""
+from __future__ import annotations
+
+from repro.analysis.engine import (Baseline, FileContext, Finding, Rule,
+                                   all_rules, analyze_file, analyze_paths,
+                                   apply_baseline, format_findings,
+                                   load_baseline)
+
+__all__ = [
+    "Baseline", "FileContext", "Finding", "Rule", "all_rules",
+    "analyze_file", "analyze_paths", "apply_baseline", "format_findings",
+    "load_baseline",
+]

@@ -1,0 +1,100 @@
+"""RPR002 — the legacy all-kwargs ``communicate`` form is deprecated.
+
+Invariant (DESIGN.md §2.6, established by PR 7): every communication
+round threads its ~12 round-invariant knobs through one frozen
+:class:`repro.core.mixing.CommSpec` —
+``communicate(params, spec, phase=..., step=...)`` — built canonically
+by ``DistConfig.comm_spec()``.  The legacy kwarg form
+(``communicate(params, phase=..., topology=..., n_nodes=..., ...)``)
+survives only as a deprecated shim; hand-forwarding kwargs is exactly
+how PR 5's ``model_axis`` was silently dropped by
+``Decentralized.communicate`` (the mesh/shard_mode forwarding hole PR 7
+closed).  New call sites must pass a spec; tests that deliberately
+exercise the shim carry ``# repro: allow(RPR002)``.
+
+Detection: a call to ``mixing.communicate`` / ``communicate_sharded``
+(alias-resolved) with **no second positional argument** that passes a
+round-invariant knob — either literally (``topology=...``) or through a
+``**kwargs`` expansion whose dict literal is assigned in the same
+function scope and visibly contains one.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Optional, Set
+
+from repro.analysis.engine import (FileContext, Finding, Rule, register)
+
+TARGETS = {
+    "repro.core.mixing.communicate",
+    "repro.core.mixing.communicate_sharded",
+}
+
+# CommSpec fields: the round-invariant vocabulary (mixing.CommSpec)
+SPEC_KEYS: Set[str] = {
+    "topology", "n_nodes", "n_pods", "backend", "mesh", "node_axis",
+    "model_axis", "shard_mode", "leaf_threshold", "comm_dtype",
+    "compressor", "global_compressor",
+}
+
+
+def _dict_literal_keys(node: ast.AST) -> Optional[Set[str]]:
+    """String keys of a ``dict(...)`` call or ``{...}`` literal."""
+    if isinstance(node, ast.Dict):
+        keys = set()
+        for k in node.keys:
+            if isinstance(k, ast.Constant) and isinstance(k.value, str):
+                keys.add(k.value)
+        return keys
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Name) \
+            and node.func.id == "dict" and not node.args:
+        return {kw.arg for kw in node.keywords if kw.arg}
+    return None
+
+
+@register
+class LegacyCommunicateRule(Rule):
+    id = "RPR002"
+    title = "legacy communicate(**kwargs) call form"
+    design_ref = "DESIGN.md §2.6 (PR 7)"
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            fq = ctx.resolve(node.func)
+            if fq not in TARGETS:
+                continue
+            if len(node.args) >= 2:     # communicate(params, spec, ...)
+                continue
+            bad = sorted(SPEC_KEYS & {kw.arg for kw in node.keywords
+                                      if kw.arg})
+            if not bad:
+                bad = sorted(self._starred_spec_keys(ctx, node))
+            if bad:
+                yield ctx.finding(
+                    self, node,
+                    f"legacy communicate kwargs ({', '.join(bad)}): "
+                    f"build a CommSpec (DistConfig.comm_spec() or "
+                    f"mixing.CommSpec) and call communicate(params, "
+                    f"spec, phase=..., step=...) ({self.design_ref})")
+
+    def _starred_spec_keys(self, ctx: FileContext,
+                           node: ast.Call) -> Set[str]:
+        """Spec keys visible through ``**name`` where ``name`` is a dict
+        literal assigned in the enclosing function (or module) scope."""
+        starred = [kw.value for kw in node.keywords if kw.arg is None]
+        names = {v.id for v in starred if isinstance(v, ast.Name)}
+        if not names:
+            return set()
+        scope = ctx.enclosing_function(node) or ctx.tree
+        found: Set[str] = set()
+        for stmt in ast.walk(scope):
+            if not isinstance(stmt, ast.Assign):
+                continue
+            for tgt in stmt.targets:
+                if isinstance(tgt, ast.Name) and tgt.id in names:
+                    keys = _dict_literal_keys(stmt.value)
+                    if keys:
+                        found |= keys & SPEC_KEYS
+        return found

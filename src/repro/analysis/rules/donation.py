@@ -1,0 +1,350 @@
+"""RPR003 — donation hazards around the overlap double buffer.
+
+Invariant (DESIGN.md §2.6, established by PR 7): the Trainer jits the
+overlapped step with ``donate_argnums=(0, 3)`` — the TrainState *and*
+the in-flight comm buffer are donated back each step.  XLA donation is
+only sound when the donated operands do not alias each other, and
+``mixing.start_round`` / ``mixing.overlap_flush`` return a buffer that
+**aliases the params it snapshot** on the dense (uncompressed) path.
+The PR-7 convention: any start_round/overlap_flush buffer that escapes a
+function alongside the params it aliases (returned together — possibly
+inside a ``TrainState(...)`` — or stored on ``self`` for a later
+donated call) must be re-bound through ``jax.tree.map(jnp.copy, buf)``
+first; otherwise XLA is handed the same buffer twice (the regression
+this rule replays from ``train/step.py``'s slowmo/flush branches).
+
+Two checks:
+
+* **alias-escape** — a name bound from ``start_round(src, ...)`` (or the
+  buffer slot of ``overlap_flush``) escapes — via ``return`` together
+  with ``src`` (containment through constructor calls like
+  ``TrainState(params=src)`` is followed), or via an attribute store —
+  without an interposed ``jnp.copy`` rebind.  The walk is
+  **path-sensitive** over ``if``/``elif`` arms: each arm forks its own
+  (hazard, containment) state and a ``return`` is checked against every
+  feasible state — a copy in one arm does not sanctify another, and a
+  hazard primed in one arm is never combined with an aliasing chain that
+  only exists in a mutually-exclusive arm (``phase`` dispatch is
+  trace-time static, so such mixed paths cannot compile).
+* **donated-callsite reuse** — ``f = jax.jit(g, donate_argnums=...)``
+  followed by ``f(a, b, ...)`` and a later read of a donated argument
+  name that was never rebound: the buffer was given to XLA and may
+  already be reused.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+from repro.analysis.engine import (FileContext, Finding, Rule, register)
+
+PRIMING_CALLS = {
+    "repro.core.mixing.start_round",
+    "repro.core.mixing.overlap_flush",
+}
+
+
+def _names(node: Optional[ast.AST]) -> Set[str]:
+    if node is None:
+        return set()
+    return {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}
+
+
+def _has_copy_call(ctx: FileContext, node: ast.AST) -> bool:
+    """True when the expression pipes its value through a copy (directly
+    or as ``jax.tree.map(jnp.copy, ...)``)."""
+    for n in ast.walk(node):
+        if isinstance(n, ast.Attribute) and n.attr in ("copy", "deepcopy"):
+            return True
+    return False
+
+
+def _contained_names(node: ast.AST) -> Set[str]:
+    """Names whose referents the expression plausibly *keeps a reference
+    to*: plain names, tuple/list/dict literals, and constructor-style
+    calls (Capitalized func, or ``.replace(...)``).  Ordinary function
+    calls compute fresh values and do not propagate containment."""
+    if isinstance(node, ast.Name):
+        return {node.id}
+    if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+        out: Set[str] = set()
+        for e in node.elts:
+            out |= _contained_names(e)
+        return out
+    if isinstance(node, ast.Dict):
+        out = set()
+        for v in node.values:
+            out |= _contained_names(v)
+        return out
+    if isinstance(node, ast.Starred):
+        return _contained_names(node.value)
+    if isinstance(node, ast.Attribute):
+        return _contained_names(node.value)
+    if isinstance(node, ast.Call):
+        fname = node.func.attr if isinstance(node.func, ast.Attribute) \
+            else (node.func.id if isinstance(node.func, ast.Name) else "")
+        if fname[:1].isupper() or fname == "replace":
+            out = set()
+            for a in node.args:
+                out |= _contained_names(a)
+            for kw in node.keywords:
+                out |= _contained_names(kw.value)
+            return out
+    return set()
+
+
+@register
+class DonationRule(Rule):
+    id = "RPR003"
+    title = "donation hazard: aliased/reused donated buffer"
+    design_ref = "DESIGN.md §2.6 (PR 7)"
+
+    #: cap on forked (hazards, contains) path states per function; states
+    #: beyond it are merged into the last one kept (conservative, keeps
+    #: every hazard alive)
+    MAX_STATES = 64
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                findings: List[Finding] = []
+                self._walk_block(ctx, node.body, [({}, {})], findings)
+                seen = set()
+                for f in findings:
+                    key = (f.line, f.message)
+                    if key not in seen:
+                        seen.add(key)
+                        yield f
+                yield from self._check_donated_reuse(ctx, node)
+
+    # ------------------------------------------------------------------
+    # alias-escape
+    # ------------------------------------------------------------------
+    def _priming(self, ctx: FileContext, stmt: ast.Assign
+                 ) -> Optional[Tuple[str, Set[str]]]:
+        """If ``stmt`` binds a priming-call result, return
+        (buffer name, aliased source names)."""
+        call = stmt.value
+        if not isinstance(call, ast.Call):
+            return None
+        fq = ctx.resolve(call.func)
+        if fq not in PRIMING_CALLS:
+            return None
+        tgt = stmt.targets[0]
+        elts = tgt.elts if isinstance(tgt, ast.Tuple) else [tgt]
+        names = [e.id if isinstance(e, ast.Name) else None for e in elts]
+        if fq.endswith("start_round"):
+            # buf = start_round(src, ...)  |  buf, ef = start_round(...)
+            buf = names[0]
+            src = _names(call.args[0] if call.args else None)
+        else:
+            # params, buf, ef = overlap_flush(...): buf aliases params
+            if len(names) < 2 or names[0] is None:
+                return None
+            buf, src = names[1], {names[0]}
+        if buf is None or not src:
+            return None
+        return buf, src
+
+    # one path state: (hazards, contains); the walk carries a list of
+    # them and forks at every if/elif arm
+    def _walk_block(self, ctx: FileContext, stmts: List[ast.stmt],
+                    states: List[Tuple[Dict[str, Set[str]],
+                                       Dict[str, Set[str]]]],
+                    findings: List[Finding]
+                    ) -> List[Tuple[Dict[str, Set[str]],
+                                    Dict[str, Set[str]]]]:
+        for stmt in stmts:
+            if isinstance(stmt, ast.Assign):
+                for hazards, contains in states:
+                    self._assign(ctx, stmt, hazards, contains, findings)
+            elif isinstance(stmt, ast.Return) and stmt.value is not None:
+                for hazards, contains in states:
+                    self._check_return(ctx, stmt, hazards, contains,
+                                       findings)
+            elif isinstance(stmt, ast.If):
+                forked = []
+                for hazards, contains in states:
+                    forked += self._walk_block(
+                        ctx, stmt.body,
+                        [(dict(hazards), dict(contains))], findings)
+                    forked += self._walk_block(
+                        ctx, stmt.orelse,
+                        [(dict(hazards), dict(contains))], findings)
+                states = self._dedupe(forked)
+            elif isinstance(stmt, (ast.For, ast.While)):
+                states = self._walk_block(ctx, stmt.body, states,
+                                          findings)
+                states = self._walk_block(ctx, stmt.orelse, states,
+                                          findings)
+            elif isinstance(stmt, ast.With):
+                states = self._walk_block(ctx, stmt.body, states,
+                                          findings)
+            elif isinstance(stmt, ast.Try):
+                states = self._walk_block(ctx, stmt.body, states,
+                                          findings)
+                for handler in stmt.handlers:
+                    self._walk_block(
+                        ctx, handler.body,
+                        [(dict(h), dict(c)) for h, c in states],
+                        findings)
+                states = self._walk_block(ctx, stmt.finalbody, states,
+                                          findings)
+        return states
+
+    def _assign(self, ctx: FileContext, stmt: ast.Assign,
+                hazards: Dict[str, Set[str]],
+                contains: Dict[str, Set[str]],
+                findings: List[Finding]) -> None:
+        prime = self._priming(ctx, stmt)
+        if prime is not None:
+            buf, src = prime
+            hazards[buf] = src
+            contains.pop(buf, None)
+            return
+        tgts: List[ast.expr] = []
+        for t in stmt.targets:
+            tgts.extend(t.elts if isinstance(t, ast.Tuple) else [t])
+        # attribute-store escape: self.x = <expr using buf>
+        for t in tgts:
+            if isinstance(t, ast.Attribute):
+                used = _names(stmt.value) & set(hazards)
+                if used and not _has_copy_call(ctx, stmt.value):
+                    findings.append(ctx.finding(
+                        self, stmt,
+                        f"start_round/overlap_flush buffer "
+                        f"{sorted(used)[0]!r} stored without "
+                        f"jnp.copy — it aliases the params and "
+                        f"both are donated on the next step; "
+                        f"re-bind via jax.tree.map(jnp.copy, "
+                        f"...) first ({self.design_ref})"))
+        for t in tgts:
+            if isinstance(t, ast.Name):
+                # rebind: a copy rebind sanitizes; any other
+                # rebind replaces the binding entirely
+                hazards.pop(t.id, None)
+                contains[t.id] = _contained_names(stmt.value)
+
+    def _check_return(self, ctx: FileContext, stmt: ast.Return,
+                      hazards: Dict[str, Set[str]],
+                      contains: Dict[str, Set[str]],
+                      findings: List[Finding]) -> None:
+        ret = self._closure(_contained_names(stmt.value), contains)
+        for buf, src in hazards.items():
+            if buf in ret and (src & ret):
+                findings.append(ctx.finding(
+                    self, stmt,
+                    f"buffer {buf!r} (aliases "
+                    f"{sorted(src & ret)[0]!r}) returned "
+                    f"un-copied: donating both hands XLA the "
+                    f"same buffer twice; re-bind via "
+                    f"jax.tree.map(jnp.copy, {buf}) before "
+                    f"returning ({self.design_ref})"))
+
+    def _dedupe(self, states):
+        """Collapse identical path states (arms that never touch a
+        tracked name fork into equal states) and cap the population."""
+        out, keys = [], set()
+        for hazards, contains in states:
+            key = (
+                frozenset((k, frozenset(v))
+                          for k, v in hazards.items()),
+                frozenset((k, frozenset(v))
+                          for k, v in contains.items() if v),
+            )
+            if key not in keys:
+                keys.add(key)
+                out.append((hazards, contains))
+        if len(out) > self.MAX_STATES:
+            # conservative merge of the overflow into one state so no
+            # hazard is dropped
+            head, tail = out[:self.MAX_STATES - 1], out[self.MAX_STATES - 1:]
+            mh: Dict[str, Set[str]] = {}
+            mc: Dict[str, Set[str]] = {}
+            for hazards, contains in tail:
+                for k, v in hazards.items():
+                    mh.setdefault(k, set()).update(v)
+                for k, v in contains.items():
+                    mc.setdefault(k, set()).update(v)
+            out = head + [(mh, mc)]
+        return out
+
+    @staticmethod
+    def _closure(names: Set[str], contains: Dict[str, Set[str]]
+                 ) -> Set[str]:
+        out, frontier = set(names), list(names)
+        while frontier:
+            n = frontier.pop()
+            for m in contains.get(n, ()):
+                if m not in out:
+                    out.add(m)
+                    frontier.append(m)
+        return out
+
+    # ------------------------------------------------------------------
+    # donated-callsite reuse
+    # ------------------------------------------------------------------
+    def _check_donated_reuse(self, ctx: FileContext,
+                             fn: ast.FunctionDef) -> Iterator[Finding]:
+        donating: Dict[str, List[int]] = {}
+        for stmt in ast.walk(fn):
+            if isinstance(stmt, ast.Assign) \
+                    and isinstance(stmt.value, ast.Call) \
+                    and ctx.resolve(stmt.value.func) == "jax.jit":
+                nums = self._donate_argnums(stmt.value)
+                t = stmt.targets[0]
+                if nums and isinstance(t, ast.Name):
+                    donating[t.id] = nums
+        if donating:
+            yield from self._scan_block(ctx, fn.body, donating)
+
+    @staticmethod
+    def _donate_argnums(call: ast.Call) -> List[int]:
+        for kw in call.keywords:
+            if kw.arg == "donate_argnums":
+                v = kw.value
+                if isinstance(v, ast.Constant) and isinstance(v.value, int):
+                    return [v.value]
+                if isinstance(v, (ast.Tuple, ast.List)):
+                    return [e.value for e in v.elts
+                            if isinstance(e, ast.Constant)
+                            and isinstance(e.value, int)]
+        return []
+
+    def _scan_block(self, ctx: FileContext, stmts: List[ast.stmt],
+                    donating: Dict[str, List[int]]) -> Iterator[Finding]:
+        dead: Set[str] = set()
+        for stmt in stmts:
+            rebound: Set[str] = set()
+            if isinstance(stmt, ast.Assign):
+                for t in stmt.targets:
+                    rebound |= {e.id for e in
+                                (t.elts if isinstance(t, ast.Tuple)
+                                 else [t]) if isinstance(e, ast.Name)}
+            elif isinstance(stmt, ast.For) and \
+                    isinstance(stmt.target, ast.Name):
+                rebound.add(stmt.target.id)
+            read = {n.id for n in ast.walk(stmt)
+                    if isinstance(n, ast.Name)
+                    and isinstance(n.ctx, ast.Load)}
+            for name in sorted(read & dead - rebound):
+                yield ctx.finding(
+                    self, stmt,
+                    f"{name!r} was donated to a jax.jit call above "
+                    f"(donate_argnums) and read again without being "
+                    f"rebound — the buffer may already be reused by "
+                    f"XLA ({self.design_ref})")
+                dead.discard(name)      # report once per donation
+            for n in ast.walk(stmt):
+                if isinstance(n, ast.Call) and \
+                        isinstance(n.func, ast.Name) and \
+                        n.func.id in donating:
+                    for i in donating[n.func.id]:
+                        if i < len(n.args) and \
+                                isinstance(n.args[i], ast.Name):
+                            dead.add(n.args[i].id)
+            dead -= rebound
+            if isinstance(stmt, (ast.For, ast.While, ast.If, ast.With)):
+                yield from self._scan_block(ctx, stmt.body, donating)
+                yield from self._scan_block(
+                    ctx, getattr(stmt, "orelse", []), donating)

@@ -1,0 +1,102 @@
+"""RPR001 — no host syncs inside registered hot paths.
+
+Invariant (DESIGN.md §2.7, established by PR 8): the Trainer hot loop,
+the train-step builders, the mixing rounds, the kernels, and the serving
+decode loop perform **zero implicit host synchronizations** — device
+scalars queue in the monitor window and materialize through the one
+sanctioned batched fetch (``Telemetry.fetch``) at log boundaries.  The
+historical regression this rule replays: the pre-PR-8 Trainer called
+``float(metrics["loss"])`` every step, serializing the dispatch pipeline
+and hiding a per-step device→host transfer that the transfer-guard test
+now also pins at runtime (the static and dynamic guard check the same
+invariant from both sides).
+
+Flagged calls: ``float(...)``, ``.item()``, ``np.asarray(...)`` /
+``np.array(...)``, ``jax.device_get(...)``, and ``block_until_ready``
+(method or ``jax.block_until_ready``) — inside the registered
+(module, function) scopes below.  Code outside the registry (e.g. the
+log-boundary ``Trainer._log_boundary``, which operates on already
+fetched host values, or the ``repro.obs`` internals that implement the
+sanctioned fetch) is not scanned.  A deliberate, explicit transfer in a
+hot scope carries ``# repro: allow(RPR001)`` with its justification.
+"""
+from __future__ import annotations
+
+import ast
+import fnmatch
+from typing import Iterator, Tuple
+
+from repro.analysis.engine import (FileContext, Finding, Rule, register)
+
+# (path glob, function-qualname globs) — the sanctioned hot-path registry.
+# "*" registers the whole module (every function and module level).
+HOT_PATHS: Tuple[Tuple[str, Tuple[str, ...]], ...] = (
+    ("src/repro/train/step.py", ("*",)),
+    ("src/repro/train/trainer.py", ("Trainer.run", "Trainer._run")),
+    ("src/repro/core/mixing.py", ("*",)),
+    ("src/repro/kernels/*.py", ("*",)),
+    ("src/repro/serve/engine.py",
+     ("Engine.generate", "Engine.decode_step", "Engine.prefill",
+      "BatchedServer.run")),
+)
+
+_SYNC_FQ = {
+    "numpy.asarray": "np.asarray materializes the operand on the host",
+    "numpy.array": "np.array materializes the operand on the host",
+    "jax.device_get": "jax.device_get is a blocking device->host transfer",
+    "jax.block_until_ready": "block_until_ready stalls the dispatch "
+                             "pipeline",
+}
+
+
+def hot_function_globs(path: str) -> Tuple[str, ...]:
+    globs: Tuple[str, ...] = ()
+    for pat, fns in HOT_PATHS:
+        if fnmatch.fnmatch(path, pat):
+            globs = globs + fns
+    return globs
+
+
+@register
+class HostSyncRule(Rule):
+    id = "RPR001"
+    title = "host sync inside a registered hot path"
+    design_ref = "DESIGN.md §2.7 (PR 8)"
+    path_globs = tuple(p for p, _ in HOT_PATHS)
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        fn_globs = hot_function_globs(ctx.path)
+        if not fn_globs:
+            return
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            qual = ctx.qualname(node)
+            if not any(fnmatch.fnmatch(qual, g) or g == "*"
+                       for g in fn_globs):
+                continue
+            why = self._sync_reason(ctx, node)
+            if why is not None:
+                yield ctx.finding(
+                    self, node,
+                    f"{why} — hot paths must stay host-sync-free; queue "
+                    f"device values and drain them through the batched "
+                    f"Telemetry.fetch at a log boundary "
+                    f"({self.design_ref})")
+
+    def _sync_reason(self, ctx: FileContext, node: ast.Call):
+        func = node.func
+        if isinstance(func, ast.Name) and func.id == "float" \
+                and len(node.args) == 1 \
+                and not isinstance(node.args[0], ast.Constant):
+            return "float() forces a device->host sync on a jax value"
+        if isinstance(func, ast.Attribute):
+            if func.attr == "item" and not node.args:
+                return ".item() forces a device->host sync"
+            if func.attr == "block_until_ready":
+                return ("block_until_ready stalls the dispatch "
+                        "pipeline")
+        fq = ctx.resolve(func)
+        if fq in _SYNC_FQ:
+            return _SYNC_FQ[fq]
+        return None

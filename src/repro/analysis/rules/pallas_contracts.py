@@ -1,0 +1,209 @@
+"""RPR006 — ``pl.pallas_call`` contract checks.
+
+Invariant (DESIGN.md §2.1/§6, established by PR 1–2): every Pallas
+kernel invocation states its output contract explicitly —
+``out_shape`` with an explicit dtype (``jax.ShapeDtypeStruct(shape,
+dtype)``), ``input_output_aliases`` indices that actually exist (the
+zero-copy staging-buffer aliasing PR 2 added is silently dropped by XLA
+when an index is wrong — the kernel still runs, just slower and with a
+second allocation, which is why a lint has to catch it), and a
+``grid`` whose rank agrees with every ``BlockSpec`` index map (a rank
+mismatch is a Mosaic error on TPU but can pass silently in CPU
+interpret mode, i.e. in exactly the environment the tier-1 suite runs).
+
+Checks (literal-syntax best effort — dynamically built spec lists are
+checked where the literals are visible):
+
+* ``out_shape=`` present on every ``pl.pallas_call``;
+* ``jax.ShapeDtypeStruct(...)`` carries an explicit dtype;
+* ``input_output_aliases`` literal keys are ints, in range of the
+  operand count (when the call's operands are visible and not starred),
+  and values in range of the out_shape entry count (when literal);
+* every literal ``pl.BlockSpec(block_shape, index_map)`` in
+  ``in_specs``/``out_specs``: the index map's arity equals the grid
+  rank, and its returned index tuple has the block shape's rank.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, List, Optional
+
+from repro.analysis.engine import (FileContext, Finding, Rule, register)
+
+PALLAS_MODULES = ("jax.experimental.pallas",)
+
+
+def _is_pallas_file(ctx: FileContext) -> bool:
+    return any(v.startswith("jax.experimental.pallas")
+               for v in ctx.imports.values())
+
+
+def _grid_rank(call: ast.Call) -> Optional[int]:
+    for kw in call.keywords:
+        if kw.arg == "grid":
+            if isinstance(kw.value, (ast.Tuple, ast.List)):
+                return len(kw.value.elts)
+            if isinstance(kw.value, ast.Constant) \
+                    and isinstance(kw.value.value, int):
+                return 1
+    return None
+
+
+def _kwarg(call: ast.Call, name: str) -> Optional[ast.expr]:
+    for kw in call.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+@register
+class PallasContractRule(Rule):
+    id = "RPR006"
+    title = "pallas_call contract violation"
+    design_ref = "DESIGN.md §2.1/§6 (PR 1-2)"
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        if not _is_pallas_file(ctx):
+            return
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            fq = ctx.resolve(node.func)
+            if fq == "jax.ShapeDtypeStruct":
+                if len(node.args) < 2 and _kwarg(node, "dtype") is None:
+                    yield ctx.finding(
+                        self, node,
+                        "jax.ShapeDtypeStruct without an explicit dtype: "
+                        "the out_shape contract must pin the output "
+                        f"dtype ({self.design_ref})")
+            if fq != "jax.experimental.pallas.pallas_call":
+                continue
+            yield from self._check_pallas_call(ctx, node)
+
+    # ------------------------------------------------------------------
+    def _check_pallas_call(self, ctx: FileContext,
+                           call: ast.Call) -> Iterator[Finding]:
+        out_shape = _kwarg(call, "out_shape")
+        if out_shape is None:
+            yield ctx.finding(
+                self, call,
+                "pl.pallas_call without out_shape=: the output "
+                f"shape/dtype contract must be explicit "
+                f"({self.design_ref})")
+        n_out = self._count_entries(out_shape)
+        n_in = self._operand_count(ctx, call)
+        aliases = _kwarg(call, "input_output_aliases")
+        if isinstance(aliases, ast.Dict):
+            yield from self._check_aliases(ctx, aliases, n_in, n_out)
+        grid = _grid_rank(call)
+        if grid is not None:
+            for spec_kw in ("in_specs", "out_specs"):
+                specs = _kwarg(call, spec_kw)
+                if specs is None:
+                    continue
+                for bs in self._literal_blockspecs(ctx, specs):
+                    yield from self._check_blockspec(ctx, bs, grid)
+
+    @staticmethod
+    def _count_entries(out_shape: Optional[ast.expr]) -> Optional[int]:
+        if out_shape is None:
+            return None
+        if isinstance(out_shape, (ast.Tuple, ast.List)):
+            return len(out_shape.elts)
+        if isinstance(out_shape, ast.Call):
+            return 1
+        return None
+
+    def _operand_count(self, ctx: FileContext,
+                       call: ast.Call) -> Optional[int]:
+        """Number of operands when the pallas_call result is immediately
+        invoked with plain (non-starred) arguments."""
+        parent = ctx.parent(call)
+        if isinstance(parent, ast.Call) and parent.func is call:
+            if any(isinstance(a, ast.Starred) for a in parent.args):
+                return None
+            return len(parent.args)
+        return None
+
+    def _check_aliases(self, ctx: FileContext, aliases: ast.Dict,
+                       n_in: Optional[int], n_out: Optional[int]
+                       ) -> Iterator[Finding]:
+        for k, v in zip(aliases.keys, aliases.values):
+            if isinstance(k, ast.Constant):
+                if not isinstance(k.value, int):
+                    yield ctx.finding(
+                        self, k,
+                        f"input_output_aliases key {k.value!r} is not "
+                        f"an int operand index ({self.design_ref})")
+                    continue
+                if n_in is not None and not (0 <= k.value < n_in):
+                    yield ctx.finding(
+                        self, k,
+                        f"input_output_aliases key {k.value} out of "
+                        f"range for {n_in} operand(s): the zero-copy "
+                        f"aliasing is silently dropped "
+                        f"({self.design_ref})")
+            if isinstance(v, ast.Constant) and isinstance(v.value, int):
+                if n_out is not None and not (0 <= v.value < n_out):
+                    yield ctx.finding(
+                        self, v,
+                        f"input_output_aliases value {v.value} out of "
+                        f"range for {n_out} output(s) "
+                        f"({self.design_ref})")
+
+    # ------------------------------------------------------------------
+    def _literal_blockspecs(self, ctx: FileContext,
+                            specs: ast.expr) -> List[ast.Call]:
+        nodes = specs.elts if isinstance(specs, (ast.Tuple, ast.List)) \
+            else [specs]
+        out = []
+        for n in nodes:
+            if isinstance(n, ast.Call) and \
+                    (ctx.resolve(n.func) or "").endswith("BlockSpec"):
+                out.append(n)
+        return out
+
+    def _index_map_arity(self, ctx: FileContext,
+                         im: ast.expr) -> Optional[int]:
+        if isinstance(im, ast.Lambda):
+            a = im.args
+            return len(a.args) + len(a.posonlyargs)
+        if isinstance(im, ast.Name):
+            for node in ast.walk(ctx.tree):
+                if isinstance(node, ast.FunctionDef) \
+                        and node.name == im.id:
+                    a = node.args
+                    return len(a.args) + len(a.posonlyargs)
+        return None
+
+    @staticmethod
+    def _index_map_rank(im: ast.expr) -> Optional[int]:
+        """Length of the index tuple a literal lambda returns."""
+        if isinstance(im, ast.Lambda):
+            if isinstance(im.body, (ast.Tuple, ast.List)):
+                return len(im.body.elts)
+        return None
+
+    def _check_blockspec(self, ctx: FileContext, bs: ast.Call,
+                         grid: int) -> Iterator[Finding]:
+        shape = bs.args[0] if bs.args else _kwarg(bs, "block_shape")
+        im = bs.args[1] if len(bs.args) > 1 else _kwarg(bs, "index_map")
+        if im is None:
+            return
+        arity = self._index_map_arity(ctx, im)
+        if arity is not None and arity != grid:
+            yield ctx.finding(
+                self, bs,
+                f"BlockSpec index map takes {arity} argument(s) but the "
+                f"grid has rank {grid}: rank mismatch passes in CPU "
+                f"interpret mode and fails on Mosaic "
+                f"({self.design_ref})")
+        rank = self._index_map_rank(im)
+        if rank is not None and \
+                isinstance(shape, (ast.Tuple, ast.List)) and \
+                rank != len(shape.elts):
+            yield ctx.finding(
+                self, bs,
+                f"BlockSpec block shape has rank {len(shape.elts)} but "
+                f"its index map returns {rank} indices "
+                f"({self.design_ref})")

@@ -1,0 +1,73 @@
+"""RPR005 — only counter-hash randomness in device-code modules.
+
+Invariant (DESIGN.md §2.3, established by PR 3): randomness that
+participates in a communication round is a **pure function of
+(seed, step, leaf, column)** — the shared counter-hash that makes every
+node take the same stochastic-rounding decision, keeps a constant state
+an exact fixed point, and makes quantizer randomness bit-stable under
+resharding (PR 5).  Host-stateful generators (``np.random``, the
+``random`` module) inside device-code modules break all of that: their
+state advances per call, so replay ≠ live, nodes desynchronize, and a
+re-trace changes the trajectory.  Host-side schedule code is exempt by
+registry — ``core/faults.py`` deliberately uses a counter-*keyed*
+``np.random.Philox`` (pure function of (seed, step)) and ``data/``
+builds host batches.
+
+Flagged: any ``np.random.*`` attribute use, ``random.*`` call, or
+``from random import ...`` inside the registered device modules; use
+``jax.random`` with an explicit key, or the repro.compress counter-hash
+(``shared per-step randomness``), instead.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.analysis.engine import (FileContext, Finding, Rule, register)
+
+DEVICE_MODULES = (
+    "src/repro/core/mixing.py",
+    "src/repro/kernels/*.py",
+    "src/repro/compress/*.py",
+    "src/repro/train/step.py",
+)
+
+
+@register
+class RandomnessRule(Rule):
+    id = "RPR005"
+    title = "host-stateful randomness in device code"
+    design_ref = "DESIGN.md §2.3 (PR 3)"
+    path_globs = DEVICE_MODULES
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.ImportFrom) and node.module == "random":
+                yield ctx.finding(
+                    self, node,
+                    "stdlib `random` imported in a device-code module: "
+                    "device randomness must be the counter-hash (pure in "
+                    f"(seed, step, leaf, column)) ({self.design_ref})")
+            elif isinstance(node, ast.Attribute):
+                fq = ctx.resolve(node)
+                if fq is None:
+                    continue
+                # flag the base `np.random` attribute exactly once per
+                # use (nested attributes like np.random.default_rng
+                # contain it as a child node)
+                if fq == "numpy.random":
+                    yield ctx.finding(
+                        self, node,
+                        "np.random in a device-code module: np.random "
+                        "is host-stateful — nodes desynchronize and "
+                        "replay breaks; use jax.random with an explicit "
+                        "key or the repro.compress counter-hash "
+                        f"({self.design_ref})")
+                elif isinstance(node.value, ast.Name) \
+                        and node.value.id == "random" \
+                        and ctx.imports.get("random") == "random":
+                    yield ctx.finding(
+                        self, node,
+                        f"stdlib random.{node.attr} in a device-code "
+                        f"module: use the counter-hash or jax.random "
+                        f"instead ({self.design_ref})")

@@ -1,0 +1,175 @@
+"""RPR004 — recompile hazards: loop-varying values in static positions.
+
+Invariant (DESIGN.md §2.2/§2.5, established by PR 6): everything that
+varies at runtime is a **traced** jit operand.  The push-sum mixing
+matrix ``W`` is the canonical case — fault drops, rejoins, and per-step
+topology resampling change ``W`` every round, so it crosses the jit
+boundary as data; marking it static would recompile the step on every
+fault event (and silently, since jit caches by value).  The Trainer's
+compile cache is keyed host-side on the genuinely static knobs
+``(phase, shift, buf_shift)`` instead.
+
+Three checks:
+
+* a call to a ``jax.jit``-wrapped function inside a ``for``/``while``
+  loop passing a **loop-varying name** (the loop target, or a name
+  assigned in the loop body) in a ``static_argnums`` position or as a
+  ``static_argnames`` keyword — every iteration with a new value is a
+  fresh compile;
+* a ``dict``/``list``/``set`` literal in a static position — unhashable
+  static operands are a ``TypeError`` at trace time;
+* ``static_argnames`` naming a traced-W operand (``W``, ``active``) —
+  PR 6's contract is that fault patterns never recompile.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+from repro.analysis.engine import (FileContext, Finding, Rule, register)
+
+TRACED_OPERANDS = {"W", "active"}
+
+
+def _static_spec(call: ast.Call) -> Tuple[List[int], List[str]]:
+    """Literal static_argnums / static_argnames of a jit(...) call."""
+    nums: List[int] = []
+    names: List[str] = []
+    for kw in call.keywords:
+        if kw.arg == "static_argnums":
+            v = kw.value
+            if isinstance(v, ast.Constant) and isinstance(v.value, int):
+                nums.append(v.value)
+            elif isinstance(v, (ast.Tuple, ast.List)):
+                nums.extend(e.value for e in v.elts
+                            if isinstance(e, ast.Constant)
+                            and isinstance(e.value, int))
+        elif kw.arg == "static_argnames":
+            v = kw.value
+            if isinstance(v, ast.Constant) and isinstance(v.value, str):
+                names.append(v.value)
+            elif isinstance(v, (ast.Tuple, ast.List)):
+                names.extend(e.value for e in v.elts
+                             if isinstance(e, ast.Constant)
+                             and isinstance(e.value, str))
+    return nums, names
+
+
+def _jit_call(ctx: FileContext, node: ast.Call) -> Optional[ast.Call]:
+    """Return the jit(...) call if ``node`` is ``jax.jit(...)`` or
+    ``functools.partial(jax.jit, ...)``."""
+    fq = ctx.resolve(node.func)
+    if fq == "jax.jit":
+        return node
+    if fq == "functools.partial" and node.args \
+            and ctx.resolve(node.args[0]) == "jax.jit":
+        return node
+    return None
+
+
+@register
+class RecompileRule(Rule):
+    id = "RPR004"
+    title = "recompile hazard in a static jit position"
+    design_ref = "DESIGN.md §2.2/§2.5 (PR 6)"
+
+    def check(self, ctx: FileContext) -> Iterator[Finding]:
+        jitted = self._collect_jitted(ctx)
+        yield from self._check_traced_w(ctx)
+        for loop in ast.walk(ctx.tree):
+            if not isinstance(loop, (ast.For, ast.While)):
+                continue
+            varying = self._loop_varying(loop)
+            for call in ast.walk(loop):
+                if not isinstance(call, ast.Call) \
+                        or not isinstance(call.func, ast.Name):
+                    continue
+                spec = jitted.get(call.func.id)
+                if spec is None:
+                    continue
+                nums, names = spec
+                yield from self._check_call(ctx, call, nums, names,
+                                            varying)
+
+    # ------------------------------------------------------------------
+    def _collect_jitted(self, ctx: FileContext
+                        ) -> Dict[str, Tuple[List[int], List[str]]]:
+        """name -> (static_argnums, static_argnames) for jit-wrapped
+        assignments and decorated defs."""
+        out: Dict[str, Tuple[List[int], List[str]]] = {}
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Assign) \
+                    and isinstance(node.value, ast.Call):
+                jc = _jit_call(ctx, node.value)
+                t = node.targets[0]
+                if jc is not None and isinstance(t, ast.Name):
+                    spec = _static_spec(jc)
+                    if spec[0] or spec[1]:
+                        out[t.id] = spec
+            elif isinstance(node, (ast.FunctionDef,
+                                   ast.AsyncFunctionDef)):
+                for dec in node.decorator_list:
+                    if isinstance(dec, ast.Call):
+                        jc = _jit_call(ctx, dec)
+                        if jc is not None:
+                            spec = _static_spec(jc)
+                            if spec[0] or spec[1]:
+                                out[node.name] = spec
+        return out
+
+    @staticmethod
+    def _loop_varying(loop: ast.AST) -> Set[str]:
+        varying: Set[str] = set()
+        if isinstance(loop, ast.For):
+            varying |= {n.id for n in ast.walk(loop.target)
+                        if isinstance(n, ast.Name)}
+        for node in ast.walk(loop):
+            if isinstance(node, ast.Assign):
+                for t in node.targets:
+                    varying |= {n.id for n in ast.walk(t)
+                                if isinstance(n, ast.Name)}
+            elif isinstance(node, ast.AugAssign) \
+                    and isinstance(node.target, ast.Name):
+                varying.add(node.target.id)
+        return varying
+
+    def _check_call(self, ctx: FileContext, call: ast.Call,
+                    nums: List[int], names: List[str],
+                    varying: Set[str]) -> Iterator[Finding]:
+        slots = [(f"position {i}", call.args[i]) for i in nums
+                 if i < len(call.args)]
+        slots += [(f"keyword {kw.arg!r}", kw.value)
+                  for kw in call.keywords if kw.arg in names]
+        # findings anchor at the call so one `# repro: allow(RPR004)` on
+        # the call line covers every static slot of that call
+        for where, val in slots:
+            if isinstance(val, (ast.Dict, ast.List, ast.Set)):
+                yield ctx.finding(
+                    self, call,
+                    f"unhashable literal in static {where}: static jit "
+                    f"operands must be hashable — pass it traced or as "
+                    f"a frozen/tuple value ({self.design_ref})")
+            elif isinstance(val, ast.Name) and val.id in varying:
+                yield ctx.finding(
+                    self, call,
+                    f"loop-varying {val.id!r} flows into static {where} "
+                    f"of a jitted call: every new value is a silent "
+                    f"recompile — make it a traced operand, or key a "
+                    f"host-side compile cache on it like "
+                    f"Trainer._get_step_fn ({self.design_ref})")
+
+    def _check_traced_w(self, ctx: FileContext) -> Iterator[Finding]:
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Call) \
+                    and _jit_call(ctx, node) is not None:
+                _nums, names = _static_spec(
+                    node if ctx.resolve(node.func) == "jax.jit"
+                    else node)
+                for w in sorted(TRACED_OPERANDS & set(names)):
+                    yield ctx.finding(
+                        self, node,
+                        f"static_argnames marks {w!r} static: the "
+                        f"push-sum round's W/active are runtime "
+                        f"operands by contract — faults and topology "
+                        f"resampling must never recompile "
+                        f"({self.design_ref})")

@@ -189,8 +189,8 @@ def decompress_tree(comp: Compressor, wires, like: PyTree) -> PyTree:
     leaves keep 2-D row-block shape (the mixing algebra consumes them
     flattened)."""
     leaves, treedef = jax.tree.flatten(like)
-    out = [comp.decompress_leaf(w, int(np.prod(l.shape[1:], dtype=np.int64)))
-           for w, l in zip(wires, leaves)]
+    out = [comp.decompress_leaf(w, int(np.prod(lf.shape[1:], dtype=np.int64)))
+           for w, lf in zip(wires, leaves)]
     return jax.tree.unflatten(treedef, out)
 
 
@@ -201,7 +201,7 @@ def apply_tree(comp: Compressor, x: PyTree, ef: Optional[PyTree],
     the reference path's one-call compress→decompress."""
     wires, new_ef = compress_tree(comp, x, ef, seed)
     q2 = decompress_tree(comp, wires, x)
-    q = jax.tree.map(lambda l, q_: q_.reshape(l.shape[0], *l.shape[1:]),
+    q = jax.tree.map(lambda lf, q_: q_.reshape(lf.shape[0], *lf.shape[1:]),
                      x, q2)
     return q, new_ef
 
@@ -214,6 +214,6 @@ def init_ef_state(params: PyTree) -> PyTree:
 
 def tree_wire_bytes(comp: Compressor, x: PyTree) -> int:
     """Analytic bytes-on-wire for one compressed broadcast of ``x``."""
-    return sum(comp.wire_bytes(l.shape[0],
-                               int(np.prod(l.shape[1:], dtype=np.int64)))
-               for l in jax.tree.leaves(x))
+    return sum(comp.wire_bytes(lf.shape[0],
+                               int(np.prod(lf.shape[1:], dtype=np.int64)))
+               for lf in jax.tree.leaves(x))

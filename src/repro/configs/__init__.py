@@ -1,4 +1,4 @@
-"""Config registry: ``--arch <id>`` resolution for launchers, tests, benches."""
+"""Config registry: ``--arch <id>`` resolution for launchers and tests."""
 from __future__ import annotations
 
 import importlib
@@ -6,17 +6,17 @@ from typing import Callable, Dict
 
 from repro.configs.base import (  # noqa: F401 (public re-exports)
     ALGORITHMS,
+    INPUT_SHAPES,
+    TOPOLOGIES,
     AudioStubConfig,
     DataConfig,
     DistConfig,
-    INPUT_SHAPES,
     InputShape,
     MLAConfig,
-    MoEConfig,
     ModelConfig,
+    MoEConfig,
     OptimizerConfig,
     SSMConfig,
-    TOPOLOGIES,
     TrainConfig,
     VisionStubConfig,
 )
@@ -43,7 +43,8 @@ ASSIGNED_ARCHS = tuple(list(_ARCH_MODULES)[:10])
 
 def _module(arch: str):
     if arch not in _ARCH_MODULES:
-        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_ARCH_MODULES)}")
+        raise KeyError(
+            f"unknown arch {arch!r}; known: {sorted(_ARCH_MODULES)}")
     return importlib.import_module(f"repro.configs.{_ARCH_MODULES[arch]}")
 
 
@@ -52,7 +53,8 @@ def get_model_config(arch: str, *, reduced: bool = False,
     mod = _module(arch)
     if long_context and hasattr(mod, "long_context_config"):
         return mod.long_context_config()
-    fn: Callable[[], ModelConfig] = mod.reduced_config if reduced else mod.full_config
+    fn: Callable[[], ModelConfig] = (mod.reduced_config if reduced
+                                     else mod.full_config)
     return fn()
 
 

@@ -58,7 +58,8 @@ class SSMConfig:
     mlstm_head_dim: int = 128        # mLSTM matrix-memory head dim (qk dim)
     mlstm_expand: int = 2            # mLSTM up-projection factor
     slstm_heads: int = 4
-    mlstm_chunk: int = 64            # chunkwise-parallel chunk length (TPU tiling)
+    mlstm_chunk: int = 64            # chunkwise-parallel chunk length
+                                     # (TPU tiling)
     scan_dtype: str = "float32"      # recurrence accumulation dtype
                                      # ("bfloat16" halves scan-state traffic)
     use_pallas_mlstm: bool = False   # TPU: repro.kernels.mlstm_chunk kernel
@@ -117,7 +118,8 @@ class ModelConfig:
     # ---- derived -----------------------------------------------------
     @property
     def resolved_head_dim(self) -> int:
-        return self.head_dim if self.head_dim is not None else self.d_model // self.n_heads
+        return (self.head_dim if self.head_dim is not None
+                else self.d_model // self.n_heads)
 
     @property
     def layers(self) -> Tuple[BlockSpec, ...]:
@@ -126,7 +128,8 @@ class ModelConfig:
         if body < 0 or (len(self.pattern) and body % len(self.pattern) != 0):
             raise ValueError(
                 f"{self.name}: n_layers={self.n_layers} incompatible with "
-                f"prefix={len(self.prefix_pattern)} pattern={len(self.pattern)}")
+                f"prefix={len(self.prefix_pattern)} "
+                f"pattern={len(self.pattern)}")
         reps = body // len(self.pattern)
         return self.prefix_pattern + self.pattern * reps
 
@@ -182,10 +185,14 @@ PUSH_SUM_ALGORITHMS = ("parallel", "local", "gossip", "gossip_pga",
 @dataclass(frozen=True)
 class DistConfig:
     algorithm: str = "gossip_pga"
-    topology: str = "one_peer_exp"   # paper's deep-learning default (Assran et al.)
-    H: int = 6                       # global averaging period (paper's ImageNet/BERT value)
-    node_axis: str = "data"          # "data": nodes along data axis (paper-faithful)
-                                     # "pod":  hierarchical — nodes are pods, FSDP within
+    topology: str = "one_peer_exp"   # paper's deep-learning default
+                                     # (Assran et al.)
+    H: int = 6                       # global averaging period
+                                     # (paper's ImageNet/BERT value)
+    node_axis: str = "data"          # "data": nodes along data axis
+                                     # (paper-faithful); "pod":
+                                     # hierarchical — nodes are pods,
+                                     # FSDP within
     # SlowMo (Wang et al. 2019) — Gossip-PGA == SlowMo(beta=0, alpha=1)
     slowmo_beta: float = 0.0
     slowmo_lr: float = 1.0
@@ -194,7 +201,8 @@ class DistConfig:
     n_pods: int = 2
     # Gossip-AGA (paper Alg. 2)
     aga_h_init: int = 4
-    aga_warmup: int = 64             # K_w warmup iterations for F_init running avg
+    aga_warmup: int = 64             # K_w warmup iterations for
+                                     # F_init running avg
     aga_h_max: int = 64              # Corollary 1 requires bounded H
     # Mesh / sharding
     data_axis: str = "data"
@@ -261,10 +269,15 @@ class DistConfig:
                                      # mixing.start_round/finish_round);
                                      # global/pod_avg rounds stay
                                      # synchronous and flush the buffer
-    remat: str = "block"             # "none" | "block": jax.checkpoint each scanned block
-    remat_policy: str = "nothing"    # "nothing" | "dots" (checkpoint_dots) — perf knob
-    serve_param_sharding: str = "tp" # "tp" (model axis) | "2d" (data+model, big archs)
-    fsdp: bool = False               # shard params over data axis too (node_axis="pod")
+    remat: str = "block"             # "none" | "block":
+                                     # jax.checkpoint each scanned
+                                     # block
+    remat_policy: str = "nothing"    # "nothing" | "dots"
+                                     # (checkpoint_dots) — perf knob
+    serve_param_sharding: str = "tp" # "tp" (model axis) | "2d"
+                                     # (data+model, big archs)
+    fsdp: bool = False               # shard params over data axis
+                                     # too (node_axis="pod")
 
     def validate(self) -> "DistConfig":
         if self.algorithm not in ALGORITHMS:
@@ -393,9 +406,11 @@ class OptimizerConfig:
     b2: float = 0.999
     eps: float = 1e-8
     grad_clip: Optional[float] = 1.0
-    schedule: str = "warmup_cosine"  # constant | warmup_cosine | warmup_poly | step
+    schedule: str = "warmup_cosine"  # constant | warmup_cosine |
+                                     # warmup_poly | step
     warmup_steps: int = 100
-    decay_steps: Tuple[int, ...] = ()   # for "step" schedule (paper: 30/60/90 epochs)
+    decay_steps: Tuple[int, ...] = ()   # for "step" schedule (paper:
+                                        # 30/60/90 epochs)
     decay_factor: float = 0.1
     total_steps: int = 1000
     min_lr_ratio: float = 0.0

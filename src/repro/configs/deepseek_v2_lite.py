@@ -10,7 +10,7 @@ DeepSeek-V2-**Lite** card specifies 64 routed + 2 shared experts (160 routed is
 the 236B DeepSeek-V2).  We follow the -Lite card (and the assignment's own
 "64e top-6"), recorded in DESIGN.md §Arch-applicability.
 """
-from repro.configs.base import MLAConfig, MoEConfig, ModelConfig
+from repro.configs.base import MLAConfig, ModelConfig, MoEConfig
 
 CITATION = "arXiv:2405.04434 (DeepSeek-V2 / -Lite)"
 

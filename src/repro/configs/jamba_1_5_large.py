@@ -1,16 +1,16 @@
-"""jamba-1.5-large-398b [hybrid] — Mamba + attention 1:7 interleave, MoE 16e top-2.
+"""jamba-1.5-large-398b [hybrid] — Mamba + attention 1:7, MoE 16e top-2.
 
 Source: Jamba [arXiv:2403.19887] / Jamba-1.5 [arXiv:2408.12570].
 72L d_model=8192 64H (GQA kv=8) d_ff=24576 vocab=65536, head_dim=128.
 Jamba block = 8 layers: attention at index 4, Mamba elsewhere; MoE replaces the
 MLP on every other layer (odd indices), 16 experts top-2.
 
-At 398B parameters this arch trains in hierarchical mode (dist.node_axis="pod"):
+At 398B parameters this arch trains hierarchically (node_axis="pod"):
 per-node parameter replicas at 16-way TP do not fit HBM; gossip runs across
 pods over DCI while parameters are FSDP+TP sharded within the pod — exactly the
 sparse-expensive-link regime the paper's PGA targets (DESIGN.md §4).
 """
-from repro.configs.base import MoEConfig, ModelConfig, SSMConfig
+from repro.configs.base import ModelConfig, MoEConfig, SSMConfig
 
 CITATION = "arXiv:2403.19887 (Jamba), arXiv:2408.12570 (Jamba-1.5)"
 
@@ -37,7 +37,8 @@ def full_config() -> ModelConfig:
         pattern=_JAMBA_BLOCK,
         moe=MoEConfig(n_routed=16, top_k=2, d_ff_expert=24576, n_shared=0),
         ssm=SSMConfig(d_state=16, d_conv=4, expand=2),
-        param_dtype="bfloat16",            # 398B: fp32 replicas are pointless at this scale
+        # 398B: fp32 replicas are pointless at this scale
+        param_dtype="bfloat16",
     ).validate()
 
 

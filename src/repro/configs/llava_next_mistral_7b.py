@@ -25,7 +25,8 @@ def full_config() -> ModelConfig:
         vocab_size=32_000,
         pattern=(("attn", "dense"),),
         rope_theta=1_000_000.0,
-        vision=VisionStubConfig(n_tiles=5, patches_per_tile=576, embed_dim=4096),
+        vision=VisionStubConfig(n_tiles=5, patches_per_tile=576,
+                                embed_dim=4096),
     ).validate()
 
 

@@ -4,7 +4,7 @@ Source: [hf:Qwen/Qwen3-30B-A3B].
 48L d_model=2048 32H (GQA kv=4) expert d_ff=768 vocab=151936, head_dim=128,
 qk_norm (Qwen3 family), every layer MoE, no shared experts.
 """
-from repro.configs.base import MoEConfig, ModelConfig
+from repro.configs.base import ModelConfig, MoEConfig
 
 CITATION = "hf:Qwen/Qwen3-30B-A3B"
 

@@ -18,9 +18,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.configs.base import DistConfig
 from repro.core import mixing, topology as topo
 from repro.core.schedule import CommSchedule, make_schedule
-from repro.configs.base import DistConfig
 
 PyTree = Any
 
@@ -73,7 +73,8 @@ class Decentralized:
                     axis: int = 0, backend: Optional[str] = None,
                     compressor=None, ef_state: Optional[PyTree] = None,
                     seed=0, global_compressor=None) -> PyTree:
-        if phase == "slowmo":  # parameter part only; momentum handled by caller
+        if phase == "slowmo":
+            # parameter part only; momentum handled by caller
             phase = "global"
         spec = self._spec.replace(compressor=compressor,
                                   global_compressor=global_compressor)
@@ -240,7 +241,10 @@ def simulate(
             return x2, buf2, ef2
         mixed, buf2, ef2 = mixing.overlap_flush(
             y, ov_spec, phase=phase, step=shift_step, ef_state=ef, seed=k)
-        return mixed, buf2, ef2
+        # the dense re-primed buffer aliases `mixed`; copy so returning
+        # both follows the PR-7 donation-safety convention (this jit is
+        # not donated, but the reference path mirrors the Trainer's)
+        return mixed, jax.tree.map(jnp.copy, buf2), ef2
 
     @functools.partial(jax.jit,
                        static_argnames=("phase", "shift_step",
@@ -357,6 +361,11 @@ def simulate(
                                              seed=k)
                 buf_shift = shift_step
         elif overlap:
+            # phase/shift/buf_shift cycle through a small bounded set, so
+            # jit's value cache compiles each combination exactly once —
+            # the production Trainer keys a host-side cache on the same
+            # tuple (DESIGN.md §2.5); this is not a per-step recompile
+            # repro: allow(RPR004)
             x, buf, ef = ov_step_fn(x, buf, ef, sub, k, gamma, phase=phase,
                                     shift_step=shift_step,
                                     buf_shift=buf_shift)

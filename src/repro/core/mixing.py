@@ -315,7 +315,8 @@ def use_sharded_backend(backend: str, mesh: Optional[jax.sharding.Mesh],
     if shard_mode == "sharded" and not sharded:
         raise ValueError("comm_shard_mode='sharded' requires a mesh whose "
                          "node axis spans more than one device (got "
-                         f"mesh={'None' if mesh is None else dict(mesh.shape)})")
+                         "mesh="
+                         f"{'None' if mesh is None else dict(mesh.shape)})")
     return sharded
 
 
@@ -347,7 +348,7 @@ def mix_array(x: jax.Array, weights: Dict[int, float], axis: int = 0,
 
 
 def mix_array_grid(x: jax.Array, n: int, axis: int = 0) -> jax.Array:
-    """Torus-grid mixing: factor the node axis into (r, c) and roll each dim."""
+    """Torus-grid mixing: factor node axis into (r, c), roll each dim."""
     r, c = topo.grid_shape(n)
     shape = x.shape
     xg = x.reshape(shape[:axis] + (r, c) + shape[axis + 1:])
@@ -1177,10 +1178,10 @@ def _sharded_wire_build(params: PyTree, *, compressor, ef_state, seed,
     from repro.compress.collective import pad_cols
 
     leaves = jax.tree.leaves(params)
-    sizes = [int(np.prod(l.shape[1:], dtype=np.int64)) for l in leaves]
+    sizes = [int(np.prod(lf.shape[1:], dtype=np.int64)) for lf in leaves]
     chunks = [-(-s // kmq) for s in sizes]
-    x2 = [pad_cols(l.reshape(n, -1).astype(jnp.float32), kmq)
-          for l in leaves]
+    x2 = [pad_cols(lf.reshape(n, -1).astype(jnp.float32), kmq)
+          for lf in leaves]
     ef_leaves = jax.tree.leaves(ef_state) if ef_state is not None else None
     e2 = None
     if ef_leaves is not None:
@@ -1191,8 +1192,8 @@ def _sharded_wire_build(params: PyTree, *, compressor, ef_state, seed,
     if ef_leaves is not None:
         new_ef = jax.tree.unflatten(
             jax.tree.structure(ef_state),
-            [e[:, :s].reshape(l.shape).astype(l.dtype)
-             for e, s, l in zip(new_e2, sizes, ef_leaves)])
+            [e[:, :s].reshape(lf.shape).astype(lf.dtype)
+             for e, s, lf in zip(new_e2, sizes, ef_leaves)])
     return wires, new_ef, chunks
 
 
@@ -1507,8 +1508,8 @@ def _overlap_finish_sharded_wire(params: PyTree, round_state,
     mnames, km = _model_names_count(mesh, spec.model_axis, names)
     kmq = km if (km > 1 and spec.compressor.name in ("int8", "fp8")) else 1
     mn = mnames if kmq > 1 else ()
-    sizes = [int(np.prod(l.shape[1:], dtype=np.int64))
-             for l in jax.tree.leaves(params)]
+    sizes = [int(np.prod(lf.shape[1:], dtype=np.int64))
+             for lf in jax.tree.leaves(params)]
     chunks = [-(-s // kmq) for s in sizes]
     wires = [compress_mod.LeafWire(payload=tuple(w["payload"]),
                                    aux=tuple(w["aux"]))
@@ -1753,7 +1754,8 @@ def communicate_push_sum(params: PyTree, weight: jax.Array, *,
             interpret=interpret, leaf_threshold=leaf_threshold)
     else:
         out = _mix_dense_reference(joint, W, n, comm_dtype=comm_dtype)
-    if compressor is not None:       # identity codec: exact path + EF pass-through
+    # identity codec: exact path + EF pass-through
+    if compressor is not None:
         return out["x"], out["w"], ef_state
     return out["x"], out["w"]
 

@@ -34,7 +34,8 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-ShiftWeights = Dict[int, float]          # shift (along flattened node axis) -> weight
+# shift (along flattened node axis) -> weight
+ShiftWeights = Dict[int, float]
 GridShiftWeights = Dict[Tuple[int, int], float]
 
 # every topology with a 1-D circulant shift decomposition (grid is the one
@@ -111,7 +112,7 @@ def grid_shape(n: int) -> Tuple[int, int]:
 
 
 def grid_shift_weights(n: int) -> GridShiftWeights:
-    """Torus grid: each node averages with 4 neighbors (|N_i|=5, paper §3.4)."""
+    """Torus grid: nodes average with 4 neighbors (|N_i|=5, paper §3.4)."""
     r, c = grid_shape(n)
     w = 1.0 / 5.0
     out: GridShiftWeights = {(0, 0): w}

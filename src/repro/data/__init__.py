@@ -1,2 +1,3 @@
-from repro.data.logistic import LogisticProblem, make_logistic_problem  # noqa: F401
+from repro.data.logistic import (LogisticProblem,  # noqa: F401
+                                 make_logistic_problem)
 from repro.data.synthetic import SyntheticStream, make_stream  # noqa: F401

@@ -76,7 +76,8 @@ class SyntheticStream:
                 (V, d)).astype(np.float32) / np.sqrt(d)
             frames = basis[targets] + 0.1 * rng.standard_normal(
                 (n, b, s, d)).astype(np.float32)
-            mask = rng.random((n, b, s)) < cfg.audio.mask_prob * cfg.audio.mask_span / 2
+            mask = (rng.random((n, b, s))
+                    < cfg.audio.mask_prob * cfg.audio.mask_span / 2)
             return {"frames": frames.astype(np.float32), "mask": mask,
                     "targets": targets}
         tokens = self._sample_tokens(rng, V)

@@ -10,10 +10,10 @@ Two families (DESIGN.md §6):
   single-pass kernels, selected via ``backend="pallas"`` on
   ``repro.core.mixing.communicate``.
 """
-from repro.kernels.ops import (flash_attention_op, mlstm_chunk_op,  # noqa: F401
-                               rmsnorm_op)
-from repro.kernels.ref import (flash_attention_ref, mlstm_chunk_ref,  # noqa: F401
-                               rmsnorm_ref)
 from repro.kernels.mixing_pallas import (fused_step_mix,  # noqa: F401
                                          global_average, mix_residual,
                                          pod_average)
+from repro.kernels.ops import (flash_attention_op,  # noqa: F401
+                               mlstm_chunk_op, rmsnorm_op)
+from repro.kernels.ref import (flash_attention_ref,  # noqa: F401
+                               mlstm_chunk_ref, rmsnorm_ref)

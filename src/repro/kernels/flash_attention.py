@@ -77,8 +77,8 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 
     @pl.when(ki == n_kv_blocks - 1)
     def _finalize():
-        l = l_scr[...]
-        safe_l = jnp.where(l > 0.0, l, 1.0)
+        lsum = l_scr[...]
+        safe_l = jnp.where(lsum > 0.0, lsum, 1.0)
         o_ref[0] = (acc_scr[...] / safe_l[:, None]).astype(o_ref.dtype)
 
 

@@ -124,7 +124,7 @@ def phase_matrices(phase: str, topology: str, n: int, step: int = 0,
 # ---------------------------------------------------------------------------
 def _pack_rows(leaves, n: int) -> jax.Array:
     """Concatenate leaves' non-node dims into one fp32 ``(n, D)`` matrix."""
-    cols = [l.reshape(n, -1).astype(jnp.float32) for l in leaves]
+    cols = [lf.reshape(n, -1).astype(jnp.float32) for lf in leaves]
     return cols[0] if len(cols) == 1 else jnp.concatenate(cols, axis=1)
 
 
@@ -140,8 +140,8 @@ def flatten_nodes(tree: PyTree) -> Tuple[jax.Array, Callable]:
     """
     leaves, treedef = jax.tree.flatten(tree)
     n = leaves[0].shape[0]
-    shapes = [l.shape for l in leaves]
-    dtypes = [l.dtype for l in leaves]
+    shapes = [lf.shape for lf in leaves]
+    dtypes = [lf.dtype for lf in leaves]
     sizes = [int(np.prod(s[1:], dtype=np.int64)) for s in shapes]
     flat = _pack_rows(leaves, n)
 
@@ -181,12 +181,12 @@ def flatten_nodes_sharded(tree: PyTree, k_model: int
         return flatten_nodes(tree)
     leaves, treedef = jax.tree.flatten(tree)
     n = leaves[0].shape[0]
-    shapes = [l.shape for l in leaves]
-    dtypes = [l.dtype for l in leaves]
+    shapes = [lf.shape for lf in leaves]
+    dtypes = [lf.dtype for lf in leaves]
     sizes = [int(np.prod(s[1:], dtype=np.int64)) for s in shapes]
     chunks = [-(-s // k_model) for s in sizes]       # per-shard leaf width
     width = sum(chunks)                              # columns per model shard
-    x2 = [l.reshape(n, -1).astype(jnp.float32) for l in leaves]
+    x2 = [lf.reshape(n, -1).astype(jnp.float32) for lf in leaves]
     x2 = [jnp.pad(x, ((0, 0), (0, c * k_model - s))) if c * k_model != s
           else x for x, c, s in zip(x2, chunks, sizes)]
     cols = [x[:, j * c:(j + 1) * c]
@@ -269,7 +269,9 @@ def _mix_flat(xf: jax.Array, gf: Optional[jax.Array],
             gf = jnp.pad(gf, ((0, 0), (0, pad)))
     Dp = D + pad
 
-    tile = lambda i: (0, i)
+    def tile(i):
+        return (0, i)
+
     in_specs, inputs = [], []
     if with_g:
         in_specs.append(pl.BlockSpec((1, 1), lambda i: (0, 0)))
@@ -321,7 +323,7 @@ def _dispatch_groups(leaves, threshold: int):
     leaf below ``threshold`` per-node elements (concatenated into the
     staging buffer), plus one single-leaf group per large leaf (dispatched
     on ``leaf.reshape(n, -1)`` directly — no staging copy)."""
-    sizes = [int(np.prod(l.shape[1:], dtype=np.int64)) for l in leaves]
+    sizes = [int(np.prod(lf.shape[1:], dtype=np.int64)) for lf in leaves]
     small = [i for i, s in enumerate(sizes) if s < threshold]
     big = [i for i, s in enumerate(sizes) if s >= threshold]
     groups = [small] if small else []
@@ -583,8 +585,12 @@ def _cmix_flat(xf: jax.Array, ef: Optional[jax.Array],
     Dp = D + pad
     quant = kind in ("int8", "fp8")
 
-    tile = lambda i: (0, i)
-    scalar = lambda i: (0, 0)
+    def tile(i):
+        return (0, i)
+
+    def scalar(i):
+        return (0, 0)
+
     in_specs, inputs = [], []
     if quant:
         in_specs.append(pl.BlockSpec((1, 1), scalar))
@@ -836,8 +842,12 @@ def _collective_flat(xf: jax.Array, ef: Optional[jax.Array],
     ef = ccol.pad_cols(ef, qblock)
     Dp = xf.shape[1]
 
-    tile = lambda i: (0, i)
-    scalar = lambda i: (0, 0)
+    def tile(i):
+        return (0, i)
+
+    def scalar(i):
+        return (0, 0)
+
     in_specs = [pl.BlockSpec((1, 1), scalar), pl.BlockSpec((1, 1), scalar),
                 pl.BlockSpec((n, qblock), tile)]
     inputs = [jnp.asarray(s1).astype(jnp.uint32).reshape(1, 1),
@@ -942,7 +952,9 @@ def shard_comp_mix_block(x: jax.Array, q_self: jax.Array, qs: jax.Array,
         qs = jnp.pad(qs, ((0, 0), (0, pad)))
     Dp = D + pad
 
-    tile = lambda i: (0, i)
+    def tile(i):
+        return (0, i)
+
     in_specs = [pl.BlockSpec((m, bd), tile),
                 pl.BlockSpec((m, bd), tile),
                 pl.BlockSpec((K, bd), tile),
@@ -1008,7 +1020,9 @@ def shard_mix_block(x: jax.Array, xs: jax.Array, d: jax.Array, M: jax.Array,
         xs = jnp.pad(xs, ((0, 0), (0, pad)))
     Dp = D + pad
 
-    tile = lambda i: (0, i)
+    def tile(i):
+        return (0, i)
+
     in_specs = [pl.BlockSpec((m, bd), tile),
                 pl.BlockSpec((K, bd), tile),
                 pl.BlockSpec((m, 1), lambda i: (0, 0)),

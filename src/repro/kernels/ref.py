@@ -1,4 +1,4 @@
-"""Pure-jnp oracles for every Pallas kernel (the contract tests sweep against)."""
+"""Pure-jnp oracles for every Pallas kernel (contract tests sweep)."""
 from __future__ import annotations
 
 import math
@@ -14,7 +14,7 @@ def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
                         causal: bool = True, window: Optional[int] = None,
                         softcap: Optional[float] = None,
                         scale: Optional[float] = None) -> jax.Array:
-    """q: (B,Sq,H,D); k,v: (B,Sk,KH,D) -> (B,Sq,H,D).  Dense softmax in fp32."""
+    """q: (B,Sq,H,D); k,v: (B,Sk,KH,D) -> (B,Sq,H,D); fp32 softmax."""
     B, Sq, H, D = q.shape
     _, Sk, KH, _ = k.shape
     group = H // KH

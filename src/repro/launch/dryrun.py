@@ -7,8 +7,10 @@ os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
 mesh) combination against the production mesh and record memory analysis,
 cost analysis, and the collective schedule for the roofline report.
 
-  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k
-  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh single --out results.json
+  PYTHONPATH=src python -m repro.launch.dryrun \
+      --arch qwen3-0.6b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun \
+      --all --mesh single --out results.json
 
 Train shapes lower BOTH communication phases ("gossip" = Gossip-SGD step with
 collective-permute mixing; "global" = the periodic All-Reduce averaging step);
@@ -29,8 +31,8 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.compress import round_wire_bytes
-from repro.configs import (ASSIGNED_ARCHS, DistConfig, INPUT_SHAPES,
-                           OptimizerConfig, TrainConfig, DataConfig,
+from repro.configs import (ASSIGNED_ARCHS, INPUT_SHAPES, DataConfig,
+                           DistConfig, OptimizerConfig, TrainConfig,
                            get_model_config)
 from repro.core.mixing import model_shard_count, use_sharded_backend
 from repro.launch.mesh import make_production_mesh, n_gossip_nodes
@@ -136,8 +138,8 @@ def dryrun_train(cfg, shape, mesh, *, dist: DistConfig, phases=("gossip",
         # analytic bytes-on-wire per node per round (DESIGN.md §2.3 cost
         # model): what the configured compressor/wire-dtype puts on the
         # ICI vs the uncompressed fp32 round
-        leaf_sizes = [int(np.prod(l.shape[1:], dtype=np.int64))
-                      for l in jax.tree.leaves(specs.state_sds.params)]
+        leaf_sizes = [int(np.prod(lf.shape[1:], dtype=np.int64))
+                      for lf in jax.tree.leaves(specs.state_sds.params)]
         per_node_params = sum(leaf_sizes)
         wb = round_wire_bytes(
             phase, dist.topology, specs.n_nodes, per_node_params,

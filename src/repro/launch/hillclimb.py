@@ -23,7 +23,7 @@ import dataclasses
 import json
 from typing import Any, Dict
 
-from repro.configs import DistConfig, INPUT_SHAPES, get_model_config
+from repro.configs import INPUT_SHAPES, DistConfig, get_model_config
 from repro.launch.dryrun import dryrun_serve, dryrun_train
 from repro.launch.mesh import make_production_mesh
 

@@ -4,7 +4,7 @@ os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
 """exp3 (qwen3-moe gossip communication) — gossip phase only: the global
 phase is identical across variants except for the mixing op, so lowering the
 gossip step per variant isolates exactly the quantity under test."""
-from repro.configs import DistConfig, INPUT_SHAPES, get_model_config
+from repro.configs import INPUT_SHAPES, DistConfig, get_model_config
 from repro.launch.dryrun import dryrun_train
 from repro.launch.hillclimb import OUT, record
 from repro.launch.mesh import make_production_mesh

@@ -5,7 +5,7 @@ os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
 interrupted after exp2/scan_bf16+remat_dots)."""
 import dataclasses
 
-from repro.configs import DistConfig, INPUT_SHAPES, get_model_config
+from repro.configs import INPUT_SHAPES, DistConfig, get_model_config
 from repro.launch.dryrun import dryrun_train
 from repro.launch.hillclimb import (OUT, exp3_qwen3moe_comm,
                                     exp4_jamba_microbatch, record)

@@ -18,8 +18,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.configs.base import (DistConfig, InputShape, ModelConfig,
-                                OptimizerConfig, TrainConfig, DataConfig)
+from repro.configs.base import (DataConfig, DistConfig, InputShape,
+                                ModelConfig, OptimizerConfig, TrainConfig)
 from repro.launch.mesh import n_gossip_nodes
 from repro.models import sharding as shd
 from repro.models.model import Model, make_model
@@ -28,7 +28,8 @@ from repro.train.state import (TrainState, stack_for_nodes, stacked_axes,
                                state_axes)
 
 PyTree = Any
-_IS_AXES = lambda x: isinstance(x, tuple)
+def _IS_AXES(x):
+    return isinstance(x, tuple)
 
 
 def _sds(shape, dtype) -> jax.ShapeDtypeStruct:

@@ -1,3 +1,3 @@
 """Model zoo: composable JAX definitions for all assigned architectures."""
-from repro.models.model import Model, make_model  # noqa: F401
 from repro.models import sharding  # noqa: F401
+from repro.models.model import Model, make_model  # noqa: F401

@@ -18,7 +18,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.models.layers import ParamBuilder, apply_rope, make_rope, rms_norm, softcap
+from repro.models.layers import (ParamBuilder, apply_rope, make_rope,
+                                 rms_norm, softcap)
 
 PyTree = Any
 NEG_INF = -2.3819763e38  # matches XLA's mask value
@@ -27,9 +28,11 @@ NEG_INF = -2.3819763e38  # matches XLA's mask value
 # ---------------------------------------------------------------------------
 # Init
 # ---------------------------------------------------------------------------
-def init_attention(key: jax.Array, cfg: ModelConfig, param_dtype) -> Tuple[PyTree, PyTree]:
+def init_attention(key: jax.Array, cfg: ModelConfig,
+                   param_dtype) -> Tuple[PyTree, PyTree]:
     b = ParamBuilder(key, param_dtype)
-    d, nh, nkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    d, nh, nkv, hd = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                      cfg.resolved_head_dim)
     if cfg.mla is not None:
         m = cfg.mla
         qd = m.nope_head_dim + m.rope_head_dim
@@ -37,8 +40,10 @@ def init_attention(key: jax.Array, cfg: ModelConfig, param_dtype) -> Tuple[PyTre
         b.add("w_dkv", (d, m.kv_lora_rank), ("embed", None))
         b.add("w_kr", (d, m.rope_head_dim), ("embed", None))
         b.add("kv_norm", (m.kv_lora_rank,), (None,), init="ones")
-        b.add("w_uk", (m.kv_lora_rank, nh, m.nope_head_dim), (None, "heads", None))
-        b.add("w_uv", (m.kv_lora_rank, nh, m.v_head_dim), (None, "heads", None))
+        b.add("w_uk", (m.kv_lora_rank, nh, m.nope_head_dim),
+              (None, "heads", None))
+        b.add("w_uv", (m.kv_lora_rank, nh, m.v_head_dim),
+              (None, "heads", None))
         b.add("w_o", (nh, m.v_head_dim, d), ("heads", None, "embed"))
         return b.params, b.axes
     b.add("w_q", (d, nh, hd), ("embed", "heads", None))
@@ -177,10 +182,11 @@ def attn_decode(params: PyTree, cfg: ModelConfig, x: jax.Array,
     B = x.shape[0]
     nh, nkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
     q, k_new, v_new = _project_qkv(params, cfg, x, pos[:, None])
-    k = jax.vmap(lambda c, u, p: jax.lax.dynamic_update_slice(c, u, (p, 0, 0)))(
-        cache["k"], k_new, pos)
-    v = jax.vmap(lambda c, u, p: jax.lax.dynamic_update_slice(c, u, (p, 0, 0)))(
-        cache["v"], v_new, pos)
+    def upd(c, u, p):
+        return jax.lax.dynamic_update_slice(c, u, (p, 0, 0))
+
+    k = jax.vmap(upd)(cache["k"], k_new, pos)
+    v = jax.vmap(upd)(cache["v"], v_new, pos)
     S_max = k.shape[1]
     g = nh // nkv
     qg = q.reshape(B, 1, nkv, g, hd)
@@ -206,13 +212,14 @@ def _mla_qkv(params, cfg: ModelConfig, x, positions):
     c_kv = x @ params["w_dkv"].astype(x.dtype)                     # (B,S,r)
     c_kv = rms_norm(c_kv, params["kv_norm"], cfg.norm_eps)
     k_rope = (x @ params["w_kr"].astype(x.dtype))[:, :, None, :]   # (B,S,1,rd)
-    k_rope = apply_rope(k_rope, cos, sin)[:, :, 0]                 # shared head
+    k_rope = apply_rope(k_rope, cos, sin)[:, :, 0]                # shared head
     return q_nope, q_rope, c_kv, k_rope
 
 
 def _mla_expand_kv(params, c_kv):
     """Up-project the compressed latent into per-head keys/values."""
-    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, params["w_uk"].astype(c_kv.dtype))
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv,
+                        params["w_uk"].astype(c_kv.dtype))
     v = jnp.einsum("bsr,rhk->bshk", c_kv, params["w_uv"].astype(c_kv.dtype))
     return k_nope, v
 
@@ -258,7 +265,8 @@ def _mla_attend_blocked(params, cfg: ModelConfig, q_nope, q_rope, c_kv,
         qni, qri, pi = qs
         mask = attention_mask(pi, k_pos, causal=causal, window=None)
         mask &= pi[..., :, None] >= 0
-        return None, _mla_scores(params, cfg, qni, qri, k_nope, k_rope, v, mask)
+        return None, _mla_scores(params, cfg, qni, qri, k_nope,
+                                 k_rope, v, mask)
 
     _, out = jax.lax.scan(one_chunk, None, (qn, qr, pc))
     out = out.swapaxes(0, 1).reshape(B, n_chunks * chunk, -1)
@@ -281,10 +289,11 @@ def _mla_forward(params, cfg: ModelConfig, x, *, positions, layer_kind):
 def _mla_decode(params, cfg: ModelConfig, x, cache, pos, *, layer_kind):
     B = x.shape[0]
     q_nope, q_rope, c_new, kr_new = _mla_qkv(params, cfg, x, pos[:, None])
-    c_kv = jax.vmap(lambda c, u, p: jax.lax.dynamic_update_slice(c, u, (p, 0)))(
-        cache["c_kv"], c_new, pos)
-    k_rope = jax.vmap(lambda c, u, p: jax.lax.dynamic_update_slice(c, u, (p, 0)))(
-        cache["k_rope"], kr_new, pos)
+    def upd(c, u, p):
+        return jax.lax.dynamic_update_slice(c, u, (p, 0))
+
+    c_kv = jax.vmap(upd)(cache["c_kv"], c_new, pos)
+    k_rope = jax.vmap(upd)(cache["k_rope"], kr_new, pos)
     S_max = c_kv.shape[1]
     k_pos = jnp.broadcast_to(jnp.arange(S_max)[None], (B, S_max))
     mask = attention_mask(pos[:, None], k_pos, causal=True, window=None)

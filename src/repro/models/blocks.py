@@ -78,17 +78,20 @@ def apply_block(params: PyTree, cfg: ModelConfig, kind: BlockSpec,
                                                positions=positions)
     elif mixer == "mamba":
         if mode == "decode":
-            out, new_cache = ssm_lib.mamba_decode(params["mixer"], cfg, h, cache)
+            out, new_cache = ssm_lib.mamba_decode(params["mixer"],
+                                                  cfg, h, cache)
         else:
             out, new_cache = ssm_lib.mamba_forward(params["mixer"], cfg, h)
     elif mixer == "mlstm":
         if mode == "decode":
-            out, new_cache = ssm_lib.mlstm_decode(params["mixer"], cfg, h, cache)
+            out, new_cache = ssm_lib.mlstm_decode(params["mixer"],
+                                                  cfg, h, cache)
         else:
             out, new_cache = ssm_lib.mlstm_forward(params["mixer"], cfg, h)
     elif mixer == "slstm":
         if mode == "decode":
-            out, new_cache = ssm_lib.slstm_decode(params["mixer"], cfg, h, cache)
+            out, new_cache = ssm_lib.slstm_decode(params["mixer"],
+                                                  cfg, h, cache)
         else:
             out, new_cache = ssm_lib.slstm_forward(params["mixer"], cfg, h)
     else:
@@ -249,15 +252,18 @@ def init_stack(key: jax.Array, cfg: ModelConfig, param_dtype
     return b.params, b.axes
 
 
-def init_stack_cache(cfg: ModelConfig, batch: int, s_max: int, dtype) -> PyTree:
+def init_stack_cache(cfg: ModelConfig, batch: int, s_max: int,
+                     dtype) -> PyTree:
     caches: Dict[str, Any] = {}
     for i, kind in enumerate(cfg.prefix_pattern):
-        caches[f"prefix_{i}"] = init_block_cache(cfg, kind, batch, s_max, dtype)
+        caches[f"prefix_{i}"] = init_block_cache(cfg, kind, batch,
+                                                 s_max, dtype)
     scan_c = {}
     for j, kind in enumerate(cfg.pattern):
         one = init_block_cache(cfg, kind, batch, s_max, dtype)
         scan_c[f"entry_{j}"] = jax.tree.map(
-            lambda t: jnp.broadcast_to(t[None], (cfg.n_scan_blocks,) + t.shape),
+            lambda t: jnp.broadcast_to(
+                t[None], (cfg.n_scan_blocks,) + t.shape),
             one)
     caches["scan"] = scan_c
     return caches
@@ -268,7 +274,9 @@ def stack_cache_axes(cfg: ModelConfig) -> PyTree:
     for i, kind in enumerate(cfg.prefix_pattern):
         axes[f"prefix_{i}"] = block_cache_axes(cfg, kind)
     scan_a = {}
-    is_axes = lambda t: isinstance(t, tuple)
+    def is_axes(t):
+        return isinstance(t, tuple)
+
     for j, kind in enumerate(cfg.pattern):
         one = block_cache_axes(cfg, kind)
         scan_a[f"entry_{j}"] = jax.tree.map(

@@ -52,11 +52,14 @@ class ParamBuilder:
             val = jnp.ones(shape, self.param_dtype)
         elif init == "normal":
             std = scale if scale is not None else 0.02
-            val = std * jax.random.normal(self._next_key(), shape, self.param_dtype)
+            val = std * jax.random.normal(self._next_key(), shape,
+                                          self.param_dtype)
         elif init == "fan_in":
             fan_in = shape[0] if len(shape) == 1 else math.prod(shape[:-1])
-            std = (scale if scale is not None else 1.0) / math.sqrt(max(fan_in, 1))
-            val = std * jax.random.normal(self._next_key(), shape, self.param_dtype)
+            std = ((scale if scale is not None else 1.0)
+                   / math.sqrt(max(fan_in, 1)))
+            val = std * jax.random.normal(self._next_key(), shape,
+                                          self.param_dtype)
         elif init == "constant":
             val = jnp.full(shape, scale, self.param_dtype)
         else:
@@ -145,7 +148,8 @@ def init_mlp(key: jax.Array, d_model: int, d_ff: int,
 
 
 def apply_mlp(params: PyTree, x: jax.Array, *, act=jax.nn.silu) -> jax.Array:
-    h = act(x @ params["w_gate"].astype(x.dtype)) * (x @ params["w_up"].astype(x.dtype))
+    h = (act(x @ params["w_gate"].astype(x.dtype))
+         * (x @ params["w_up"].astype(x.dtype)))
     return h @ params["w_down"].astype(x.dtype)
 
 
@@ -166,7 +170,8 @@ def embed_tokens(params: PyTree, tokens: jax.Array, dtype,
                  scale_by_dim: bool = False) -> jax.Array:
     emb = params["embedding"].astype(dtype)[tokens]
     if scale_by_dim:  # Gemma convention
-        emb = emb * jnp.asarray(math.sqrt(params["embedding"].shape[-1]), dtype)
+        emb = emb * jnp.asarray(
+            math.sqrt(params["embedding"].shape[-1]), dtype)
     return emb
 
 

@@ -150,7 +150,8 @@ class Model:
         if z_loss:
             zl = jnp.sum(
                 jax.scipy.special.logsumexp(
-                    logits.astype(jnp.float32), axis=-1) ** 2 * weights) / denom
+                    logits.astype(jnp.float32), axis=-1) ** 2
+                * weights) / denom
             total = total + z_loss * zl
             metrics["z_loss"] = zl
         metrics["loss"] = total

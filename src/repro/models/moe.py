@@ -31,7 +31,8 @@ PyTree = Any
 DEFAULT_CAPACITY_FACTOR = 1.25
 
 
-def init_moe(key: jax.Array, cfg: ModelConfig, param_dtype) -> Tuple[PyTree, PyTree]:
+def init_moe(key: jax.Array, cfg: ModelConfig,
+             param_dtype) -> Tuple[PyTree, PyTree]:
     m = cfg.moe
     d = cfg.d_model
     b = ParamBuilder(key, param_dtype)
@@ -81,7 +82,7 @@ def _build_dispatch(top_idx: jax.Array, top_w: jax.Array, n_experts: int,
     se, st, sw = flat_e[order], flat_t[order], flat_w[order]
     counts = jnp.bincount(flat_e, length=n_experts)
     starts = jnp.cumsum(counts) - counts                          # exclusive
-    slot = jnp.arange(flat_e.shape[0]) - starts[se]               # pos in expert
+    slot = jnp.arange(flat_e.shape[0]) - starts[se]             # pos in expert
     ok = slot < capacity
     # overflowed assignments are dropped (measured via drop_frac)
     e_idx = jnp.where(ok, se, 0)
@@ -119,7 +120,8 @@ def apply_moe(params: PyTree, cfg: ModelConfig, x: jax.Array,
     x_flat = x.reshape(T, d)
     x_pad = jnp.concatenate([x_flat, jnp.zeros((1, d), x.dtype)], axis=0)
     xe = x_pad[tok]                                               # (E,C,d)
-    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, params["w_gate"].astype(x.dtype)))
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe,
+                               params["w_gate"].astype(x.dtype)))
     h = h * jnp.einsum("ecd,edf->ecf", xe, params["w_up"].astype(x.dtype))
     ye = jnp.einsum("ecf,efd->ecd", h, params["w_down"].astype(x.dtype))
     ye = ye * w[..., None].astype(x.dtype)

@@ -19,7 +19,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 PyTree = Any
 
-_IS_AXES = lambda x: isinstance(x, tuple)
+def _IS_AXES(x):
+    return isinstance(x, tuple)
 
 
 def _rules(mode: str, mesh: Mesh) -> dict:
@@ -105,8 +106,9 @@ def specs_for(axes_tree: PyTree, mode: str, mesh: Mesh) -> PyTree:
 
 
 def shardings_for(axes_tree: PyTree, mode: str, mesh: Mesh) -> PyTree:
-    return jax.tree.map(lambda a: NamedSharding(mesh, logical_to_spec(a, mode, mesh)),
-                        axes_tree, is_leaf=_IS_AXES)
+    return jax.tree.map(
+        lambda a: NamedSharding(mesh, logical_to_spec(a, mode, mesh)),
+        axes_tree, is_leaf=_IS_AXES)
 
 
 def constrain(x: jax.Array, spec: P) -> jax.Array:

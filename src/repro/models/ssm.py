@@ -62,7 +62,8 @@ def _mamba_dims(cfg: ModelConfig) -> Tuple[int, int, int]:
     return d_inner, s.d_state, dt_rank
 
 
-def init_mamba(key: jax.Array, cfg: ModelConfig, param_dtype) -> Tuple[PyTree, PyTree]:
+def init_mamba(key: jax.Array, cfg: ModelConfig,
+               param_dtype) -> Tuple[PyTree, PyTree]:
     d = cfg.d_model
     di, N, R = _mamba_dims(cfg)
     s = cfg.ssm
@@ -115,9 +116,9 @@ def mamba_forward(params: PyTree, cfg: ModelConfig, x: jax.Array
     bu = ((dt.astype(jnp.float32) * x_conv.astype(jnp.float32))[..., None]
           * Bc.astype(jnp.float32)[..., None, :]).astype(sdt)    # (B,S,di,N)
 
-    def combine(l, r):
-        al, bl = l
-        ar, br = r
+    def combine(lhs, rhs):
+        al, bl = lhs
+        ar, br = rhs
         return al * ar, bl * ar + br
 
     _, h = jax.lax.associative_scan(combine, (a, bu), axis=1)
@@ -158,7 +159,8 @@ def mamba_decode(params: PyTree, cfg: ModelConfig, x: jax.Array,
     return out, {"conv": new_conv, "h": h.astype(x.dtype)}
 
 
-def init_mamba_state(cfg: ModelConfig, batch: int, dtype) -> Dict[str, jax.Array]:
+def init_mamba_state(cfg: ModelConfig, batch: int,
+                     dtype) -> Dict[str, jax.Array]:
     di, N, _ = _mamba_dims(cfg)
     return {"conv": jnp.zeros((batch, cfg.ssm.d_conv - 1, di), dtype),
             "h": jnp.zeros((batch, di, N), dtype)}
@@ -179,7 +181,8 @@ def _mlstm_dims(cfg: ModelConfig) -> Tuple[int, int, int]:
     return di, nh, s.mlstm_head_dim
 
 
-def init_mlstm(key: jax.Array, cfg: ModelConfig, param_dtype) -> Tuple[PyTree, PyTree]:
+def init_mlstm(key: jax.Array, cfg: ModelConfig,
+               param_dtype) -> Tuple[PyTree, PyTree]:
     d = cfg.d_model
     di, nh, dk = _mlstm_dims(cfg)
     b = ParamBuilder(key, param_dtype)
@@ -200,7 +203,8 @@ def init_mlstm(key: jax.Array, cfg: ModelConfig, param_dtype) -> Tuple[PyTree, P
 
 def _mlstm_qkvif(params, cfg, x_in):
     """x_in: (B,S,di) up-projected mixer branch."""
-    x_conv = jax.nn.silu(_causal_conv(x_in, params["conv_w"], params["conv_b"]))
+    x_conv = jax.nn.silu(
+        _causal_conv(x_in, params["conv_w"], params["conv_b"]))
     q = jnp.einsum("bsd,dhk->bshk", x_conv, params["w_q"].astype(x_in.dtype))
     k = jnp.einsum("bsd,dhk->bshk", x_conv, params["w_k"].astype(x_in.dtype))
     v = jnp.einsum("bsd,dhk->bshk", x_in, params["w_v"].astype(x_in.dtype))
@@ -370,7 +374,8 @@ def mlstm_decode(params: PyTree, cfg: ModelConfig, x: jax.Array,
     fg = jnp.exp(lf + m - m_new)
     ig = jnp.exp(i_raw - m_new)
     C = C * fg[..., None, None] + ig[..., None, None] * (
-        k[..., :, None].astype(jnp.float32) * v[..., None, :].astype(jnp.float32))
+        k[..., :, None].astype(jnp.float32)
+        * v[..., None, :].astype(jnp.float32))
     n = n * fg[..., None] + ig[..., None] * k.astype(jnp.float32)
     num = jnp.einsum("bhkv,bhk->bhv", C, q.astype(jnp.float32))
     den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n,
@@ -383,7 +388,8 @@ def mlstm_decode(params: PyTree, cfg: ModelConfig, x: jax.Array,
                  "conv": new_conv}
 
 
-def init_mlstm_state(cfg: ModelConfig, batch: int, dtype) -> Dict[str, jax.Array]:
+def init_mlstm_state(cfg: ModelConfig, batch: int,
+                     dtype) -> Dict[str, jax.Array]:
     di, nh, dk = _mlstm_dims(cfg)
     dv = di // nh
     return {"C": jnp.zeros((batch, nh, dk, dv), dtype),
@@ -407,7 +413,8 @@ def _slstm_dims(cfg: ModelConfig) -> Tuple[int, int]:
     return nh, cfg.d_model // nh
 
 
-def init_slstm(key: jax.Array, cfg: ModelConfig, param_dtype) -> Tuple[PyTree, PyTree]:
+def init_slstm(key: jax.Array, cfg: ModelConfig,
+               param_dtype) -> Tuple[PyTree, PyTree]:
     d = cfg.d_model
     nh, dh = _slstm_dims(cfg)
     b = ParamBuilder(key, param_dtype)
@@ -443,7 +450,7 @@ def slstm_forward(params: PyTree, cfg: ModelConfig, x: jax.Array
     B, S, d = x.shape
     nh, dh = _slstm_dims(cfg)
     xg = jnp.einsum("bsd,dghj->bsghj", x.astype(jnp.float32),
-                    params["w_x"].astype(jnp.float32))            # (B,S,4,nh,dh)
+                    params["w_x"].astype(jnp.float32))    # (B,S,4,nh,dh)
     r_h = params["r_h"].astype(jnp.float32)
     bias = params["bias"].astype(jnp.float32)
     zeros = jnp.zeros((B, nh, dh), jnp.float32)
@@ -469,7 +476,8 @@ def slstm_decode(params: PyTree, cfg: ModelConfig, x: jax.Array,
     carry = (state["c"].astype(jnp.float32), state["n"].astype(jnp.float32),
              state["h"].astype(jnp.float32), state["m"])
     (c, n, h, m), h_new = _slstm_step(
-        (params["r_h"].astype(jnp.float32), params["bias"].astype(jnp.float32)),
+        (params["r_h"].astype(jnp.float32),
+         params["bias"].astype(jnp.float32)),
         carry, xg)
     hs = h_new.reshape(B, x.shape[-1]).astype(x.dtype)
     hs = rms_norm(hs, params["gn"], cfg.norm_eps)
@@ -478,7 +486,8 @@ def slstm_decode(params: PyTree, cfg: ModelConfig, x: jax.Array,
                  "h": h.astype(x.dtype), "m": m}
 
 
-def init_slstm_state(cfg: ModelConfig, batch: int, dtype) -> Dict[str, jax.Array]:
+def init_slstm_state(cfg: ModelConfig, batch: int,
+                     dtype) -> Dict[str, jax.Array]:
     nh, dh = _slstm_dims(cfg)
     return {"c": jnp.zeros((batch, nh, dh), dtype),
             "n": jnp.zeros((batch, nh, dh), dtype),

@@ -12,8 +12,8 @@ span tracing with Chrome-trace export, and comm-round byte meters.
     tel.tracer.save("trace.json")   # load in Perfetto
 """
 from repro.obs import meters
-from repro.obs.telemetry import (JsonlSink, PrettySink, RingSink,
-                                 RECORD_TYPES, SCHEMA_VERSION, Sink,
+from repro.obs.telemetry import (RECORD_TYPES, SCHEMA_VERSION,
+                                 JsonlSink, PrettySink, RingSink, Sink,
                                  Telemetry, get_telemetry, set_telemetry,
                                  telemetry_scope)
 from repro.obs.trace import Tracer, fenced_time, jax_profiler_trace

@@ -1,3 +1,4 @@
-from repro.optim.optimizers import (Optimizer, adamw, clip_by_global_norm,  # noqa: F401
-                                    lamb, make_optimizer, sgd)
+from repro.optim.optimizers import (Optimizer, adamw,  # noqa: F401
+                                    clip_by_global_norm, lamb,
+                                    make_optimizer, sgd)
 from repro.optim.schedules import make_schedule  # noqa: F401

@@ -21,7 +21,8 @@ PyTree = Any
 
 class Optimizer(NamedTuple):
     init: Callable[[PyTree], PyTree]
-    update: Callable[[PyTree, PyTree, PyTree, jax.Array], Tuple[PyTree, PyTree]]
+    update: Callable[[PyTree, PyTree, PyTree, jax.Array],
+                     Tuple[PyTree, PyTree]]
     # update(grads, opt_state, params, lr) -> (new_params, new_opt_state)
 
 
@@ -72,8 +73,10 @@ def _adam_moments(cfg, grads, state):
         v_new = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g32)
         return m_new, v_new
     pairs = jax.tree.map(mom, grads, state["m"], state["v"])
-    m = jax.tree.map(lambda t: t[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
-    v = jax.tree.map(lambda t: t[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    m = jax.tree.map(lambda t: t[0], pairs,
+                     is_leaf=lambda x: isinstance(x, tuple))
+    v = jax.tree.map(lambda t: t[1], pairs,
+                     is_leaf=lambda x: isinstance(x, tuple))
     bc1 = 1 - cfg.b1 ** count
     bc2 = 1 - cfg.b2 ** count
     return m, v, count, bc1, bc2
@@ -81,7 +84,9 @@ def _adam_moments(cfg, grads, state):
 
 def adamw(cfg: OptimizerConfig) -> Optimizer:
     def init(params):
-        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        def z(p):
+            return jnp.zeros(p.shape, jnp.float32)
+
         return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params),
                 "count": jnp.zeros((), jnp.int32)}
 
@@ -99,7 +104,9 @@ def adamw(cfg: OptimizerConfig) -> Optimizer:
 
 def lamb(cfg: OptimizerConfig, per_node: bool = False) -> Optimizer:
     def init(params):
-        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        def z(p):
+            return jnp.zeros(p.shape, jnp.float32)
+
         return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params),
                 "count": jnp.zeros((), jnp.int32)}
 

@@ -9,7 +9,8 @@ are already per chip.  Collective bytes are not in cost_analysis — we parse
 the optimized HLO and sum operand shard sizes of every all-gather /
 all-reduce / reduce-scatter / all-to-all / collective-permute.
 
-Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
 """
 from __future__ import annotations
 

@@ -1,1 +1,2 @@
-from repro.serve.engine import BatchedServer, Engine, Request, pad_cache_to  # noqa: F401
+from repro.serve.engine import (BatchedServer, Engine,  # noqa: F401
+                                Request, pad_cache_to)

@@ -76,7 +76,7 @@ class Engine:
         tok = self._sample(logits, temperature, key)
         pos = jnp.full((B,), S0, jnp.int32)
         for i in range(n_new):
-            out.append(np.asarray(tok))
+            out.append(tok)   # device array — no per-token host sync
             logits, caches = step(params, caches, tok[:, None], pos)
             if key is not None:
                 key, sub = jax.random.split(key)
@@ -84,14 +84,18 @@ class Engine:
                 sub = None
             tok = self._sample(logits, temperature, sub)
             pos = pos + 1
-        return np.stack(out, axis=1)
+        # one batched transfer for the whole generation; the dispatch
+        # loop above stays async so decode steps pipeline on device
+        # repro: allow(RPR001)
+        return np.stack(jax.device_get(out), axis=1)
 
     @staticmethod
     def _sample(logits: jax.Array, temperature: float,
                 key: Optional[jax.Array]) -> jax.Array:
         if temperature <= 0.0 or key is None:
             return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        return jax.random.categorical(key, logits / temperature).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits / temperature).astype(jnp.int32)
 
 
 # ---------------------------------------------------------------------------
@@ -188,6 +192,10 @@ class BatchedServer:
             with self._span("serve/decode"):
                 logits, self.caches = self._decode(self.params, self.caches,
                                                    self.tok, self.pos)
+                # the scheduler is host-side by design: admission and
+                # completion decisions need this tick's token ids, so
+                # one explicit fetch per decode tick is the floor
+                # repro: allow(RPR001)
                 nxt = np.asarray(jnp.argmax(logits[:, 0], axis=-1))
             self.pos = self.pos + 1
             for i, req in enumerate(self.slots):

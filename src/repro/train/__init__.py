@@ -1,4 +1,5 @@
 from repro.train.state import (TrainState, consensus_distance,  # noqa: F401
                                stack_for_nodes, stacked_axes, state_axes)
-from repro.train.step import build_train_step, phases_for_algorithm  # noqa: F401
+from repro.train.step import (build_train_step,  # noqa: F401
+                              phases_for_algorithm)
 from repro.train.trainer import Trainer, quick_train  # noqa: F401

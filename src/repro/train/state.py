@@ -8,7 +8,8 @@ import jax
 import jax.numpy as jnp
 
 PyTree = Any
-_IS_AXES = lambda x: isinstance(x, tuple)
+def _IS_AXES(x):
+    return isinstance(x, tuple)
 
 
 @jax.tree_util.register_dataclass

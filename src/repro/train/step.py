@@ -329,7 +329,8 @@ def build_train_step(model: Model, tcfg: TrainConfig, n_nodes: int, *,
                               ).astype(s.dtype),
                 state.slow_params, slow_u)
             new_params = jax.tree.map(
-                lambda s, p: jnp.broadcast_to(s[None], p.shape).astype(p.dtype),
+                lambda s, p: jnp.broadcast_to(
+                    s[None], p.shape).astype(p.dtype),
                 slow_params, params_half)
         else:
             new_params = None

@@ -194,6 +194,7 @@ class Trainer:
         # explicit transfer (allowed under a device->host transfer
         # guard); the hot loop below performs ZERO implicit syncs —
         # metrics stay on device until the batched log-boundary fetch
+        # repro: allow(RPR001)
         start = int(jax.device_get(state.step))
         # resume-aware: schedule/lr/data keyed on the
         if start > 0 and not self._sched_live:  # absolute step counter —

@@ -7,3 +7,46 @@ import pytest
 @pytest.fixture(scope="session")
 def rng_key():
     return jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# Opt-in runtime guards (`--repro-guards`): the dynamic counterpart of the
+# static pass (python -m repro.analysis).  RPR001 proves hot paths free of
+# host syncs *syntactically*; the transfer guard proves the same property
+# *operationally* — any implicit device->host transfer inside a guarded
+# test raises instead of silently blocking the dispatch queue.  Leak
+# checking catches tracers escaping a jit boundary (the failure mode of
+# donation/aliasing bugs that only corrupt under XLA buffer reuse).
+#
+# Off by default: guarded mode changes error behavior, not numerics, and
+# tier-1 must keep matching the seed run bit-for-bit.  CI runs the marked
+# subset a second time with the flag on.
+# ---------------------------------------------------------------------------
+def pytest_addoption(parser):
+    parser.addoption(
+        "--repro-guards", action="store_true", default=False,
+        help="wrap @pytest.mark.repro_guards tests in jax.checking_leaks "
+             "+ jax.transfer_guard_device_to_host('disallow')")
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "repro_guards: test runs under jax.checking_leaks and a "
+        "device->host transfer guard when --repro-guards is given "
+        "(explicit jax.device_get stays allowed under 'disallow'; "
+        "implicit transfers — float(), np.asarray, printing — raise)")
+
+
+@pytest.fixture(autouse=True)
+def _repro_guards(request):
+    if not request.config.getoption("--repro-guards") \
+            or request.node.get_closest_marker("repro_guards") is None:
+        yield
+        return
+    # 'disallow' still permits *explicit* transfers (jax.device_get);
+    # implicit conversions raise — exactly the RPR001 contract,
+    # enforced at runtime.
+    with jax.checking_leaks(), \
+            jax.transfer_guard_device_to_host("disallow"):
+        yield

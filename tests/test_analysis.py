@@ -1,0 +1,537 @@
+"""repro.analysis: per-rule good/bad fixtures, suppression and baseline
+semantics, the report formats, the CLI contract — and the repo-is-clean
+integration gate.
+
+The bad fixtures are minimized replays of the historical regressions the
+rules exist to catch: the pre-PR-8 ``float(metrics["loss"])`` in the
+Trainer hot loop (RPR001) and the PR-7 un-copied overlap buffer escaping
+``train/step.py``'s slowmo branch (RPR003).  Fixtures are written under
+``tmp_path`` at the registered repo-relative paths so the rules'
+path/function registries match exactly as they do on the real tree.
+"""
+import json
+import re
+import textwrap
+from pathlib import Path
+
+from repro.analysis.__main__ import main as cli
+from repro.analysis.engine import (Baseline, analyze_file, analyze_paths,
+                                   apply_baseline, format_findings,
+                                   load_baseline, write_baseline)
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+
+
+def run(tmp_path, relpath, source):
+    """Write ``source`` at ``relpath`` under a scratch root and analyze
+    it; returns (findings, n_suppressed)."""
+    f = tmp_path / relpath
+    f.parent.mkdir(parents=True, exist_ok=True)
+    f.write_text(textwrap.dedent(source))
+    return analyze_file(tmp_path, f)
+
+
+def rules_of(findings):
+    return {f.rule for f in findings}
+
+
+# ---------------------------------------------------------------------------
+# RPR001 — host sync in a registered hot path
+# ---------------------------------------------------------------------------
+TRAINER = "src/repro/train/trainer.py"
+
+
+def test_rpr001_flags_hot_loop_float(tmp_path):
+    # the pre-PR-8 regression, verbatim shape: float() on the device
+    # loss every step inside Trainer.run
+    findings, _ = run(tmp_path, TRAINER, """\
+        class Trainer:
+            def run(self, state, steps):
+                for _ in range(steps):
+                    state, metrics = self._step(state)
+                    self.history.append(float(metrics["loss"]))
+                return state
+        """)
+    assert rules_of(findings) == {"RPR001"}
+    assert "float()" in findings[0].message
+
+
+def test_rpr001_clean_hot_loop_passes(tmp_path):
+    findings, _ = run(tmp_path, TRAINER, """\
+        class Trainer:
+            def run(self, state, steps):
+                for _ in range(steps):
+                    state, metrics = self._step(state)
+                    self.telemetry.push(metrics)   # stays on device
+                return state
+        """)
+    assert findings == []
+
+
+def test_rpr001_ignores_unregistered_functions(tmp_path):
+    # _log_boundary is outside the (Trainer.run, Trainer._run) registry:
+    # it operates on already-fetched host values by design
+    findings, _ = run(tmp_path, TRAINER, """\
+        class Trainer:
+            def _log_boundary(self, metrics):
+                return float(metrics["loss"])
+        """)
+    assert findings == []
+
+
+def test_rpr001_flags_item_and_device_get(tmp_path):
+    findings, _ = run(tmp_path, "src/repro/core/mixing.py", """\
+        import jax
+
+        def mix_round(x):
+            y = x.item()
+            return jax.device_get(y)
+        """)
+    assert [f.rule for f in findings] == ["RPR001", "RPR001"]
+
+
+# ---------------------------------------------------------------------------
+# RPR002 — legacy communicate(**kwargs) call form
+# ---------------------------------------------------------------------------
+def test_rpr002_flags_legacy_kwargs(tmp_path):
+    findings, _ = run(tmp_path, "src/demo.py", """\
+        from repro.core.mixing import communicate
+
+        def round_(params):
+            return communicate(params, phase="gossip", topology="ring",
+                               n_nodes=4)
+        """)
+    assert rules_of(findings) == {"RPR002"}
+    assert "n_nodes, topology" in findings[0].message
+
+
+def test_rpr002_spec_form_passes(tmp_path):
+    findings, _ = run(tmp_path, "src/demo.py", """\
+        from repro.core.mixing import communicate
+
+        def round_(params, spec):
+            return communicate(params, spec, phase="gossip", step=0)
+        """)
+    assert findings == []
+
+
+def test_rpr002_flags_starred_dict(tmp_path):
+    # the forwarding hole that dropped model_axis in PR 5: spec knobs
+    # hidden behind **kwargs
+    findings, _ = run(tmp_path, "src/demo.py", """\
+        from repro.core.mixing import communicate
+
+        def round_(params):
+            kw = dict(topology="ring", n_nodes=4)
+            return communicate(params, **kw)
+        """)
+    assert rules_of(findings) == {"RPR002"}
+
+
+# ---------------------------------------------------------------------------
+# RPR003 — donation hazards
+# ---------------------------------------------------------------------------
+def test_rpr003_flags_returned_alias(tmp_path):
+    # the PR-7 slowmo-branch regression: a copy in one if-arm must not
+    # sanctify the other arm's return path
+    findings, _ = run(tmp_path, "src/repro/train/step.py", """\
+        import jax
+        import jax.numpy as jnp
+        from repro.core.mixing import start_round
+
+        def prime(params, spec, phase):
+            buf, ef = start_round(params, spec)
+            if phase == "slowmo":
+                buf = jax.tree.map(jnp.copy, buf)
+            return params, buf, ef
+        """)
+    assert rules_of(findings) == {"RPR003"}
+    assert "jax.tree.map(jnp.copy" in findings[0].message
+
+
+def test_rpr003_copy_rebind_passes(tmp_path):
+    findings, _ = run(tmp_path, "src/repro/train/step.py", """\
+        import jax
+        import jax.numpy as jnp
+        from repro.core.mixing import start_round
+
+        def prime(params, spec):
+            buf, ef = start_round(params, spec)
+            buf = jax.tree.map(jnp.copy, buf)
+            return params, buf, ef
+        """)
+    assert findings == []
+
+
+def test_rpr003_sees_through_constructor(tmp_path):
+    # containment follows Capitalized constructor calls: the params ride
+    # inside TrainState(...) next to the aliasing buffer
+    findings, _ = run(tmp_path, "src/repro/train/step.py", """\
+        from repro.core.mixing import start_round
+
+        def prime(state, spec):
+            params = state.params
+            buf, ef = start_round(params, spec)
+            return TrainState(params=params, step=state.step), buf
+        """)
+    assert rules_of(findings) == {"RPR003"}
+
+
+def test_rpr003_flags_donated_callsite_reuse(tmp_path):
+    findings, _ = run(tmp_path, "src/demo.py", """\
+        import jax
+
+        def drive(step_fn, state, batch):
+            f = jax.jit(step_fn, donate_argnums=(0,))
+            out = f(state, batch)
+            return state.step, out
+        """)
+    assert rules_of(findings) == {"RPR003"}
+    assert "donated" in findings[0].message
+
+
+# ---------------------------------------------------------------------------
+# RPR004 — recompile hazards
+# ---------------------------------------------------------------------------
+def test_rpr004_flags_loop_varying_static(tmp_path):
+    findings, _ = run(tmp_path, "src/demo.py", """\
+        import jax
+
+        def drive(fn, xs):
+            step = jax.jit(fn, static_argnums=(1,))
+            for i in range(10):
+                out = step(xs, i)
+            return out
+        """)
+    assert rules_of(findings) == {"RPR004"}
+    assert "recompile" in findings[0].message
+
+
+def test_rpr004_constant_static_passes(tmp_path):
+    findings, _ = run(tmp_path, "src/demo.py", """\
+        import jax
+
+        def drive(fn, xs):
+            step = jax.jit(fn, static_argnums=(1,))
+            for i in range(10):
+                out = step(xs, 4)
+            return out
+        """)
+    assert findings == []
+
+
+def test_rpr004_flags_static_traced_w(tmp_path):
+    # PR 6 contract: W/active are runtime operands; fault patterns must
+    # never recompile
+    findings, _ = run(tmp_path, "src/demo.py", """\
+        import jax
+
+        def build(fn):
+            return jax.jit(fn, static_argnames=("W",))
+        """)
+    assert rules_of(findings) == {"RPR004"}
+    assert "'W'" in findings[0].message
+
+
+def test_rpr004_flags_unhashable_static_literal(tmp_path):
+    findings, _ = run(tmp_path, "src/demo.py", """\
+        import jax
+
+        def drive(fn, xs):
+            step = jax.jit(fn, static_argnums=(1,))
+            while True:
+                out = step(xs, {"a": 1})
+            return out
+        """)
+    assert rules_of(findings) == {"RPR004"}
+    assert "unhashable" in findings[0].message
+
+
+# ---------------------------------------------------------------------------
+# RPR005 — host-stateful randomness in device modules
+# ---------------------------------------------------------------------------
+def test_rpr005_flags_np_random_in_device_module(tmp_path):
+    findings, _ = run(tmp_path, "src/repro/compress/quant.py", """\
+        import numpy as np
+
+        def dither(x):
+            return x + np.random.standard_normal(x.shape)
+        """)
+    assert rules_of(findings) == {"RPR005"}
+
+
+def test_rpr005_jax_random_passes(tmp_path):
+    findings, _ = run(tmp_path, "src/repro/compress/quant.py", """\
+        import jax
+
+        def dither(x, key):
+            return x + jax.random.normal(key, x.shape)
+        """)
+    assert findings == []
+
+
+def test_rpr005_host_schedule_modules_exempt(tmp_path):
+    # data/ builds host batches — outside the device-module registry
+    findings, _ = run(tmp_path, "src/repro/data/synthetic.py", """\
+        import numpy as np
+
+        def batch(shape):
+            return np.random.standard_normal(shape)
+        """)
+    assert findings == []
+
+
+# ---------------------------------------------------------------------------
+# RPR006 — pallas_call contracts
+# ---------------------------------------------------------------------------
+def test_rpr006_missing_out_shape(tmp_path):
+    findings, _ = run(tmp_path, "src/repro/kernels/k.py", """\
+        from jax.experimental import pallas as pl
+
+        def apply(x):
+            return pl.pallas_call(kernel)(x)
+        """)
+    assert rules_of(findings) == {"RPR006"}
+    assert "out_shape" in findings[0].message
+
+
+def test_rpr006_alias_index_out_of_range(tmp_path):
+    findings, _ = run(tmp_path, "src/repro/kernels/k.py", """\
+        import jax
+        from jax.experimental import pallas as pl
+
+        def apply(x):
+            return pl.pallas_call(
+                kernel,
+                out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+                input_output_aliases={1: 0},
+            )(x)
+        """)
+    assert rules_of(findings) == {"RPR006"}
+    assert "out of range" in findings[0].message
+
+
+def test_rpr006_index_map_grid_rank_mismatch(tmp_path):
+    findings, _ = run(tmp_path, "src/repro/kernels/k.py", """\
+        import jax
+        from jax.experimental import pallas as pl
+
+        def apply(x):
+            return pl.pallas_call(
+                kernel,
+                grid=(4, 4),
+                in_specs=[pl.BlockSpec((8, 8), lambda i: (i, 0))],
+                out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+            )(x)
+        """)
+    assert rules_of(findings) == {"RPR006"}
+    assert "rank" in findings[0].message
+
+
+def test_rpr006_resolves_named_index_maps(tmp_path):
+    # index maps written as defs (the post-lint kernel idiom) resolve
+    # by name, and a matching arity is clean
+    findings, _ = run(tmp_path, "src/repro/kernels/k.py", """\
+        import jax
+        from jax.experimental import pallas as pl
+
+        def tile(i, j):
+            return (i, j)
+
+        def apply(x):
+            return pl.pallas_call(
+                kernel,
+                grid=(4, 4),
+                in_specs=[pl.BlockSpec((8, 8), tile)],
+                out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+            )(x)
+        """)
+    assert findings == []
+
+
+def test_rpr006_shapedtypestruct_needs_dtype(tmp_path):
+    findings, _ = run(tmp_path, "src/repro/kernels/k.py", """\
+        import jax
+        from jax.experimental import pallas as pl
+
+        def out(x):
+            return jax.ShapeDtypeStruct((4, 4))
+        """)
+    assert rules_of(findings) == {"RPR006"}
+    assert "dtype" in findings[0].message
+
+
+# ---------------------------------------------------------------------------
+# engine semantics: suppressions, RPR000, baseline
+# ---------------------------------------------------------------------------
+def test_suppression_on_the_flagged_line(tmp_path):
+    findings, suppressed = run(tmp_path, TRAINER, """\
+        class Trainer:
+            def run(self, state):
+                x = float(state.loss)  # repro: allow(RPR001)
+                return x
+        """)
+    assert findings == [] and suppressed == 1
+
+
+def test_suppression_comment_line_above(tmp_path):
+    findings, suppressed = run(tmp_path, TRAINER, """\
+        class Trainer:
+            def run(self, state):
+                # repro: allow(RPR001) -- deliberate final fetch
+                x = float(state.loss)
+                return x
+        """)
+    assert findings == [] and suppressed == 1
+
+
+def test_suppression_for_other_rule_does_not_apply(tmp_path):
+    findings, suppressed = run(tmp_path, TRAINER, """\
+        class Trainer:
+            def run(self, state):
+                x = float(state.loss)  # repro: allow(RPR002)
+                return x
+        """)
+    assert rules_of(findings) == {"RPR001"} and suppressed == 0
+
+
+def test_syntax_error_is_a_finding(tmp_path):
+    findings, _ = run(tmp_path, "src/broken.py", "def f(:\n")
+    assert rules_of(findings) == {"RPR000"}
+
+
+def test_baseline_absorbs_up_to_count(tmp_path):
+    f = tmp_path / TRAINER
+    f.parent.mkdir(parents=True)
+    f.write_text(textwrap.dedent("""\
+        class Trainer:
+            def run(self, state):
+                a = float(state.a)
+                b = float(state.b)
+                return a, b
+        """))
+    findings, _ = analyze_file(tmp_path, f)
+    assert len(findings) == 2
+    base = Baseline(entries={("RPR001", TRAINER): (1, "known debt")})
+    kept, absorbed = apply_baseline(findings, base)
+    assert absorbed == 1 and len(kept) == 1
+    # a different path never matches the budget
+    base2 = Baseline(entries={("RPR001", "src/other.py"): (9, "")})
+    kept2, absorbed2 = apply_baseline(findings, base2)
+    assert absorbed2 == 0 and len(kept2) == 2
+
+
+def test_baseline_write_load_roundtrip(tmp_path):
+    f = tmp_path / TRAINER
+    f.parent.mkdir(parents=True)
+    f.write_text(textwrap.dedent("""\
+        class Trainer:
+            def run(self, state):
+                return float(state.loss)
+        """))
+    findings, _ = analyze_file(tmp_path, f)
+    bpath = tmp_path / "analysis_baseline.json"
+    write_baseline(bpath, findings)
+    data = json.loads(bpath.read_text())
+    assert data["version"] == 1
+    assert data["entries"][0]["rule"] == "RPR001"
+    assert data["entries"][0]["path"] == TRAINER
+    loaded = load_baseline(bpath)
+    kept, absorbed = apply_baseline(findings, loaded)
+    assert kept == [] and absorbed == 1
+    assert load_baseline(tmp_path / "missing.json").entries == {}
+
+
+# ---------------------------------------------------------------------------
+# report formats
+# ---------------------------------------------------------------------------
+def _one_finding(tmp_path):
+    findings, _ = run(tmp_path, TRAINER, """\
+        class Trainer:
+            def run(self, state):
+                return float(state.loss)
+        """)
+    assert len(findings) == 1
+    return findings
+
+
+def test_json_format_schema(tmp_path):
+    findings = _one_finding(tmp_path)
+    doc = json.loads(format_findings(findings, "json", suppressed=2,
+                                     baselined=3))
+    assert doc["version"] == 1
+    assert doc["counts"] == {"RPR001": 1}
+    assert doc["suppressed"] == 2 and doc["baselined"] == 3
+    (f,) = doc["findings"]
+    assert set(f) == {"rule", "path", "line", "col", "message"}
+    assert f["rule"] == "RPR001" and f["path"] == TRAINER
+
+
+def test_github_format_is_workflow_commands(tmp_path):
+    findings = _one_finding(tmp_path)
+    out = format_findings(findings, "github")
+    assert re.fullmatch(
+        r"::error file=src/repro/train/trainer\.py,line=\d+,col=\d+,"
+        r"title=RPR001::.+", out)
+
+
+def test_text_format_tail(tmp_path):
+    findings = _one_finding(tmp_path)
+    out = format_findings(findings, "text", suppressed=1, baselined=0)
+    assert out.splitlines()[0].startswith(f"{TRAINER}:3:")
+    assert out.splitlines()[-1] == "1 finding(s) (1 suppressed, 0 baselined)"
+
+
+# ---------------------------------------------------------------------------
+# CLI contract
+# ---------------------------------------------------------------------------
+def test_cli_exit_codes_and_artifact(tmp_path, capsys):
+    clean = tmp_path / "src" / "ok.py"
+    clean.parent.mkdir(parents=True)
+    clean.write_text("X = 1\n")
+    assert cli(["src", "--root", str(tmp_path)]) == 0
+    capsys.readouterr()
+
+    (tmp_path / TRAINER).parent.mkdir(parents=True)
+    (tmp_path / TRAINER).write_text(textwrap.dedent("""\
+        class Trainer:
+            def run(self, state):
+                return float(state.loss)
+        """))
+    out_file = tmp_path / "findings.json"
+    rc = cli(["src", "--root", str(tmp_path), "--format", "github",
+              "--out", str(out_file)])
+    assert rc == 1
+    assert "::error file=" in capsys.readouterr().out
+    # the --out artifact is always JSON, whatever the console format
+    doc = json.loads(out_file.read_text())
+    assert doc["counts"] == {"RPR001": 1}
+
+    assert cli(["no/such/dir", "--root", str(tmp_path)]) == 2
+
+
+def test_cli_write_baseline_then_green(tmp_path, capsys):
+    (tmp_path / TRAINER).parent.mkdir(parents=True)
+    (tmp_path / TRAINER).write_text(textwrap.dedent("""\
+        class Trainer:
+            def run(self, state):
+                return float(state.loss)
+        """))
+    assert cli(["src", "--root", str(tmp_path), "--write-baseline"]) == 0
+    capsys.readouterr()
+    # the debt is tracked: the gate is green until the file changes
+    assert cli(["src", "--root", str(tmp_path)]) == 0
+    out = capsys.readouterr().out
+    assert "1 baselined" in out
+
+
+# ---------------------------------------------------------------------------
+# integration: the real tree is clean
+# ---------------------------------------------------------------------------
+def test_repo_is_clean():
+    """The merged tree carries zero unsuppressed, unbaselined findings —
+    the same gate the CI analyze job enforces."""
+    findings, _ = analyze_paths(REPO_ROOT, ["src", "benchmarks", "tests"])
+    baseline = load_baseline(REPO_ROOT / "analysis_baseline.json")
+    kept, _ = apply_baseline(findings, baseline)
+    assert kept == [], "\n" + format_findings(kept, "text")

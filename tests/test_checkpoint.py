@@ -290,7 +290,9 @@ def test_aga_resume_matches_uninterrupted_schedule():
             out.append(sched.advance(k))
         return out
 
-    losses = lambda k: 10.0 / (1 + k)
+    def losses(k):
+        return 10.0 / (1 + k)
+
     full = AGASchedule(H_init=2, warmup=4, H_max=32)
     want = drive(full, range(24), losses)
 

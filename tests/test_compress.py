@@ -106,11 +106,12 @@ def test_int8_wire_reduction_at_least_4x():
 @pytest.mark.parametrize("backend", ["reference", "pallas"])
 def test_identity_bit_identical(phase, topology, n_pods, backend, rng_key):
     tree = _tree(rng_key, 8)
-    kw = dict(phase=phase, topology=topology, n_nodes=8, step=2,
-              n_pods=n_pods, backend=backend)
-    want = mixing.communicate(tree, **kw)
-    got, ef = mixing.communicate(tree, compressor=C.make_compressor(
-        "identity"), **kw)
+    spec = mixing.CommSpec(topology=topology, n_nodes=8, n_pods=n_pods,
+                           backend=backend)
+    want = mixing.communicate(tree, spec, phase=phase, step=2)
+    got, ef = mixing.communicate(
+        tree, spec.replace(compressor=C.make_compressor("identity")),
+        phase=phase, step=2)
     assert ef is None
     for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
         assert g.dtype == w.dtype
@@ -119,11 +120,12 @@ def test_identity_bit_identical(phase, topology, n_pods, backend, rng_key):
 
 def test_identity_bit_identical_bf16_wire(rng_key):
     tree = _tree(rng_key, 8)
-    kw = dict(phase="gossip", topology="ring", n_nodes=8,
-              comm_dtype=jnp.bfloat16)
-    want = mixing.communicate(tree, **kw)
-    got, _ = mixing.communicate(tree, compressor=C.make_compressor(
-        "identity"), **kw)
+    spec = mixing.CommSpec(topology="ring", n_nodes=8,
+                           comm_dtype=jnp.bfloat16)
+    want = mixing.communicate(tree, spec, phase="gossip")
+    got, _ = mixing.communicate(
+        tree, spec.replace(compressor=C.make_compressor("identity")),
+        phase="gossip")
     for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
         np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
 
@@ -138,9 +140,10 @@ def test_constant_fixed_point(name, backend):
     tree = {"w": jnp.full((8, 5, 3), -2.25, jnp.float32),
             "b": jnp.full((8, 7), 0.1, jnp.float32)}
     for phase, topology, n_pods in PHASES:
-        got, _ = mixing.communicate(tree, phase=phase, topology=topology,
-                                    n_nodes=8, step=3, n_pods=n_pods,
-                                    backend=backend, compressor=comp,
+        spec = mixing.CommSpec(topology=topology, n_nodes=8,
+                               n_pods=n_pods, backend=backend,
+                               compressor=comp)
+        got, _ = mixing.communicate(tree, spec, phase=phase, step=3,
                                     seed=9)
         for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(tree)):
             if phase == "gossip" and topology == "one_peer_exp":
@@ -158,8 +161,9 @@ def test_gossip_preserves_node_average(name, rng_key):
     comp = C.make_compressor(name, k=5)
     x = jax.random.normal(rng_key, (8, 33))
     for topology in ("ring", "exp", "grid", "one_peer_exp"):
-        got, _ = mixing.communicate(x, phase="gossip", topology=topology,
-                                    n_nodes=8, step=1, compressor=comp,
+        spec = mixing.CommSpec(topology=topology, n_nodes=8,
+                               compressor=comp)
+        got, _ = mixing.communicate(x, spec, phase="gossip", step=1,
                                     seed=4)
         np.testing.assert_allclose(np.asarray(got.mean(0)),
                                    np.asarray(x.mean(0)), atol=1e-5)
@@ -173,10 +177,11 @@ def test_gossip_preserves_node_average(name, rng_key):
 def test_backend_parity(name, phase, topology, n_pods, rng_key):
     comp = C.make_compressor(name, k=3)
     tree = _tree(rng_key, 8)
-    kw = dict(phase=phase, topology=topology, n_nodes=8, step=2,
-              n_pods=n_pods, compressor=comp, seed=7)
-    ref, _ = mixing.communicate(tree, **kw)
-    pal, _ = mixing.communicate(tree, backend="pallas", **kw)
+    spec = mixing.CommSpec(topology=topology, n_nodes=8, n_pods=n_pods,
+                           compressor=comp)
+    ref, _ = mixing.communicate(tree, spec, phase=phase, step=2, seed=7)
+    pal, _ = mixing.communicate(tree, spec.replace(backend="pallas"),
+                                phase=phase, step=2, seed=7)
     _close(pal, ref, atol=2e-5)
 
 
@@ -187,13 +192,14 @@ def test_backend_parity_global_bf16_wire(name, rng_key):
     backends must apply the same cast, and constants must stay fixed."""
     comp = C.make_compressor(name, k=3)
     tree = _tree(rng_key, 8)
-    kw = dict(phase="global", topology="ring", n_nodes=8,
-              comm_dtype=jnp.bfloat16, compressor=comp, seed=7)
-    ref, _ = mixing.communicate(tree, **kw)
-    pal, _ = mixing.communicate(tree, backend="pallas", **kw)
+    spec = mixing.CommSpec(topology="ring", n_nodes=8,
+                           comm_dtype=jnp.bfloat16, compressor=comp)
+    ref, _ = mixing.communicate(tree, spec, phase="global", seed=7)
+    pal, _ = mixing.communicate(tree, spec.replace(backend="pallas"),
+                                phase="global", seed=7)
     _close(pal, ref, atol=2e-5)
     ct = jax.tree.map(lambda p: jnp.full_like(p, 1.7), tree)
-    got, _ = mixing.communicate(ct, **kw)
+    got, _ = mixing.communicate(ct, spec, phase="global", seed=7)
     for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(ct)):
         np.testing.assert_allclose(np.asarray(g), np.asarray(w), rtol=5e-7,
                                    atol=0)
@@ -204,14 +210,15 @@ def test_backend_parity_with_error_feedback(name, rng_key):
     comp = C.make_compressor(name, k=3)
     tree = _tree(rng_key, 8)
     ef0 = C.init_ef_state(tree)
-    kw = dict(phase="gossip", topology="ring", n_nodes=8, compressor=comp,
-              ef_state=ef0, seed=1)
-    r_m, r_e = mixing.communicate(tree, **kw)
-    p_m, p_e = mixing.communicate(tree, backend="pallas", **kw)
+    spec = mixing.CommSpec(topology="ring", n_nodes=8, compressor=comp)
+    r_m, r_e = mixing.communicate(tree, spec, phase="gossip",
+                                  ef_state=ef0, seed=1)
+    p_m, p_e = mixing.communicate(tree, spec.replace(backend="pallas"),
+                                  phase="gossip", ef_state=ef0, seed=1)
     _close(p_m, r_m, atol=2e-5)
     _close(p_e, r_e, atol=2e-5)
     # EF is nonzero for a lossy compressor on generic data
-    assert sum(float(jnp.sum(jnp.abs(l))) for l in jax.tree.leaves(r_e)) > 0
+    assert sum(float(jnp.sum(jnp.abs(lf))) for lf in jax.tree.leaves(r_e)) > 0
 
 
 def test_compressed_block_boundary_independence(rng_key):
@@ -231,18 +238,19 @@ def test_seed_varies_rounding(rng_key):
     steps needs the seed to move)."""
     comp = C.make_compressor("int8")
     x = jax.random.normal(rng_key, (8, 64))
-    a, _ = mixing.communicate(x, phase="gossip", topology="ring", n_nodes=8,
-                              compressor=comp, seed=1)
-    b, _ = mixing.communicate(x, phase="gossip", topology="ring", n_nodes=8,
-                              compressor=comp, seed=2)
+    spec = mixing.CommSpec(topology="ring", n_nodes=8, compressor=comp)
+    a, _ = mixing.communicate(x, spec, phase="gossip", seed=1)
+    b, _ = mixing.communicate(x, spec, phase="gossip", seed=2)
     assert np.any(np.asarray(a) != np.asarray(b))
 
 
 def test_compression_rejects_nonzero_axis(rng_key):
     x = jax.random.normal(rng_key, (3, 8))
     with pytest.raises(ValueError, match="axis"):
-        mixing.communicate(x, phase="gossip", topology="ring", n_nodes=8,
-                           axis=1, compressor=C.make_compressor("int8"))
+        mixing.communicate(
+            x, mixing.CommSpec(topology="ring", n_nodes=8,
+                               compressor=C.make_compressor("int8")),
+            phase="gossip", axis=1)
 
 
 def test_pallas_rejects_non_bf16_global_wire(rng_key):
@@ -250,15 +258,14 @@ def test_pallas_rejects_non_bf16_global_wire(rng_key):
     _mix_kernel); any other comm_dtype on the compressed global phase
     must raise instead of silently diverging from the reference."""
     x = jax.random.normal(rng_key, (8, 16))
+    spec = mixing.CommSpec(topology="ring", n_nodes=8,
+                           comm_dtype=jnp.float16,
+                           compressor=C.make_compressor("int8"))
     with pytest.raises(ValueError, match="bfloat16"):
-        mixing.communicate(x, phase="global", topology="ring", n_nodes=8,
-                           comm_dtype=jnp.float16, backend="pallas",
-                           compressor=C.make_compressor("int8"), seed=1)
+        mixing.communicate(x, spec.replace(backend="pallas"),
+                           phase="global", seed=1)
     # fp16 wire stays available through the reference backend
-    out, _ = mixing.communicate(x, phase="global", topology="ring",
-                                n_nodes=8, comm_dtype=jnp.float16,
-                                compressor=C.make_compressor("int8"),
-                                seed=1)
+    out, _ = mixing.communicate(x, spec, phase="global", seed=1)
     assert np.all(np.isfinite(np.asarray(out)))
 
 
@@ -303,8 +310,8 @@ def test_train_step_threads_ef_state():
     assert state.ef_state is not None
     state = tr.run(state, steps=2)
     assert state.ef_state is not None
-    ef_norm = sum(float(jnp.sum(jnp.abs(l)))
-                  for l in jax.tree.leaves(state.ef_state))
+    ef_norm = sum(float(jnp.sum(jnp.abs(lf)))
+                  for lf in jax.tree.leaves(state.ef_state))
     assert np.isfinite(ef_norm) and ef_norm > 0
     for p in jax.tree.leaves(state.params):
         assert np.all(np.isfinite(np.asarray(p, np.float32)))
@@ -337,10 +344,11 @@ def test_collective_registry_matches_distconfig_vocabulary():
 def test_collective_backend_parity(name, phase, n_pods, rng_key):
     comp = C.make_compressor(name)
     tree = _tree(rng_key, 8)
-    kw = dict(phase=phase, topology="ring", n_nodes=8, n_pods=n_pods,
-              global_compressor=comp, seed=7)
-    ref, ef_r = mixing.communicate(tree, **kw)
-    pal, ef_p = mixing.communicate(tree, backend="pallas", **kw)
+    spec = mixing.CommSpec(topology="ring", n_nodes=8, n_pods=n_pods,
+                           global_compressor=comp)
+    ref, ef_r = mixing.communicate(tree, spec, phase=phase, seed=7)
+    pal, ef_p = mixing.communicate(tree, spec.replace(backend="pallas"),
+                                   phase=phase, seed=7)
     assert ef_r is None and ef_p is None
     _close(pal, ref, atol=2e-5)
     # the lossy collective actually moved the state (not a silent no-op)
@@ -361,10 +369,10 @@ def test_collective_constant_fixed_point_bitwise(name):
             "b": jnp.full((8, 7), 0.1, jnp.float32)}
     for phase, n_pods in AVG_PHASES:
         for backend in ("reference", "pallas"):
-            got, _ = mixing.communicate(tree, phase=phase, topology="ring",
-                                        n_nodes=8, n_pods=n_pods,
-                                        backend=backend,
-                                        global_compressor=comp, seed=9)
+            spec = mixing.CommSpec(topology="ring", n_nodes=8,
+                                   n_pods=n_pods, backend=backend,
+                                   global_compressor=comp)
+            got, _ = mixing.communicate(tree, spec, phase=phase, seed=9)
             for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(tree)):
                 np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
 
@@ -374,11 +382,13 @@ def test_collective_identity_bit_identical(backend, rng_key):
     """comm_global_compression='identity' routes to the exact psum path."""
     tree = _tree(rng_key, 8)
     for phase, n_pods in AVG_PHASES:
-        kw = dict(phase=phase, topology="ring", n_nodes=8, n_pods=n_pods,
-                  backend=backend)
-        want = mixing.communicate(tree, **kw)
+        spec = mixing.CommSpec(topology="ring", n_nodes=8, n_pods=n_pods,
+                               backend=backend)
+        want = mixing.communicate(tree, spec, phase=phase)
         got, ef = mixing.communicate(
-            tree, global_compressor=C.make_compressor("identity"), **kw)
+            tree,
+            spec.replace(global_compressor=C.make_compressor("identity")),
+            phase=phase)
         assert ef is None
         for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
             assert g.dtype == w.dtype
@@ -389,13 +399,15 @@ def test_collective_error_feedback_parity(rng_key):
     comp = C.make_compressor("int8")
     tree = _tree(rng_key, 8)
     ef0 = C.init_ef_state(tree)
-    kw = dict(phase="global", topology="ring", n_nodes=8,
-              global_compressor=comp, ef_state=ef0, seed=1)
-    r_m, r_e = mixing.communicate(tree, **kw)
-    p_m, p_e = mixing.communicate(tree, backend="pallas", **kw)
+    spec = mixing.CommSpec(topology="ring", n_nodes=8,
+                           global_compressor=comp)
+    r_m, r_e = mixing.communicate(tree, spec, phase="global",
+                                  ef_state=ef0, seed=1)
+    p_m, p_e = mixing.communicate(tree, spec.replace(backend="pallas"),
+                                  phase="global", ef_state=ef0, seed=1)
     _close(p_m, r_m, atol=2e-5)
     _close(p_e, r_e, atol=2e-5)
-    assert sum(float(jnp.sum(jnp.abs(l))) for l in jax.tree.leaves(r_e)) > 0
+    assert sum(float(jnp.sum(jnp.abs(lf))) for lf in jax.tree.leaves(r_e)) > 0
 
 
 def test_identity_global_supersedes_lossy_gossip(rng_key):
@@ -409,21 +421,23 @@ def test_identity_global_supersedes_lossy_gossip(rng_key):
     ident, lossy = C.make_compressor("identity"), C.make_compressor("int8")
     for phase, n_pods in AVG_PHASES:
         for backend in ("reference", "pallas"):
-            kw = dict(phase=phase, topology="ring", n_nodes=8,
-                      n_pods=n_pods, backend=backend)
-            want = mixing.communicate(tree, **kw)
-            got, ef = mixing.communicate(tree, compressor=lossy,
-                                         global_compressor=ident, seed=3,
-                                         **kw)
+            spec = mixing.CommSpec(topology="ring", n_nodes=8,
+                                   n_pods=n_pods, backend=backend)
+            want = mixing.communicate(tree, spec, phase=phase)
+            got, ef = mixing.communicate(
+                tree, spec.replace(compressor=lossy,
+                                   global_compressor=ident),
+                phase=phase, seed=3)
             assert ef is None
             for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
                 assert g.dtype == w.dtype
                 np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
     # ...and the gossip phase still runs the lossy gossip compressor
-    gossip_kw = dict(phase="gossip", topology="ring", n_nodes=8, seed=3)
-    want, _ = mixing.communicate(tree, compressor=lossy, **gossip_kw)
-    got, _ = mixing.communicate(tree, compressor=lossy,
-                                global_compressor=ident, **gossip_kw)
+    gspec = mixing.CommSpec(topology="ring", n_nodes=8, compressor=lossy)
+    want, _ = mixing.communicate(tree, gspec, phase="gossip", seed=3)
+    got, _ = mixing.communicate(tree,
+                                gspec.replace(global_compressor=ident),
+                                phase="gossip", seed=3)
     for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
         np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
 
@@ -434,20 +448,20 @@ def test_collective_supersedes_gossip_compressor_on_global(rng_key):
     the collective is configured."""
     tree = _tree(rng_key, 8)
     gc = C.make_compressor("int8")
-    kw = dict(phase="global", topology="ring", n_nodes=8,
-              global_compressor=gc, seed=5)
-    only_global, _ = mixing.communicate(tree, **kw)
-    both, _ = mixing.communicate(tree, compressor=C.make_compressor("topk",
-                                                                    k=3),
-                                 **kw)
+    spec = mixing.CommSpec(topology="ring", n_nodes=8,
+                           global_compressor=gc)
+    only_global, _ = mixing.communicate(tree, spec, phase="global", seed=5)
+    both, _ = mixing.communicate(
+        tree, spec.replace(compressor=C.make_compressor("topk", k=3)),
+        phase="global", seed=5)
     for g, w in zip(jax.tree.leaves(both), jax.tree.leaves(only_global)):
         np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
     # ...and gossip rounds stay with the gossip compressor
-    gossip_kw = dict(phase="gossip", topology="ring", n_nodes=8, seed=5)
-    want, _ = mixing.communicate(tree, compressor=C.make_compressor("int8"),
-                                 **gossip_kw)
-    got, _ = mixing.communicate(tree, compressor=C.make_compressor("int8"),
-                                global_compressor=gc, **gossip_kw)
+    gspec = mixing.CommSpec(topology="ring", n_nodes=8,
+                            compressor=C.make_compressor("int8"))
+    want, _ = mixing.communicate(tree, gspec, phase="gossip", seed=5)
+    got, _ = mixing.communicate(tree, gspec.replace(global_compressor=gc),
+                                phase="gossip", seed=5)
     for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
         np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
 
@@ -499,14 +513,16 @@ def test_pod_avg_rejects_indivisible_pods_before_noop(rng_key):
     degenerate call reports the misconfiguration instead of silently
     returning the input."""
     x = jax.random.normal(rng_key, (8, 4))
-    for kw in (dict(), dict(global_compressor=C.make_compressor("int8")),
-               dict(compressor=C.make_compressor("int8"))):
+    base = mixing.CommSpec(topology="ring", n_nodes=8, n_pods=3)
+    for spec in (base,
+                 base.replace(global_compressor=C.make_compressor("int8")),
+                 base.replace(compressor=C.make_compressor("int8"))):
         with pytest.raises(ValueError, match="does not divide"):
-            mixing.communicate(x, phase="pod_avg", topology="ring",
-                               n_nodes=8, n_pods=3, seed=1, **kw)
+            mixing.communicate(x, spec, phase="pod_avg", seed=1)
     with pytest.raises(ValueError, match="does not divide"):
-        mixing.communicate(jnp.zeros((1, 4)), phase="pod_avg",
-                           topology="ring", n_nodes=1, n_pods=3)
+        mixing.communicate(jnp.zeros((1, 4)),
+                           mixing.CommSpec(topology="ring", n_nodes=1,
+                                           n_pods=3), phase="pod_avg")
 
 
 # ---------------------------------------------------------------------------
@@ -535,39 +551,46 @@ _SHARDED_COMPRESSED_SCRIPT = textwrap.dedent("""
              ("topk", "gossip", "ring", 1), ("randk", "gossip", "exp", 1)]
     for name, phase, topol, n_pods in CASES:
         comp = C.make_compressor(name, k=3)
-        kw = dict(phase=phase, topology=topol, n_nodes=n, step=3,
-                  n_pods=n_pods, compressor=comp, seed=11)
-        want, _ = mixing.communicate(t, **kw)
-        got, _ = mixing.communicate(t, backend="pallas", mesh=mesh, **kw)
+        spec = mixing.CommSpec(topology=topol, n_nodes=n, n_pods=n_pods,
+                               compressor=comp)
+        want, _ = mixing.communicate(t, spec, phase=phase, step=3, seed=11)
+        got, _ = mixing.communicate(
+            t, spec.replace(backend="pallas", mesh=mesh),
+            phase=phase, step=3, seed=11)
         close(got, want, 2e-5)
         print(f"CPARITY_OK {name}/{phase}/{topol}")
 
     # global phase with bf16 wire: the psum operand cast matches the
     # local backends' cast of q
     comp = C.make_compressor("int8")
-    kw = dict(phase="global", topology="ring", n_nodes=n,
-              comm_dtype=jnp.bfloat16, compressor=comp, seed=7)
-    want, _ = mixing.communicate(t, **kw)
-    got, _ = mixing.communicate(t, backend="pallas", mesh=mesh, **kw)
+    spec = mixing.CommSpec(topology="ring", n_nodes=n,
+                           comm_dtype=jnp.bfloat16, compressor=comp)
+    want, _ = mixing.communicate(t, spec, phase="global", seed=7)
+    got, _ = mixing.communicate(
+        t, spec.replace(backend="pallas", mesh=mesh), phase="global",
+        seed=7)
     close(got, want, 2e-5)
     print("CGLOBAL_BF16_OK")
 
     # EF threading across the sharded path matches the local reference
     comp = C.make_compressor("int8")
     ef0 = C.init_ef_state(t)
-    kw = dict(phase="gossip", topology="exp", n_nodes=n, compressor=comp,
-              ef_state=ef0, seed=2)
-    wm, we = mixing.communicate(t, **kw)
-    gm, ge = mixing.communicate(t, backend="pallas", mesh=mesh, **kw)
+    spec = mixing.CommSpec(topology="exp", n_nodes=n, compressor=comp)
+    wm, we = mixing.communicate(t, spec, phase="gossip", ef_state=ef0,
+                                seed=2)
+    gm, ge = mixing.communicate(
+        t, spec.replace(backend="pallas", mesh=mesh), phase="gossip",
+        ef_state=ef0, seed=2)
     close(gm, wm, 2e-5); close(ge, we, 2e-5)
     print("CEF_OK")
 
     # identity under a sharded mesh: bitwise vs the uncompressed path
-    want = mixing.communicate(t, phase="gossip", topology="ring", n_nodes=n,
-                              backend="pallas", mesh=mesh)
-    got, ef = mixing.communicate(t, phase="gossip", topology="ring",
-                                 n_nodes=n, backend="pallas", mesh=mesh,
-                                 compressor=C.make_compressor("identity"))
+    sspec = mixing.CommSpec(topology="ring", n_nodes=n, backend="pallas",
+                            mesh=mesh)
+    want = mixing.communicate(t, sspec, phase="gossip")
+    got, ef = mixing.communicate(
+        t, sspec.replace(compressor=C.make_compressor("identity")),
+        phase="gossip")
     assert ef is None
     for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
         np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
@@ -575,9 +598,9 @@ _SHARDED_COMPRESSED_SCRIPT = textwrap.dedent("""
 
     # constant fixed point survives the halo exchange
     ct = jax.tree.map(lambda p: jnp.full_like(p, 1.5), t)
-    got, _ = mixing.communicate(ct, phase="gossip", topology="ring",
-                                n_nodes=n, backend="pallas", mesh=mesh,
-                                compressor=C.make_compressor("int8"), seed=5)
+    got, _ = mixing.communicate(
+        ct, sspec.replace(compressor=C.make_compressor("int8")),
+        phase="gossip", seed=5)
     close(got, ct, 1e-6)
     print("CCONSTANT_OK")
 
@@ -587,38 +610,41 @@ _SHARDED_COMPRESSED_SCRIPT = textwrap.dedent("""
                               ("int8", "pod_avg", 8),
                               ("fp8", "global", 1), ("fp8", "pod_avg", 4)]:
         comp = C.make_compressor(name)
-        kw = dict(phase=phase, topology="ring", n_nodes=n, n_pods=pods,
-                  global_compressor=comp, seed=11)
-        want, _ = mixing.communicate(t, **kw)
-        got, _ = mixing.communicate(t, backend="pallas", mesh=mesh, **kw)
+        spec = mixing.CommSpec(topology="ring", n_nodes=n, n_pods=pods,
+                               global_compressor=comp)
+        want, _ = mixing.communicate(t, spec, phase=phase, seed=11)
+        got, _ = mixing.communicate(
+            t, spec.replace(backend="pallas", mesh=mesh), phase=phase,
+            seed=11)
         close(got, want, 2e-5)
         print(f"COLL_OK {name}/{phase}/p{pods}")
 
     # collective EF threading matches the local reference
     comp = C.make_compressor("int8")
     ef0 = C.init_ef_state(t)
-    kw = dict(phase="global", topology="ring", n_nodes=n,
-              global_compressor=comp, ef_state=ef0, seed=2)
-    wm, we = mixing.communicate(t, **kw)
-    gm, ge = mixing.communicate(t, backend="pallas", mesh=mesh, **kw)
+    spec = mixing.CommSpec(topology="ring", n_nodes=n,
+                           global_compressor=comp)
+    wm, we = mixing.communicate(t, spec, phase="global", ef_state=ef0,
+                                seed=2)
+    gm, ge = mixing.communicate(
+        t, spec.replace(backend="pallas", mesh=mesh), phase="global",
+        ef_state=ef0, seed=2)
     close(gm, wm, 2e-5); close(ge, we, 2e-5)
     print("COLL_EF_OK")
 
     # consensus state is a bitwise fixed point through the real exchange
-    got, _ = mixing.communicate(ct, phase="global", topology="ring",
-                                n_nodes=n, backend="pallas", mesh=mesh,
-                                global_compressor=comp, seed=5)
+    got, _ = mixing.communicate(
+        ct, spec.replace(backend="pallas", mesh=mesh), phase="global",
+        seed=5)
     for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(ct)):
         np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
     print("COLL_CONSTANT_OK")
 
     # identity collective under the mesh: bitwise vs the uncompressed psum
-    want = mixing.communicate(t, phase="global", topology="ring", n_nodes=n,
-                              backend="pallas", mesh=mesh)
-    got, ef = mixing.communicate(t, phase="global", topology="ring",
-                                 n_nodes=n, backend="pallas", mesh=mesh,
-                                 global_compressor=C.make_compressor(
-                                     "identity"))
+    want = mixing.communicate(t, sspec, phase="global")
+    got, ef = mixing.communicate(
+        t, sspec.replace(global_compressor=C.make_compressor("identity")),
+        phase="global")
     assert ef is None
     for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
         np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
@@ -628,14 +654,13 @@ _SHARDED_COMPRESSED_SCRIPT = textwrap.dedent("""
     # the exact psum on the averaging phases (the recursion used to
     # re-attach the gossip compressor and run the compensated psum)
     for phase, pods in (("global", 1), ("pod_avg", 4)):
-        want = mixing.communicate(t, phase=phase, topology="ring",
-                                  n_nodes=n, n_pods=pods, backend="pallas",
-                                  mesh=mesh)
+        pspec = sspec.replace(n_pods=pods)
+        want = mixing.communicate(t, pspec, phase=phase)
         got, ef = mixing.communicate(
-            t, phase=phase, topology="ring", n_nodes=n, n_pods=pods,
-            backend="pallas", mesh=mesh,
-            compressor=C.make_compressor("int8"),
-            global_compressor=C.make_compressor("identity"), seed=4)
+            t, pspec.replace(compressor=C.make_compressor("int8"),
+                             global_compressor=C.make_compressor(
+                                 "identity")),
+            phase=phase, seed=4)
         assert ef is None
         for g, w in zip(jax.tree.leaves(got), jax.tree.leaves(want)):
             np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
@@ -644,10 +669,12 @@ _SHARDED_COMPRESSED_SCRIPT = textwrap.dedent("""
     # two-axis (pod, data) mesh: the flattened shard index keeps segment
     # order, so parity holds on hierarchical meshes too
     mesh2 = jax.make_mesh((2, 4), ("pod", "data"))
-    kw = dict(phase="global", topology="ring", n_nodes=n,
-              global_compressor=comp, seed=9)
-    want, _ = mixing.communicate(t, **kw)
-    got, _ = mixing.communicate(t, backend="pallas", mesh=mesh2, **kw)
+    spec = mixing.CommSpec(topology="ring", n_nodes=n,
+                           global_compressor=comp)
+    want, _ = mixing.communicate(t, spec, phase="global", seed=9)
+    got, _ = mixing.communicate(
+        t, spec.replace(backend="pallas", mesh=mesh2), phase="global",
+        seed=9)
     close(got, want, 2e-5)
     print("COLL_2AXIS_OK")
 """)

@@ -79,8 +79,9 @@ def test_collective_validation_names_caller():
     # dispatch through communicate_sharded: the public entry point's name
     with pytest.raises(ValueError, match=r"communicate_sharded.*no axis"):
         mixing.communicate_sharded(
-            x, phase="global", topology="ring", n_nodes=4, mesh=mesh,
-            node_axis="pod", global_compressor=comp)
+            x, mixing.CommSpec(topology="ring", n_nodes=4, mesh=mesh,
+                               node_axis="pod", global_compressor=comp),
+            phase="global")
 
 
 def test_flatten_nodes_sharded_roundtrip():
@@ -501,7 +502,8 @@ _RESHARD_RESUME_SCRIPT = textwrap.dedent("""
         # noise that can flip an isolated stochastic-rounding decision —
         # bounded by one quantization step per compressed round and
         # absorbed by EF.  So: every element within a couple of steps
-        # (5e-3 at this scale), the overwhelming majority at ulp level.  (Single-round model resharding with a
+        # (5e-3 at this scale), the overwhelming majority at ulp
+        # level.  (Single-round model resharding with a
         # bitwise-identical input is tolerance-tight — the parity
         # subprocess pins it at 2e-6.)
         for tree_a, tree_b in ((resumed.params, full.params),

@@ -75,10 +75,10 @@ def test_pod_avg_parity(n_pods, comm_dtype, rng_key):
 def test_communicate_dispatch_parity(phase, rng_key):
     """The selector on mixing.communicate reaches the same numbers."""
     tree = _tree(rng_key, 8)
-    kw = dict(phase=phase, topology="one_peer_exp", n_nodes=8, step=2,
-              n_pods=2)
-    want = mixing.communicate(tree, **kw)
-    got = mixing.communicate(tree, backend="pallas", **kw)
+    spec = mixing.CommSpec(topology="one_peer_exp", n_nodes=8, n_pods=2)
+    want = mixing.communicate(tree, spec, phase=phase, step=2)
+    got = mixing.communicate(tree, spec.replace(backend="pallas"),
+                             phase=phase, step=2)
     _assert_tree_close(got, want, atol=1e-5)
 
 
@@ -114,8 +114,9 @@ def test_mix_residual_outputs(phase, rng_key):
     tree = _tree(rng_key, n)
     mixed, xbar, resid = mp.mix_residual(tree, phase=phase, topology="ring",
                                          n_nodes=n, n_pods=2)
-    want = mixing.communicate(tree, phase=phase, topology="ring", n_nodes=n,
-                              n_pods=2)
+    want = mixing.communicate(
+        tree, mixing.CommSpec(topology="ring", n_nodes=n, n_pods=2),
+        phase=phase)
     _assert_tree_close(mixed, want, atol=1e-5)
     # x̄ = node average of the mixed iterate, leaves without the node axis
     want_bar = jax.tree.map(lambda p: jnp.mean(p, axis=0), want)
@@ -206,11 +207,13 @@ def test_backend_error_names_entry_point(rng_key):
     with pytest.raises(ValueError, match=r"mixing\.mix_pytree.*axis=1"):
         mixing.mix_pytree(x, "ring", 8, axis=1, backend="pallas")
     with pytest.raises(ValueError, match=r"mixing\.communicate.*axis=2"):
-        mixing.communicate(x, phase="gossip", topology="ring", n_nodes=8,
-                           axis=2, backend="pallas")
+        mixing.communicate(
+            x, mixing.CommSpec(topology="ring", n_nodes=8,
+                               backend="pallas"), phase="gossip", axis=2)
     with pytest.raises(ValueError, match=r"mixing\.communicate.*cuda"):
-        mixing.communicate(x, phase="gossip", topology="ring", n_nodes=8,
-                           backend="cuda")
+        mixing.communicate(
+            x, mixing.CommSpec(topology="ring", n_nodes=8,
+                               backend="cuda"), phase="gossip")
 
 
 def test_backend_validated_before_noop_early_returns(rng_key):
@@ -379,9 +382,10 @@ def test_node_axis_pod_without_pod_axis_is_unsharded():
     assert mixing.node_shard_count(mesh, "pod") == 1
     assert not mixing.use_sharded_backend("pallas", mesh, "pod", "auto")
     with pytest.raises(ValueError, match="no axis"):
-        mixing.communicate_sharded(jnp.ones((4, 2)), phase="gossip",
-                                   topology="ring", n_nodes=4, mesh=mesh,
-                                   node_axis="pod")
+        mixing.communicate_sharded(
+            jnp.ones((4, 2)),
+            mixing.CommSpec(topology="ring", n_nodes=4, mesh=mesh,
+                            node_axis="pod"), phase="gossip")
 
 
 def test_shard_mode_sharded_requires_sharded_mesh(rng_key):
@@ -389,9 +393,12 @@ def test_shard_mode_sharded_requires_sharded_mesh(rng_key):
     must raise, not silently fall back to the stacked kernels."""
     x = jax.random.normal(rng_key, (8, 4))
     with pytest.raises(ValueError, match="sharded"):
-        mixing.communicate(x, phase="gossip", topology="ring", n_nodes=8,
-                           backend="pallas", mesh=None,
-                           shard_mode="sharded")
+        mixing.communicate(
+            x, mixing.CommSpec(topology="ring", n_nodes=8,
+                               backend="pallas", mesh=None,
+                               shard_mode="sharded"), phase="gossip")
     with pytest.raises(ValueError, match="shard_mode"):
-        mixing.communicate(x, phase="gossip", topology="ring", n_nodes=8,
-                           backend="pallas", shard_mode="bogus")
+        mixing.communicate(
+            x, mixing.CommSpec(topology="ring", n_nodes=8,
+                               backend="pallas", shard_mode="bogus"),
+            phase="gossip")

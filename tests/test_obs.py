@@ -235,6 +235,7 @@ def test_fault_events_in_stream():
 # ---------------------------------------------------------------------------
 # Zero per-step host syncs on the no-logging hot path (regression)
 # ---------------------------------------------------------------------------
+@pytest.mark.repro_guards
 def test_trainer_hot_path_zero_per_step_host_syncs(monkeypatch):
     """log_every=0 gossip_aga run crossing a global boundary: the loop
     must never implicitly sync (float()/np.asarray on device values) —
@@ -259,7 +260,7 @@ def test_trainer_hot_path_zero_per_step_host_syncs(monkeypatch):
     # start-step read + one lazy materialization per global boundary;
     # strictly fewer transfers than steps == no per-step sync
     assert calls["n"] < steps
-    assert int(state.step) == steps
+    assert int(real(state.step)) == steps
     # the schedule did adapt (the lazy loss signal arrived)
     assert len(tr.schedule.history) >= 2
 

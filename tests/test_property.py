@@ -101,10 +101,11 @@ def test_constant_tree_is_communication_fixed_point(n, t, step, c, backend):
     even n identical addends)."""
     tree = {"w": jnp.full((n, 3), c, jnp.float32),
             "b": jnp.full((n,), c, jnp.float32)}
-    cases = [("gossip", {}), ("global", {}), ("pod_avg", {"n_pods": 2})]
-    for phase, kw in cases:
-        out = mixing.communicate(tree, phase=phase, topology=t, n_nodes=n,
-                                 step=step, backend=backend, **kw)
+    cases = [("gossip", 1), ("global", 1), ("pod_avg", 2)]
+    for phase, n_pods in cases:
+        spec = mixing.CommSpec(topology=t, n_nodes=n, n_pods=n_pods,
+                               backend=backend)
+        out = mixing.communicate(tree, spec, phase=phase, step=step)
         for got, want in zip(jax.tree.leaves(out), jax.tree.leaves(tree)):
             if phase == "gossip" and t == "one_peer_exp":
                 np.testing.assert_array_equal(np.asarray(got),

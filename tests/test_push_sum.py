@@ -18,8 +18,9 @@ DIRECTED = list(topo.DIRECTED_TOPOLOGIES)
 
 
 def _round(params, w, W, n, backend, **kw):
-    return mixing.communicate_push_sum(params, w, W=jnp.asarray(W, jnp.float32),
-                                       n_nodes=n, backend=backend, **kw)
+    return mixing.communicate_push_sum(
+        params, w, W=jnp.asarray(W, jnp.float32), n_nodes=n,
+        backend=backend, **kw)
 
 
 # ---------------------------------------------------------------------------
@@ -244,7 +245,7 @@ def test_compressed_push_sum_weight_stays_exact(codec, backend, rng_key):
     err = np.abs(np.asarray(xq) - np.asarray(xe)).max()
     assert 0 < err < 0.2, err
     # EF memory picked up the quantization residual
-    assert any(float(jnp.abs(l).max()) > 0 for l in jax.tree.leaves(ef2))
+    assert any(float(jnp.abs(lf).max()) > 0 for lf in jax.tree.leaves(ef2))
 
 
 def test_identity_codec_is_exact_passthrough(rng_key):

@@ -43,8 +43,10 @@ def test_batched_server_matches_sequential(setup):
     generation produces."""
     model, params = setup
     eng = Engine(model, s_max=24)
-    prompts = [np.asarray(jax.random.randint(jax.random.PRNGKey(i), (5,), 0,
-                                             CFG.vocab_size)) for i in range(3)]
+    prompts = [np.asarray(jax.random.randint(jax.random.PRNGKey(i),
+                                             (5,), 0,
+                                             CFG.vocab_size))
+               for i in range(3)]
     # sequential reference
     want = []
     for p in prompts:

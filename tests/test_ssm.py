@@ -73,9 +73,9 @@ def test_mamba_associative_scan_matches_sequential():
     a = jax.nn.sigmoid(jax.random.normal(key, (B, S, D, N)))
     b = jax.random.normal(jax.random.PRNGKey(1), (B, S, D, N))
 
-    def combine(l, r):
-        al, bl = l
-        ar, br = r
+    def combine(lhs, rhs):
+        al, bl = lhs
+        ar, br = rhs
         return al * ar, bl * ar + br
 
     _, h_par = jax.lax.associative_scan(combine, (a, b), axis=1)

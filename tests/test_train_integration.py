@@ -28,14 +28,20 @@ def _tcfg(algorithm="gossip_pga", topology="ring", H=4, opt="adamw",
         log_every=0)
 
 
+@pytest.mark.repro_guards
 @pytest.mark.parametrize("algorithm", ["parallel", "gossip", "local",
                                        "gossip_pga", "gossip_aga", "slowmo"])
 def test_every_algorithm_runs(algorithm):
+    """Guarded suite: under ``--repro-guards`` the whole run executes with
+    the transfer guard + leak checking on, proving the log_every=0 hot
+    path of every algorithm never implicitly syncs (assertions below use
+    explicit ``jax.device_get`` only)."""
     tr = Trainer(_tcfg(algorithm), n_nodes=4)
     state = tr.init_state(jax.random.PRNGKey(0))
     state = tr.run(state, steps=5, log_every=0)
-    assert int(state.step) == 5
-    for leaf in jax.tree.leaves(state.params):
+    host = jax.device_get((state.step, state.params))
+    assert int(host[0]) == 5
+    for leaf in jax.tree.leaves(host[1]):
         assert np.all(np.isfinite(np.asarray(leaf, np.float32)))
 
 
