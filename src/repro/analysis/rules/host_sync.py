@@ -34,6 +34,7 @@ HOT_PATHS: Tuple[Tuple[str, Tuple[str, ...]], ...] = (
     ("src/repro/train/step.py", ("*",)),
     ("src/repro/train/trainer.py", ("Trainer.run", "Trainer._run")),
     ("src/repro/core/mixing.py", ("*",)),
+    ("src/repro/core/algo.py", ("*",)),
     ("src/repro/kernels/*.py", ("*",)),
     ("src/repro/serve/engine.py",
      ("Engine.generate", "Engine.decode_step", "Engine.prefill",

@@ -13,21 +13,24 @@ Two contracts added for compressed runs (ISSUE 4 bugfixes):
   unsigned-int **bit views** (uint16/uint8 — bit-exact, so resume is
   bitwise) and their true dtype is recorded in the manifest's ``dtypes``
   entry; restore views them back before the template cast.
-* **optional ``ef_state`` reconcile** — a ``TrainState`` checkpoint from a
-  compressed run carries error-feedback memory that a fresh template built
-  without compression lacks (and vice versa).  Restore reconciles instead
-  of KeyError-ing / silently dropping the EF memory: a checkpointed
-  ``ef_state`` is restored even when the template has ``ef_state=None``
-  (the template grows a params-shaped fp32 slot), and a template expecting
-  ``ef_state`` that the checkpoint predates gets fresh zeros (EF restarts
-  empty, the correct semantic for newly-enabled compression).
+* **optional extras reconcile** — ``TrainState.extras`` slots (the
+  ``repro.core.algo`` descriptors: ``ef_state``, ``push_weight``, SlowMo's
+  anchors, GT-PGA's tracker, ...) are config-dependent, so checkpoint and
+  template can disagree on which slots exist.  Restore reconciles instead
+  of KeyError-ing / silently dropping state: a checkpointed slot the
+  template lacks grows into the template (a params-mirroring subtree grows
+  a params-shaped fp32 slot; other shapes come from the npz itself), and a
+  template slot the checkpoint predates is backfilled by the slot's
+  registered kind — **ones** for ``push_weight`` (w = 1 is the push-sum
+  init, Σw = n; a zero weight would make every de-biased read ``x/w``
+  infinite), zeros for everything else (EF restarts empty, the correct
+  semantic for newly-enabled compression; a zero GT tracker re-enters the
+  tracking recursion from its init point).
 
-The push-sum weight scalar (``TrainState.push_weight``, DESIGN.md §2.5)
-gets the same optional-field reconcile: a checkpointed weight is restored
-into a template built without push-sum (the slot grows from the npz
-shape), and a push-sum template restoring a pre-push-sum checkpoint gets
-fresh **ones** — not zeros: w = 1 is the push-sum init (Σw = n), and a
-zero weight would make every de-biased read ``x/w`` infinite.
+Extras slots save under ``.extras/<slot>/...``; checkpoints written before
+the extras dict (legacy top-level fields ``.ef_state/...``,
+``.push_weight``, ``.slow_params/...``) restore transparently via a
+per-key alias.
 """
 from __future__ import annotations
 
@@ -42,14 +45,50 @@ import numpy as np
 
 PyTree = Any
 _MANIFEST = "manifest.json"
-_EF_PREFIX = ".ef_state/"
-_EF_KEY = ".ef_state"                      # bare-array (single-leaf) ef_state
-_PUSH_KEY = ".push_weight"                 # push-sum weight scalar (n, 1)
+_EXTRAS_PREFIX = ".extras/"                # TrainState extras slots
 _DTYPES_KEY = "__dtype_manifest__"         # reserved npz entry, not a leaf
+# TrainState fields that are NOT extras slots — a leading ".<name>" on any
+# other key is a legacy (pre-extras) slot spelling
+_CORE_FIELDS = ("params", "opt_state", "step", "extras")
 
 
-def _is_ef_key(key: str) -> bool:
-    return key == _EF_KEY or key.startswith(_EF_PREFIX)
+def _known_slots():
+    """Slot names the algorithm registry can own (legacy fallback when the
+    registry is unavailable in standalone-checkpoint usage)."""
+    try:
+        from repro.core.algo import known_slot_names
+        return set(known_slot_names())
+    except ImportError:
+        return {"slow_params", "slow_u", "ef_state", "push_weight"}
+
+
+def _backfill_kind(slot_name: str) -> str:
+    try:
+        from repro.core.algo import backfill_kind
+        return backfill_kind(slot_name)
+    except ImportError:
+        return "ones" if slot_name == "push_weight" else "zeros"
+
+
+def _slot_of_key(key: str, known) -> Optional[str]:
+    """Extras slot name a flat key addresses, else None.  Accepts both the
+    current ``.extras/<slot>...`` spelling and the legacy top-level
+    ``.<slot>...`` one."""
+    if key.startswith(_EXTRAS_PREFIX):
+        return key[len(_EXTRAS_PREFIX):].split("/", 1)[0]
+    if key.startswith("."):
+        name = key[1:].split("/", 1)[0]
+        if name not in _CORE_FIELDS and name in known:
+            return name
+    return None
+
+
+def _legacy_alias(key: str) -> Optional[str]:
+    """Pre-extras spelling of an ``.extras/...`` key (``.ef_state/w`` for
+    ``.extras/ef_state/w``)."""
+    if key.startswith(_EXTRAS_PREFIX):
+        return "." + key[len(_EXTRAS_PREFIX):]
+    return None
 
 
 def _flatten(tree: PyTree):
@@ -122,46 +161,60 @@ def _load_manifest(ckpt_dir: str) -> Dict[str, Any]:
         return json.load(f)
 
 
-def _reconcile_ef(template: PyTree, data) -> PyTree:
-    """Align an optional ``TrainState.ef_state`` between checkpoint and
-    template (see module docstring).  Non-TrainState templates pass
-    through untouched."""
+def _reconcile_extras(template: PyTree, data) -> PyTree:
+    """Grow extras slots the checkpoint carries but the template lacks
+    (see module docstring).  Non-TrainState templates pass through
+    untouched."""
     try:
         from repro.train.state import TrainState
     except ImportError:                      # standalone-checkpoint usage
         return template
     if not isinstance(template, TrainState):
         return template
-    ef_keys = [k for k in data.files if _is_ef_key(k)]
-    if ef_keys and template.ef_state is None:
-        import jax.numpy as jnp
-        if ef_keys == [_EF_KEY]:
-            # bare single-array EF memory: shape comes from the npz itself
-            ef_tmpl = jax.ShapeDtypeStruct(data[_EF_KEY].shape, jnp.float32)
-        else:
-            # params-mirroring EF tree: grow a params-shaped fp32 slot
-            ef_tmpl = jax.tree.map(
+    known = _known_slots()
+    present: Dict[str, list] = {}
+    for k in data.files:
+        if k == _DTYPES_KEY:
+            continue
+        name = _slot_of_key(k, known)
+        if name is not None:
+            present.setdefault(name, []).append(k)
+    grow = {n: ks for n, ks in present.items() if n not in template.extras}
+    if not grow:
+        return template
+    import jax.numpy as jnp
+    params_suffixes = set(_flatten(template.params)[0])
+    extras = dict(template.extras)
+    for name, keys in sorted(grow.items()):
+        bare_new, bare_old = _EXTRAS_PREFIX + name, "." + name
+        if keys == [bare_new] or keys == [bare_old]:
+            # bare single-array slot: shape comes from the npz itself
+            extras[name] = jax.ShapeDtypeStruct(data[keys[0]].shape,
+                                                jnp.float32)
+            continue
+        suffixes = {}
+        for k in keys:
+            base = bare_new if k.startswith(_EXTRAS_PREFIX) else bare_old
+            suffixes[k[len(base) + 1:]] = k
+        if set(suffixes) == params_suffixes:
+            # params-mirroring slot (EF memory, GT tracker): grow a
+            # params-shaped fp32 slot, preserving SDS-ness of the template
+            extras[name] = jax.tree.map(
                 lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
                 if isinstance(p, jax.ShapeDtypeStruct)
                 else jnp.zeros(p.shape, jnp.float32), template.params)
-        return dataclasses.replace(template, ef_state=ef_tmpl)
-    return template
-
-
-def _reconcile_push(template: PyTree, data) -> PyTree:
-    """Align the optional ``TrainState.push_weight`` between checkpoint and
-    template (same contract shape as :func:`_reconcile_ef`)."""
-    try:
-        from repro.train.state import TrainState
-    except ImportError:
-        return template
-    if not isinstance(template, TrainState):
-        return template
-    if _PUSH_KEY in data.files and template.push_weight is None:
-        import jax.numpy as jnp
-        slot = jax.ShapeDtypeStruct(data[_PUSH_KEY].shape, jnp.float32)
-        return dataclasses.replace(template, push_weight=slot)
-    return template
+        else:
+            # arbitrary subtree: rebuild a nested dict from the npz paths
+            nested: Dict[str, Any] = {}
+            for suffix, k in sorted(suffixes.items()):
+                parts = suffix.split("/")
+                d = nested
+                for p in parts[:-1]:
+                    d = d.setdefault(p, {})
+                d[parts[-1]] = jax.ShapeDtypeStruct(data[k].shape,
+                                                    jnp.float32)
+            extras[name] = nested
+    return dataclasses.replace(template, extras=extras)
 
 
 def restore_checkpoint(ckpt_dir: str, template: PyTree,
@@ -174,21 +227,26 @@ def restore_checkpoint(ckpt_dir: str, template: PyTree,
         dtypes = json.loads(str(data[_DTYPES_KEY]))
     else:                                    # older save: latest-step record
         dtypes = _load_manifest(ckpt_dir).get("dtypes", {})
-    template = _reconcile_ef(template, data)
-    template = _reconcile_push(template, data)
+    template = _reconcile_extras(template, data)
     flat, treedef = _flatten(template)
+    known = _known_slots()
     leaves = []
     for key, tmpl in flat.items():
-        if key not in data and _is_ef_key(key):
-            # template expects EF memory the checkpoint predates: fresh
-            # zeros (EF restarts empty when compression is newly enabled)
-            leaves.append(jax.numpy.zeros(tmpl.shape, tmpl.dtype))
-            continue
-        if key not in data and key == _PUSH_KEY:
-            # push-sum template, pre-push-sum checkpoint: the weight
-            # restarts at its init value 1 (zeros would blow up x/w)
-            leaves.append(jax.numpy.ones(tmpl.shape, tmpl.dtype))
-            continue
+        if key not in data:
+            slot = _slot_of_key(key, known)
+            legacy = _legacy_alias(key)
+            if legacy is not None and legacy in data:
+                # pre-extras checkpoint: same slot, old spelling
+                key = legacy
+            elif slot is not None:
+                # template expects a slot the checkpoint predates:
+                # backfill by the slot's registered kind — ones for push
+                # weights (zeros would blow up x/w), zeros otherwise (EF
+                # restarts empty, GT tracking restarts from init)
+                fill = (jax.numpy.ones if _backfill_kind(slot) == "ones"
+                        else jax.numpy.zeros)
+                leaves.append(fill(tmpl.shape, tmpl.dtype))
+                continue
         arr = data[key]
         if key in dtypes:
             arr = arr.view(_resolve_dtype(dtypes[key]))

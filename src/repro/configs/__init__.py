@@ -7,6 +7,7 @@ from typing import Callable, Dict
 from repro.configs.base import (  # noqa: F401 (public re-exports)
     ALGORITHMS,
     INPUT_SHAPES,
+    PUSH_SUM_ALGORITHMS,
     TOPOLOGIES,
     AudioStubConfig,
     DataConfig,

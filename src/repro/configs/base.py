@@ -171,15 +171,40 @@ class ModelConfig:
 # ---------------------------------------------------------------------------
 # Distribution / decentralized-training config (the paper's knobs)
 # ---------------------------------------------------------------------------
-ALGORITHMS = ("parallel", "gossip", "local", "gossip_pga", "gossip_aga",
-              "slowmo", "hier_pga")
+# ALGORITHMS / PUSH_SUM_ALGORITHMS are sourced from the repro.core.algo
+# registry — the single place an algorithm is declared — but lazily (module
+# __getattr__ below): importing them at module scope would cycle through
+# repro.core back into this file, and configs must stay dependency-light.
 TOPOLOGIES = ("ring", "grid", "exp", "one_peer_exp", "full", "disconnected",
               "directed_ring", "directed_exp")
-# push-sum works with any algorithm whose rounds are gossip and/or global
-# averaging — slowmo/hier_pga compose outer-iterate or pod rounds that have
-# no de-biased push-sum form yet (DESIGN.md §2.5)
-PUSH_SUM_ALGORITHMS = ("parallel", "local", "gossip", "gossip_pga",
-                       "gossip_aga")
+
+
+def _algorithm_names() -> Tuple[str, ...]:
+    from repro.core.algo import algorithm_names
+    return algorithm_names()
+
+
+def _push_sum_algorithm_names() -> Tuple[str, ...]:
+    # push-sum works with any algorithm whose rounds are gossip and/or
+    # global averaging — slowmo/hier_pga compose outer-iterate or pod
+    # rounds that have no de-biased push-sum form yet (DESIGN.md §2.5),
+    # and gt_pga's tracker recursion assumes row-stochastic mixing
+    from repro.core.algo import push_sum_algorithm_names
+    return push_sum_algorithm_names()
+
+
+def __getattr__(name: str):
+    # PEP 562: resolve the registry-backed tuples on first access and
+    # cache them as real module attributes
+    if name == "ALGORITHMS":
+        value = _algorithm_names()
+    elif name == "PUSH_SUM_ALGORITHMS":
+        value = _push_sum_algorithm_names()
+    else:
+        raise AttributeError(
+            f"module {__name__!r} has no attribute {name!r}")
+    globals()[name] = value
+    return value
 
 
 @dataclass(frozen=True)
@@ -280,8 +305,13 @@ class DistConfig:
                                      # too (node_axis="pod")
 
     def validate(self) -> "DistConfig":
-        if self.algorithm not in ALGORITHMS:
-            raise ValueError(f"unknown algorithm {self.algorithm!r}")
+        # registry lookups via the lazy helpers — bare names inside a
+        # function body do NOT trigger the module __getattr__
+        if self.algorithm not in _algorithm_names():
+            raise ValueError(
+                f"DistConfig.validate: unknown algorithm "
+                f"{self.algorithm!r} (expected one of "
+                f"{_algorithm_names()})")
         if self.topology not in TOPOLOGIES:
             raise ValueError(f"unknown topology {self.topology!r}")
         if self.H < 1:
@@ -336,10 +366,11 @@ class DistConfig:
                 f"stochastic): it requires push_sum=True so reads are "
                 f"de-biased by the weight scalar (DESIGN.md §2.5)")
         if self.push_sum:
-            if self.algorithm not in PUSH_SUM_ALGORITHMS:
+            push_ok = _push_sum_algorithm_names()
+            if self.algorithm not in push_ok:
                 raise ValueError(
                     f"push_sum composes with algorithms "
-                    f"{PUSH_SUM_ALGORITHMS}, not {self.algorithm!r}")
+                    f"{push_ok}, not {self.algorithm!r}")
             if self.topology == "grid":
                 raise ValueError(
                     "push_sum has no 2-D grid decomposition — use a 1-D "

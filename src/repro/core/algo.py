@@ -1,0 +1,431 @@
+"""Composable algorithm layer: one registry, four hooks, no step forks.
+
+Every training algorithm in the repo — the paper's Gossip-PGA (Alg. 1/2),
+the baselines (parallel SGD, Local SGD, plain gossip, SlowMo), the
+extensions (AGA, hierarchical PGA) and gradient tracking (GT-PGA) — shares
+one skeleton: per-node grad -> optimizer half-step -> communication round.
+This module captures what *differs* per algorithm so that ``train/step.py``
+and ``core/algorithms.py simulate`` can each keep exactly one step body:
+
+* ``slots`` — extra ``TrainState.extras`` entries as typed descriptors
+  (init value, vmap/shard axes, checkpoint backfill), subsuming the old
+  ad-hoc ``slow_params``/``slow_u``/``ef_state``/``push_weight`` fields and
+  the ``state_axes(slowmo=, ef=, push=)`` flag creep.
+* ``pre_update(extras, grads)`` — transform of the gradients consumed by
+  the optimizer (GT-PGA's tracker recursion ``y <- y + g - g_prev``).
+* ``comm_payload(extras, params_half)`` — extra pytrees that ride the
+  communication round *jointly* with the params, through the same
+  ``communicate``/``CommSpec`` call.  Because the payload travels inside
+  one joint tree, every backend, compression/EF, push-sum and overlap
+  mode composes with it for free (DESIGN.md §3 invariant).
+* ``post_round(extras, mixed, phase, ctx)`` — algorithm-specific update
+  after the round (SlowMo outer step, GT tracker absorption).  ``mixed``
+  is always a dict ``{"params": tree, **payload}`` at the hook level;
+  the call sites unwrap a bare params tree when the payload is empty so
+  legacy algorithms keep byte-identical comm graphs.
+
+Lookups raise caller-named ``ValueError`` listing valid names, consistent
+with ``DistConfig.validate`` (never a raw ``KeyError``).
+
+This module must not import ``repro.configs`` or ``repro.core.mixing`` at
+module scope: ``configs/base.py`` sources ``ALGORITHMS`` from this registry
+lazily and would otherwise form an import cycle.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+__all__ = [
+    "Algorithm",
+    "ExtraSlot",
+    "StepContext",
+    "algorithm_names",
+    "backfill_kind",
+    "extras_axes",
+    "get_algorithm",
+    "init_extras",
+    "join_payload",
+    "known_slot_names",
+    "phases_for_algorithm",
+    "push_sum_algorithm_names",
+    "register",
+    "state_slots",
+    "unwrap_mixed",
+    "wrap_mixed",
+]
+
+
+# --------------------------------------------------------------------------
+# Slot descriptors
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ExtraSlot:
+    """Descriptor for one entry of ``TrainState.extras``.
+
+    ``kind`` fixes both the init shape and the vmap/shard axes:
+
+    ============== ======================================= ================
+    kind            shape                                   axes
+    ============== ======================================= ================
+    stacked_params  params tree with leading node axis      stacked axes
+    unstacked       single-replica params tree              unstacked axes
+    node_scalar     ``(n_nodes, 1)`` float32                ``("node", None)``
+    ============== ======================================= ================
+
+    ``init``: ``"zeros"`` (float32 zeros of the base shape), ``"ones"``
+    (node_scalar only), or ``"row0"`` (node 0's params — SlowMo's anchor).
+    ``backfill`` names what ``checkpoint/ckpt.py`` materialises when an
+    older checkpoint lacks the slot (``"ones"`` for push weights, else
+    ``"zeros"``).  ``payload`` marks the slot as riding the communication
+    round jointly with the params (GT-PGA's tracker).
+    """
+
+    name: str
+    kind: str = "stacked_params"  # stacked_params | unstacked | node_scalar
+    init: str = "zeros"           # zeros | ones | row0
+    backfill: str = "zeros"       # zeros | ones
+    payload: bool = False
+
+    def init_value(self, params_stacked: Any, n_nodes: int) -> Any:
+        import jax
+        import jax.numpy as jnp
+
+        if self.kind == "node_scalar":
+            fn = jnp.ones if self.init == "ones" else jnp.zeros
+            return fn((n_nodes, 1), jnp.float32)
+        base = params_stacked
+        if self.kind == "unstacked":
+            base = jax.tree.map(lambda p: p[0], params_stacked)
+        if self.init == "row0":
+            return base
+        return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), base)
+
+    def axes_value(self, params_axes_stacked: Any,
+                   params_axes_unstacked: Any) -> Any:
+        if self.kind == "node_scalar":
+            return ("node", None)
+        if self.kind == "unstacked":
+            return params_axes_unstacked
+        return params_axes_stacked
+
+
+# Mode slots: owned by the communication stack, not by any one algorithm,
+# but declared here so init/axes/backfill live in a single registry.
+EF_SLOT = ExtraSlot("ef_state", kind="stacked_params", backfill="zeros")
+PUSH_SLOT = ExtraSlot("push_weight", kind="node_scalar", init="ones",
+                      backfill="ones")
+
+
+# --------------------------------------------------------------------------
+# Step context + algorithm protocol
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class StepContext:
+    """Per-step constants handed to hooks (built inside the traced step)."""
+
+    dist: Any        # DistConfig (static)
+    n_nodes: int     # static
+    lr: Any          # traced scalar learning rate for this step
+
+
+class Algorithm:
+    """One decentralised training algorithm: phases + extras + hooks."""
+
+    name: str = ""
+    phases: Tuple[str, ...] = ()
+    #: Phases consumed entirely by ``post_round`` with no comm round
+    #: (SlowMo's outer step).  The step body skips ``communicate`` for
+    #: these and the trainer/simulator keep their historical jit
+    #: boundaries around them.
+    owned_phases: Tuple[str, ...] = ()
+    slots: Tuple[ExtraSlot, ...] = ()
+    #: Eligible to compose with push-sum (directed, gossip-style mixing).
+    push_sum_capable: bool = False
+    #: True when ``pre_update`` is not the identity; disables the fused
+    #: pallas half-step+mix kernel, whose in-kernel update consumes raw
+    #: grads.
+    transforms_grads: bool = False
+    description: str = ""
+
+    def payload_names(self) -> Tuple[str, ...]:
+        return tuple(s.name for s in self.slots if s.payload)
+
+    # -- hooks -------------------------------------------------------------
+    def pre_update(self, extras: Dict[str, Any],
+                   grads: Any) -> Tuple[Any, Dict[str, Any]]:
+        """Return ``(update_grads, extras)`` — what the optimizer consumes."""
+        return grads, extras
+
+    def comm_payload(self, extras: Dict[str, Any],
+                     params_half: Any) -> Dict[str, Any]:
+        """Extra pytrees that ride the round jointly with the params."""
+        return {n: extras[n] for n in self.payload_names()}
+
+    def post_round(self, extras: Dict[str, Any], mixed: Dict[str, Any],
+                   phase: str, ctx: StepContext) -> Tuple[Any, Dict[str, Any]]:
+        """Consume the round output; return ``(new_params, extras)``.
+
+        Default: absorb mixed payload slots back into ``extras`` and pass
+        the mixed params through unchanged.
+        """
+        names = self.payload_names()
+        if names:
+            extras = dict(extras)
+            for n in names:
+                extras[n] = mixed[n]
+        return mixed["params"], extras
+
+
+# --------------------------------------------------------------------------
+# Registry
+# --------------------------------------------------------------------------
+_REGISTRY: Dict[str, Algorithm] = {}
+
+
+def register(algo: Algorithm) -> Algorithm:
+    if not algo.name:
+        raise ValueError("register: algorithm must set a non-empty name")
+    _REGISTRY[algo.name] = algo
+    return algo
+
+
+def algorithm_names() -> Tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+def push_sum_algorithm_names() -> Tuple[str, ...]:
+    return tuple(n for n, a in _REGISTRY.items() if a.push_sum_capable)
+
+
+def get_algorithm(name: str, *, caller: str = "get_algorithm") -> Algorithm:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"{caller}: unknown algorithm {name!r} "
+            f"(expected one of {algorithm_names()})") from None
+
+
+def phases_for_algorithm(algorithm: str) -> Tuple[str, ...]:
+    """Phases an algorithm's schedule can emit, in canonical order."""
+    return get_algorithm(algorithm, caller="phases_for_algorithm").phases
+
+
+def known_slot_names() -> Tuple[str, ...]:
+    """Every extras slot name any registered algorithm (or mode) can own."""
+    names = []
+    for algo in _REGISTRY.values():
+        for slot in algo.slots:
+            if slot.name not in names:
+                names.append(slot.name)
+    for slot in (EF_SLOT, PUSH_SLOT):
+        if slot.name not in names:
+            names.append(slot.name)
+    return tuple(names)
+
+
+def backfill_kind(slot_name: str) -> str:
+    """Checkpoint backfill for a slot missing from an older checkpoint."""
+    for algo in _REGISTRY.values():
+        for slot in algo.slots:
+            if slot.name == slot_name:
+                return slot.backfill
+    for slot in (EF_SLOT, PUSH_SLOT):
+        if slot.name == slot_name:
+            return slot.backfill
+    return "zeros"
+
+
+# --------------------------------------------------------------------------
+# Extras construction (algorithm slots + mode slots)
+# --------------------------------------------------------------------------
+def state_slots(dist: Any) -> Tuple[ExtraSlot, ...]:
+    """All extras slots for a config: algorithm-declared plus mode slots."""
+    algo = get_algorithm(dist.algorithm, caller="state_slots")
+    slots = tuple(algo.slots)
+    if dist.comm_error_feedback:
+        slots += (EF_SLOT,)
+    if dist.push_sum:
+        slots += (PUSH_SLOT,)
+    return slots
+
+
+def init_extras(dist: Any, params_stacked: Any,
+                n_nodes: int) -> Dict[str, Any]:
+    """Initial ``TrainState.extras`` for a config.
+
+    The error-feedback slot mirrors the *joint* comm payload (params plus
+    any algorithm payload slots), so compressed GT-PGA keeps one residual
+    per transmitted leaf.
+    """
+    algo = get_algorithm(dist.algorithm, caller="init_extras")
+    extras: Dict[str, Any] = {}
+    for slot in algo.slots:
+        extras[slot.name] = slot.init_value(params_stacked, n_nodes)
+    if dist.comm_error_feedback:
+        from repro.compress import init_ef_state
+
+        payload = algo.comm_payload(extras, params_stacked)
+        extras["ef_state"] = init_ef_state(
+            join_payload(payload, params_stacked))
+    if dist.push_sum:
+        extras["push_weight"] = PUSH_SLOT.init_value(params_stacked, n_nodes)
+    return extras
+
+
+def extras_axes(dist: Any, params_axes_stacked: Any,
+                params_axes_unstacked: Any) -> Dict[str, Any]:
+    """vmap/shard axes tree matching ``init_extras``'s structure."""
+    algo = get_algorithm(dist.algorithm, caller="extras_axes")
+    axes: Dict[str, Any] = {}
+    for slot in algo.slots:
+        axes[slot.name] = slot.axes_value(params_axes_stacked,
+                                          params_axes_unstacked)
+    if dist.comm_error_feedback:
+        payload_axes = {n: params_axes_stacked for n in algo.payload_names()}
+        axes["ef_state"] = join_payload(payload_axes, params_axes_stacked)
+    if dist.push_sum:
+        axes["push_weight"] = PUSH_SLOT.axes_value(params_axes_stacked,
+                                                   params_axes_unstacked)
+    return axes
+
+
+# --------------------------------------------------------------------------
+# Joint-payload plumbing
+# --------------------------------------------------------------------------
+def join_payload(payload: Dict[str, Any], params: Any) -> Any:
+    """The tree that rides the comm round.
+
+    Bare params when the payload is empty — legacy algorithms must hand
+    ``communicate`` the exact same tree as before the refactor so their
+    comm graphs (and trajectories) stay bitwise identical.
+    """
+    if not payload:
+        return params
+    return {"params": params, **payload}
+
+
+def wrap_mixed(mixed: Any, has_payload: bool) -> Dict[str, Any]:
+    """Normalise a round's output to the ``post_round`` dict contract."""
+    return mixed if has_payload else {"params": mixed}
+
+
+def unwrap_mixed(joint: Any, has_payload: bool) -> Any:
+    """Params tree of a joint round tree (inverse of ``join_payload``)."""
+    return joint["params"] if has_payload else joint
+
+
+# --------------------------------------------------------------------------
+# Algorithms
+# --------------------------------------------------------------------------
+class _Parallel(Algorithm):
+    name = "parallel"
+    phases = ("global",)
+    push_sum_capable = True
+    description = "All-reduce every step (centralised baseline)."
+
+
+class _Gossip(Algorithm):
+    name = "gossip"
+    phases = ("gossip",)
+    push_sum_capable = True
+    description = "One W-mixing per step (DSGD)."
+
+
+class _Local(Algorithm):
+    name = "local"
+    phases = ("none", "global")
+    push_sum_capable = True
+    description = "H local steps, then a global average (Local SGD)."
+
+
+class _GossipPGA(Algorithm):
+    name = "gossip_pga"
+    phases = ("gossip", "global")
+    push_sum_capable = True
+    description = "Gossip with a global average every H steps (Alg. 1)."
+
+
+class _GossipAGA(Algorithm):
+    name = "gossip_aga"
+    phases = ("gossip", "global")
+    push_sum_capable = True
+    description = "Gossip-PGA with the adaptive H controller (App. G)."
+
+
+class _SlowMo(Algorithm):
+    name = "slowmo"
+    phases = ("gossip", "slowmo")
+    owned_phases = ("slowmo",)
+    slots = (
+        ExtraSlot("slow_params", kind="unstacked", init="row0"),
+        ExtraSlot("slow_u", kind="unstacked", init="zeros"),
+    )
+    description = "Gossip with a periodic slow momentum outer step."
+
+    def post_round(self, extras, mixed, phase, ctx):
+        if phase not in self.owned_phases:
+            return super().post_round(extras, mixed, phase, ctx)
+        import jax
+        import jax.numpy as jnp
+
+        params_half = mixed["params"]
+        beta = ctx.dist.slowmo_beta
+        alpha = ctx.dist.slowmo_lr
+        lr = ctx.lr
+        xbar = jax.tree.map(
+            lambda p: jnp.mean(p.astype(jnp.float32), axis=0), params_half)
+        slow_u = jax.tree.map(
+            lambda u, s, xb: beta * u.astype(jnp.float32)
+            + (s.astype(jnp.float32) - xb) / lr,
+            extras["slow_u"], extras["slow_params"], xbar)
+        slow_params = jax.tree.map(
+            lambda s, u: (s.astype(jnp.float32) - alpha * lr * u
+                          ).astype(s.dtype),
+            extras["slow_params"], slow_u)
+        new_params = jax.tree.map(
+            lambda s, p: jnp.broadcast_to(s[None], p.shape).astype(p.dtype),
+            slow_params, params_half)
+        return new_params, {**extras, "slow_params": slow_params,
+                            "slow_u": slow_u}
+
+
+class _HierPGA(Algorithm):
+    name = "hier_pga"
+    phases = ("gossip", "pod_avg", "global")
+    description = "Two-level PGA: pod averages nested inside global ones."
+
+
+class _GTPGA(Algorithm):
+    name = "gt_pga"
+    phases = ("gossip", "global")
+    slots = (
+        ExtraSlot("gt_tracker", kind="stacked_params", payload=True),
+        ExtraSlot("gt_prev_grad", kind="stacked_params"),
+    )
+    transforms_grads = True
+    description = ("Gradient tracking + PGA for non-IID data: the tracker "
+                   "rides the round jointly with the params.")
+
+    def pre_update(self, extras, grads):
+        import jax
+
+        # y_{k+1/2} = y_k + g_k - g_{k-1}; the optimizer consumes y, whose
+        # node-mean equals the global gradient mean (y_0 = g_{-1} = 0), so
+        # heterogeneous per-node drift cancels instead of stalling gossip.
+        tracker = jax.tree.map(lambda y, g, p: y + (g - p),
+                               extras["gt_tracker"], grads,
+                               extras["gt_prev_grad"])
+        return tracker, {**extras, "gt_tracker": tracker,
+                         "gt_prev_grad": grads}
+
+
+register(_Parallel())
+register(_Gossip())
+register(_Local())
+register(_GossipPGA())
+register(_GossipAGA())
+register(_SlowMo())
+register(_HierPGA())
+register(_GTPGA())

@@ -10,6 +10,7 @@ tests run on it.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional
@@ -19,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import DistConfig
+from repro.core import algo as algo_registry
 from repro.core import mixing, topology as topo
 from repro.core.schedule import CommSchedule, make_schedule
 
@@ -190,9 +192,14 @@ def simulate(
                       comm_global_compression=global_compression,
                       push_sum=push_sum, comm_overlap=overlap,
                       **(aga_kwargs or {})).validate()
+    if algorithm == "slowmo":
+        dist = dataclasses.replace(dist, slowmo_beta=slowmo_beta,
+                                   slowmo_lr=slowmo_lr)
     algo = Decentralized(dist, n)
+    algo_impl = algo_registry.get_algorithm(algorithm, caller="simulate")
+    has_payload = bool(algo_impl.payload_names())
     lr_fn = lr if callable(lr) else (lambda k: lr)
-    from repro.compress import init_ef_state, make_compressor
+    from repro.compress import make_compressor
     compressor = make_compressor(compression, k=compression_k)
     lossy = compressor is not None and compressor.lossy
     global_comp = make_compressor(global_compression)
@@ -201,50 +208,89 @@ def simulate(
                                 global_compressor=global_comp) \
         if overlap else None
     use_pallas = backend == "pallas"
+    # the fused half-step+mix kernel consumes raw grads and only the bare
+    # params ride it — algorithms that transform the update (GT tracking)
+    # or attach a comm payload take the generic communicate path instead
+    fused_ok = use_pallas and not has_payload \
+        and not algo_impl.transforms_grads
     if use_pallas:
         from repro.kernels import mixing_pallas
 
     x = jnp.broadcast_to(x0, (n,) + x0.shape)          # x_i^(0) identical
-    ef = init_ef_state(x) if ((lossy or glossy) and error_feedback) else None
-    slow_x = x0                                         # SlowMo slow params
-    slow_u = jnp.zeros_like(x0)
+    # algorithm slots + mode slots (EF memory, push weight) in one dict —
+    # validate() guarantees comm_error_feedback implies a lossy codec, so
+    # this matches the legacy `(lossy or glossy) and error_feedback` init
+    extras = algo_registry.init_extras(dist, x, n)
 
-    @functools.partial(jax.jit, static_argnames=("phase", "shift_step"))
-    def step_fn(x, key, k, gamma, phase, shift_step):
-        g = grad_fn(x, key, k)
-        x_half = x - gamma * g
-        return algo.communicate(x_half, phase, shift_step)
+    def _ctx(gamma):
+        return algo_registry.StepContext(dist=dist, n_nodes=n, lr=gamma)
 
-    @functools.partial(jax.jit, static_argnames=("phase", "shift_step"))
-    def comp_step_fn(x, ef, key, k, gamma, phase, shift_step):
-        """Compressed round (both backends route inside communicate)."""
+    def _joint(extras, y):
+        return algo_registry.join_payload(
+            algo_impl.comm_payload(extras, y), y)
+
+    @functools.partial(jax.jit,
+                       static_argnames=("phase", "shift_step", "use_lossy"))
+    def sync_step_fn(x, extras, key, k, gamma, phase, shift_step, use_lossy):
+        """Synchronous round: pre_update -> half-step -> joint communicate
+        (compressed when the phase's codec is lossy) -> post_round."""
         g = grad_fn(x, key, k)
-        x_half = x - gamma * g
-        return algo.communicate(x_half, phase, shift_step,
-                                compressor=compressor, ef_state=ef, seed=k,
-                                global_compressor=global_comp)
+        upd, extras = algo_impl.pre_update(dict(extras), g)
+        extras = dict(extras)
+        y = x - gamma * upd
+        joint = _joint(extras, y)
+        if use_lossy:
+            mixed, new_ef = algo.communicate(
+                joint, phase, shift_step, compressor=compressor,
+                ef_state=extras.get("ef_state"), seed=k,
+                global_compressor=global_comp)
+            if new_ef is not None:
+                extras["ef_state"] = new_ef
+        else:
+            mixed = algo.communicate(joint, phase, shift_step)
+        new_x, extras = algo_impl.post_round(
+            extras, algo_registry.wrap_mixed(mixed, has_payload), phase,
+            _ctx(gamma))
+        return new_x, extras
 
     @functools.partial(jax.jit,
                        static_argnames=("phase", "shift_step", "buf_shift"))
-    def ov_step_fn(x, buf, ef, key, k, gamma, phase, shift_step, buf_shift):
+    def ov_step_fn(x, extras, buf, key, k, gamma, phase, shift_step,
+                   buf_shift):
         """One pipelined step (DESIGN.md §2.6): the half-step iterate
         absorbs the *buffered* round on arrival (``finish_round`` with the
         buffer's priming shift), then re-primes the double buffer from
         itself; averaging phases flush synchronously."""
         g = grad_fn(x, key, k)
-        y = x - gamma * g
+        upd, extras = algo_impl.pre_update(dict(extras), g)
+        extras = dict(extras)
+        y = x - gamma * upd
         if phase == "none":
-            return y, buf, ef
+            return y, buf, extras
+        joint = _joint(extras, y)
+        ef = extras.get("ef_state")
         if phase == "gossip":
-            x2 = mixing.finish_round(y, buf, ov_spec, step=buf_shift)
-            buf2, ef2 = mixing.start_round(y, ov_spec, ef_state=ef, seed=k)
-            return x2, buf2, ef2
+            mixed = mixing.finish_round(joint, buf, ov_spec, step=buf_shift)
+            buf2, ef2 = mixing.start_round(joint, ov_spec, ef_state=ef,
+                                           seed=k)
+            if ef2 is not None:
+                extras["ef_state"] = ef2
+            new_x, extras = algo_impl.post_round(
+                extras, algo_registry.wrap_mixed(mixed, has_payload), phase,
+                _ctx(gamma))
+            return new_x, buf2, extras
         mixed, buf2, ef2 = mixing.overlap_flush(
-            y, ov_spec, phase=phase, step=shift_step, ef_state=ef, seed=k)
+            joint, ov_spec, phase=phase, step=shift_step, ef_state=ef,
+            seed=k)
+        if ef2 is not None:
+            extras["ef_state"] = ef2
+        new_x, extras = algo_impl.post_round(
+            extras, algo_registry.wrap_mixed(mixed, has_payload), phase,
+            _ctx(gamma))
         # the dense re-primed buffer aliases `mixed`; copy so returning
         # both follows the PR-7 donation-safety convention (this jit is
         # not donated, but the reference path mirrors the Trainer's)
-        return mixed, jax.tree.map(jnp.copy, buf2), ef2
+        return new_x, jax.tree.map(jnp.copy, buf2), extras
 
     @functools.partial(jax.jit,
                        static_argnames=("phase", "shift_step",
@@ -255,37 +301,52 @@ def simulate(
             x, g, gamma, phase=phase, topology=topology, n_nodes=n,
             step=shift_step, with_residual=with_residual)
 
-    # Push-sum: one jitted round for every phase — W and the activity mask
-    # are *traced* operands, so drop / rejoin / resample never recompiles.
+    # Push-sum: one jitted round per phase — W and the activity mask are
+    # *traced* operands, so drop / rejoin / resample never recompiles.
     # Wire compression (when enabled) applies to gossip rounds only; the
     # weight scalar and the global reset stay exact, because the de-bias
     # denominator x/w must never pass through a lossy codec.
-    w = jnp.ones((n, 1), jnp.float32) if push_sum else None
     mass_hist: List[float] = []
 
-    @functools.partial(jax.jit, static_argnames=("use_lossy", "is_global"))
-    def ps_step_fn(x, w, ef, key, k, gamma, W, active, use_lossy, is_global):
+    @functools.partial(jax.jit,
+                       static_argnames=("phase", "use_lossy", "is_global"))
+    def ps_step_fn(x, extras, key, k, gamma, W, active, phase, use_lossy,
+                   is_global):
         g = grad_fn(x, key, k)
-        x_half = x - gamma * (g * active[:, None])   # dropped nodes freeze
+        upd, extras = algo_impl.pre_update(
+            dict(extras), g * active[:, None])   # dropped nodes freeze
+        extras = dict(extras)
+        y = x - gamma * upd
+        joint = _joint(extras, y)
+        w = extras["push_weight"]
         if use_lossy:
-            x2, w2, ef = mixing.communicate_push_sum(
-                x_half, w, W=W, n_nodes=n, backend=backend,
-                compressor=compressor, ef_state=ef, seed=k)
+            mixed, w2, new_ef = mixing.communicate_push_sum(
+                joint, w, W=W, n_nodes=n, backend=backend,
+                compressor=compressor, ef_state=extras.get("ef_state"),
+                seed=k)
+            if new_ef is not None:
+                extras["ef_state"] = new_ef
         else:
-            x2, w2 = mixing.communicate_push_sum(x_half, w, W=W, n_nodes=n,
-                                                 backend=backend)
+            mixed, w2 = mixing.communicate_push_sum(joint, w, W=W,
+                                                    n_nodes=n,
+                                                    backend=backend)
         if is_global:
             # full-participation global round: w_i = Σw/n = 1 exactly in
             # exact arithmetic — snap to it to wash out fp drift in w
             w2 = jnp.where(jnp.all(active > 0), jnp.ones_like(w2), w2)
-        return x2, w2, ef
+        extras["push_weight"] = w2
+        new_x, extras = algo_impl.post_round(
+            extras, algo_registry.wrap_mixed(mixed, has_payload), phase,
+            _ctx(gamma))
+        return new_x, extras
 
-    @jax.jit
-    def slowmo_outer(x_half, slow_x, slow_u, gamma):
-        xbar = jnp.mean(x_half, axis=0)
-        u = slowmo_beta * slow_u + (slow_x - xbar) / gamma
-        new_slow = slow_x - slowmo_lr * gamma * u
-        return jnp.broadcast_to(new_slow, x_half.shape), new_slow, u
+    @functools.partial(jax.jit, static_argnames=("phase",))
+    def owned_step_fn(y, extras, gamma, phase):
+        """Owned phase (SlowMo's outer step): no comm round — post_round
+        consumes the half-step iterate directly, same jit boundary as the
+        historical `slowmo_outer`."""
+        return algo_impl.post_round(dict(extras), {"params": y}, phase,
+                                    _ctx(gamma))
 
     eval_loss = jax.jit(loss_fn)
     key = jax.random.PRNGKey(seed)
@@ -297,7 +358,11 @@ def simulate(
     buf = buf_shift = None
     if overlap:
         # warm-up buffer b = x_0; the warm-up round reuses step 0's shift
-        buf, ef = mixing.start_round(x, ov_spec, ef_state=ef, seed=0)
+        buf, ef0 = mixing.start_round(_joint(extras, x), ov_spec,
+                                      ef_state=extras.get("ef_state"),
+                                      seed=0)
+        if ef0 is not None:
+            extras["ef_state"] = ef0
         buf_shift = algo.schedule.gossip_shift_step(0, period)
 
     for k in range(steps):
@@ -331,11 +396,16 @@ def simulate(
                 W = topo.global_push_matrix(n, active)
             else:                     # "none": identity keeps Σw checkable
                 W = np.eye(n)
-            x, w, ef = ps_step_fn(x, w, ef, sub, k, gamma,
-                                  jnp.asarray(W, jnp.float32),
-                                  jnp.asarray(active, jnp.float32),
-                                  use_lossy=lossy and phase == "gossip",
-                                  is_global=phase in ("global", "pod_avg"))
+            # phase cycles through the schedule's bounded set; W/active
+            # stay traced so fault patterns never recompile (PR 6)
+            # repro: allow(RPR004)
+            x, extras = ps_step_fn(x, extras, sub, k, gamma,
+                                   jnp.asarray(W, jnp.float32),
+                                   jnp.asarray(active, jnp.float32),
+                                   phase=phase,
+                                   use_lossy=lossy and phase == "gossip",
+                                   is_global=phase in ("global", "pod_avg"))
+            w = extras["push_weight"]
             mass_hist.append(float(jnp.sum(w)))
             if is_eval:
                 xbar = jnp.sum(x, axis=0) / jnp.sum(w)  # de-biased Σx/Σw
@@ -352,13 +422,21 @@ def simulate(
             elif losses:
                 algo.schedule.observe_loss(k, losses[-1])
             continue
-        if phase == "slowmo":
+        if phase in algo_impl.owned_phases:
+            # owned phase: eager grad + half-step, jitted post_round —
+            # preserving the historical slowmo_outer jit boundary exactly
             g = grad_fn(x, sub, k)
-            x_half = x - gamma * g
-            x, slow_x, slow_u = slowmo_outer(x_half, slow_x, slow_u, gamma)
+            upd, extras = algo_impl.pre_update(dict(extras), g)
+            x_half = x - gamma * upd
+            # owned phases are a bounded subset of the schedule's phases
+            # repro: allow(RPR004)
+            x, extras = owned_step_fn(x_half, extras, gamma, phase=phase)
             if overlap:   # outer step is a synchronous flush: re-prime
-                buf, ef = mixing.start_round(x, ov_spec, ef_state=ef,
-                                             seed=k)
+                buf, ef2 = mixing.start_round(
+                    _joint(extras, x), ov_spec,
+                    ef_state=extras.get("ef_state"), seed=k)
+                if ef2 is not None:
+                    extras["ef_state"] = ef2
                 buf_shift = shift_step
         elif overlap:
             # phase/shift/buf_shift cycle through a small bounded set, so
@@ -366,14 +444,19 @@ def simulate(
             # the production Trainer keys a host-side cache on the same
             # tuple (DESIGN.md §2.5); this is not a per-step recompile
             # repro: allow(RPR004)
-            x, buf, ef = ov_step_fn(x, buf, ef, sub, k, gamma, phase=phase,
-                                    shift_step=shift_step,
-                                    buf_shift=buf_shift)
+            x, buf, extras = ov_step_fn(x, extras, buf, sub, k, gamma,
+                                        phase=phase,
+                                        shift_step=shift_step,
+                                        buf_shift=buf_shift)
             if phase != "none":   # "none" leaves the in-flight buffer alone
                 buf_shift = shift_step
         elif lossy_round:
-            x, ef = comp_step_fn(x, ef, sub, k, gamma, phase, shift_step)
-        elif use_pallas and phase in ("gossip", "global", "pod_avg"):
+            # phase/shift_step cycle through a small bounded set — one
+            # compile per combination, not a per-step recompile
+            # repro: allow(RPR004)
+            x, extras = sync_step_fn(x, extras, sub, k, gamma, phase=phase,
+                                     shift_step=shift_step, use_lossy=True)
+        elif fused_ok and phase in ("gossip", "global", "pod_avg"):
             if is_eval:  # fused: mix + x̄ + consensus in one parameter pass
                 x, xbar, resid = pallas_step_fn(x, sub, k, gamma, phase,
                                                 shift_step, True)
@@ -381,7 +464,11 @@ def simulate(
                 x = pallas_step_fn(x, sub, k, gamma, phase, shift_step,
                                    False)
         else:
-            x = step_fn(x, sub, k, gamma, phase, shift_step)
+            # same bounded phase/shift_step combination set as above
+            # repro: allow(RPR004)
+            x, extras = sync_step_fn(x, extras, sub, k, gamma, phase=phase,
+                                     shift_step=shift_step,
+                                     use_lossy=False)
         if is_eval:
             if xbar is None:
                 xbar = jnp.mean(x, axis=0)
@@ -407,7 +494,8 @@ def simulate(
     }
     if push_sum:
         out["mass"] = np.array(mass_hist)       # Σw per step, invariantly n
-        out["push_weight"] = np.asarray(w)      # final (n, 1) weight scalar
+        # final (n, 1) weight scalar
+        out["push_weight"] = np.asarray(extras["push_weight"])
     if hasattr(algo.schedule, "history"):
         out["H_history"] = np.array(getattr(algo.schedule, "history"))
     return out

@@ -232,7 +232,9 @@ def make_schedule(dist: DistConfig) -> CommSchedule:
         return GossipSchedule()
     if a == "local":
         return LocalSchedule(H=dist.H)
-    if a == "gossip_pga":
+    if a in ("gossip_pga", "gt_pga"):
+        # gt_pga keeps PGA's cadence — the tracker changes what rides the
+        # round (repro.core.algo), not when rounds happen
         return PGASchedule(H=dist.H)
     if a == "gossip_aga":
         return AGASchedule(H_init=dist.aga_h_init, warmup=dist.aga_warmup,
@@ -241,4 +243,6 @@ def make_schedule(dist: DistConfig) -> CommSchedule:
         return SlowMoSchedule(H=dist.H)
     if a == "hier_pga":
         return HierPGASchedule(H_pod=dist.hier_h_pod, H_global=dist.H)
-    raise ValueError(f"unknown algorithm {a!r}")
+    from repro.core.algo import algorithm_names
+    raise ValueError(f"make_schedule: unknown algorithm {a!r} "
+                     f"(expected one of {algorithm_names()})")

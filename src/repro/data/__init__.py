@@ -1,3 +1,4 @@
 from repro.data.logistic import (LogisticProblem,  # noqa: F401
+                                 dirichlet_noniid_problem,
                                  make_logistic_problem)
 from repro.data.synthetic import SyntheticStream, make_stream  # noqa: F401

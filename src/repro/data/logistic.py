@@ -73,3 +73,62 @@ def make_logistic_problem(n: int, M: int = 8000, d: int = 10, *,
     u = rng.uniform(size=(n, M))
     y = np.where(u <= p, 1.0, -1.0)
     return LogisticProblem(jnp.asarray(H), jnp.asarray(y), d, n, M)
+
+
+def dirichlet_noniid_problem(n: int, M: int = 8000, d: int = 10, *,
+                             alpha: float = 0.3, feature_shift: float = 2.0,
+                             seed: int = 0) -> LogisticProblem:
+    """Label-skew + feature-shift sharding of ONE shared task.
+
+    Unlike :func:`make_logistic_problem`'s non-iid mode (a *different*
+    optimum per node), every node here shares one ground-truth ``x*`` —
+    so the global objective has a single well-defined minimizer — but the
+    local objectives are heterogeneous in the federated-learning sense:
+
+    * **Dirichlet label skew** — a global pool of 2n·M examples is labeled
+      from the shared logistic model, then each node draws its local
+      class proportions from ``Dirichlet(alpha, alpha)`` and samples its
+      M examples from the class-conditional pools (with replacement when
+      a pool runs short).  Small ``alpha`` → near-single-class nodes.
+    * **feature shift** — node i's features are mean-shifted by
+      ``feature_shift`` along a node-specific random unit direction, so
+      even the input marginals P_i(h) differ.
+
+    This is the regime where plain gossip SGD stalls at a consensus-bias
+    floor and gradient tracking (gt_pga) keeps descending — the
+    benchmarks/bench_logistic_transient.py non-IID crossover gate runs on
+    this sharder.  Fully deterministic per ``seed``.
+    """
+    if n < 1:
+        raise ValueError(f"dirichlet_noniid_problem: n must be >= 1, "
+                         f"got {n}")
+    if alpha <= 0.0:
+        raise ValueError(f"dirichlet_noniid_problem: alpha must be > 0, "
+                         f"got {alpha}")
+    rng = np.random.default_rng(seed)
+    pool = 2 * n * M
+    Hp = rng.normal(0.0, np.sqrt(10.0), size=(pool, d))
+    x_star = rng.standard_normal(d)
+    x_star /= np.linalg.norm(x_star)
+    p = 1.0 / (1.0 + np.exp(-Hp @ x_star))
+    yp = np.where(rng.uniform(size=pool) <= p, 1.0, -1.0)
+    by_class = {+1: np.flatnonzero(yp > 0), -1: np.flatnonzero(yp < 0)}
+
+    H = np.empty((n, M, d))
+    y = np.empty((n, M))
+    for i in range(n):
+        props = rng.dirichlet([alpha, alpha])
+        n_pos = int(round(props[0] * M))
+        for cls, count in ((+1, n_pos), (-1, M - n_pos)):
+            if count == 0:
+                continue
+            src = by_class[cls]
+            idx = rng.choice(src, size=count,
+                             replace=count > src.size)
+            sl = slice(0, count) if cls > 0 else slice(M - count, M)
+            H[i, sl] = Hp[idx]
+            y[i, sl] = cls
+        shift = rng.standard_normal(d)
+        shift /= np.linalg.norm(shift)
+        H[i] += feature_shift * shift
+    return LogisticProblem(jnp.asarray(H), jnp.asarray(y), d, n, M)

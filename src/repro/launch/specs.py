@@ -108,34 +108,24 @@ def train_specs(cfg: ModelConfig, mesh: Mesh, shape: InputShape, *,
     n_nodes = n_gossip_nodes(mesh, dist.node_axis)
     mode = "train_data" if dist.node_axis == "data" else "train_pod"
     opt = make_optimizer(optimizer, per_node=True)
-    slowmo = dist.algorithm == "slowmo"
     axes_box: Dict[str, Any] = {}
-
-    ef = dist.comm_error_feedback
+    from repro.core import algo as algo_lib
 
     def build_state(key):
         params, axes = model.init(key)
         axes_box["axes"] = axes
         stacked = stack_for_nodes(params, n_nodes)
         opt_state = opt.init(stacked)
-        slow_p = params if slowmo else None
-        slow_u = (jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
-                               params) if slowmo else None)
-        if ef:
-            from repro.compress import init_ef_state
-            ef_state = init_ef_state(stacked)
-        else:
-            ef_state = None
+        extras = algo_lib.init_extras(dist, stacked, n_nodes)
         return TrainState(params=stacked, opt_state=opt_state,
-                          step=jnp.zeros((), jnp.int32),
-                          slow_params=slow_p, slow_u=slow_u,
-                          ef_state=ef_state)
+                          step=jnp.zeros((), jnp.int32), extras=extras)
 
     state_sds = jax.eval_shape(build_state, jax.random.PRNGKey(0))
     axes = axes_box["axes"]
     st_axes = stacked_axes(axes)
-    state_axes_tree = state_axes(st_axes, optimizer.name, slowmo, axes,
-                                 ef=ef)
+    state_axes_tree = state_axes(
+        st_axes, optimizer.name,
+        extras=algo_lib.extras_axes(dist, st_axes, axes))
     state_sh = _shardings(state_axes_tree, mode, mesh, state_sds)
 
     b_sds, b_axes = batch_specs(cfg, n_nodes, shape.global_batch,

@@ -10,15 +10,20 @@ import argparse
 
 import jax
 
-from repro.configs import (DataConfig, DistConfig, OptimizerConfig,
-                           TrainConfig, get_model_config, list_archs)
+from repro.configs import (ALGORITHMS, DataConfig, DistConfig,
+                           OptimizerConfig, TrainConfig, get_model_config,
+                           list_archs)
 from repro.train import Trainer
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True, choices=list(list_archs()))
-    ap.add_argument("--algorithm", default="gossip_pga")
+    ap.add_argument("--algorithm", default="gossip_pga",
+                    choices=list(ALGORITHMS),
+                    help="registered algorithm (repro.core.algo), incl. "
+                         "gt_pga: gradient tracking + periodic global "
+                         "averaging for non-IID data")
     ap.add_argument("--topology", default="one_peer_exp")
     ap.add_argument("--H", type=int, default=6)
     ap.add_argument("--nodes", type=int, default=8)

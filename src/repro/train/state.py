@@ -1,8 +1,17 @@
-"""TrainState pytree + logical-axes helpers for the decentralized layout."""
+"""TrainState pytree + logical-axes helpers for the decentralized layout.
+
+Algorithm-specific state lives in ``TrainState.extras``, a flat dict whose
+entries are declared by ``repro.core.algo`` slot descriptors (SlowMo's
+``slow_params``/``slow_u``, GT-PGA's tracker) plus the mode slots the comm
+stack owns (``ef_state`` for compressed gossip, ``push_weight`` for
+push-sum).  The legacy keyword constructor and read-only attribute
+accessors (``state.ef_state`` etc.) are kept so existing call sites and
+checkpoints keep working.
+"""
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -12,28 +21,79 @@ def _IS_AXES(x):
     return isinstance(x, tuple)
 
 
-@jax.tree_util.register_dataclass
-@dataclasses.dataclass
+#: extras keys that the legacy TrainState fields mapped to, accepted as
+#: keyword arguments by ``TrainState`` and exposed as attributes.
+LEGACY_SLOTS = ("slow_params", "slow_u", "ef_state", "push_weight")
+
+
+@dataclasses.dataclass(init=False)
 class TrainState:
     params: PyTree               # stacked: leading node axis
     opt_state: PyTree
     step: jax.Array
-    slow_params: Optional[PyTree] = None   # SlowMo outer iterate (unstacked)
-    slow_u: Optional[PyTree] = None        # SlowMo slow momentum
-    ef_state: Optional[PyTree] = None      # per-node error-feedback memory
-                                           # (compressed gossip, DESIGN.md
-                                           # §2.3): stacked, fp32, zeros at
-                                           # init; updated by the same
-                                           # compress call that produces
-                                           # the wire payload
-    push_weight: Optional[jax.Array] = None
-                                           # push-sum weight scalar, (n, 1)
-                                           # fp32, ones at init (DESIGN.md
-                                           # §2.5): mixed by every
-                                           # column-stochastic round along
-                                           # with params; readers de-bias
-                                           # with debias(params, w).  Σw = n
-                                           # is the mass invariant.
+    extras: Dict[str, PyTree]    # algorithm/mode slots (repro.core.algo):
+                                 #   slow_params/slow_u — SlowMo outer
+                                 #     iterate + slow momentum (unstacked)
+                                 #   gt_tracker/gt_prev_grad — GT-PGA
+                                 #     tracker recursion (stacked)
+                                 #   ef_state — per-node error-feedback
+                                 #     memory (compressed gossip, DESIGN.md
+                                 #     §2.3): fp32, zeros at init; updated
+                                 #     by the same compress call that
+                                 #     produces the wire payload
+                                 #   push_weight — push-sum weight scalar,
+                                 #     (n, 1) fp32, ones at init (DESIGN.md
+                                 #     §2.5); readers de-bias with
+                                 #     debias(params, w); Σw = n invariant
+
+    def __init__(self, params: PyTree, opt_state: PyTree, step: jax.Array,
+                 extras: Optional[Dict[str, PyTree]] = None,
+                 slow_params: Optional[PyTree] = None,
+                 slow_u: Optional[PyTree] = None,
+                 ef_state: Optional[PyTree] = None,
+                 push_weight: Optional[jax.Array] = None):
+        self.params = params
+        self.opt_state = opt_state
+        self.step = step
+        merged = dict(extras) if extras else {}
+        for name, value in zip(LEGACY_SLOTS,
+                               (slow_params, slow_u, ef_state, push_weight)):
+            if value is not None:
+                merged[name] = value
+        self.extras = merged
+
+    @property
+    def slow_params(self) -> Optional[PyTree]:
+        return self.extras.get("slow_params")
+
+    @property
+    def slow_u(self) -> Optional[PyTree]:
+        return self.extras.get("slow_u")
+
+    @property
+    def ef_state(self) -> Optional[PyTree]:
+        return self.extras.get("ef_state")
+
+    @property
+    def push_weight(self) -> Optional[jax.Array]:
+        return self.extras.get("push_weight")
+
+    def with_extras(self, **updates: PyTree) -> "TrainState":
+        """Copy with named extras entries replaced (None deletes)."""
+        extras = dict(self.extras)
+        for name, value in updates.items():
+            if value is None:
+                extras.pop(name, None)
+            else:
+                extras[name] = value
+        return TrainState(params=self.params, opt_state=self.opt_state,
+                          step=self.step, extras=extras)
+
+
+jax.tree_util.register_dataclass(
+    TrainState,
+    data_fields=("params", "opt_state", "step", "extras"),
+    meta_fields=())
 
 
 def init_push_weight(n_nodes: int) -> jax.Array:
@@ -80,16 +140,14 @@ def opt_state_axes(opt_name: str, params_axes: PyTree) -> PyTree:
 
 
 def state_axes(params_axes_stacked: PyTree, opt_name: str,
-               slowmo: bool, params_axes_unstacked: PyTree,
-               ef: bool = False, push: bool = False) -> TrainState:
+               extras: Optional[Dict[str, PyTree]] = None) -> TrainState:
+    """Axes tree mirroring a TrainState; ``extras`` axes come from
+    ``repro.core.algo.extras_axes`` (slot-driven — no per-algorithm flags)."""
     return TrainState(
         params=params_axes_stacked,
         opt_state=opt_state_axes(opt_name, params_axes_stacked),
         step=(),
-        slow_params=params_axes_unstacked if slowmo else None,
-        slow_u=params_axes_unstacked if slowmo else None,
-        ef_state=params_axes_stacked if ef else None,
-        push_weight=("node", None) if push else None,
+        extras=dict(extras) if extras else {},
     )
 
 

@@ -24,7 +24,8 @@ from repro.core.schedule import make_schedule
 from repro.data import make_stream
 from repro.models.model import Model, make_model
 from repro.optim import make_optimizer, make_schedule as make_lr
-from repro.train.state import TrainState, init_push_weight, stack_for_nodes
+from repro.core import algo as algo_lib
+from repro.train.state import TrainState, stack_for_nodes
 from repro.train.step import build_train_step
 
 PyTree = Any
@@ -110,29 +111,22 @@ class Trainer:
         params = stack_for_nodes(params, self.n_nodes)
         opt = make_optimizer(self.tcfg.optimizer, per_node=True)
         opt_state = opt.init(params)
-        slowmo = self.tcfg.dist.algorithm == "slowmo"
-        slow_params = (jax.tree.map(lambda p: p[0], params)
-                       if slowmo else None)
-        slow_u = (jax.tree.map(
-            lambda p: jnp.zeros(p.shape, jnp.float32), slow_params)
-            if slowmo else None)
-        ef_state = None
-        if self.tcfg.dist.comm_error_feedback:
-            from repro.compress import init_ef_state
-            ef_state = init_ef_state(params)
-        push_weight = (init_push_weight(self.n_nodes)
-                       if self.tcfg.dist.push_sum else None)
+        # algorithm/mode slots (SlowMo anchors, GT tracker, EF memory,
+        # push weights) come from the slot descriptors — no per-algorithm
+        # branching here
+        extras = algo_lib.init_extras(self.tcfg.dist, params, self.n_nodes)
         return TrainState(params=params, opt_state=opt_state,
-                          step=jnp.zeros((), jnp.int32),
-                          slow_params=slow_params, slow_u=slow_u,
-                          ef_state=ef_state, push_weight=push_weight)
+                          step=jnp.zeros((), jnp.int32), extras=extras)
 
     # ------------------------------------------------------------------
     def _get_step_fn(self, phase: str, shift: int, buf_shift: int = 0):
         # buf_shift keys the compile cache only for overlapped gossip
         # steps, where it is baked in statically (the W of the round
-        # being *finished* — DESIGN.md §2.6); 0 everywhere else
-        key = (phase, shift, buf_shift)
+        # being *finished* — DESIGN.md §2.6); 0 everywhere else.  The
+        # algorithm name rides in the key so trainers sharing a cache dict
+        # (or a future config swap) can never replay another algorithm's
+        # compiled phase
+        key = (self.tcfg.dist.algorithm, phase, shift, buf_shift)
         if key not in self._compiled:
             hops = (self.fault_schedule.hop_superset(self.tcfg.dist.topology)
                     if self.fault_schedule is not None else None)
@@ -215,17 +209,17 @@ class Trainer:
             # flush semantics — the stale buffer is not checkpointed)
             from repro.core import mixing
             spec = tcfg.dist.comm_spec(self.n_nodes, mesh=self.mesh)
+            impl = algo_lib.get_algorithm(tcfg.dist.algorithm,
+                                          caller="Trainer")
+            joint = algo_lib.join_payload(
+                impl.comm_payload(state.extras, state.params), state.params)
             buf, ef = mixing.start_round(
-                state.params, spec, ef_state=state.ef_state, seed=start)
+                joint, spec, ef_state=state.ef_state, seed=start)
             # the dense buffer aliases state.params — copy so donating
             # both state and buffer never hands XLA the same buffer twice
             self._comm_buf = jax.tree.map(jnp.copy, buf)
             if ef is not state.ef_state:
-                state = TrainState(
-                    params=state.params, opt_state=state.opt_state,
-                    step=state.step, slow_params=state.slow_params,
-                    slow_u=state.slow_u, ef_state=ef,
-                    push_weight=state.push_weight)
+                state = state.with_extras(ef_state=ef)
             self._buf_shift = self.schedule.gossip_shift_step(
                 start, self.period)
         for k in range(start, start + steps):

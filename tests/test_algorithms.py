@@ -1,0 +1,656 @@
+"""Algorithm-layer parity matrix + gt_pga acceptance (ISSUE 10).
+
+The composable algorithm layer (``repro.core.algo``) collapsed the five
+step-variant forks in ``simulate`` and ``train/step.py`` onto one
+pipeline.  The contract is that every pre-existing algorithm trajectory
+comes out **bitwise unchanged** — pinned below as float-hex goldens
+captured on the pre-refactor tree (commit 7e05cee) with exactly the
+harness mirrored by ``_sim_hexes`` / ``_trainer_digest``.
+
+Also here: gt_pga coverage the goldens cannot pin (it is new) —
+checkpoint save -> restore -> continue bitwise parity, tracker-mixing
+backend parity, composition smoke across comm modes, the non-IID
+crossover in miniature — plus unit tests for the registry/hooks and the
+Dirichlet non-IID sharder that feeds the crossover benchmark gate.
+"""
+import hashlib
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import restore_checkpoint, save_checkpoint
+from repro.configs import (DataConfig, DistConfig, OptimizerConfig,
+                           TrainConfig, get_model_config)
+from repro.core import algo, simulate
+from repro.data import dirichlet_noniid_problem, make_logistic_problem
+from repro.train import Trainer
+
+
+def _parse_goldens(blob):
+    """Blank-line-separated records: key line, then whitespace-joined
+    values (wrapped to the line limit)."""
+    out = {}
+    for rec in blob.strip().split("\n\n"):
+        lines = rec.strip().split("\n")
+        out[lines[0].strip()] = " ".join(lines[1:]).split()
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Pinned goldens: 5 losses then 5 consensus values (float.hex, "c:" prefix)
+# per ``algorithm|backend|mode`` simulate case; sha256 over the params
+# pytree after 5 Trainer steps per trainer case.
+# ---------------------------------------------------------------------------
+_SIM_GOLDENS = _parse_goldens("""
+gossip_aga|pallas|overlap
+0x1.4837fc0000000p-1 0x1.5986220000000p-1 0x1.501bd80000000p-1
+0x1.4d88700000000p-1 0x1.56923c0000000p-1 c:0x1.6504dc0000000p-3
+c:0x1.07d7140000000p-4 c:0x1.5875e20000000p-3 c:0x0.0p+0
+c:0x1.17c99a0000000p-3
+
+gossip_aga|pallas|push_sum
+0x1.4837fc0000000p-1 0x1.5706700000000p-1 0x1.51616c0000000p-1
+0x1.4576da0000000p-1 0x1.5466540000000p-1 c:0x1.3670340000000p-4
+c:0x1.331c840000000p-5 c:0x1.b0bea80000000p-4 c:0x1.3800000000000p-53
+c:0x1.ddcab00000000p-5
+
+gossip_aga|pallas|sync
+0x1.4837fc0000000p-1 0x1.50ffb00000000p-1 0x1.50d07c0000000p-1
+0x1.45ca940000000p-1 0x1.511fc00000000p-1 c:0x1.3d59a80000000p-6
+c:0x1.b12c960000000p-8 c:0x1.bc04c80000000p-6 c:0x0.0p+0
+c:0x1.e436760000000p-7
+
+gossip_aga|reference|overlap
+0x1.4837fc0000000p-1 0x1.5986220000000p-1 0x1.501bd80000000p-1
+0x1.4d88700000000p-1 0x1.56923c0000000p-1 c:0x1.6504dc0000000p-3
+c:0x1.07d7140000000p-4 c:0x1.5875e20000000p-3 c:0x0.0p+0
+c:0x1.17c99c0000000p-3
+
+gossip_aga|reference|push_sum
+0x1.4837fc0000000p-1 0x1.5706700000000p-1 0x1.51616c0000000p-1
+0x1.4576da0000000p-1 0x1.5466540000000p-1 c:0x1.3670340000000p-4
+c:0x1.331c840000000p-5 c:0x1.b0bea80000000p-4 c:0x1.3800000000000p-53
+c:0x1.ddcab00000000p-5
+
+gossip_aga|reference|sync
+0x1.4837fc0000000p-1 0x1.50ffb00000000p-1 0x1.50d07c0000000p-1
+0x1.45ca940000000p-1 0x1.511fc00000000p-1 c:0x1.3d59a80000000p-6
+c:0x1.b12c9c0000000p-8 c:0x1.bc04c60000000p-6 c:0x0.0p+0
+c:0x1.e436760000000p-7
+
+gossip_pga|pallas|int8_ef
+0x1.4837fc0000000p-1 0x1.5109fa0000000p-1 0x1.5318640000000p-1
+0x1.4761000000000p-1 0x1.5087580000000p-1 c:0x1.3eebdc0000000p-6
+c:0x1.b8c4040000000p-18 c:0x1.bdd4ac0000000p-6 c:0x1.a9dede0000000p-18
+c:0x1.f223dc0000000p-7
+
+gossip_pga|pallas|overlap
+0x1.4837fc0000000p-1 0x1.5986220000000p-1 0x1.583e2c0000000p-1
+0x1.43339a0000000p-1 0x1.530db60000000p-1 c:0x1.6504dc0000000p-3 c:0x0.0p+0
+c:0x1.f11d940000000p-3 c:0x0.0p+0 c:0x1.09bcc40000000p-3
+
+gossip_pga|pallas|push_sum
+0x1.4837fc0000000p-1 0x1.5706720000000p-1 0x1.53adf00000000p-1
+0x1.44458c0000000p-1 0x1.51d5640000000p-1 c:0x1.3670340000000p-4
+c:0x1.4000000000000p-56 c:0x1.80835e0000000p-4 c:0x1.b200000000000p-53
+c:0x1.e09b840000000p-5
+
+gossip_pga|pallas|sync
+0x1.4837fc0000000p-1 0x1.50ffb00000000p-1 0x1.532fd80000000p-1
+0x1.4771a80000000p-1 0x1.50a2700000000p-1 c:0x1.3d59a80000000p-6 c:0x0.0p+0
+c:0x1.bc7f8e0000000p-6 c:0x0.0p+0 c:0x1.f0d7340000000p-7
+
+gossip_pga|pallas|sync_opexp
+0x1.4837fc0000000p-1 0x1.5706720000000p-1 0x1.53adf00000000p-1
+0x1.44458e0000000p-1 0x1.51d5640000000p-1 c:0x1.3670340000000p-4 c:0x0.0p+0
+c:0x1.8083600000000p-4 c:0x0.0p+0 c:0x1.e09b860000000p-5
+
+gossip_pga|reference|int8_ef
+0x1.4837fc0000000p-1 0x1.5109fa0000000p-1 0x1.5318640000000p-1
+0x1.4761000000000p-1 0x1.5087580000000p-1 c:0x1.3eebdc0000000p-6
+c:0x1.b8c4040000000p-18 c:0x1.bdd4ac0000000p-6 c:0x1.a9dede0000000p-18
+c:0x1.f223dc0000000p-7
+
+gossip_pga|reference|overlap
+0x1.4837fc0000000p-1 0x1.5986220000000p-1 0x1.583e2c0000000p-1
+0x1.43339a0000000p-1 0x1.530db60000000p-1 c:0x1.6504dc0000000p-3 c:0x0.0p+0
+c:0x1.f11d920000000p-3 c:0x0.0p+0 c:0x1.09bcc40000000p-3
+
+gossip_pga|reference|push_sum
+0x1.4837fc0000000p-1 0x1.5706720000000p-1 0x1.53adf00000000p-1
+0x1.44458c0000000p-1 0x1.51d5640000000p-1 c:0x1.3670340000000p-4
+c:0x1.4000000000000p-56 c:0x1.80835e0000000p-4 c:0x1.b200000000000p-53
+c:0x1.e09b840000000p-5
+
+gossip_pga|reference|sync
+0x1.4837fc0000000p-1 0x1.50ffb00000000p-1 0x1.532fd80000000p-1
+0x1.4771a80000000p-1 0x1.50a2700000000p-1 c:0x1.3d59a80000000p-6 c:0x0.0p+0
+c:0x1.bc7f8c0000000p-6 c:0x0.0p+0 c:0x1.f0d7380000000p-7
+
+gossip_pga|reference|sync_opexp
+0x1.4837fc0000000p-1 0x1.5706700000000p-1 0x1.53adf00000000p-1
+0x1.44458c0000000p-1 0x1.51d5640000000p-1 c:0x1.3670340000000p-4 c:0x0.0p+0
+c:0x1.8083600000000p-4 c:0x0.0p+0 c:0x1.e09b840000000p-5
+
+gossip|pallas|overlap
+0x1.4837fc0000000p-1 0x1.5986220000000p-1 0x1.501bd80000000p-1
+0x1.4d88700000000p-1 0x1.55910c0000000p-1 c:0x1.6504dc0000000p-3
+c:0x1.07d7140000000p-4 c:0x1.5875e20000000p-3 c:0x1.53c7ca0000000p-3
+c:0x1.c813280000000p-3
+
+gossip|pallas|push_sum
+0x1.4837fc0000000p-1 0x1.5706700000000p-1 0x1.51616c0000000p-1
+0x1.4576da0000000p-1 0x1.5522460000000p-1 c:0x1.3670340000000p-4
+c:0x1.331c840000000p-5 c:0x1.b0bea80000000p-4 c:0x1.0d44480000000p-4
+c:0x1.67e9c80000000p-4
+
+gossip|pallas|sync
+0x1.4837fc0000000p-1 0x1.50ffb00000000p-1 0x1.50d07c0000000p-1
+0x1.45ca940000000p-1 0x1.4f1b300000000p-1 c:0x1.3d59a80000000p-6
+c:0x1.b12c960000000p-8 c:0x1.bc04c80000000p-6 c:0x1.8e7a540000000p-7
+c:0x1.fcb2e40000000p-7
+
+gossip|reference|overlap
+0x1.4837fc0000000p-1 0x1.5986220000000p-1 0x1.501bd80000000p-1
+0x1.4d88700000000p-1 0x1.55910c0000000p-1 c:0x1.6504dc0000000p-3
+c:0x1.07d7140000000p-4 c:0x1.5875e20000000p-3 c:0x1.53c7ca0000000p-3
+c:0x1.c813280000000p-3
+
+gossip|reference|push_sum
+0x1.4837fc0000000p-1 0x1.5706700000000p-1 0x1.51616c0000000p-1
+0x1.4576da0000000p-1 0x1.5522460000000p-1 c:0x1.3670340000000p-4
+c:0x1.331c840000000p-5 c:0x1.b0bea80000000p-4 c:0x1.0d44480000000p-4
+c:0x1.67e9c80000000p-4
+
+gossip|reference|sync
+0x1.4837fc0000000p-1 0x1.50ffb00000000p-1 0x1.50d07c0000000p-1
+0x1.45ca940000000p-1 0x1.4f1b300000000p-1 c:0x1.3d59a80000000p-6
+c:0x1.b12c9c0000000p-8 c:0x1.bc04c60000000p-6 c:0x1.8e7a540000000p-7
+c:0x1.fcb2e80000000p-7
+
+hier_pga|pallas|overlap
+0x1.4837fc0000000p-1 0x1.5986220000000p-1 0x1.583e2c0000000p-1
+0x1.43339a0000000p-1 0x1.530db60000000p-1 c:0x1.6504dc0000000p-3 c:0x0.0p+0
+c:0x1.f11d940000000p-3 c:0x0.0p+0 c:0x1.09bcc40000000p-3
+
+hier_pga|pallas|sync
+0x1.4837fc0000000p-1 0x1.50ffb00000000p-1 0x1.532fd80000000p-1
+0x1.4771a80000000p-1 0x1.50a2700000000p-1 c:0x1.3d59a80000000p-6 c:0x0.0p+0
+c:0x1.bc7f8e0000000p-6 c:0x0.0p+0 c:0x1.f0d7340000000p-7
+
+hier_pga|reference|overlap
+0x1.4837fc0000000p-1 0x1.5986220000000p-1 0x1.583e2c0000000p-1
+0x1.43339a0000000p-1 0x1.530db60000000p-1 c:0x1.6504dc0000000p-3 c:0x0.0p+0
+c:0x1.f11d920000000p-3 c:0x0.0p+0 c:0x1.09bcc40000000p-3
+
+hier_pga|reference|sync
+0x1.4837fc0000000p-1 0x1.50ffb00000000p-1 0x1.532fd80000000p-1
+0x1.4771a80000000p-1 0x1.50a2700000000p-1 c:0x1.3d59a80000000p-6 c:0x0.0p+0
+c:0x1.bc7f8c0000000p-6 c:0x0.0p+0 c:0x1.f0d7380000000p-7
+
+local|pallas|overlap
+0x1.4837fc0000000p-1 0x1.5986220000000p-1 0x1.583e2c0000000p-1
+0x1.43339c0000000p-1 0x1.530db60000000p-1 c:0x1.6504dc0000000p-3 c:0x0.0p+0
+c:0x1.f11d940000000p-3 c:0x0.0p+0 c:0x1.09bcc80000000p-3
+
+local|pallas|push_sum
+0x1.4837fc0000000p-1 0x1.5986220000000p-1 0x1.583e2c0000000p-1
+0x1.43339c0000000p-1 0x1.530db60000000p-1 c:0x1.6504dc0000000p-3
+c:0x1.08c0000000000p-50 c:0x1.f11d920000000p-3 c:0x1.d000000000000p-53
+c:0x1.09bcc60000000p-3
+
+local|pallas|sync
+0x1.4837fc0000000p-1 0x1.5986220000000p-1 0x1.583e2c0000000p-1
+0x1.43339c0000000p-1 0x1.530db60000000p-1 c:0x1.6504dc0000000p-3 c:0x0.0p+0
+c:0x1.f11d940000000p-3 c:0x0.0p+0 c:0x1.09bcc80000000p-3
+
+local|reference|overlap
+0x1.4837fc0000000p-1 0x1.5986220000000p-1 0x1.583e2c0000000p-1
+0x1.43339a0000000p-1 0x1.530db60000000p-1 c:0x1.6504dc0000000p-3 c:0x0.0p+0
+c:0x1.f11d920000000p-3 c:0x0.0p+0 c:0x1.09bcc80000000p-3
+
+local|reference|push_sum
+0x1.4837fc0000000p-1 0x1.5986220000000p-1 0x1.583e2c0000000p-1
+0x1.43339c0000000p-1 0x1.530db60000000p-1 c:0x1.6504dc0000000p-3
+c:0x1.08c0000000000p-50 c:0x1.f11d920000000p-3 c:0x1.d000000000000p-53
+c:0x1.09bcc60000000p-3
+
+local|reference|sync
+0x1.4837fc0000000p-1 0x1.5986220000000p-1 0x1.583e2c0000000p-1
+0x1.43339a0000000p-1 0x1.530db60000000p-1 c:0x1.6504dc0000000p-3 c:0x0.0p+0
+c:0x1.f11d920000000p-3 c:0x0.0p+0 c:0x1.09bcc80000000p-3
+
+parallel|pallas|overlap
+0x1.4837fc0000000p-1 0x1.4d26cc0000000p-1 0x1.4f107c0000000p-1
+0x1.4a05c00000000p-1 0x1.51e7c40000000p-1 c:0x0.0p+0 c:0x0.0p+0 c:0x0.0p+0
+c:0x0.0p+0 c:0x0.0p+0
+
+parallel|pallas|push_sum
+0x1.4837fc0000000p-1 0x1.4d26cc0000000p-1 0x1.4f107c0000000p-1
+0x1.4a05c00000000p-1 0x1.51e7c40000000p-1 c:0x1.a060000000000p-53
+c:0x1.2000000000000p-54 c:0x1.ac00000000000p-52 c:0x1.1800000000000p-53
+c:0x1.8400000000000p-52
+
+parallel|pallas|sync
+0x1.4837fc0000000p-1 0x1.4d26cc0000000p-1 0x1.4f107c0000000p-1
+0x1.4a05c00000000p-1 0x1.51e7c40000000p-1 c:0x0.0p+0 c:0x0.0p+0 c:0x0.0p+0
+c:0x0.0p+0 c:0x0.0p+0
+
+parallel|reference|overlap
+0x1.4837fc0000000p-1 0x1.4d26cc0000000p-1 0x1.4f107c0000000p-1
+0x1.4a05c00000000p-1 0x1.51e7c40000000p-1 c:0x0.0p+0 c:0x0.0p+0 c:0x0.0p+0
+c:0x0.0p+0 c:0x0.0p+0
+
+parallel|reference|push_sum
+0x1.4837fc0000000p-1 0x1.4d26cc0000000p-1 0x1.4f107c0000000p-1
+0x1.4a05c00000000p-1 0x1.51e7c40000000p-1 c:0x1.a060000000000p-53
+c:0x1.2000000000000p-54 c:0x1.ac00000000000p-52 c:0x1.1800000000000p-53
+c:0x1.8400000000000p-52
+
+parallel|reference|sync
+0x1.4837fc0000000p-1 0x1.4d26cc0000000p-1 0x1.4f107c0000000p-1
+0x1.4a05c00000000p-1 0x1.51e7c40000000p-1 c:0x0.0p+0 c:0x0.0p+0 c:0x0.0p+0
+c:0x0.0p+0 c:0x0.0p+0
+
+slowmo|pallas|overlap
+0x1.4837fc0000000p-1 0x1.4d57320000000p-1 0x1.652d820000000p-1
+0x1.5d97180000000p-1 0x1.5e9aa60000000p-1 c:0x1.6504dc0000000p-3 c:0x0.0p+0
+c:0x1.d278900000000p-3 c:0x0.0p+0 c:0x1.00c06c0000000p-3
+
+slowmo|pallas|sync
+0x1.4837fc0000000p-1 0x1.47f9d00000000p-1 0x1.612f5c0000000p-1
+0x1.57a4380000000p-1 0x1.59f3e00000000p-1 c:0x1.3d59a80000000p-6 c:0x0.0p+0
+c:0x1.a0c9620000000p-6 c:0x0.0p+0 c:0x1.bb85f00000000p-7
+
+slowmo|reference|overlap
+0x1.4837fc0000000p-1 0x1.4d57320000000p-1 0x1.652d820000000p-1
+0x1.5d97180000000p-1 0x1.5e9aa60000000p-1 c:0x1.6504dc0000000p-3 c:0x0.0p+0
+c:0x1.d278900000000p-3 c:0x0.0p+0 c:0x1.00c06c0000000p-3
+
+slowmo|reference|sync
+0x1.4837fc0000000p-1 0x1.47f9d00000000p-1 0x1.612f5c0000000p-1
+0x1.57a4380000000p-1 0x1.59f3e00000000p-1 c:0x1.3d59a80000000p-6 c:0x0.0p+0
+c:0x1.a0c9600000000p-6 c:0x0.0p+0 c:0x1.bb85ee0000000p-7
+""")
+
+_TRAINER_GOLDENS = {k: v[0] for k, v in _parse_goldens("""
+gossip_aga|reference|sync
+338afc926de0541d3efa1f1d73cab300b98ba5470b7b2e652da81293873820dd
+
+gossip_pga|pallas|overlap
+a68cdf5112fe20d4a0737482d9494efa16a81bd97497346f824ea11c52622d8d
+
+gossip_pga|pallas|push_sum
+d10f703e3ec321d79ab1a88a02e23fb661773faced4f4d2822ab67d011c017b1
+
+gossip_pga|pallas|sync
+b71d1a1cc931f892bf413c2fb9c453173e153de6bcab5f57a7869e3011780bd5
+
+gossip_pga|reference|int8_ef
+46bacba2361232b66d1e1e5a5e4a2a1587d63c1b94997abc2f3cf7d5480ec432
+
+gossip_pga|reference|overlap
+09a9ecf8f7db0c75ba2e4d1593359613cbcec8b105c6873491ad39fdadfe93dc
+
+gossip_pga|reference|push_sum
+d10f703e3ec321d79ab1a88a02e23fb661773faced4f4d2822ab67d011c017b1
+
+gossip_pga|reference|sync
+745e1573b8de5113e9ccf4cc068cf95b55b68313708ffc70929efe3b20dbab95
+
+gossip|reference|sync
+e603bcc44c8780c80444c64b615f37b949e9560ec6bc63bf684a408652a1c7d3
+
+hier_pga|pallas|sync
+b71d1a1cc931f892bf413c2fb9c453173e153de6bcab5f57a7869e3011780bd5
+
+hier_pga|reference|sync
+745e1573b8de5113e9ccf4cc068cf95b55b68313708ffc70929efe3b20dbab95
+
+local|reference|sync
+a76d11a4cf7bdbcf8ebf5c8865e16bf4f34fc254eb0a60ddb60e57b075f60d78
+
+parallel|reference|sync
+de7f380b97dccd3d5cd87c16ec552e69918b30af291a513c27f22cc2d7c8ee4e
+
+slowmo|pallas|sync
+08436d35f4fa5846f61d1801f9c482b9c8bf03b74bfe7039c800a8b83369f3cd
+
+slowmo|reference|overlap
+d04deb8092652fde9e38a588a29da2dcde268942f698a9ab19dad2e17e45f535
+
+slowmo|reference|sync
+dda978efb7f9d9f7eb437a231da701507159bde7206f5bac7148b41d52750cdb
+""").items()}
+
+
+# ---------------------------------------------------------------------------
+# simulate matrix
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def sim_problem():
+    return make_logistic_problem(n=4, M=64, d=6, iid=False, seed=0)
+
+
+def _sim_kwargs(prob, key):
+    alg, backend, mode = key.split("|")
+    kwargs = dict(algorithm=alg, grad_fn=prob.grad_fn(batch=4),
+                  loss_fn=prob.loss_fn(), x0=jnp.zeros(prob.d), n=4,
+                  steps=5, lr=0.2, topology="ring", H=2, eval_every=1,
+                  seed=0, backend=backend, slowmo_beta=0.9, slowmo_lr=0.7)
+    if alg == "hier_pga":
+        kwargs["aga_kwargs"] = {"n_pods": 2, "hier_h_pod": 2}
+    if mode == "overlap":
+        kwargs["overlap"] = True
+    elif mode == "push_sum":
+        kwargs.update(topology="directed_ring", push_sum=True)
+    elif mode == "int8_ef":
+        kwargs.update(compression="int8", error_feedback=True)
+    elif mode == "sync_opexp":
+        kwargs.update(topology="one_peer_exp")
+    return kwargs
+
+
+def _sim_hexes(prob, key):
+    out = simulate(**_sim_kwargs(prob, key))
+    return ([float(v).hex() for v in out["loss"]]
+            + ["c:" + float(v).hex() for v in out["consensus"]])
+
+
+@pytest.mark.parametrize("key", sorted(_SIM_GOLDENS))
+def test_simulate_trajectory_bitwise_golden(sim_problem, key):
+    assert _sim_hexes(sim_problem, key) == _SIM_GOLDENS[key], key
+
+
+# ---------------------------------------------------------------------------
+# Trainer matrix
+# ---------------------------------------------------------------------------
+CFG = get_model_config("pga-lm-100m", reduced=True)
+
+
+def _tcfg(alg, backend="reference", topology="ring", push=False,
+          overlap=False, compression="none", ef=False):
+    return TrainConfig(
+        model=CFG,
+        dist=DistConfig(algorithm=alg, topology=topology, H=2,
+                        comm_backend=backend, push_sum=push,
+                        comm_overlap=overlap, comm_compression=compression,
+                        comm_error_feedback=ef, hier_h_pod=2, n_pods=2,
+                        slowmo_beta=0.9, slowmo_lr=0.7),
+        optimizer=OptimizerConfig(name="adamw", lr=3e-3,
+                                  schedule="constant", warmup_steps=0,
+                                  grad_clip=1.0),
+        data=DataConfig(non_iid=True), global_batch=8, seq_len=32,
+        log_every=0)
+
+
+def _params_digest(state):
+    h = hashlib.sha256()
+    flat, _ = jax.tree_util.tree_flatten_with_path(
+        jax.device_get(state.params))
+    for path, leaf in flat:
+        h.update(str(path).encode())
+        h.update(np.ascontiguousarray(leaf).tobytes())
+    return h.hexdigest()
+
+
+def _trainer_digest(key):
+    alg, backend, mode = key.split("|")
+    kw = dict(alg=alg, backend=backend)
+    if mode == "overlap":
+        kw["overlap"] = True
+    elif mode == "push_sum":
+        kw.update(push=True, topology="directed_ring")
+    elif mode == "int8_ef":
+        kw.update(compression="int8", ef=True)
+    # the capture enabled consensus telemetry on exactly one case to pin
+    # that the with_consensus graph variant stays bitwise too
+    with_consensus = key == "gossip_pga|pallas|sync"
+    tr = Trainer(_tcfg(**kw), n_nodes=4, with_consensus=with_consensus)
+    state = tr.init_state(jax.random.PRNGKey(0))
+    for _ in range(5):
+        state = tr.run(state, steps=1, log_every=0)
+    return _params_digest(state)
+
+
+@pytest.mark.parametrize("key", sorted(_TRAINER_GOLDENS))
+def test_trainer_params_bitwise_golden(key):
+    assert _trainer_digest(key) == _TRAINER_GOLDENS[key], key
+
+
+# ---------------------------------------------------------------------------
+# gt_pga: checkpoint round-trip, backend parity, composition, crossover
+# ---------------------------------------------------------------------------
+def test_gt_pga_checkpoint_save_restore_continue_bitwise():
+    """Save at step 2, restore into a *differently initialised* trainer,
+    continue 3 steps: params AND tracker extras must match the
+    uninterrupted run bitwise (batches are keyed off ``state.step``)."""
+    tcfg = _tcfg("gt_pga")
+    tr = Trainer(tcfg, n_nodes=4)
+    state = tr.init_state(jax.random.PRNGKey(0))
+    state = tr.run(state, steps=2, log_every=0)
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, state, 2)
+        cont = tr.run(state, steps=3, log_every=0)
+        tr2 = Trainer(tcfg, n_nodes=4)
+        other = tr2.init_state(jax.random.PRNGKey(9))
+        restored = restore_checkpoint(d, other)
+        assert set(restored.extras) == {"gt_tracker", "gt_prev_grad"}
+        cont2 = tr2.run(restored, steps=3, log_every=0)
+    for a, b in zip(jax.tree.leaves(jax.device_get(cont)),
+                    jax.tree.leaves(jax.device_get(cont2))):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_gt_pga_tracker_mixing_backend_parity(sim_problem):
+    """The tracker rides the same joint comm round on both backends;
+    reference vs pallas agree to float tolerance (sync rounds are not
+    bitwise across backends for ANY algorithm — mixing kernels differ)."""
+    outs = {b: simulate(**_sim_kwargs(sim_problem, f"gt_pga|{b}|sync"))
+            for b in ("reference", "pallas")}
+    np.testing.assert_allclose(outs["reference"]["loss"],
+                               outs["pallas"]["loss"],
+                               rtol=1e-4, atol=1e-6)
+    np.testing.assert_allclose(outs["reference"]["consensus"],
+                               outs["pallas"]["consensus"],
+                               rtol=1e-3, atol=1e-6)
+
+
+@pytest.mark.parametrize("mode", ["overlap", "int8_ef", "sync_opexp"])
+@pytest.mark.parametrize("backend", ["reference", "pallas"])
+def test_gt_pga_composes_with_comm_modes(sim_problem, backend, mode):
+    """Because the tracker travels inside the one joint tree handed to
+    ``communicate``, overlap / compression+EF / time-varying topologies
+    compose with gradient tracking with no special cases."""
+    kwargs = _sim_kwargs(sim_problem, f"gt_pga|{backend}|{mode}")
+    # longer horizon than the golden harness: 5 steps is too short for a
+    # descent assertion under one-step-stale overlap
+    kwargs.update(steps=40, eval_every=10, lr=0.1)
+    out = simulate(**kwargs)
+    assert np.all(np.isfinite(out["loss"]))
+    assert out["loss"][-1] < out["loss"][0]
+
+
+def test_gt_pga_rejects_push_sum():
+    with pytest.raises(ValueError, match="push_sum"):
+        DistConfig(algorithm="gt_pga", topology="directed_ring",
+                   push_sum=True).validate()
+
+
+def test_gt_pga_noniid_crossover_miniature():
+    """Shrunk version of the benchmark gate: on Dirichlet-sharded data
+    plain gossip stalls at a heterogeneity floor while gt_pga keeps
+    descending past it (full-batch, constant lr, ring)."""
+    prob = dirichlet_noniid_problem(n=8, M=128, d=6, alpha=0.3, seed=0)
+
+    def tail(alg):
+        out = simulate(algorithm=alg, grad_fn=prob.grad_fn(batch=0),
+                       loss_fn=prob.loss_fn(), x0=jnp.zeros(prob.d),
+                       n=8, steps=200, lr=0.05, topology="ring", H=16,
+                       eval_every=25, seed=0)
+        return float(np.mean(out["loss"][-2:]))
+
+    gt, gossip = tail("gt_pga"), tail("gossip")
+    assert gt < gossip, (gt, gossip)
+    assert gossip - gt > 1e-6, (gt, gossip)
+
+
+# ---------------------------------------------------------------------------
+# registry + hooks
+# ---------------------------------------------------------------------------
+def test_unknown_algorithm_error_names_caller_and_lists_valid():
+    with pytest.raises(ValueError) as ei:
+        algo.get_algorithm("nope", caller="simulate")
+    msg = str(ei.value)
+    assert msg.startswith("simulate:")
+    assert "'nope'" in msg
+    for name in algo.algorithm_names():
+        assert name in msg
+
+
+def test_simulate_rejects_unknown_algorithm(sim_problem):
+    with pytest.raises(ValueError, match="gossip_pga"):
+        simulate(**{**_sim_kwargs(sim_problem, "gossip|reference|sync"),
+                    "algorithm": "nope"})
+
+
+def test_configs_algorithm_lists_source_from_registry():
+    from repro.configs import ALGORITHMS, PUSH_SUM_ALGORITHMS
+    assert tuple(ALGORITHMS) == algo.algorithm_names()
+    assert tuple(PUSH_SUM_ALGORITHMS) == algo.push_sum_algorithm_names()
+    assert "gt_pga" in ALGORITHMS
+    assert "gt_pga" not in PUSH_SUM_ALGORITHMS
+
+
+def test_gt_pga_extras_slots_init_and_axes():
+    dist = DistConfig(algorithm="gt_pga", topology="ring", H=2).validate()
+    params = {"w": jnp.ones((4, 3)), "b": jnp.ones((4,))}
+    ex = algo.init_extras(dist, params, 4)
+    assert set(ex) == {"gt_tracker", "gt_prev_grad"}
+    for name in ex:
+        assert (jax.tree.structure(ex[name])
+                == jax.tree.structure(params))
+        for leaf, p in zip(jax.tree.leaves(ex[name]),
+                           jax.tree.leaves(params)):
+            assert leaf.shape == p.shape
+            assert leaf.dtype == jnp.float32
+            assert not np.asarray(leaf).any()        # y_0 = g_{-1} = 0
+    axes = algo.extras_axes(dist, {"w": 0, "b": 0},
+                            {"w": None, "b": None})
+    assert axes == {"gt_tracker": {"w": 0, "b": 0},
+                    "gt_prev_grad": {"w": 0, "b": 0}}
+
+
+def test_gt_pga_ef_state_mirrors_joint_payload():
+    dist = DistConfig(algorithm="gt_pga", topology="ring", H=2,
+                      comm_compression="int8",
+                      comm_error_feedback=True).validate()
+    params = {"w": jnp.ones((4, 3))}
+    ex = algo.init_extras(dist, params, 4)
+    assert set(ex) == {"gt_tracker", "gt_prev_grad", "ef_state"}
+    # one residual per *transmitted* leaf: params plus the tracker
+    assert set(ex["ef_state"]) == {"params", "gt_tracker"}
+    axes = algo.extras_axes(dist, {"w": 0}, {"w": None})
+    assert axes["ef_state"] == {"params": {"w": 0}, "gt_tracker": {"w": 0}}
+
+
+def test_gt_tracker_node_mean_tracks_grad_mean():
+    """The GT invariant behind the crossover: with y_0 = g_{-1} = 0 the
+    tracker's node-mean equals the current grads' node-mean, every step."""
+    a = algo.get_algorithm("gt_pga")
+    dist = DistConfig(algorithm="gt_pga", topology="ring", H=2).validate()
+    rng = np.random.default_rng(0)
+    params = {"w": jnp.zeros((4, 3))}
+    ex = algo.init_extras(dist, params, 4)
+    for _ in range(3):
+        g = {"w": jnp.asarray(rng.standard_normal((4, 3)), jnp.float32)}
+        upd, ex = a.pre_update(ex, g)
+        np.testing.assert_allclose(np.mean(np.asarray(upd["w"]), axis=0),
+                                   np.mean(np.asarray(g["w"]), axis=0),
+                                   rtol=1e-5, atol=1e-6)
+        assert ex["gt_prev_grad"]["w"] is g["w"]
+
+
+def test_slot_backfill_kinds_and_known_names():
+    assert algo.backfill_kind("push_weight") == "ones"
+    assert algo.backfill_kind("ef_state") == "zeros"
+    assert algo.backfill_kind("gt_tracker") == "zeros"
+    for name in ("gt_tracker", "gt_prev_grad", "slow_params", "slow_u",
+                 "ef_state", "push_weight"):
+        assert name in algo.known_slot_names()
+
+
+def test_join_payload_keeps_bare_params_when_empty():
+    """Legacy algorithms must hand ``communicate`` the exact same tree as
+    before the refactor (bitwise comm graphs) — no dict wrapper."""
+    p = {"w": 1}
+    assert algo.join_payload({}, p) is p
+    joint = algo.join_payload({"t": 2}, p)
+    assert joint == {"params": p, "t": 2}
+    assert algo.unwrap_mixed(joint, True) is p
+    assert algo.unwrap_mixed(p, False) is p
+    assert algo.wrap_mixed(p, False) == {"params": p}
+    assert algo.wrap_mixed(joint, True) is joint
+
+
+# ---------------------------------------------------------------------------
+# Dirichlet non-IID sharder
+# ---------------------------------------------------------------------------
+def test_dirichlet_shapes_and_label_domain():
+    prob = dirichlet_noniid_problem(n=4, M=32, d=5, seed=0)
+    assert prob.H.shape == (4, 32, 5)
+    assert prob.y.shape == (4, 32)
+    assert set(np.unique(np.asarray(prob.y))) <= {1.0, -1.0}
+
+
+def test_dirichlet_deterministic_per_seed():
+    a = dirichlet_noniid_problem(n=4, M=32, d=5, seed=3)
+    b = dirichlet_noniid_problem(n=4, M=32, d=5, seed=3)
+    np.testing.assert_array_equal(np.asarray(a.H), np.asarray(b.H))
+    np.testing.assert_array_equal(np.asarray(a.y), np.asarray(b.y))
+    c = dirichlet_noniid_problem(n=4, M=32, d=5, seed=4)
+    assert not np.array_equal(np.asarray(a.H), np.asarray(c.H))
+
+
+def test_dirichlet_label_skew_scales_with_alpha():
+    """Small alpha -> near-single-class nodes; large alpha -> balanced."""
+    def node_pos_fracs(alpha):
+        prob = dirichlet_noniid_problem(n=16, M=64, d=4, alpha=alpha,
+                                        seed=0)
+        return np.mean(np.asarray(prob.y) > 0, axis=1)
+
+    lo, hi = node_pos_fracs(0.05), node_pos_fracs(100.0)
+    assert lo.std() > 3 * hi.std()
+    assert np.abs(hi - 0.5).max() < 0.2
+    assert lo.min() < 0.1 and lo.max() > 0.9
+
+
+def test_dirichlet_feature_shift_moves_node_marginals():
+    """Same seed, shift on vs off: the only difference is a constant
+    per-node translation of magnitude ``feature_shift`` along a
+    node-specific direction (the rng draws are identical either way)."""
+    shifted = dirichlet_noniid_problem(n=6, M=512, d=5, feature_shift=5.0,
+                                       seed=0)
+    plain = dirichlet_noniid_problem(n=6, M=512, d=5, feature_shift=0.0,
+                                     seed=0)
+    np.testing.assert_array_equal(np.asarray(shifted.y),
+                                  np.asarray(plain.y))
+    diff = np.asarray(shifted.H) - np.asarray(plain.H)     # (n, M, d)
+    dirs = []
+    for i in range(6):
+        rows = diff[i]
+        assert np.abs(rows - rows[0]).max() < 1e-5
+        assert abs(np.linalg.norm(rows[0]) - 5.0) < 1e-3
+        dirs.append(rows[0] / 5.0)
+    # node-specific directions, not one global offset
+    assert np.linalg.norm(dirs[0] - dirs[1]) > 0.1
+
+
+def test_dirichlet_validation_errors():
+    with pytest.raises(ValueError, match="n must be"):
+        dirichlet_noniid_problem(n=0, M=8, d=2)
+    with pytest.raises(ValueError, match="alpha must be"):
+        dirichlet_noniid_problem(n=2, M=8, d=2, alpha=0.0)

@@ -526,6 +526,56 @@ def test_cli_write_baseline_then_green(tmp_path, capsys):
 
 
 # ---------------------------------------------------------------------------
+# registry self-check: HOT_PATHS resolves against the real tree
+# ---------------------------------------------------------------------------
+def _def_qualnames(path):
+    """Function qualnames ('Class.method', 'fn', 'fn.inner') defined in a
+    source file, via the same parent-stack walk the engine's qualname
+    resolution uses."""
+    import ast
+    names = set()
+
+    def walk(node, stack):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                  ast.ClassDef)):
+                qual = stack + [child.name]
+                if not isinstance(child, ast.ClassDef):
+                    names.add(".".join(qual))
+                walk(child, qual)
+            else:
+                walk(child, stack)
+
+    walk(ast.parse(path.read_text()), [])
+    return names
+
+
+def test_hot_paths_registry_resolves():
+    """Every HOT_PATHS entry resolves against the real tree: the path
+    glob matches at least one file, and each named function glob matches
+    a function that actually exists there.  A hot path renamed or moved
+    by a refactor must fail here instead of silently losing its
+    host-sync protection."""
+    import fnmatch
+    from repro.analysis.rules.host_sync import HOT_PATHS
+
+    all_files = [p.relative_to(REPO_ROOT).as_posix()
+                 for p in (REPO_ROOT / "src").rglob("*.py")]
+    for pat, fn_globs in HOT_PATHS:
+        matches = [f for f in all_files if fnmatch.fnmatch(f, pat)]
+        assert matches, f"HOT_PATHS glob {pat!r} matches no file under src/"
+        quals = set()
+        for m in matches:
+            quals |= _def_qualnames(REPO_ROOT / m)
+        for g in fn_globs:
+            if g == "*":
+                continue
+            assert any(fnmatch.fnmatch(q, g) for q in quals), (
+                f"HOT_PATHS function glob {g!r} resolves to no function "
+                f"under {pat!r}")
+
+
+# ---------------------------------------------------------------------------
 # integration: the real tree is clean
 # ---------------------------------------------------------------------------
 def test_repo_is_clean():
